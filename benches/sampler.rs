@@ -1,0 +1,110 @@
+//! **Table 4 + Figure 4**: parallel temporal sampler vs the baseline
+//! sampler on the Wikipedia workload, across thread counts, with the
+//! Ptr./BS/Spl./Oth. runtime breakdown — plus the pointer-mode ablation
+//! (locked vs lock-free fetch_max vs pure binary search) for §Perf.
+//!
+//! Run: `cargo bench --bench sampler` (env: TGL_BENCH_SCALE=0.1 shrinks
+//! the dataset; default runs the full 157k-edge Wikipedia workload).
+
+use tgl::bench::{bench_scale, Table};
+use tgl::coordinator::{run_epoch_baseline, run_epoch_parallel};
+use tgl::graph::TCsr;
+use tgl::sampler::{BaselineSampler, PointerMode, SamplerConfig, Strategy, TemporalSampler};
+use tgl::util::stats::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let graph = tgl::datasets::by_name("wikipedia", scale, 42)?;
+    let csr = TCsr::build(&graph, true);
+    let bs = 600;
+    println!(
+        "Wikipedia workload: |V|={} |E|={} (scale {scale}), batches of {bs}+{bs} roots",
+        graph.num_nodes,
+        graph.num_edges()
+    );
+
+    let algos: &[(&str, fn(usize, &tgl::graph::TemporalGraph) -> SamplerConfig)] = &[
+        ("DySAT 2-layer", |t, g| SamplerConfig::snapshots(2, 10, 3, g.max_time() / 8.0, t)),
+        ("TGAT 2-layer", |t, _| SamplerConfig::uniform_hops(2, 10, Strategy::Uniform, t)),
+        ("TGN 1-layer", |t, _| SamplerConfig::uniform_hops(1, 10, Strategy::MostRecent, t)),
+    ];
+
+    // ---- Table 4: time + improvement vs baseline, threads 1/8/32.
+    let mut t4 = Table::new(
+        "Table 4: sampling one epoch (s) and improvement vs baseline sampler",
+        &["algorithm", "baseline", "1 thr", "8 thr", "32 thr", "impr@1", "impr@8", "impr@32"],
+    );
+    // ---- Figure 4a/4b data: scalability + breakdown.
+    let mut f4 = Table::new(
+        "Figure 4: sampler scalability and runtime breakdown (seconds)",
+        &["algorithm", "threads", "total", "Ptr.", "BS", "Spl.", "Oth."],
+    );
+
+    for (name, mk) in algos {
+        let base = BaselineSampler::new(&graph, true, mk(1, &graph));
+        let sw = Stopwatch::start();
+        run_epoch_baseline(&graph, &base, bs);
+        let base_s = sw.secs();
+
+        let mut times = Vec::new();
+        for &threads in &[1usize, 2, 4, 8, 16, 32] {
+            // Timed run: stats collection off (it perturbs the hot loop).
+            let cfg = mk(threads, &graph);
+            let sampler = TemporalSampler::new(&csr, cfg.clone());
+            let sw = Stopwatch::start();
+            run_epoch_parallel(&graph, &sampler, bs);
+            let secs = sw.secs();
+            // Breakdown run: stats on (Figure 4b shape, not absolute time).
+            let mut cfg_bd = cfg;
+            cfg_bd.collect_stats = true;
+            let sampler_bd = TemporalSampler::new(&csr, cfg_bd);
+            run_epoch_parallel(&graph, &sampler_bd, bs);
+            let bd = sampler_bd.stats.breakdown();
+            f4.row(vec![
+                name.to_string(),
+                threads.to_string(),
+                format!("{secs:.4}"),
+                format!("{:.4}", bd[0].1),
+                format!("{:.4}", bd[1].1),
+                format!("{:.4}", bd[2].1),
+                format!("{:.4}", bd[3].1),
+            ]);
+            if matches!(threads, 1 | 8 | 32) {
+                times.push(secs);
+            }
+        }
+        t4.row(vec![
+            name.to_string(),
+            format!("{base_s:.3}"),
+            format!("{:.4}", times[0]),
+            format!("{:.4}", times[1]),
+            format!("{:.4}", times[2]),
+            format!("{:.1}x", base_s / times[0]),
+            format!("{:.1}x", base_s / times[1]),
+            format!("{:.1}x", base_s / times[2]),
+        ]);
+    }
+    t4.print();
+    t4.write_csv("results/table4_sampler.csv")?;
+    f4.print();
+    f4.write_csv("results/figure4_breakdown.csv")?;
+
+    // ---- Ablation: pointer modes (TGN 1-layer, 8 threads).
+    let mut ab = Table::new(
+        "Ablation: pointer modes (TGN 1-layer sampling, one epoch)",
+        &["mode", "threads", "seconds"],
+    );
+    for mode in [PointerMode::Locked, PointerMode::Atomic, PointerMode::BinarySearch] {
+        for threads in [1usize, 8] {
+            let mut cfg = SamplerConfig::uniform_hops(1, 10, Strategy::MostRecent, threads);
+            cfg.pointer_mode = mode;
+            let sampler = TemporalSampler::new(&csr, cfg);
+            let sw = Stopwatch::start();
+            run_epoch_parallel(&graph, &sampler, bs);
+            ab.row(vec![format!("{mode:?}"), threads.to_string(), format!("{:.4}", sw.secs())]);
+        }
+    }
+    ab.print();
+    ab.write_csv("results/ablation_pointer_modes.csv")?;
+    Ok(())
+}

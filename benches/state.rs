@@ -1,0 +1,95 @@
+//! Supporting micro-benchmarks: node-memory / mailbox gather-scatter
+//! throughput (the paper's "up to 30% of training time" component and the
+//! 8-GPU saturation cause), T-CSR construction, and chunk scheduling
+//! overhead. Feeds EXPERIMENTS.md §Perf.
+
+use tgl::bench::{bench, bench_scale, Table};
+use tgl::graph::TCsr;
+use tgl::sched::ChunkScheduler;
+use tgl::state::{Mailbox, NodeMemory};
+use tgl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let nodes = (100_000 as f64 * scale) as usize + 1000;
+    let dim = 100;
+    let batch = 20_000;
+    let mut rng = Rng::new(3);
+    let node_list: Vec<(u32, f64, bool)> =
+        (0..batch).map(|i| (rng.below(nodes) as u32, 1e5 + i as f64, true)).collect();
+    let ids: Vec<u32> = node_list.iter().map(|x| x.0).collect();
+    let ts: Vec<f64> = node_list.iter().map(|x| x.1).collect();
+    let rows = vec![0.5f32; batch * dim];
+
+    println!("state micro-benchmarks: {nodes} nodes, dim {dim}, batch {batch}");
+    let mut table = Table::new("state ops", &["op", "mean (ms)", "GB/s"]);
+
+    let mut memory = NodeMemory::new(nodes, dim);
+    let m = bench("memory.gather 20k nodes", 2, 20, || {
+        let mut out = Vec::new();
+        let mut dt = Vec::new();
+        memory.gather(&node_list, &mut out, &mut dt);
+        std::hint::black_box(out.len());
+    });
+    let bytes = (batch * dim * 4) as f64;
+    table.row(vec![
+        "memory.gather".into(),
+        format!("{:.3}", m.mean_s * 1e3),
+        format!("{:.2}", bytes / m.mean_s / 1e9),
+    ]);
+    let m = bench("memory.scatter 20k rows", 2, 20, || {
+        memory.scatter(&ids, &ts, &rows);
+    });
+    table.row(vec![
+        "memory.scatter".into(),
+        format!("{:.3}", m.mean_s * 1e3),
+        format!("{:.2}", bytes / m.mean_s / 1e9),
+    ]);
+
+    for slots in [1usize, 10] {
+        let mut mb = Mailbox::new(nodes, slots, 2 * dim);
+        let mail = vec![0.25f32; 2 * dim];
+        let m = bench(&format!("mailbox.write x20k (slots={slots})"), 2, 20, || {
+            for i in 0..batch {
+                mb.write(ids[i], ts[i], &mail);
+            }
+        });
+        table.row(vec![
+            format!("mailbox.write (M={slots})"),
+            format!("{:.3}", m.mean_s * 1e3),
+            format!("{:.2}", (batch * 2 * dim * 4) as f64 / m.mean_s / 1e9),
+        ]);
+        let m = bench(&format!("mailbox.gather 20k (slots={slots})"), 2, 20, || {
+            let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+            mb.gather(&node_list, &mut a, &mut b, &mut c);
+            std::hint::black_box(a.len());
+        });
+        table.row(vec![
+            format!("mailbox.gather (M={slots})"),
+            format!("{:.3}", m.mean_s * 1e3),
+            format!("{:.2}", (batch * slots * 2 * dim * 4) as f64 / m.mean_s / 1e9),
+        ]);
+    }
+
+    // T-CSR construction throughput (graph loading cost at scale).
+    let g = tgl::datasets::by_name("wikipedia", scale.min(1.0), 11)?;
+    let m = bench("TCsr::build (wikipedia)", 1, 10, || {
+        std::hint::black_box(TCsr::build(&g, true).num_slots());
+    });
+    table.row(vec![
+        "tcsr.build".into(),
+        format!("{:.3}", m.mean_s * 1e3),
+        format!("{:.2}", (g.num_edges() * 2 * 16) as f64 / m.mean_s / 1e9),
+    ]);
+
+    // Chunk scheduler: planning cost is noise even at GDELT batch counts.
+    let mut sched = ChunkScheduler::new(200_000_000, 4800, 300, 1)?;
+    let m = bench("chunk scheduler epoch plan (191M edges)", 1, 10, || {
+        std::hint::black_box(sched.epoch().batches.len());
+    });
+    table.row(vec!["chunk.plan".into(), format!("{:.3}", m.mean_s * 1e3), "-".into()]);
+
+    table.print();
+    table.write_csv("results/state_micro.csv")?;
+    Ok(())
+}

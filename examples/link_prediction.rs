@@ -1,0 +1,86 @@
+//! Link prediction across the full model zoo on the four small datasets
+//! (paper §4.3, Table 5 / Figure 1 / Figure 5) — the framework's
+//! bread-and-butter workflow, with convergence curves written as CSV.
+//!
+//! ```bash
+//! cargo run --release --example link_prediction -- [--full] [--scale 0.1]
+//! ```
+
+use std::path::Path;
+use tgl::bench::Table;
+use tgl::metrics::Curve;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let scale = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.05);
+    let suffix = if full { "" } else { "_tiny" };
+    let datasets = ["wikipedia", "reddit", "mooc", "lastfm"];
+    let variants = ["jodie", "dysat", "tgat", "tgn", "apan"];
+    let epochs = if full { 2 } else { 2 };
+
+    let mut table = Table::new(
+        "Table 5: link prediction AP / per-epoch time",
+        &["dataset", "variant", "AP", "epoch time (s)"],
+    );
+    for ds in datasets {
+        for base in variants {
+            let variant = format!("{base}{suffix}");
+            let plan = RunPlanArgs { variant: &variant, dataset: ds, scale }.build()?;
+            let (report, _) = plan.train_link_prediction(epochs, 1, 1, ds, false)?;
+            println!(
+                "[{ds}/{variant}] test AP {:.4}, epoch {:.2}s",
+                report.test_ap, report.epoch_seconds
+            );
+            table.row(vec![
+                ds.into(),
+                variant.clone(),
+                format!("{:.4}", report.test_ap),
+                format!("{:.2}", report.epoch_seconds),
+            ]);
+            // Figure 5-left: validation AP over wall-clock training time.
+            if ds == "wikipedia" {
+                let mut curve = Curve::default();
+                let mut t_acc = 0.0;
+                for (_, _, secs, val_ap) in &report.epochs {
+                    t_acc += secs;
+                    curve.push(t_acc, *val_ap);
+                }
+                curve.write_csv(
+                    Path::new(&format!("results/figure5_convergence_{variant}.csv")),
+                    "train_seconds",
+                    "val_ap",
+                )?;
+            }
+        }
+    }
+    table.print();
+    table.write_csv("results/table5_all_datasets.csv")?;
+    Ok(())
+}
+
+/// Small helper so the example reads top-down.
+struct RunPlanArgs<'a> {
+    variant: &'a str,
+    dataset: &'a str,
+    scale: f64,
+}
+
+impl RunPlanArgs<'_> {
+    fn build(&self) -> anyhow::Result<tgl::coordinator::RunPlan> {
+        tgl::coordinator::RunPlan::new(
+            Path::new("artifacts"),
+            Path::new("configs"),
+            self.variant,
+            self.dataset,
+            self.scale,
+            8,
+            42,
+        )
+    }
+}

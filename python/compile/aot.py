@@ -1,0 +1,223 @@
+"""AOT compiler: lower the TGL model zoo to HLO-text artifacts.
+
+This is the only entry point of the Python layer and it runs exactly once,
+at build time (``make artifacts``). For every model config in ``configs/``
+it lowers the ``train`` / ``eval`` / ``clf`` step functions defined in
+``model.py`` and writes:
+
+- ``artifacts/<variant>_<step>.hlo.txt``  — HLO text (NOT a serialized
+  ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+  which xla_extension 0.5.1 rejects; the text parser reassigns ids and
+  round-trips cleanly — see /opt/xla-example/README.md),
+- ``artifacts/<variant>_params.bin`` / ``_clf_params.bin`` — initial flat
+  parameter vectors (little-endian f32),
+- ``artifacts/manifest.json``             — the I/O contract the Rust
+  coordinator marshals against (input order, shapes, dtypes, parameter
+  layout, static dims).
+
+Usage: ``python -m compile.aot --out ../artifacts [--variants tgn,tgat_tiny]``
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import yaml
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> dict:
+    dtype = {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+    return {"shape": list(x.shape), "dtype": dtype}
+
+
+def lower_step(fn, example_args, arg_names):
+    """Lower ``fn`` at the example args; returns (hlo_text, manifest_step)."""
+    # keep_unused: the manifest promises EVERY declared input is a real
+    # executable parameter (some variants ignore e.g. mem_dt; jit would
+    # silently drop them and desync the Rust marshalling).
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_shapes = jax.eval_shape(fn, *example_args)
+    inputs = [dict(name=n, **spec_of(a)) for n, a in zip(arg_names, example_args)]
+    # jax flattens dict outputs in sorted-key order; the manifest must list
+    # outputs in that same order for the Rust side to unpack correctly.
+    outputs = [dict(name=n, **spec_of(a)) for n, a in sorted(out_shapes.items())]
+    return text, {"inputs": inputs, "outputs": outputs}
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def smoke_variant() -> dict:
+    """Trivial variant proving the three-layer pipeline composes."""
+    from jax.experimental import pallas as pl
+
+    def kernel(w_ref, x_ref, o_ref):
+        o_ref[...] = w_ref[...] @ x_ref[...] + 2.0
+
+    def apply(w, x):
+        y = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((2, 2), jnp.float32),
+            interpret=True,
+        )(w, x)
+        return {"y": y}
+
+    text, step = lower_step(apply, (f32((2, 2)), f32((2, 2))), ["w", "x"])
+    return {
+        "model": "smoke",
+        "dims": {"n": 2},
+        "param_count": 0,
+        "clf_param_count": 0,
+        "params": [],
+        "steps": {"apply": {"hlo": "smoke_apply.hlo.txt", **step}},
+        "_hlo_texts": {"smoke_apply.hlo.txt": text},
+        "_init": {},
+    }
+
+
+def build_variant(name: str, cfg: dict) -> dict:
+    """Lower one configured variant (train + eval + clf)."""
+    from compile import model as M
+
+    base = M.SPECS[cfg["model"]]
+    dc = cfg.get("dims", {})
+    d = M.Dims(
+        bs=int(dc.get("bs", 600)),
+        fanout=int(dc.get("fanout", 10)),
+        hops=base.hops,
+        snapshots=int(dc.get("snapshots", base.snapshots)),
+        dm=int(dc.get("dm", 100)),
+        dh=int(dc.get("dh", 100)),
+        dv=int(dc.get("dv", 100)),
+        de=int(dc.get("de", 100)),
+        d_time=int(dc.get("d_time", 100)),
+        heads=int(dc.get("heads", 2)),
+        mail_slots=int(dc.get("mail_slots", base.mail_slots)),
+        num_classes=int(dc.get("num_classes", 2)),
+    )
+    spec = M.Spec(
+        name=name,
+        memory=base.memory,
+        hops=base.hops,
+        snapshots=d.snapshots,
+        mail_slots=d.mail_slots,
+        time_proj=base.time_proj,
+        recent=base.recent,
+    )
+    pb = M.build_params(spec, d)
+    train_step, train_ins, eval_step, eval_ins = M.make_steps(spec, d, pb)
+
+    def example(ins):
+        out = []
+        for n, shape in ins:
+            if n in ("params", "adam_m", "adam_v"):
+                out.append(f32((pb.size,)))
+            else:
+                out.append(f32(shape))
+        return tuple(out)
+
+    texts, steps = {}, {}
+    t_text, t_step = lower_step(train_step, example(train_ins), [n for n, _ in train_ins])
+    texts[f"{name}_train.hlo.txt"] = t_text
+    steps["train"] = {"hlo": f"{name}_train.hlo.txt", **t_step}
+    e_text, e_step = lower_step(eval_step, example(eval_ins), [n for n, _ in eval_ins])
+    texts[f"{name}_eval.hlo.txt"] = e_text
+    steps["eval"] = {"hlo": f"{name}_eval.hlo.txt", **e_step}
+
+    cpb = M.clf_param_builder(d)
+    clf_step, clf_ins = M.make_clf_step(d, cpb)
+    clf_example = []
+    for n, shape in clf_ins:
+        if n == "labels":
+            clf_example.append(jax.ShapeDtypeStruct(shape, jnp.int32))
+        else:
+            clf_example.append(f32(shape))
+    c_text, c_step = lower_step(clf_step, tuple(clf_example), [n for n, _ in clf_ins])
+    texts[f"{name}_clf.hlo.txt"] = c_text
+    steps["clf"] = {"hlo": f"{name}_clf.hlo.txt", **c_step}
+
+    key = jax.random.PRNGKey(hash(name) % (2**31))
+    init_flat = pb.init_flat(key)
+    clf_init = cpb.init_flat(jax.random.PRNGKey(1 + hash(name) % (2**31)))
+
+    dims_out = {
+        "bs": d.bs, "fanout": d.fanout, "hops": spec.hops,
+        "snapshots": d.snapshots, "dm": d.dm, "dh": d.dh, "dv": d.dv,
+        "de": d.de, "d_time": d.d_time, "heads": d.heads,
+        "mail_slots": d.mail_slots, "maild": d.maild,
+        "num_classes": d.num_classes, "n_total": d.n_total,
+        "use_memory": 1 if spec.memory is not None else 0,
+        "time_proj": 1 if spec.time_proj else 0,
+    }
+    return {
+        "model": cfg["model"],
+        "dims": dims_out,
+        "param_count": pb.size,
+        "clf_param_count": cpb.size,
+        "params": pb.manifest(),
+        "init_file": f"{name}_params.bin",
+        "clf_init_file": f"{name}_clf_params.bin",
+        "steps": steps,
+        "_hlo_texts": texts,
+        "_init": {
+            f"{name}_params.bin": init_flat,
+            f"{name}_clf_params.bin": clf_init,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="../configs")
+    ap.add_argument("--variants", default="all")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    wanted = None if args.variants == "all" else set(args.variants.split(","))
+
+    jobs = [("smoke", None)]
+    for path in sorted(glob.glob(os.path.join(args.configs, "*.yml"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        with open(path) as fh:
+            jobs.append((name, yaml.safe_load(fh)))
+
+    manifest = {"version": 1, "variants": {}}
+    for name, cfg in jobs:
+        if wanted is not None and name not in wanted and name != "smoke":
+            continue
+        print(f"[aot] lowering variant `{name}` ...", flush=True)
+        v = smoke_variant() if cfg is None else build_variant(name, cfg)
+        for fname, text in v.pop("_hlo_texts").items():
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[aot]   wrote {path} ({len(text) / 1e6:.2f} MB)")
+        for fname, arr in v.pop("_init").items():
+            np.asarray(arr, np.float32).tofile(os.path.join(args.out, fname))
+        manifest["variants"][name] = v
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

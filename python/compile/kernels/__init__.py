@@ -1,0 +1,33 @@
+"""Layer 1: Pallas kernels for the TGNN compute hot-spots.
+
+Three kernels cover the unified TGNN component set (paper §2):
+
+- :mod:`.time_encode` — the learnable time encoder Φ(Δt) = cos(ωΔt + φ)
+  (Eq. 3), used by every variant.
+- :mod:`.attention`   — masked multi-head temporal attention over K sampled
+  neighbors (the attention aggregator, §2.2) and over mailbox slots
+  (APAN's COMB).
+- :mod:`.gru`         — the GRU / RNN memory updater UPDT (Eq. 4).
+
+Each kernel ships as ``<name>_op``: a ``jax.custom_vjp`` whose forward is
+the Pallas kernel (``interpret=True`` — CPU PJRT cannot run Mosaic
+custom-calls; see DESIGN.md §Hardware-Adaptation) and whose backward is
+derived from the pure-jnp oracle in :mod:`.ref` via ``jax.vjp`` —
+mathematically exact, rematerializing, and verified against finite
+differences in the test suite.
+"""
+
+from .attention import attention_op, attention_pallas
+from .gru import gru_op, gru_pallas, rnn_op, rnn_pallas
+from .time_encode import time_encode_op, time_encode_pallas
+
+__all__ = [
+    "attention_op",
+    "attention_pallas",
+    "gru_op",
+    "gru_pallas",
+    "rnn_op",
+    "rnn_pallas",
+    "time_encode_op",
+    "time_encode_pallas",
+]

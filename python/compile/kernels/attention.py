@@ -1,0 +1,110 @@
+"""Pallas kernel: masked multi-head temporal attention (paper §2.2).
+
+One fused kernel computes, per block of BLOCK_R roots: the Q/K/V
+projections, the per-head scaled dot-product scores over the K sampled
+neighbors, the masked stable softmax, and the context reduction — the
+entire attention aggregator without materializing [R, H, K] score tensors
+in HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the neighbor axis K (10) and
+head dim are small, so the MXU work is the two [BLOCK_R·K, Dk] × [Dk, HD]
+projections; BLOCK_R = 128 keeps q/k/v tiles plus the (BLOCK_R, H, K)
+score tile comfortably inside VMEM (≈ (128·10·Dk + Dk·HD + 128·HD)·4 B ≈
+2–3 MB at Dk ≈ 300, HD = 100). What CUDA implementations express with one
+threadblock per root row becomes the grid dimension over root blocks.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_R = 128
+
+
+def _kernel(heads, q_ref, kv_ref, mask_ref, wq_ref, wk_ref, wv_ref, o_ref):
+    br, k, dk = kv_ref.shape
+    hd = wq_ref.shape[1]
+    dh = hd // heads
+    q = (q_ref[...] @ wq_ref[...]).reshape(br, heads, dh)
+    kv = kv_ref[...].reshape(br * k, dk)
+    kk = (kv @ wk_ref[...]).reshape(br, k, heads, dh)
+    vv = (kv @ wv_ref[...]).reshape(br, k, heads, dh)
+    scores = jnp.einsum("rhd,rkhd->rhk", q, kk) / jnp.sqrt(jnp.float32(dh))
+    valid = mask_ref[...][:, None, :] > 0.0
+    scores = jnp.where(valid, scores, jnp.float32(-1e9))
+    smax = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - smax) * valid
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-9)
+    ctx = jnp.einsum("rhk,rkhd->rhd", p / denom, vv)
+    o_ref[...] = ctx.reshape(br, hd)
+
+
+def attention_pallas(q_in, kv_in, mask, wq, wk, wv, heads):
+    """q_in [R, Dq], kv_in [R, K, Dk], mask [R, K] -> [R, H*dh]."""
+    r, k, dk = kv_in.shape
+    dq = q_in.shape[1]
+    hd = wq.shape[1]
+    r_pad = pl.cdiv(max(r, 1), BLOCK_R) * BLOCK_R
+    q_p = jnp.pad(q_in, ((0, r_pad - r), (0, 0)))
+    kv_p = jnp.pad(kv_in, ((0, r_pad - r), (0, 0), (0, 0)))
+    mask_p = jnp.pad(mask, ((0, r_pad - r), (0, 0)))
+    import functools
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, heads),
+        grid=(r_pad // BLOCK_R,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, dq), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, k, dk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_R, k), lambda i: (i, 0)),
+            pl.BlockSpec((dq, hd), lambda i: (0, 0)),
+            pl.BlockSpec((dk, hd), lambda i: (0, 0)),
+            pl.BlockSpec((dk, hd), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, hd), jnp.float32),
+        interpret=True,
+    )(q_p, kv_p, mask_p, wq, wk, wv)
+    return out[:r]
+
+
+def attention_op(q_in, kv_in, mask, wq, wk, wv, heads):
+    """Differentiable attention: Pallas forward, oracle-derived backward.
+
+    ``heads`` is static; a per-head-count custom_vjp is cached.
+    """
+    return _ops(heads)(q_in, kv_in, mask, wq, wk, wv)
+
+
+_CACHE = {}
+
+
+def _ops(heads):
+    if heads in _CACHE:
+        return _CACHE[heads]
+
+    @jax.custom_vjp
+    def op(q_in, kv_in, mask, wq, wk, wv):
+        return attention_pallas(q_in, kv_in, mask, wq, wk, wv, heads)
+
+    def fwd(q_in, kv_in, mask, wq, wk, wv):
+        return op(q_in, kv_in, mask, wq, wk, wv), (q_in, kv_in, mask, wq, wk, wv)
+
+    def bwd(res, g):
+        q_in, kv_in, mask, wq, wk, wv = res
+        _, vjp = jax.vjp(
+            lambda q, kv, m, a, b, c: ref.attention_ref(q, kv, m, a, b, c, heads),
+            q_in,
+            kv_in,
+            mask,
+            wq,
+            wk,
+            wv,
+        )
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    _CACHE[heads] = op
+    return op

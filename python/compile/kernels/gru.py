@@ -1,0 +1,108 @@
+"""Pallas kernels: the memory updaters UPDT (paper Eq. 4).
+
+- ``gru_op``  — GRU cell (TGN, APAN): two fused [BLOCK_N, I|H] × [., 3H]
+  projections plus the gate nonlinearities, one block of nodes at a time.
+- ``rnn_op``  — vanilla RNN cell (JODIE).
+
+Both keep the whole gate computation in VMEM per block; the MXU sees two
+(BLOCK_N × I) @ (I × 3H) matmuls per block — at BLOCK_N = 128, I ≈ 400,
+H = 100 that is ≈ 0.6 MB of operand tiles (DESIGN.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_N = 128
+
+
+def _gru_kernel(x_ref, h_ref, wi_ref, wh_ref, bi_ref, bh_ref, o_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    gi = x @ wi_ref[...] + bi_ref[...][None, :]
+    gh = h @ wh_ref[...] + bh_ref[...][None, :]
+    hdim = h.shape[1]
+    i_r, i_z, i_n = gi[:, :hdim], gi[:, hdim : 2 * hdim], gi[:, 2 * hdim :]
+    h_r, h_z, h_n = gh[:, :hdim], gh[:, hdim : 2 * hdim], gh[:, 2 * hdim :]
+    r = 1.0 / (1.0 + jnp.exp(-(i_r + h_r)))
+    z = 1.0 / (1.0 + jnp.exp(-(i_z + h_z)))
+    n = jnp.tanh(i_n + r * h_n)
+    o_ref[...] = (1.0 - z) * n + z * h
+
+
+def _rnn_kernel(x_ref, h_ref, wi_ref, wh_ref, b_ref, o_ref):
+    o_ref[...] = jnp.tanh(
+        x_ref[...] @ wi_ref[...] + h_ref[...] @ wh_ref[...] + b_ref[...][None, :]
+    )
+
+
+def _blocked_cell(kernel, x, h, weights, out_dim):
+    n = x.shape[0]
+    n_pad = pl.cdiv(max(n, 1), BLOCK_N) * BLOCK_N
+    x_p = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    h_p = jnp.pad(h, ((0, n_pad - n), (0, 0)))
+    in_specs = [
+        pl.BlockSpec((BLOCK_N, x.shape[1]), lambda i: (i, 0)),
+        pl.BlockSpec((BLOCK_N, h.shape[1]), lambda i: (i, 0)),
+    ] + [
+        # nd bound eagerly (late-binding closures would all see the last w).
+        pl.BlockSpec(w.shape, lambda i, nd=len(w.shape): (0,) * nd)
+        for w in weights
+    ]
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // BLOCK_N,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((BLOCK_N, out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, out_dim), jnp.float32),
+        interpret=True,
+    )(x_p, h_p, *weights)
+    return out[:n]
+
+
+def gru_pallas(x, h, wi, wh, bi, bh):
+    """x [N, I], h [N, H] -> new h [N, H]."""
+    return _blocked_cell(_gru_kernel, x, h, (wi, wh, bi, bh), h.shape[1])
+
+
+def rnn_pallas(x, h, wi, wh, b):
+    """x [N, I], h [N, H] -> new h [N, H]."""
+    return _blocked_cell(_rnn_kernel, x, h, (wi, wh, b), h.shape[1])
+
+
+@jax.custom_vjp
+def gru_op(x, h, wi, wh, bi, bh):
+    """Differentiable GRU cell: Pallas forward, oracle-derived backward."""
+    return gru_pallas(x, h, wi, wh, bi, bh)
+
+
+def _gru_fwd(x, h, wi, wh, bi, bh):
+    return gru_pallas(x, h, wi, wh, bi, bh), (x, h, wi, wh, bi, bh)
+
+
+def _gru_bwd(res, g):
+    _, vjp = jax.vjp(ref.gru_ref, *res)
+    return vjp(g)
+
+
+gru_op.defvjp(_gru_fwd, _gru_bwd)
+
+
+@jax.custom_vjp
+def rnn_op(x, h, wi, wh, b):
+    """Differentiable RNN cell: Pallas forward, oracle-derived backward."""
+    return rnn_pallas(x, h, wi, wh, b)
+
+
+def _rnn_fwd(x, h, wi, wh, b):
+    return rnn_pallas(x, h, wi, wh, b), (x, h, wi, wh, b)
+
+
+def _rnn_bwd(res, g):
+    _, vjp = jax.vjp(ref.rnn_ref, *res)
+    return vjp(g)
+
+
+rnn_op.defvjp(_rnn_fwd, _rnn_bwd)

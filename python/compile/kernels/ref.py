@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth (pytest compares kernel outputs
+against them) *and* the source of the backward passes (the ``custom_vjp``
+backward is ``jax.vjp`` of these functions — exact gradients without
+hand-deriving kernel adjoints).
+"""
+
+import jax.numpy as jnp
+
+
+def time_encode_ref(dt, w, phi):
+    """Φ(Δt) = cos(Δt ⊗ ω + φ).  dt [...], w [D], phi [D] -> [..., D]."""
+    return jnp.cos(dt[..., None] * w + phi)
+
+
+def attention_ref(q_in, kv_in, mask, wq, wk, wv, heads):
+    """Masked multi-head dot-product attention over a fixed neighbor axis.
+
+    q_in  [R, Dq]      root/query representations
+    kv_in [R, K, Dk]   neighbor (or mail) representations
+    mask  [R, K]       1.0 = valid
+    wq [Dq, H*dh], wk/wv [Dk, H*dh]
+    returns [R, H*dh]; rows with no valid neighbor return zeros.
+    """
+    r, k, _ = kv_in.shape
+    hd = wq.shape[1]
+    dh = hd // heads
+    q = (q_in @ wq).reshape(r, heads, dh)
+    kk = (kv_in.reshape(r * k, -1) @ wk).reshape(r, k, heads, dh)
+    vv = (kv_in.reshape(r * k, -1) @ wv).reshape(r, k, heads, dh)
+    scores = jnp.einsum("rhd,rkhd->rhk", q, kk) / jnp.sqrt(jnp.float32(dh))
+    neg = jnp.float32(-1e9)
+    scores = jnp.where(mask[:, None, :] > 0.0, scores, neg)
+    # Stable masked softmax; all-masked rows produce zero context.
+    smax = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - smax) * (mask[:, None, :] > 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-9)
+    ctx = jnp.einsum("rhk,rkhd->rhd", p, vv)
+    return ctx.reshape(r, hd)
+
+
+def gru_ref(x, h, wi, wh, bi, bh):
+    """GRU cell (PyTorch ``GRUCell`` formulation, as in TGN).
+
+    x [N, I], h [N, H], wi [I, 3H], wh [H, 3H], bi/bh [3H] -> [N, H].
+    Gate order along the 3H axis: reset | update | new.
+    """
+    gi = x @ wi + bi
+    gh = h @ wh + bh
+    hdim = h.shape[1]
+    i_r, i_z, i_n = gi[:, :hdim], gi[:, hdim : 2 * hdim], gi[:, 2 * hdim :]
+    h_r, h_z, h_n = gh[:, :hdim], gh[:, hdim : 2 * hdim], gh[:, 2 * hdim :]
+    r = jnp.clip(1.0 / (1.0 + jnp.exp(-(i_r + h_r))), 0.0, 1.0)
+    z = 1.0 / (1.0 + jnp.exp(-(i_z + h_z)))
+    n = jnp.tanh(i_n + r * h_n)
+    return (1.0 - z) * n + z * h
+
+
+def rnn_ref(x, h, wi, wh, b):
+    """Vanilla RNN cell (JODIE's updater): tanh(x Wi + h Wh + b)."""
+    return jnp.tanh(x @ wi + h @ wh + b)

@@ -1,0 +1,67 @@
+"""Pallas kernel: the learnable time encoder Φ(Δt) = cos(ωΔt + φ) (Eq. 3).
+
+Tiny but ubiquitous — every attention call and every memory refresh feeds
+time deltas through it, so it is fused as one VMEM-resident block per
+``BLOCK_N`` deltas. The TPU BlockSpec maps the Δt vector into VMEM in
+(BLOCK_N,) strips while ω/φ stay resident; the output tile is
+(BLOCK_N, D) — all well under VMEM for D ≤ 512 (see DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_N = 256
+
+
+def _kernel(dt_ref, w_ref, phi_ref, o_ref):
+    dt = dt_ref[...]
+    o_ref[...] = jnp.cos(dt[:, None] * w_ref[...][None, :] + phi_ref[...][None, :])
+
+
+def time_encode_pallas(dt, w, phi):
+    """Φ over a flat batch of deltas: dt [N], w [D], phi [D] -> [N, D]."""
+    n = dt.shape[0]
+    d = w.shape[0]
+    n_pad = pl.cdiv(n, BLOCK_N) * BLOCK_N
+    dt_p = jnp.pad(dt, (0, n_pad - n))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
+        interpret=True,
+    )(dt_p, w, phi)
+    return out[:n]
+
+
+@jax.custom_vjp
+def time_encode_op(dt, w, phi):
+    """Differentiable Φ: Pallas forward, oracle-derived backward."""
+    return time_encode_pallas(dt, w, phi)
+
+
+def _fwd(dt, w, phi):
+    return time_encode_pallas(dt, w, phi), (dt, w, phi)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ref.time_encode_ref, *res)
+    return vjp(g)
+
+
+time_encode_op.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def _noop():  # pragma: no cover - keeps module import side-effect free
+    return jnp.zeros(())

@@ -1,0 +1,517 @@
+"""Layer 2: the TGL model zoo in JAX (JODIE / DySAT / TGAT / TGN / APAN).
+
+Every variant is assembled from the paper's unified component set — node
+memory (Eq. 1–5), the time encoder Φ (Eq. 3), the attention aggregator
+(§2.2), the memory updater UPDT (Eq. 4) — all of whose hot-spots are the
+Pallas kernels in :mod:`compile.kernels`. Three step functions are lowered
+per variant:
+
+- ``train`` — memory refresh + message passing + link-prediction BCE loss
+  + backprop + Adam, all in one graph (optimizer-in-graph keeps Python off
+  the training path entirely).
+- ``eval``  — loss/scores/embeddings + the same memory/mail updates (the
+  paper keeps updating node memory during inference, §3).
+- ``embed`` — embeddings for an arbitrary root batch at given timestamps
+  (node-classification readout), read-only on memory.
+
+Parameters travel as ONE flat f32 vector; :class:`ParamBuilder` records
+the (name, offset, shape) layout into the manifest so the Rust coordinator
+can initialize, checkpoint, and average replicas without Python.
+
+Input-ordering contract with the Rust trainer (`Mfg::all_nodes`): node-
+aligned tensors cover, in order, the B0 = 3·bs batch roots
+(src | dst | neg), then for each snapshot s and hop l the flattened
+sampled slots of that (s, l) block. Hop-aligned tensors (`dt_s{s}_h{l}`,
+`mask_s{s}_h{l}`, `efeat_s{s}_h{l}`) follow the same (s, l) order.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import attention_op, gru_op, rnn_op, time_encode_op
+
+
+# --------------------------------------------------------------------- dims
+
+
+@dataclass
+class Dims:
+    """Static dimensions a variant is lowered with."""
+
+    bs: int = 600          # positive edges per batch
+    fanout: int = 10       # K
+    hops: int = 1          # L
+    snapshots: int = 1     # S
+    dm: int = 100          # memory dim
+    dh: int = 100          # embedding dim (== dm for memory variants)
+    dv: int = 100          # node feature dim
+    de: int = 100          # edge feature dim
+    d_time: int = 100      # time encoding dim
+    heads: int = 2
+    mail_slots: int = 1
+    num_classes: int = 2
+
+    @property
+    def b0(self) -> int:
+        return 3 * self.bs
+
+    @property
+    def maild(self) -> int:
+        return 2 * self.dm + self.de
+
+    def hop_roots(self, l: int) -> int:
+        """Roots of hop l (block row count)."""
+        return self.b0 * self.fanout**l
+
+    @property
+    def n_total(self) -> int:
+        """Total nodes in MFG order (roots + all sampled slots)."""
+        n = self.b0
+        for _ in range(self.snapshots):
+            for l in range(self.hops):
+                n += self.hop_roots(l) * self.fanout
+        return n
+
+    def hop_offset(self, s: int, l: int) -> int:
+        """Offset of snapshot s / hop l's slots in the node axis."""
+        n = self.b0
+        per_snap = sum(self.hop_roots(j) * self.fanout for j in range(self.hops))
+        n += s * per_snap
+        for j in range(l):
+            n += self.hop_roots(j) * self.fanout
+        return n
+
+
+# ------------------------------------------------------------ param packing
+
+
+class ParamBuilder:
+    """Named blocks inside one flat parameter vector."""
+
+    def __init__(self):
+        self.entries = []  # (name, offset, shape, init)
+        self.size = 0
+
+    def add(self, name, shape, init="glorot"):
+        self.entries.append((name, self.size, tuple(shape), init))
+        self.size += int(np.prod(shape))
+
+    def init_flat(self, key) -> np.ndarray:
+        out = np.zeros(self.size, np.float32)
+        for name, off, shape, init in self.entries:
+            n = int(np.prod(shape))
+            key, sub = jax.random.split(key)
+            if init == "glorot":
+                fan_in = shape[0] if len(shape) > 1 else n
+                fan_out = shape[-1]
+                lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+                vals = jax.random.uniform(sub, (n,), jnp.float32, -lim, lim)
+                out[off : off + n] = np.asarray(vals)
+            elif init == "zeros":
+                pass
+            elif init == "ones":
+                out[off : off + n] = 1.0
+            elif init == "time":
+                # TGAT's ω init: decaying frequencies over the encoding dim.
+                d = shape[0]
+                out[off : off + n] = (1.0 / 10.0 ** np.linspace(0, 9, d)).astype(np.float32)
+            else:
+                raise ValueError(init)
+        return out
+
+    def unpacker(self):
+        entries = list(self.entries)
+
+        def unpack(flat):
+            return {
+                name: jax.lax.dynamic_slice(flat, (off,), (int(np.prod(shape)),)).reshape(shape)
+                for name, off, shape, _ in entries
+            }
+
+        return unpack
+
+    def manifest(self):
+        return [
+            {"name": n, "offset": o, "shape": list(s)} for n, o, s, _ in self.entries
+        ]
+
+
+# ------------------------------------------------------------- model pieces
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+@dataclass
+class Spec:
+    """What distinguishes one variant (paper Table 1)."""
+
+    name: str
+    memory: str | None      # None | 'gru' | 'rnn' | 'attn_gru'
+    hops: int
+    snapshots: int
+    mail_slots: int = 1
+    time_proj: bool = False  # JODIE's embedding projection
+    recent: bool = True      # sampling strategy hint (for the Rust side)
+
+
+SPECS = {
+    "tgat": Spec("tgat", memory=None, hops=2, snapshots=1, recent=False),
+    "tgn": Spec("tgn", memory="gru", hops=1, snapshots=1),
+    "jodie": Spec("jodie", memory="rnn", hops=0, snapshots=1, time_proj=True),
+    "apan": Spec("apan", memory="attn_gru", hops=0, snapshots=1, mail_slots=10),
+    "dysat": Spec("dysat", memory=None, hops=2, snapshots=3, recent=False),
+}
+
+
+def build_params(spec: Spec, d: Dims) -> ParamBuilder:
+    p = ParamBuilder()
+    p.add("time_w", (d.d_time,), "time")
+    p.add("time_phi", (d.d_time,), "zeros")
+    p.add("feat_w", (d.dv, d.dh))
+    p.add("feat_b", (d.dh,), "zeros")
+    p.add("ln_in_g", (d.dh,), "ones")
+    p.add("ln_in_b", (d.dh,), "zeros")
+    if spec.memory in ("gru", "attn_gru"):
+        xdim = d.maild + d.d_time if spec.memory == "gru" else d.dm
+        p.add("upd_wi", (xdim, 3 * d.dm))
+        p.add("upd_wh", (d.dm, 3 * d.dm))
+        p.add("upd_bi", (3 * d.dm,), "zeros")
+        p.add("upd_bh", (3 * d.dm,), "zeros")
+    elif spec.memory == "rnn":
+        xdim = d.maild + d.d_time
+        p.add("upd_wi", (xdim, d.dm))
+        p.add("upd_wh", (d.dm, d.dm))
+        p.add("upd_b", (d.dm,), "zeros")
+    if spec.memory == "attn_gru":  # APAN's COMB over the mailbox
+        p.add("comb_wq", (d.dm + d.d_time, d.dm))
+        p.add("comb_wk", (d.maild + d.d_time, d.dm))
+        p.add("comb_wv", (d.maild + d.d_time, d.dm))
+    for l in range(spec.hops):
+        dq = d.dh + d.d_time
+        dk = d.dh + d.d_time + d.de
+        p.add(f"att{l}_wq", (dq, d.dh))
+        p.add(f"att{l}_wk", (dk, d.dh))
+        p.add(f"att{l}_wv", (dk, d.dh))
+        p.add(f"att{l}_wo", (2 * d.dh, d.dh))
+        p.add(f"att{l}_bo", (d.dh,), "zeros")
+        p.add(f"att{l}_ln_g", (d.dh,), "ones")
+        p.add(f"att{l}_ln_b", (d.dh,), "zeros")
+    if spec.snapshots > 1:  # DySAT combine-RNN across snapshots
+        p.add("snap_wi", (d.dh, 3 * d.dh))
+        p.add("snap_wh", (d.dh, 3 * d.dh))
+        p.add("snap_bi", (3 * d.dh,), "zeros")
+        p.add("snap_bh", (3 * d.dh,), "zeros")
+    if spec.time_proj:
+        p.add("jp_w", (d.dh, d.dh))
+        p.add("jp_b", (d.dh,), "zeros")
+        p.add("jt_w", (d.dh,), "zeros")
+    p.add("ln_out_g", (d.dh,), "ones")
+    p.add("ln_out_b", (d.dh,), "zeros")
+    p.add("dec_w1", (2 * d.dh, d.dh))
+    p.add("dec_b1", (d.dh,), "zeros")
+    p.add("dec_w2", (d.dh, 1))
+    p.add("dec_b2", (1,), "zeros")
+    return p
+
+
+def refresh_memory(spec: Spec, d: Dims, P, mem, mail, mail_dt, mail_mask):
+    """UPDT from cached mails (Eq. 4); identity where no mail is cached."""
+    phi0 = time_encode_op(mail_dt[:, 0], P["time_w"], P["time_phi"])
+    if spec.memory == "gru":
+        x = jnp.concatenate([mail[:, 0], phi0], axis=-1)
+        upd = gru_op(x, mem, P["upd_wi"], P["upd_wh"], P["upd_bi"], P["upd_bh"])
+        has = mail_mask[:, 0:1]
+    elif spec.memory == "rnn":
+        x = jnp.concatenate([mail[:, 0], phi0], axis=-1)
+        upd = rnn_op(x, mem, P["upd_wi"], P["upd_wh"], P["upd_b"])
+        has = mail_mask[:, 0:1]
+    elif spec.memory == "attn_gru":
+        n, m, _ = mail.shape
+        phi = time_encode_op(mail_dt.reshape(-1), P["time_w"], P["time_phi"]).reshape(
+            n, m, d.d_time
+        )
+        kv = jnp.concatenate([mail, phi], axis=-1)
+        q = jnp.concatenate(
+            [mem, time_encode_op(jnp.zeros(n), P["time_w"], P["time_phi"])], axis=-1
+        )
+        ctx = attention_op(q, kv, mail_mask, P["comb_wq"], P["comb_wk"], P["comb_wv"], d.heads)
+        upd = gru_op(ctx, mem, P["upd_wi"], P["upd_wh"], P["upd_bi"], P["upd_bh"])
+        has = jnp.max(mail_mask, axis=1, keepdims=True)
+    else:
+        raise AssertionError
+    return has * upd + (1.0 - has) * mem
+
+
+def attention_layer(d: Dims, P, l, h_root, h_nbr, dt, mask, efeat):
+    """One temporal-attention aggregation + projection + LayerNorm."""
+    r, k = mask.shape
+    phi = time_encode_op(dt.reshape(-1), P["time_w"], P["time_phi"]).reshape(r, k, d.d_time)
+    phi_q = time_encode_op(jnp.zeros(r), P["time_w"], P["time_phi"])
+    q = jnp.concatenate([h_root, phi_q], axis=-1)
+    kv = jnp.concatenate([h_nbr, phi, efeat], axis=-1)
+    ctx = attention_op(q, kv, mask, P[f"att{l}_wq"], P[f"att{l}_wk"], P[f"att{l}_wv"], d.heads)
+    out = jnp.concatenate([ctx, h_root], axis=-1) @ P[f"att{l}_wo"] + P[f"att{l}_bo"]
+    out = jax.nn.relu(out)
+    return layer_norm(out, P[f"att{l}_ln_g"], P[f"att{l}_ln_b"])
+
+
+def embeddings(spec: Spec, d: Dims, P, inp):
+    """Dynamic node embeddings for the B0 roots; also returns the
+    refreshed memory for all N nodes (to persist host-side)."""
+    n = d.n_total
+    if spec.memory is not None:
+        mem1 = refresh_memory(
+            spec, d, P, inp["mem"], inp["mail"], inp["mail_dt"], inp["mail_mask"]
+        )
+        h0 = mem1 + jax.nn.relu(inp["node_feat"] @ P["feat_w"] + P["feat_b"])
+    else:
+        mem1 = None
+        h0 = jax.nn.relu(inp["node_feat"] @ P["feat_w"] + P["feat_b"])
+    h0 = layer_norm(h0, P["ln_in_g"], P["ln_in_b"])
+    _ = n
+    b0 = d.b0
+    snap_embs = []
+    for s in range(d.snapshots):
+        if spec.hops == 0:
+            h = h0[:b0]
+        elif spec.hops == 1:
+            o1 = d.hop_offset(s, 0)
+            l1 = d.hop_roots(0) * d.fanout
+            h_nbr = h0[o1 : o1 + l1].reshape(d.b0, d.fanout, d.dh)
+            h = attention_layer(
+                d, P, 0, h0[:b0],
+                h_nbr,
+                inp[f"dt_s{s}_h0"], inp[f"mask_s{s}_h0"], inp[f"efeat_s{s}_h0"],
+            )
+        elif spec.hops == 2:
+            o1 = d.hop_offset(s, 0)
+            l1 = d.hop_roots(0) * d.fanout
+            o2 = d.hop_offset(s, 1)
+            l2 = d.hop_roots(1) * d.fanout
+            # Inner layer: embed the hop-1 slots from their hop-2 neighbors.
+            h1_roots = h0[o1 : o1 + l1]
+            h2_nbr = h0[o2 : o2 + l2].reshape(l1, d.fanout, d.dh)
+            h1 = attention_layer(
+                d, P, 1, h1_roots, h2_nbr,
+                inp[f"dt_s{s}_h1"], inp[f"mask_s{s}_h1"], inp[f"efeat_s{s}_h1"],
+            )
+            # Mask out padding hop-1 roots so they contribute nothing new.
+            h1 = h1 * inp[f"mask_s{s}_h0"].reshape(l1, 1)
+            h = attention_layer(
+                d, P, 0, h0[:b0], h1.reshape(d.b0, d.fanout, d.dh),
+                inp[f"dt_s{s}_h0"], inp[f"mask_s{s}_h0"], inp[f"efeat_s{s}_h0"],
+            )
+        else:
+            raise AssertionError("hops > 2 not lowered")
+        snap_embs.append(h)
+
+    if d.snapshots > 1:
+        # DySAT: GRU over snapshots, oldest -> newest.
+        h = jnp.zeros_like(snap_embs[0])
+        for s in reversed(range(d.snapshots)):
+            h = gru_op(snap_embs[s], h, P["snap_wi"], P["snap_wh"], P["snap_bi"], P["snap_bh"])
+    else:
+        h = snap_embs[0]
+
+    if spec.time_proj:
+        # JODIE: embedding projection by elapsed time.
+        grow = 1.0 + (inp["mem_dt"][:b0, None] * inp["dt_scale"]) * P["jt_w"][None, :]
+        h = grow * (h @ P["jp_w"] + P["jp_b"])
+
+    return layer_norm(h, P["ln_out_g"], P["ln_out_b"]), mem1
+
+
+def decoder(P, h_u, h_v):
+    x = jnp.concatenate([h_u, h_v], axis=-1)
+    x = jax.nn.relu(x @ P["dec_w1"] + P["dec_b1"])
+    return (x @ P["dec_w2"] + P["dec_b2"])[:, 0]
+
+
+def link_loss(P, d: Dims, emb, edge_mask):
+    pos = decoder(P, emb[: d.bs], emb[d.bs : 2 * d.bs])
+    neg = decoder(P, emb[: d.bs], emb[2 * d.bs :])
+    per_edge = softplus(-pos) + softplus(neg)
+    denom = jnp.maximum(jnp.sum(edge_mask), 1.0)
+    return jnp.sum(per_edge * edge_mask) / denom, pos, neg
+
+
+def new_mails(d: Dims, mem1, batch_efeat):
+    """Eq. 1–2 minus the Φ term (encoded at consume time from mail age):
+    mail(u) = s_u || s_v || e_uv, mail(v) = s_v || s_u || e_uv."""
+    s_u = mem1[: d.bs]
+    s_v = mem1[d.bs : 2 * d.bs]
+    m_src = jnp.concatenate([s_u, s_v, batch_efeat], axis=-1)
+    m_dst = jnp.concatenate([s_v, s_u, batch_efeat], axis=-1)
+    return jnp.concatenate([m_src, m_dst], axis=0)
+
+
+# ------------------------------------------------------------ step builders
+
+
+def input_specs(spec: Spec, d: Dims, kind: str):
+    """(name, shape) list defining the exact function signature."""
+    ins = []
+    if kind == "train":
+        ins += [("params", None), ("adam_m", None), ("adam_v", None),
+                ("step", ()), ("lr", ())]
+    else:
+        ins += [("params", None)]
+    ins += [("edge_mask", (d.bs,))]
+    n = d.n_total
+    if spec.memory is not None:
+        ins += [
+            ("mem", (n, d.dm)),
+            ("mem_dt", (n,)),
+            ("mail", (n, d.mail_slots, d.maild)),
+            ("mail_dt", (n, d.mail_slots)),
+            ("mail_mask", (n, d.mail_slots)),
+        ]
+    ins += [("node_feat", (n, d.dv))]
+    if spec.memory is not None:
+        ins += [("batch_efeat", (d.bs, d.de))]
+    for s in range(d.snapshots):
+        for l in range(spec.hops):
+            r = d.b0 * d.fanout**l
+            ins += [
+                (f"dt_s{s}_h{l}", (r, d.fanout)),
+                (f"mask_s{s}_h{l}", (r, d.fanout)),
+                (f"efeat_s{s}_h{l}", (r, d.fanout, d.de)),
+            ]
+    if spec.time_proj:
+        ins += [("dt_scale", ())]
+    return ins
+
+
+def make_steps(spec: Spec, d: Dims, pb: ParamBuilder):
+    """Build the train / eval / embed python callables + their specs."""
+    unpack = pb.unpacker()
+
+    def forward(flat_params, inp):
+        P = unpack(flat_params)
+        emb, mem1 = embeddings(spec, d, P, inp)
+        loss, pos, neg = link_loss(P, d, emb, inp["edge_mask"])
+        outs = {"emb": emb, "pos_score": pos, "neg_score": neg}
+        if spec.memory is not None:
+            outs["new_mem"] = mem1
+            outs["new_mail"] = new_mails(d, mem1, inp["batch_efeat"])
+        return loss, outs
+
+    train_ins = input_specs(spec, d, "train")
+    eval_ins = input_specs(spec, d, "eval")
+
+    def train_step(*args):
+        names = [n for n, _ in train_ins]
+        a = dict(zip(names, args))
+        inp = {k: v for k, v in a.items() if k not in ("params", "adam_m", "adam_v", "step", "lr")}
+
+        def loss_fn(flat):
+            loss, outs = forward(flat, inp)
+            return loss, outs
+
+        (loss, outs), g = jax.value_and_grad(loss_fn, has_aux=True)(a["params"])
+        # Adam (in-graph).
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = a["step"] + 1.0
+        m = b1 * a["adam_m"] + (1 - b1) * g
+        v = b2 * a["adam_v"] + (1 - b2) * g * g
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        new_params = a["params"] - a["lr"] * mhat / (jnp.sqrt(vhat) + eps)
+        res = {
+            "loss": loss,
+            "new_params": new_params,
+            "new_adam_m": m,
+            "new_adam_v": v,
+        }
+        if spec.memory is not None:
+            res["new_mem"] = outs["new_mem"]
+            res["new_mail"] = outs["new_mail"]
+        return res
+
+    def eval_step(*args):
+        names = [n for n, _ in eval_ins]
+        a = dict(zip(names, args))
+        inp = {k: v for k, v in a.items() if k != "params"}
+        loss, outs = forward(a["params"], inp)
+        res = {
+            "loss": loss,
+            "pos_score": outs["pos_score"],
+            "neg_score": outs["neg_score"],
+            "emb": outs["emb"],
+        }
+        if spec.memory is not None:
+            res["new_mem"] = outs["new_mem"]
+            res["new_mail"] = outs["new_mail"]
+        return res
+
+    return train_step, train_ins, eval_step, eval_ins
+
+
+# ---------------------------------------------------------------- clf head
+
+
+def clf_param_builder(d: Dims) -> ParamBuilder:
+    p = ParamBuilder()
+    p.add("c_w1", (d.dh, d.dh))
+    p.add("c_b1", (d.dh,), "zeros")
+    p.add("c_w2", (d.dh, d.num_classes))
+    p.add("c_b2", (d.num_classes,), "zeros")
+    return p
+
+
+def make_clf_step(d: Dims, pb: ParamBuilder):
+    unpack = pb.unpacker()
+
+    def logits_of(flat, emb):
+        P = unpack(flat)
+        h = jax.nn.relu(emb @ P["c_w1"] + P["c_b1"])
+        return h @ P["c_w2"] + P["c_b2"]
+
+    def clf_step(params, adam_m, adam_v, step, lr, emb, labels, mask):
+        def loss_fn(flat):
+            lg = logits_of(flat, emb)
+            logp = jax.nn.log_softmax(lg, axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+            return jnp.sum(nll * mask) / denom, lg
+
+        (loss, lg), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = step + 1.0
+        m = b1 * adam_m + (1 - b1) * g
+        v = b2 * adam_v + (1 - b2) * g * g
+        new_params = params - lr * (m / (1 - b1**t)) / (jnp.sqrt(v / (1 - b2**t)) + eps)
+        return {
+            "loss": loss,
+            "logits": lg,
+            "new_params": new_params,
+            "new_adam_m": m,
+            "new_adam_v": v,
+        }
+
+    clf_ins = [
+        ("params", (pb.size,)),
+        ("adam_m", (pb.size,)),
+        ("adam_v", (pb.size,)),
+        ("step", ()),
+        ("lr", ()),
+        ("emb", (d.bs, d.dh)),
+        ("labels", (d.bs,)),
+        ("mask", (d.bs,)),
+    ]
+    return clf_step, clf_ins
+
+
+# Registered by aot.py (smoke lives there); populated from configs.
+VARIANT_BUILDERS: dict = {}

@@ -1,0 +1,180 @@
+"""Pallas kernels vs pure-jnp oracles: values and gradients.
+
+Hypothesis sweeps shapes; tolerances are tight because interpret-mode
+Pallas and XLA execute the same float32 math.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention_op,
+    attention_pallas,
+    gru_op,
+    gru_pallas,
+    rnn_op,
+    rnn_pallas,
+    time_encode_op,
+    time_encode_pallas,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32) * 0.5
+
+
+# ---------------------------------------------------------------- time enc
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(1, 700), d=st.integers(1, 130))
+def test_time_encode_matches_ref(n, d):
+    k = jax.random.split(jax.random.PRNGKey(n * 1000 + d), 3)
+    dt = jnp.abs(rand(k[0], n)) * 100
+    w, phi = rand(k[1], d), rand(k[2], d)
+    got = time_encode_pallas(dt, w, phi)
+    want = ref.time_encode_ref(dt, w, phi)
+    # cos() of O(100) arguments amplifies ulp-level differences between the
+    # two compilation paths; 1e-4 absolute is tight for f32 there.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_time_encode_grads():
+    k = jax.random.split(jax.random.PRNGKey(0), 3)
+    dt, w, phi = jnp.abs(rand(k[0], 37)), rand(k[1], 11), rand(k[2], 11)
+
+    def f_op(dt, w, phi):
+        return jnp.sum(time_encode_op(dt, w, phi) ** 2)
+
+    def f_ref(dt, w, phi):
+        return jnp.sum(ref.time_encode_ref(dt, w, phi) ** 2)
+
+    g_op = jax.grad(f_op, argnums=(0, 1, 2))(dt, w, phi)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(dt, w, phi)
+    for a, b in zip(g_op, g_ref):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    r=st.integers(1, 300),
+    k=st.integers(1, 12),
+    heads=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 20]),
+)
+def test_attention_matches_ref(r, k, heads, dh):
+    keys = jax.random.split(jax.random.PRNGKey(r * 31 + k), 6)
+    dq, dk = 13, 17
+    hd = heads * dh
+    q = rand(keys[0], r, dq)
+    kv = rand(keys[1], r, k, dk)
+    mask = (jax.random.uniform(keys[2], (r, k)) > 0.3).astype(jnp.float32)
+    wq, wk, wv = rand(keys[3], dq, hd), rand(keys[4], dk, hd), rand(keys[5], dk, hd)
+    got = attention_pallas(q, kv, mask, wq, wk, wv, heads)
+    want = ref.attention_ref(q, kv, mask, wq, wk, wv, heads)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_all_masked_row_is_zero():
+    keys = jax.random.split(jax.random.PRNGKey(5), 6)
+    q = rand(keys[0], 4, 6)
+    kv = rand(keys[1], 4, 5, 7)
+    mask = jnp.zeros((4, 5)).at[0].set(1.0)
+    wq, wk, wv = rand(keys[2], 6, 8), rand(keys[3], 7, 8), rand(keys[4], 7, 8)
+    out = attention_pallas(q, kv, mask, wq, wk, wv, 2)
+    assert jnp.all(out[1:] == 0.0)
+    assert jnp.any(out[0] != 0.0)
+
+
+def test_attention_grads_match_ref():
+    keys = jax.random.split(jax.random.PRNGKey(7), 6)
+    r, k, heads, dh = 9, 4, 2, 6
+    hd = heads * dh
+    q = rand(keys[0], r, 5)
+    kv = rand(keys[1], r, k, 8)
+    mask = (jax.random.uniform(keys[2], (r, k)) > 0.4).astype(jnp.float32)
+    wq, wk, wv = rand(keys[3], 5, hd), rand(keys[4], 8, hd), rand(keys[5], 8, hd)
+
+    def f_op(q, wq, wk, wv):
+        return jnp.sum(attention_op(q, kv, mask, wq, wk, wv, heads) ** 2)
+
+    def f_ref(q, wq, wk, wv):
+        return jnp.sum(ref.attention_ref(q, kv, mask, wq, wk, wv, heads) ** 2)
+
+    g_op = jax.grad(f_op, argnums=(0, 1, 2, 3))(q, wq, wk, wv)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2, 3))(q, wq, wk, wv)
+    for a, b in zip(g_op, g_ref):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- gru / rnn
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(1, 300), i=st.integers(1, 40), h=st.integers(1, 40))
+def test_gru_matches_ref(n, i, h):
+    keys = jax.random.split(jax.random.PRNGKey(n + i * 7 + h * 13), 6)
+    x, hh = rand(keys[0], n, i), rand(keys[1], n, h)
+    wi, wh = rand(keys[2], i, 3 * h), rand(keys[3], h, 3 * h)
+    bi, bh = rand(keys[4], 3 * h), rand(keys[5], 3 * h)
+    got = gru_pallas(x, hh, wi, wh, bi, bh)
+    want = ref.gru_ref(x, hh, wi, wh, bi, bh)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(1, 200), i=st.integers(1, 30), h=st.integers(1, 30))
+def test_rnn_matches_ref(n, i, h):
+    keys = jax.random.split(jax.random.PRNGKey(n * 3 + i + h), 5)
+    x, hh = rand(keys[0], n, i), rand(keys[1], n, h)
+    wi, wh, b = rand(keys[2], i, h), rand(keys[3], h, h), rand(keys[4], h)
+    got = rnn_pallas(x, hh, wi, wh, b)
+    want = ref.rnn_ref(x, hh, wi, wh, b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_gru_gates_bound_state():
+    # GRU output must interpolate between n (tanh-bounded) and previous h.
+    keys = jax.random.split(jax.random.PRNGKey(3), 6)
+    n, i, h = 64, 12, 8
+    x, hh = rand(keys[0], n, i), jnp.clip(rand(keys[1], n, h), -1, 1)
+    wi, wh = rand(keys[2], i, 3 * h), rand(keys[3], h, 3 * h)
+    bi, bh = rand(keys[4], 3 * h), rand(keys[5], 3 * h)
+    out = gru_pallas(x, hh, wi, wh, bi, bh)
+    assert jnp.all(jnp.abs(out) <= 1.0 + 1e-6)
+
+
+def test_gru_rnn_grads_match_ref():
+    keys = jax.random.split(jax.random.PRNGKey(11), 6)
+    n, i, h = 17, 6, 5
+    x, hh = rand(keys[0], n, i), rand(keys[1], n, h)
+    wi, wh = rand(keys[2], i, 3 * h), rand(keys[3], h, 3 * h)
+    bi, bh = rand(keys[4], 3 * h), rand(keys[5], 3 * h)
+
+    g_op = jax.grad(lambda *a: jnp.sum(gru_op(*a) ** 2), argnums=tuple(range(6)))(
+        x, hh, wi, wh, bi, bh
+    )
+    g_ref = jax.grad(lambda *a: jnp.sum(ref.gru_ref(*a) ** 2), argnums=tuple(range(6)))(
+        x, hh, wi, wh, bi, bh
+    )
+    for a, b in zip(g_op, g_ref):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    wi2, wh2, b2 = rand(keys[2], i, h), rand(keys[3], h, h), rand(keys[4], h)
+    g_op = jax.grad(lambda *a: jnp.sum(rnn_op(*a) ** 2), argnums=tuple(range(5)))(
+        x, hh, wi2, wh2, b2
+    )
+    g_ref = jax.grad(lambda *a: jnp.sum(ref.rnn_ref(*a) ** 2), argnums=tuple(range(5)))(
+        x, hh, wi2, wh2, b2
+    )
+    for a, b in zip(g_op, g_ref):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,169 @@
+"""Model-zoo step functions: shapes, gradient flow, loss behavior.
+
+These run the *python* callables (pre-lowering); the lowered HLO is
+exercised end-to-end by the Rust integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_dims(spec: M.Spec) -> M.Dims:
+    return M.Dims(
+        bs=8, fanout=3, hops=spec.hops, snapshots=spec.snapshots,
+        dm=12, dh=12, dv=10, de=6, d_time=8, heads=2,
+        mail_slots=spec.mail_slots, num_classes=3,
+    )
+
+
+def example_inputs(spec: M.Spec, d: M.Dims, pb: M.ParamBuilder, ins, seed=0):
+    key = jax.random.PRNGKey(seed)
+    args = []
+    for name, shape in ins:
+        key, sub = jax.random.split(key)
+        if name in ("params", "adam_m", "adam_v"):
+            if name == "params":
+                args.append(jnp.asarray(pb.init_flat(sub)))
+            else:
+                args.append(jnp.zeros(pb.size, jnp.float32))
+        elif name == "step":
+            args.append(jnp.zeros((), jnp.float32))
+        elif name == "lr":
+            args.append(jnp.float32(1e-2))
+        elif name == "dt_scale":
+            args.append(jnp.float32(1e-3))
+        elif name == "edge_mask" or name.startswith("mask") or name == "mail_mask":
+            args.append((jax.random.uniform(sub, shape) > 0.2).astype(jnp.float32))
+        elif "dt" in name:
+            args.append(jnp.abs(jax.random.normal(sub, shape)) * 10)
+        else:
+            args.append(jax.random.normal(sub, shape, jnp.float32) * 0.3)
+    return args
+
+
+@pytest.mark.parametrize("variant", ["tgn", "tgat", "jodie", "apan", "dysat"])
+def test_train_step_shapes_and_finite(variant):
+    base = M.SPECS[variant]
+    d = tiny_dims(base)
+    spec = M.Spec(variant, base.memory, base.hops, d.snapshots, d.mail_slots, base.time_proj)
+    pb = M.build_params(spec, d)
+    train_step, train_ins, eval_step, eval_ins = M.make_steps(spec, d, pb)
+    args = example_inputs(spec, d, pb, train_ins)
+    out = jax.jit(train_step)(*args)
+    assert np.isfinite(float(out["loss"]))
+    assert out["new_params"].shape == (pb.size,)
+    assert np.all(np.isfinite(np.asarray(out["new_params"])))
+    if spec.memory is not None:
+        assert out["new_mem"].shape == (d.n_total, d.dm)
+        assert out["new_mail"].shape == (2 * d.bs, d.maild)
+
+    # Eval: scores + embeddings.
+    eargs = example_inputs(spec, d, pb, eval_ins, seed=1)
+    eout = jax.jit(eval_step)(*eargs)
+    assert eout["pos_score"].shape == (d.bs,)
+    assert eout["emb"].shape == (d.b0, d.dh)
+    assert np.all(np.isfinite(np.asarray(eout["emb"])))
+
+
+@pytest.mark.parametrize("variant", ["tgn", "tgat"])
+def test_adam_reduces_loss_on_fixed_batch(variant):
+    base = M.SPECS[variant]
+    d = tiny_dims(base)
+    spec = M.Spec(variant, base.memory, base.hops, d.snapshots, d.mail_slots, base.time_proj)
+    pb = M.build_params(spec, d)
+    train_step, train_ins, _, _ = M.make_steps(spec, d, pb)
+    args = example_inputs(spec, d, pb, train_ins)
+    jitted = jax.jit(train_step)
+    names = [n for n, _ in train_ins]
+    idx = {n: i for i, n in enumerate(names)}
+    losses = []
+    for it in range(30):
+        out = jitted(*args)
+        losses.append(float(out["loss"]))
+        args[idx["params"]] = out["new_params"]
+        args[idx["adam_m"]] = out["new_adam_m"]
+        args[idx["adam_v"]] = out["new_adam_v"]
+        args[idx["step"]] = args[idx["step"]] + 1.0
+    assert losses[-1] < losses[0] * 0.8, f"no learning: {losses[0]:.4f} -> {losses[-1]:.4f}"
+
+
+def test_memory_identity_without_mail():
+    base = M.SPECS["tgn"]
+    d = tiny_dims(base)
+    spec = M.Spec("tgn", base.memory, base.hops, d.snapshots, d.mail_slots, base.time_proj)
+    pb = M.build_params(spec, d)
+    P = pb.unpacker()(jnp.asarray(pb.init_flat(jax.random.PRNGKey(0))))
+    n = 5
+    mem = jax.random.normal(jax.random.PRNGKey(1), (n, d.dm), jnp.float32)
+    mail = jnp.zeros((n, 1, d.maild))
+    mail_dt = jnp.zeros((n, 1))
+    mail_mask = jnp.zeros((n, 1))
+    out = M.refresh_memory(spec, d, P, mem, mail, mail_dt, mail_mask)
+    np.testing.assert_allclose(out, mem, rtol=1e-6)
+    # With mail present the memory must change.
+    out2 = M.refresh_memory(spec, d, P, mem, mail, mail_dt, mail_mask.at[0, 0].set(1.0))
+    assert not np.allclose(out2[0], mem[0])
+    np.testing.assert_allclose(out2[1:], mem[1:], rtol=1e-6)
+
+
+def test_edge_mask_controls_loss():
+    base = M.SPECS["tgat"]
+    d = tiny_dims(base)
+    spec = M.Spec("tgat", base.memory, base.hops, d.snapshots, d.mail_slots, base.time_proj)
+    pb = M.build_params(spec, d)
+    _, _, eval_step, eval_ins = M.make_steps(spec, d, pb)
+    args = example_inputs(spec, d, pb, eval_ins)
+    names = [n for n, _ in eval_ins]
+    idx = {n: i for i, n in enumerate(names)}
+    # Loss with all edges masked off the first half vs full: must differ
+    # only through the kept edges.
+    args[idx["edge_mask"]] = jnp.ones(d.bs)
+    full = jax.jit(eval_step)(*args)
+    args[idx["edge_mask"]] = jnp.zeros(d.bs).at[0].set(1.0)
+    single = jax.jit(eval_step)(*args)
+    pos0 = float(full["pos_score"][0])
+    exp = float(np.logaddexp(0.0, -pos0) + np.logaddexp(0.0, float(full["neg_score"][0])))
+    assert abs(float(single["loss"]) - exp) < 1e-5
+
+
+def test_clf_step_learns():
+    d = M.Dims(bs=16, dh=12, num_classes=3)
+    pb = M.clf_param_builder(d)
+    clf_step, _ = M.make_clf_step(d, pb)
+    key = jax.random.PRNGKey(0)
+    emb = jax.random.normal(key, (d.bs, d.dh), jnp.float32)
+    labels = jnp.asarray(np.arange(16) % 3, jnp.int32)
+    mask = jnp.ones(16)
+    params = jnp.asarray(pb.init_flat(key))
+    m = jnp.zeros(pb.size)
+    v = jnp.zeros(pb.size)
+    jitted = jax.jit(clf_step)
+    first = None
+    for it in range(60):
+        out = jitted(params, m, v, jnp.float32(it), jnp.float32(0.05), emb, labels, mask)
+        if first is None:
+            first = float(out["loss"])
+        params, m, v = out["new_params"], out["new_adam_m"], out["new_adam_v"]
+    assert float(out["loss"]) < first * 0.5
+    assert out["logits"].shape == (16, 3)
+
+
+def test_dims_layout_matches_all_nodes_convention():
+    # n_total and hop offsets must enumerate roots, then (snapshot, hop)
+    # blocks in order — the Mfg::all_nodes contract.
+    d = M.Dims(bs=2, fanout=3, hops=2, snapshots=2)
+    b0 = 6
+    l1 = b0 * 3
+    l2 = b0 * 9
+    assert d.b0 == b0
+    assert d.n_total == b0 + 2 * (l1 + l2)
+    assert d.hop_offset(0, 0) == b0
+    assert d.hop_offset(0, 1) == b0 + l1
+    assert d.hop_offset(1, 0) == b0 + l1 + l2
+    assert d.hop_offset(1, 1) == b0 + l1 + l2 + l1

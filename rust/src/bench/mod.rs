@@ -1,0 +1,146 @@
+//! Criterion-lite: a small benchmarking harness (the offline registry has
+//! no `criterion`). Provides warmup + repeated timing with mean/std/min,
+//! simple table rendering, and CSV emission so every paper table/figure
+//! regenerates from `cargo bench` output.
+
+use crate::util::stats::{Samples, Welford};
+use std::io::Write as _;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub iters: usize,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::new();
+    let mut s = Samples::new();
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        w.push(dt);
+        s.push(dt);
+    }
+    let m = Measurement {
+        name: name.to_string(),
+        mean_s: w.mean(),
+        std_s: w.std(),
+        min_s: w.min(),
+        median_s: s.median(),
+        iters: iters.max(1),
+    };
+    println!(
+        "  {:<44} {:>10.4}s ± {:>8.4}s  (min {:>8.4}s, n={})",
+        m.name, m.mean_s, m.std_s, m.min_s, m.iters
+    );
+    m
+}
+
+/// Aligned table printer for paper-style result tables.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    /// Also persist as CSV under `results/`.
+    pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
+        let p = std::path::Path::new(path);
+        if let Some(dir) = p.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(p)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        println!("[csv] wrote {path}");
+        Ok(())
+    }
+}
+
+/// Benchmark scale factor from `TGL_BENCH_SCALE` (default 1.0): benches
+/// shrink their workloads proportionally so CI and full runs share code.
+pub fn bench_scale() -> f64 {
+    std::env::var("TGL_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Whether the heavyweight full-dims variants should be benched
+/// (`TGL_BENCH_FULL=1`); default uses the `_tiny` profiles.
+pub fn bench_full() -> bool {
+    std::env::var("TGL_BENCH_FULL").as_deref() == Ok("1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let m = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.mean_s >= 0.0 && m.mean_s < 0.1);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("test", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,383 @@
+//! High-level run orchestration: the programmatic API the examples and
+//! benches drive, plus the CLI subcommand implementations.
+
+use crate::datasets;
+use crate::graph::{TCsr, TemporalGraph};
+use crate::models::{Model, RunOptions};
+use crate::runtime::{ArtifactManifest, Engine};
+use crate::sampler::{BaselineSampler, PointerMode, SamplerConfig, Strategy, TemporalSampler};
+use crate::sched::ChunkScheduler;
+use crate::trainer::{node_classification, MultiTrainer, Trainer, TrainerCfg};
+use crate::util::cli::Args;
+use crate::util::stats::Stopwatch;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Everything needed to run one variant on one dataset.
+pub struct RunPlan {
+    pub engine: Engine,
+    pub model: Model,
+    pub graph: TemporalGraph,
+    pub csr: TCsr,
+    pub options: RunOptions,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// Per-epoch row + final metrics of a link-prediction run.
+#[derive(Debug, Clone, Default)]
+pub struct LinkPredReport {
+    pub variant: String,
+    pub dataset: String,
+    /// (epoch, train loss, epoch seconds, val AP).
+    pub epochs: Vec<(usize, f64, f64, f64)>,
+    pub test_ap: f64,
+    pub test_loss: f64,
+    /// Mean per-epoch training seconds (the paper's "Time" columns).
+    pub epoch_seconds: f64,
+}
+
+impl RunPlan {
+    /// Assemble a plan: load + compile the variant, generate/load the
+    /// dataset, build the T-CSR.
+    pub fn new(
+        artifacts: &Path,
+        configs: &Path,
+        variant: &str,
+        dataset: &str,
+        scale: f64,
+        threads: usize,
+        seed: u64,
+    ) -> Result<RunPlan> {
+        let engine = Engine::cpu()?;
+        let manifest = ArtifactManifest::load(artifacts)?;
+        let model = Model::load(&engine, &manifest, variant)
+            .with_context(|| format!("loading variant `{variant}`"))?;
+        // Config file name matches the variant; `_tiny` variants reuse it.
+        let options = RunOptions::load(configs, variant)?;
+        let graph = if Path::new(dataset).exists() {
+            TemporalGraph::load(Path::new(dataset))?
+        } else {
+            datasets::by_name(dataset, scale, seed)?
+        };
+        let csr = TCsr::build(&graph, true);
+        Ok(RunPlan { engine, model, graph, csr, options, threads, seed })
+    }
+
+    pub fn trainer(&self) -> Result<Trainer<'_>> {
+        let mut cfg =
+            TrainerCfg::for_model(&self.model, &self.graph, self.options.lr, self.threads);
+        cfg.strategy = self.options.strategy;
+        cfg.snapshot_len = self.options.snapshot_len;
+        cfg.seed = self.seed;
+        Trainer::new(&self.model, &self.graph, &self.csr, cfg)
+    }
+
+    /// The full link-prediction protocol: train on the chronological
+    /// 70% with per-epoch validation AP on the next 15%, then test AP on
+    /// the final 15% (extrapolation setting, §4).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_link_prediction(
+        &self,
+        epochs: usize,
+        chunks_per_batch: usize,
+        workers: usize,
+        dataset_label: &str,
+        verbose: bool,
+    ) -> Result<(LinkPredReport, Trainer<'_>)> {
+        let bs = self.model.dim("bs");
+        let (train_end, val_end) = self.graph.chrono_split(0.70, 0.15);
+        let mut trainer = self.trainer()?;
+        let mut report = LinkPredReport {
+            variant: self.model.name.clone(),
+            dataset: dataset_label.to_string(),
+            ..Default::default()
+        };
+        let mut sched = if chunks_per_batch > 1 {
+            ChunkScheduler::new(train_end, bs, bs / chunks_per_batch, self.seed)?
+        } else {
+            ChunkScheduler::plain(train_end, bs)
+        };
+        let multi = MultiTrainer::new(workers);
+        for ep in 0..epochs {
+            let plan = sched.epoch();
+            let stats = if workers > 1 {
+                multi.train_epoch(&mut trainer, &plan)?.into()
+            } else {
+                trainer.train_epoch(&plan)?
+            };
+            // Validation continues chronologically from the training state.
+            let val = trainer.eval_range(train_end..val_end)?;
+            if verbose {
+                crate::info!(
+                    "[{}] epoch {ep}: loss {:.4}  time {:.2}s  val AP {:.4}",
+                    self.model.name,
+                    stats.mean_loss,
+                    stats.seconds,
+                    val.ap
+                );
+            }
+            report.epochs.push((ep, stats.mean_loss, stats.seconds, val.ap));
+        }
+        // Test: replay train+val once more (fresh chronology) then score.
+        trainer.reset_chronology();
+        if self.model.uses_memory() {
+            trainer.eval_range(0..val_end)?;
+        }
+        let test = trainer.eval_range(val_end..self.graph.num_edges())?;
+        report.test_ap = test.ap;
+        report.test_loss = test.mean_loss;
+        report.epoch_seconds = report.epochs.iter().map(|e| e.2).sum::<f64>()
+            / report.epochs.len().max(1) as f64;
+        Ok((report, trainer))
+    }
+}
+
+// ------------------------------------------------------------------- CLI
+
+pub(super) fn cli_train(args: &[String]) -> Result<()> {
+    let a = Args::new("tgl train", "train a TGNN variant for link prediction")
+        .opt("variant", "tgn", "model variant (manifest key, e.g. tgn, tgat_tiny)")
+        .opt("data", "wikipedia", "dataset name or .bin path")
+        .opt("scale", "1.0", "synthetic dataset scale in (0,1]")
+        .opt("epochs", "3", "training epochs")
+        .opt("chunks", "1", "chunks per batch (>1 enables Algorithm 2)")
+        .opt("workers", "1", "data-parallel trainer workers")
+        .opt("threads", "8", "sampler threads")
+        .opt("seed", "42", "RNG seed")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("configs", "configs", "model config directory")
+        .parse(args)?;
+    let plan = RunPlan::new(
+        &PathBuf::from(a.get("artifacts")),
+        &PathBuf::from(a.get("configs")),
+        &a.get("variant"),
+        &a.get("data"),
+        a.get_f64("scale")?,
+        a.get_usize("threads")?,
+        a.get_usize("seed")? as u64,
+    )?;
+    crate::info!(
+        "dataset `{}`: |V|={} |E|={} max(t)={:.3e}",
+        a.get("data"),
+        plan.graph.num_nodes,
+        plan.graph.num_edges(),
+        plan.graph.max_time()
+    );
+    let (report, trainer) = plan.train_link_prediction(
+        a.get_usize("epochs")?,
+        a.get_usize("chunks")?,
+        a.get_usize("workers")?,
+        &a.get("data"),
+        true,
+    )?;
+    println!("\n== {} on {} ==", report.variant, report.dataset);
+    println!("test AP: {:.4}   mean epoch time: {:.2}s", report.test_ap, report.epoch_seconds);
+    println!("phase breakdown (Figure 5 steps):");
+    for (phase, secs, frac) in trainer.timers.breakdown() {
+        println!("  {phase:<10} {secs:>8.2}s  {:>5.1}%", frac * 100.0);
+    }
+    Ok(())
+}
+
+pub(super) fn cli_nodeclf(args: &[String]) -> Result<()> {
+    let a = Args::new("tgl nodeclf", "dynamic node classification (Table 6)")
+        .opt("variant", "tgn", "model variant")
+        .opt("data", "wikipedia", "dataset name or .bin path")
+        .opt("scale", "1.0", "dataset scale")
+        .opt("epochs", "2", "link-prediction pre-training epochs")
+        .opt("clf-epochs", "50", "classifier epochs")
+        .opt("threads", "8", "sampler threads")
+        .opt("seed", "42", "RNG seed")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("configs", "configs", "model config directory")
+        .parse(args)?;
+    let plan = RunPlan::new(
+        &PathBuf::from(a.get("artifacts")),
+        &PathBuf::from(a.get("configs")),
+        &a.get("variant"),
+        &a.get("data"),
+        a.get_f64("scale")?,
+        a.get_usize("threads")?,
+        a.get_usize("seed")? as u64,
+    )?;
+    let (report, mut trainer) = plan.train_link_prediction(
+        a.get_usize("epochs")?,
+        1,
+        1,
+        &a.get("data"),
+        true,
+    )?;
+    crate::info!("link-pred test AP {:.4}; harvesting label embeddings", report.test_ap);
+    let clf = node_classification(
+        &mut trainer,
+        0.70,
+        a.get_usize("clf-epochs")?,
+        0.01,
+        a.get_usize("seed")? as u64,
+    )?;
+    println!("\n== node classification: {} on {} ==", a.get("variant"), a.get("data"));
+    println!(
+        "AP {:.4}  F1-micro {:.4}  (train/test labels {}/{})",
+        clf.ap, clf.f1_micro, clf.train_labels, clf.test_labels
+    );
+    Ok(())
+}
+
+pub(super) fn cli_sample_bench(args: &[String]) -> Result<()> {
+    let a = Args::new("tgl sample-bench", "Table 4 / Figure 4 sampler benchmark")
+        .opt("data", "wikipedia", "dataset name or .bin path")
+        .opt("scale", "1.0", "dataset scale")
+        .opt("bs", "600", "positive edges per batch")
+        .opt("threads", "1,8,32", "comma list of thread counts")
+        .opt("algo", "dysat,tgat,tgn", "comma list: dysat|tgat|tgn")
+        .opt("pointer", "locked", "pointer mode: locked|atomic|binsearch")
+        .opt("seed", "42", "RNG seed")
+        .flag("baseline", "also run the single-thread baseline sampler")
+        .parse(args)?;
+    let graph = datasets::by_name(&a.get("data"), a.get_f64("scale")?, a.get_usize("seed")? as u64)?;
+    let csr = TCsr::build(&graph, true);
+    let bs = a.get_usize("bs")?;
+    let mode = PointerMode::parse(&a.get("pointer"))?;
+    println!(
+        "dataset `{}`: |V|={} |E|={}  (one epoch = {} batches of {}+{} roots)",
+        a.get("data"),
+        graph.num_nodes,
+        graph.num_edges(),
+        graph.num_edges() / bs,
+        bs,
+        bs
+    );
+
+    for algo in a.get("algo").split(',') {
+        let mk_cfg = |threads| -> SamplerConfig {
+            let mut c = match algo {
+                "dysat" => SamplerConfig::snapshots(2, 10, 3, graph.max_time() / 8.0, threads),
+                "tgat" => SamplerConfig::uniform_hops(2, 10, Strategy::Uniform, threads),
+                "tgn" => SamplerConfig::uniform_hops(1, 10, Strategy::MostRecent, threads),
+                other => panic!("unknown algo {other}"),
+            };
+            c.pointer_mode = mode;
+            c
+        };
+        // Baseline (the open-sourced comparator).
+        let base_secs = if a.get_flag("baseline") {
+            let sampler = BaselineSampler::new(&graph, true, mk_cfg(1));
+            let sw = Stopwatch::start();
+            run_epoch_baseline(&graph, &sampler, bs);
+            Some(sw.secs())
+        } else {
+            None
+        };
+        for threads in a.get("threads").split(',') {
+            let threads: usize = threads.trim().parse()?;
+            let sampler = TemporalSampler::new(&csr, mk_cfg(threads));
+            sampler.stats.reset();
+            let sw = Stopwatch::start();
+            run_epoch_parallel(&graph, &sampler, bs);
+            let secs = sw.secs();
+            let improv = base_secs.map(|b| format!("  improv {:>6.1}x", b / secs)).unwrap_or_default();
+            print!("{algo:<6} threads {threads:>2}: {secs:>7.3}s{improv}  breakdown:");
+            for (phase, s) in sampler.stats.breakdown() {
+                print!(" {phase} {s:.3}s");
+            }
+            println!();
+        }
+        if let Some(b) = base_secs {
+            println!("{algo:<6} baseline : {b:>7.3}s");
+        }
+    }
+    Ok(())
+}
+
+/// One sampling epoch (no training) for benchmarking.
+pub fn run_epoch_parallel(g: &TemporalGraph, s: &TemporalSampler<'_>, bs: usize) {
+    s.reset();
+    let mut rng = crate::util::rng::Rng::new(7);
+    let mut start = 0usize;
+    let mut bi = 0u64;
+    while start + bs <= g.num_edges() {
+        let (roots, ts) = bench_roots(g, start, bs, &mut rng);
+        std::hint::black_box(s.sample(&roots, &ts, bi));
+        start += bs;
+        bi += 1;
+    }
+}
+
+/// Baseline epoch.
+pub fn run_epoch_baseline(g: &TemporalGraph, s: &BaselineSampler, bs: usize) {
+    let mut rng = crate::util::rng::Rng::new(7);
+    let mut start = 0usize;
+    let mut bi = 0u64;
+    while start + bs <= g.num_edges() {
+        let (roots, ts) = bench_roots(g, start, bs, &mut rng);
+        std::hint::black_box(s.sample(&roots, &ts, bi));
+        start += bs;
+        bi += 1;
+    }
+}
+
+/// Batch roots = src + dst + negatives at the batch timestamps (the 600
+/// positive + 600 negative scheme of §4.2).
+fn bench_roots(
+    g: &TemporalGraph,
+    start: usize,
+    bs: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> (Vec<u32>, Vec<f64>) {
+    let mut roots = Vec::with_capacity(2 * bs);
+    let mut ts = Vec::with_capacity(2 * bs);
+    for e in start..start + bs {
+        roots.push(g.src[e]);
+        ts.push(g.time[e]);
+    }
+    for e in start..start + bs {
+        roots.push(rng.below(g.num_nodes) as u32);
+        ts.push(g.time[e]);
+    }
+    (roots, ts)
+}
+
+pub(super) fn cli_gen_data(args: &[String]) -> Result<()> {
+    let a = Args::new("tgl gen-data", "generate a synthetic dataset")
+        .opt("data", "wikipedia", "dataset name (see Table 3)")
+        .opt("scale", "1.0", "scale in (0,1]")
+        .opt("seed", "42", "RNG seed")
+        .req("out", "output .bin path")
+        .parse(args)?;
+    let g = datasets::by_name(&a.get("data"), a.get_f64("scale")?, a.get_usize("seed")? as u64)?;
+    g.save(Path::new(&a.get("out")))?;
+    println!(
+        "wrote {}: |V|={} |E|={} labels={} classes={}",
+        a.get("out"),
+        g.num_nodes,
+        g.num_edges(),
+        g.labels.len(),
+        g.num_classes
+    );
+    Ok(())
+}
+
+pub(super) fn cli_inspect(args: &[String]) -> Result<()> {
+    let a = Args::new("tgl inspect", "print artifact and dataset catalogues")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse(args)?;
+    match ArtifactManifest::load(&PathBuf::from(a.get("artifacts"))) {
+        Ok(m) => {
+            println!("variants in {}:", a.get("artifacts"));
+            for (name, v) in &m.variants {
+                println!(
+                    "  {name:<12} params {:>9}  steps [{}]",
+                    v.param_count,
+                    v.steps.keys().cloned().collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    println!("\ndataset catalogue (nominal |E| at scale 1.0):");
+    for (name, edges) in datasets::CATALOGUE {
+        println!("  {name:<10} {edges:>13}");
+    }
+    Ok(())
+}

@@ -1,0 +1,333 @@
+//! The actual workload generators.
+
+use crate::graph::{FeatureTable, NodeLabel, TemporalGraph};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Bipartite user–item interaction generator (Wikipedia/Reddit/MOOC/LastFM
+/// shape): nodes `0..users` are users, `users..users+items` are items.
+#[derive(Debug, Clone)]
+pub struct InteractionSpec {
+    pub users: usize,
+    pub items: usize,
+    pub edges: usize,
+    pub max_time: f64,
+    /// Node feature dim (0 = none, like the JODIE datasets).
+    pub dv: usize,
+    /// Edge feature dim.
+    pub de: usize,
+    /// Size of each user's persistent preference set.
+    pub affinity: usize,
+    /// Probability the next interaction revisits the preference set —
+    /// the planted temporal recurrence that memory models exploit.
+    pub revisit: f64,
+    /// Number of dynamic node labels to emit (binary "banned user" style).
+    pub labels: usize,
+    pub num_classes: usize,
+    /// Zipf exponent of user activity (degree skew).
+    pub user_zipf: f64,
+}
+
+pub fn interactions(spec: &InteractionSpec, seed: u64) -> Result<TemporalGraph> {
+    let mut rng = Rng::new(seed ^ 0x1417_5EED);
+    let n = spec.users + spec.items;
+
+    // Persistent per-user preference sets.
+    let mut prefs: Vec<Vec<u32>> = Vec::with_capacity(spec.users);
+    for _ in 0..spec.users {
+        let k = 1 + rng.below(spec.affinity.max(1));
+        let set = (0..k)
+            .map(|_| (spec.users + rng.zipf(spec.items, 0.8)) as u32)
+            .collect();
+        prefs.push(set);
+    }
+    // A subset of "abusive" users drive the binary labels; their edge
+    // features carry a shifted signal so the task is learnable.
+    let mut abusive = vec![false; spec.users];
+    let n_abusive = (spec.users / 20).max(1);
+    for _ in 0..n_abusive {
+        let u = rng.zipf(spec.users, spec.user_zipf);
+        abusive[u] = true;
+    }
+
+    let mut src = Vec::with_capacity(spec.edges);
+    let mut dst = Vec::with_capacity(spec.edges);
+    let mut time = Vec::with_capacity(spec.edges);
+    let mut efeat = vec![0.0f32; spec.edges * spec.de];
+    // Burstiness: exponential inter-arrival with drifting rate.
+    let mean_gap = spec.max_time / spec.edges as f64;
+    let mut t = 0.0;
+    for e in 0..spec.edges {
+        let u = rng.zipf(spec.users, spec.user_zipf);
+        let item = if rng.chance(spec.revisit) {
+            let p = &prefs[u];
+            p[rng.below(p.len())]
+        } else {
+            (spec.users + rng.below(spec.items)) as u32
+        };
+        t += rng.exponential(1.0 / mean_gap);
+        src.push(u as u32);
+        dst.push(item);
+        time.push(t);
+        // Edge features: a revisit indicator + user-signal + noise. The
+        // first coordinates carry structure the models can pick up.
+        let row = &mut efeat[e * spec.de..(e + 1) * spec.de];
+        for x in row.iter_mut() {
+            *x = rng.normal() as f32 * 0.3;
+        }
+        if spec.de >= 3 {
+            row[0] += if prefs[u].contains(&item) { 1.0 } else { -1.0 };
+            row[1] += if abusive[u] { 0.8 } else { -0.2 };
+            row[2] += (item as f32 % 7.0) / 7.0;
+        }
+    }
+    // Normalize to max_time exactly.
+    let tmax = *time.last().unwrap();
+    for x in time.iter_mut() {
+        *x *= spec.max_time / tmax;
+    }
+
+    let mut g = TemporalGraph::new(n, src, dst, time)?;
+    if spec.de > 0 {
+        g = g.with_edge_feat(FeatureTable::from_data(spec.de, efeat)?)?;
+    }
+    if spec.dv > 0 {
+        let mut nf = vec![0.0f32; n * spec.dv];
+        for x in nf.iter_mut() {
+            *x = rng.normal() as f32 * 0.3;
+        }
+        g = g.with_node_feat(FeatureTable::from_data(spec.dv, nf)?)?;
+    }
+    if spec.labels > 0 {
+        let mut labels = Vec::with_capacity(spec.labels);
+        for _ in 0..spec.labels {
+            // Labels fall at random interaction times of (mostly) active
+            // users; positive = abusive.
+            let e = rng.below(g.num_edges());
+            let u = g.src[e];
+            labels.push(NodeLabel {
+                node: u,
+                time: g.time[e],
+                label: u32::from(abusive[u as usize]),
+            });
+        }
+        g = g.with_labels(labels, spec.num_classes);
+    }
+    Ok(g)
+}
+
+/// GDELT-like temporal knowledge graph: few nodes (actors), *dense*
+/// repeated interactions over a long horizon, heavy node/edge multi-hot
+/// features, 81-class dynamic labels — the "long duration, mutable node
+/// information" axis of the paper's large-scale evaluation.
+pub fn gdelt_like(scale: f64, seed: u64) -> Result<TemporalGraph> {
+    let mut rng = Rng::new(seed ^ 0x6DE1_7000);
+    let actors = ((16_682.0 * scale.max(0.05)) as usize).max(500);
+    let edges = ((191_290_882.0 * scale) as usize).max(10_000);
+    let (dv, de) = (100usize, 100usize);
+    let classes = 81usize;
+    let max_time = 1.8e5;
+
+    // Block structure: actors belong to communities (countries); events
+    // are mostly intra-community — this is what the node classifier and
+    // link predictor can learn.
+    let communities = 40usize;
+    let comm: Vec<u32> = (0..actors).map(|_| rng.below(communities) as u32).collect();
+    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); communities];
+    for (a, &c) in comm.iter().enumerate() {
+        by_comm[c as usize].push(a as u32);
+    }
+    for c in by_comm.iter_mut() {
+        if c.is_empty() {
+            c.push(0);
+        }
+    }
+
+    let mut src = Vec::with_capacity(edges);
+    let mut dst = Vec::with_capacity(edges);
+    let mut time = Vec::with_capacity(edges);
+    let mut efeat = vec![0.0f32; edges * de];
+    for e in 0..edges {
+        let a = rng.zipf(actors, 1.05) as u32;
+        let b = if rng.chance(0.7) {
+            let peers = &by_comm[comm[a as usize] as usize];
+            peers[rng.below(peers.len())]
+        } else {
+            rng.below(actors) as u32
+        };
+        src.push(a);
+        dst.push(b);
+        time.push(max_time * e as f64 / edges as f64);
+        // Sparse multi-hot CAMEO-style event codes.
+        let row = &mut efeat[e * de..(e + 1) * de];
+        for _ in 0..4 {
+            row[rng.below(de)] = 1.0;
+        }
+        row[(comm[a as usize] as usize) % de] += 1.0;
+    }
+
+    // Multi-hot actor features encode community noisily.
+    let mut nf = vec![0.0f32; actors * dv];
+    for a in 0..actors {
+        let row = &mut nf[a * dv..(a + 1) * dv];
+        for _ in 0..5 {
+            row[rng.below(dv)] = 1.0;
+        }
+        row[(comm[a] as usize) % dv] += 2.0;
+    }
+
+    // Dynamic labels: the actor's community drifts occasionally — label =
+    // community at event time (81-class task, paper removes unchanged
+    // repeats; we emit sparse events directly).
+    let n_labels = (edges / 50).max(100);
+    let mut labels = Vec::with_capacity(n_labels);
+    for _ in 0..n_labels {
+        let e = rng.below(edges);
+        let a = src[e];
+        labels.push(NodeLabel {
+            node: a,
+            time: time[e],
+            label: (comm[a as usize] as usize % classes) as u32,
+        });
+    }
+
+    let g = TemporalGraph::new(actors, src, dst, time)?
+        .with_node_feat(FeatureTable::from_data(dv, nf)?)?
+        .with_edge_feat(FeatureTable::from_data(de, efeat)?)?
+        .with_labels(labels, classes);
+    Ok(g)
+}
+
+/// MAG-like citation network: a *growing* node set (papers) where each new
+/// paper cites earlier papers with preferential attachment; coarse yearly
+/// timestamps; rich node features; 152-class labels — the "huge |V|,
+/// stable nodes/edges" axis.
+pub fn mag_like(scale: f64, seed: u64) -> Result<TemporalGraph> {
+    let mut rng = Rng::new(seed ^ 0x3A67_0000);
+    let papers = ((121_751_666.0 * scale) as usize).clamp(2_000, 50_000_000);
+    let edges = ((1_297_748_926.0 * scale) as usize).clamp(10_000, 2_000_000_000);
+    let cites_per_paper = (edges / papers).max(2);
+    let (dv, classes) = (100usize, 152usize);
+    let max_time = 120.0;
+
+    let fields: Vec<u32> = (0..papers).map(|_| rng.below(classes) as u32).collect();
+
+    let mut src = Vec::with_capacity(edges);
+    let mut dst = Vec::with_capacity(edges);
+    let mut time = Vec::with_capacity(edges);
+    let mut labels = Vec::new();
+    // Papers arrive in id order; paper p cites earlier papers, biased to
+    // recent + same-field (preferential by recency approximates citation
+    // preferential attachment without an O(E) alias structure).
+    for p in 1..papers {
+        let t = max_time * p as f64 / papers as f64;
+        let n_cites = 1 + rng.below(2 * cites_per_paper - 1);
+        for _ in 0..n_cites {
+            if src.len() >= edges {
+                break;
+            }
+            let q = if rng.chance(0.6) {
+                // Recent window.
+                let w = (p / 4).max(1);
+                p - 1 - rng.below(w.min(p))
+            } else {
+                rng.below(p)
+            };
+            // Same-field bias by resampling once.
+            let q = if fields[q] != fields[p] && rng.chance(0.5) {
+                let q2 = rng.below(p);
+                if fields[q2] == fields[p] {
+                    q2
+                } else {
+                    q
+                }
+            } else {
+                q
+            };
+            src.push(p as u32);
+            dst.push(q as u32);
+            time.push(t);
+        }
+        if p % 87 == 0 {
+            labels.push(NodeLabel { node: p as u32, time: t, label: fields[p] });
+        }
+        if src.len() >= edges {
+            break;
+        }
+    }
+
+    // Node features: noisy field embedding (RoBERTa-abstract stand-in).
+    let mut nf = vec![0.0f32; papers * dv];
+    for p in 0..papers {
+        let row = &mut nf[p * dv..(p + 1) * dv];
+        for x in row.iter_mut() {
+            *x = rng.normal() as f32 * 0.2;
+        }
+        row[fields[p] as usize % dv] += 1.5;
+        row[(fields[p] as usize / dv) % dv] += 0.7;
+    }
+
+    let g = TemporalGraph::new(papers, src, dst, time)?
+        .with_node_feat(FeatureTable::from_data(dv, nf)?)?
+        .with_labels(labels, classes);
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interactions_bipartite_and_learnable_structure() {
+        let spec = InteractionSpec {
+            users: 100,
+            items: 20,
+            edges: 5000,
+            max_time: 1e5,
+            dv: 0,
+            de: 8,
+            affinity: 3,
+            revisit: 0.8,
+            labels: 50,
+            num_classes: 2,
+            user_zipf: 1.1,
+        };
+        let g = interactions(&spec, 3).unwrap();
+        assert_eq!(g.num_nodes, 120);
+        assert_eq!(g.num_edges(), 5000);
+        // Bipartite: src < 100 <= dst.
+        assert!(g.src.iter().all(|&u| u < 100));
+        assert!(g.dst.iter().all(|&v| (100..120).contains(&(v as usize))));
+        assert!((g.max_time() - 1e5).abs() < 1.0);
+        assert_eq!(g.labels.len(), 50);
+        // Revisit structure: repeated (u, i) pairs must dominate.
+        let mut seen = std::collections::HashSet::new();
+        let mut repeats = 0;
+        for e in 0..g.num_edges() {
+            if !seen.insert((g.src[e], g.dst[e])) {
+                repeats += 1;
+            }
+        }
+        assert!(repeats > g.num_edges() / 2, "repeats={repeats}");
+    }
+
+    #[test]
+    fn gdelt_like_dense_repeats() {
+        let g = gdelt_like(1e-4, 5).unwrap();
+        assert!(g.num_edges() >= 10_000);
+        assert!(g.num_nodes <= 2000);
+        assert_eq!(g.num_classes, 81);
+        assert!(g.node_feat.is_some() && g.edge_feat.is_some());
+        assert!(!g.labels.is_empty());
+    }
+
+    #[test]
+    fn mag_like_citations_point_backwards() {
+        let g = mag_like(2e-5, 5).unwrap();
+        for e in (0..g.num_edges()).step_by(97) {
+            assert!(g.dst[e] < g.src[e], "citation must point to an earlier paper");
+        }
+        assert_eq!(g.num_classes, 152);
+        assert!(g.max_time() <= 120.0 + 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Temporal graph storage: the edge-timestamped dynamic graph model the
+//! paper targets, plus the T-CSR structure (paper §3.1) that the parallel
+//! temporal sampler reads.
+
+mod tcsr;
+mod temporal;
+
+pub use tcsr::TCsr;
+pub use temporal::{FeatureTable, NodeLabel, TemporalGraph};

@@ -1,0 +1,213 @@
+//! The **T-CSR** data structure (paper §3.1, Figure 3).
+//!
+//! Besides the `indptr` / `indices` arrays of plain CSR, T-CSR sorts each
+//! node's outgoing edges by timestamp and stores the timestamps (`times`)
+//! and the *chronological edge ids* (`eids`, position of the edge in the
+//! time-sorted global edge list — these index edge features). Because each
+//! node's slice is time-sorted and mini-batches arrive in chronological
+//! order, the sampler can locate the candidate edge window for any
+//! `(node, t)` in amortized O(1) using monotone per-node pointers
+//! (maintained by [`crate::sampler`], not here: T-CSR itself is immutable
+//! and shared read-only across sampling threads).
+//!
+//! Space: `O(2|E| + |V|)` here plus the sampler's `O((S+1)|V|)` pointers,
+//! matching the paper's `O(2|E| + (n+2)|V|)`.
+
+use super::TemporalGraph;
+
+/// Immutable time-sorted CSR over the temporal graph.
+#[derive(Debug, Clone)]
+pub struct TCsr {
+    pub num_nodes: usize,
+    /// `indptr[v]..indptr[v+1]` is node v's out-edge slice. `usize` offsets
+    /// so billion-edge graphs (>= 2^32 directed slots) stay addressable.
+    pub indptr: Vec<usize>,
+    /// Destination node per slot, time-sorted within each node slice.
+    pub indices: Vec<u32>,
+    /// Edge timestamp per slot (sorted within each node slice).
+    pub times: Vec<f64>,
+    /// Chronological edge id per slot (indexes edge features).
+    pub eids: Vec<u32>,
+}
+
+impl TCsr {
+    /// Build from a temporal graph. `add_reverse` inserts the reverse
+    /// direction for every edge (interaction graphs are logically
+    /// undirected: both endpoints observe the event), sharing the same
+    /// chronological edge id — exactly how TGL duplicates edges so mails
+    /// reach both endpoints.
+    pub fn build(g: &TemporalGraph, add_reverse: bool) -> TCsr {
+        let slots = if add_reverse { 2 * g.num_edges() } else { g.num_edges() };
+        let mut degree = vec![0usize; g.num_nodes];
+        for e in 0..g.num_edges() {
+            degree[g.src[e] as usize] += 1;
+            if add_reverse {
+                degree[g.dst[e] as usize] += 1;
+            }
+        }
+        let mut indptr = Vec::with_capacity(g.num_nodes + 1);
+        let mut acc = 0usize;
+        indptr.push(0);
+        for d in &degree {
+            acc += d;
+            indptr.push(acc);
+        }
+        debug_assert_eq!(acc, slots);
+
+        let mut indices = vec![0u32; slots];
+        let mut times = vec![0f64; slots];
+        let mut eids = vec![0u32; slots];
+        // The edge list is already chronological, so appending in edge
+        // order leaves every node slice time-sorted — no per-node sort
+        // needed (single O(|E|) pass).
+        let mut cursor = indptr.clone();
+        for e in 0..g.num_edges() {
+            let (u, v, t) = (g.src[e] as usize, g.dst[e] as usize, g.time[e]);
+            let cu = cursor[u];
+            indices[cu] = g.dst[e];
+            times[cu] = t;
+            eids[cu] = e as u32;
+            cursor[u] += 1;
+            if add_reverse {
+                let cv = cursor[v];
+                indices[cv] = g.src[e];
+                times[cv] = t;
+                eids[cv] = e as u32;
+                cursor[v] += 1;
+            }
+        }
+        TCsr { num_nodes: g.num_nodes, indptr, indices, times, eids }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.indptr[v as usize + 1] - self.indptr[v as usize]
+    }
+
+    /// Node v's out-edge slice bounds.
+    #[inline]
+    pub fn slice(&self, v: u32) -> (usize, usize) {
+        (self.indptr[v as usize], self.indptr[v as usize + 1])
+    }
+
+    /// First slot in v's slice with `times[slot] >= t` (lower bound).
+    /// The candidate set of temporal neighbors of `(v, t)` is
+    /// `[indptr[v], lower_bound(v, t))` — strictly earlier than `t`, the
+    /// paper's information-leak guard.
+    #[inline]
+    pub fn lower_bound(&self, v: u32, t: f64) -> usize {
+        let (lo, hi) = self.slice(v);
+        self.lower_bound_in(lo, hi, t)
+    }
+
+    /// Lower bound within an arbitrary sub-window of a node slice
+    /// (used by snapshot sampling and pointer correction).
+    #[inline]
+    pub fn lower_bound_in(&self, mut lo: usize, mut hi: usize, t: f64) -> usize {
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.times[mid] < t {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Sanity invariants (debug / property tests).
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.indptr.len() == self.num_nodes + 1, "indptr length");
+        anyhow::ensure!(*self.indptr.last().unwrap() == self.indices.len(), "indptr total");
+        anyhow::ensure!(self.indices.len() == self.times.len(), "times length");
+        anyhow::ensure!(self.indices.len() == self.eids.len(), "eids length");
+        for v in 0..self.num_nodes {
+            let (lo, hi) = (self.indptr[v], self.indptr[v + 1]);
+            anyhow::ensure!(lo <= hi, "indptr monotone at {v}");
+            for s in lo + 1..hi {
+                anyhow::ensure!(
+                    self.times[s - 1] <= self.times[s],
+                    "node {v} slice not time-sorted at slot {s}"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TemporalGraph;
+
+    fn toy() -> TemporalGraph {
+        // Figure-3-like: node 1 has four temporal edges t=1..4.
+        TemporalGraph::new(
+            5,
+            vec![1, 1, 1, 1, 2],
+            vec![2, 3, 4, 0, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 2.5],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_directed() {
+        let csr = TCsr::build(&toy(), false);
+        csr.check_invariants().unwrap();
+        assert_eq!(csr.degree(1), 4);
+        assert_eq!(csr.degree(2), 1);
+        assert_eq!(csr.degree(0), 0);
+        let (lo, hi) = csr.slice(1);
+        assert_eq!(&csr.indices[lo..hi], &[2, 3, 4, 0]);
+        assert_eq!(&csr.times[lo..hi], &[1.0, 2.0, 3.0, 4.0]);
+        // Chronological ids: the (2->3, t=2.5) edge takes id 2, so node 1's
+        // later edges shift to 3 and 4.
+        assert_eq!(&csr.eids[lo..hi], &[0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn builds_reverse() {
+        let csr = TCsr::build(&toy(), true);
+        csr.check_invariants().unwrap();
+        assert_eq!(csr.num_slots(), 10);
+        // Node 3 receives edges from 1 (t=2) and 2 (t=2.5): reverse slots.
+        assert_eq!(csr.degree(3), 2);
+        let (lo, hi) = csr.slice(3);
+        assert_eq!(&csr.indices[lo..hi], &[1, 2]);
+        assert_eq!(&csr.times[lo..hi], &[2.0, 2.5]);
+        // Shared chronological edge ids: (1->3, t=2) is id 1 and
+        // (2->3, t=2.5) is id 2 in the time-sorted edge list.
+        assert_eq!(&csr.eids[lo..hi], &[1, 2]);
+    }
+
+    #[test]
+    fn lower_bound_is_leak_free_boundary() {
+        let csr = TCsr::build(&toy(), false);
+        let (lo, _) = csr.slice(1);
+        // t=2.0: candidates strictly earlier are [t=1.0] only.
+        assert_eq!(csr.lower_bound(1, 2.0), lo + 1);
+        // t=100: all four candidates.
+        assert_eq!(csr.lower_bound(1, 100.0), lo + 4);
+        // t=0.5: none.
+        assert_eq!(csr.lower_bound(1, 0.5), lo);
+    }
+
+    #[test]
+    fn slices_time_sorted_even_with_interleaved_nodes() {
+        // Edges touch nodes in interleaved order; per-node slices must
+        // still come out sorted because the global list is chronological.
+        let g = TemporalGraph::new(
+            3,
+            vec![0, 1, 0, 1, 0],
+            vec![1, 0, 2, 2, 1],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        )
+        .unwrap();
+        let csr = TCsr::build(&g, true);
+        csr.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,29 @@
+//! # TGL — Temporal GNN training framework (paper reproduction)
+//!
+//! Rust coordinator of the three-layer TGL stack:
+//!
+//! - **Layer 3 (this crate)**: T-CSR temporal graph storage, the parallel
+//!   temporal sampler (paper Algorithm 1), node memory + mailbox state,
+//!   random chunk scheduling (Algorithm 2), the training loop, and the
+//!   multi-worker data-parallel trainer.
+//! - **Layer 2**: JAX model zoo (JODIE / DySAT / TGAT / TGN / APAN) lowered
+//!   at build time to HLO text under `artifacts/`.
+//! - **Layer 1**: Pallas kernels (time encoding, temporal attention, GRU)
+//!   called by Layer 2 and lowered into the same artifacts.
+//!
+//! Python never runs on the training path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT CPU client (`xla` crate) and executes them
+//! from the Rust hot loop.
+
+pub mod bench;
+pub mod coordinator;
+pub mod datasets;
+pub mod graph;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod sampler;
+pub mod sched;
+pub mod state;
+pub mod trainer;
+pub mod util;

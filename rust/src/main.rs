@@ -1,0 +1,12 @@
+//! `tgl` CLI — leader entrypoint for the TGL framework.
+//!
+//! Subcommands are implemented in [`tgl::coordinator::cli_main`]; this shim
+//! only forwards argv so the binary and the library stay in lockstep.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = tgl::coordinator::cli_main(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

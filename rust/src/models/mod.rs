@@ -1,0 +1,97 @@
+//! Host-side model handling: load a variant's AOT artifacts + initial
+//! parameters, and mirror the run-time options from the `configs/*.yml`
+//! the variant was lowered from (single config source for both layers).
+
+use crate::runtime::{ArtifactManifest, Engine, Executable};
+use crate::sampler::Strategy;
+use crate::util::yamlish::Yaml;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Run-time options from the yml config (the manifest holds the dims).
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub strategy: Strategy,
+    pub snapshot_len: f64,
+    pub lr: f32,
+}
+
+impl RunOptions {
+    pub fn load(configs_dir: &Path, variant: &str) -> Result<RunOptions> {
+        let path = configs_dir.join(format!("{variant}.yml"));
+        let y = Yaml::parse_file(&path)?;
+        let sampling = y.opt("sampling");
+        let strategy = match sampling.map(|s| s.str_or("strategy", "recent")) {
+            Some(s) => Strategy::parse(&s)?,
+            None => Strategy::MostRecent,
+        };
+        let snapshot_len = sampling.map(|s| s.f64_or("snapshot_len", 0.0)).unwrap_or(0.0);
+        let snapshot_len = if snapshot_len <= 0.0 { f64::INFINITY } else { snapshot_len };
+        let lr = y.opt("train").map(|t| t.f64_or("lr", 1e-3)).unwrap_or(1e-3) as f32;
+        Ok(RunOptions { strategy, snapshot_len, lr })
+    }
+}
+
+/// A loaded, compiled model variant.
+pub struct Model {
+    pub name: String,
+    /// Base architecture ("tgn", "tgat", ...).
+    pub arch: String,
+    pub mf: crate::runtime::VariantManifest,
+    pub train_exe: Executable,
+    pub eval_exe: Executable,
+    pub clf_exe: Option<Executable>,
+    pub init_params: Vec<f32>,
+    pub init_clf_params: Vec<f32>,
+}
+
+impl Model {
+    /// Load + compile one variant from the artifacts directory.
+    pub fn load(engine: &Engine, manifest: &ArtifactManifest, name: &str) -> Result<Model> {
+        let mf = manifest.variant(name)?.clone();
+        let train_exe = engine
+            .load_step(&manifest.dir, mf.step("train")?)
+            .with_context(|| format!("compiling {name} train step"))?;
+        let eval_exe = engine
+            .load_step(&manifest.dir, mf.step("eval")?)
+            .with_context(|| format!("compiling {name} eval step"))?;
+        let clf_exe = match mf.steps.get("clf") {
+            Some(spec) => Some(engine.load_step(&manifest.dir, spec)?),
+            None => None,
+        };
+        let init_params = read_f32_file(&manifest.dir.join(mf.extra_file("init_file")?))?;
+        if init_params.len() != mf.param_count {
+            bail!(
+                "{name}: init params file has {} floats, manifest says {}",
+                init_params.len(),
+                mf.param_count
+            );
+        }
+        let init_clf_params = match mf.extra_file("clf_init_file") {
+            Ok(f) => read_f32_file(&manifest.dir.join(f))?,
+            Err(_) => Vec::new(),
+        };
+        let arch = mf.extra_str("model").unwrap_or_else(|_| name.to_string());
+        Ok(Model { name: name.to_string(), arch, mf, train_exe, eval_exe, clf_exe, init_params, init_clf_params })
+    }
+
+    pub fn dim(&self, key: &str) -> usize {
+        self.mf.dims.get(key).copied().unwrap_or_else(|| panic!("missing dim `{key}`"))
+    }
+
+    pub fn uses_memory(&self) -> bool {
+        self.dim("use_memory") == 1
+    }
+}
+
+fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading params {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length not a multiple of 4", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}

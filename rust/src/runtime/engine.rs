@@ -1,0 +1,151 @@
+//! PJRT engine: compile HLO-text artifacts once, execute many times.
+
+use super::{DType, StepSpec, Tensor};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Wrapper around a PJRT CPU client. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    ///
+    /// `spec` describes the expected inputs/outputs (from the manifest);
+    /// every [`Executable::run`] call is validated against it so marshalling
+    /// bugs surface as errors, not silent garbage.
+    pub fn load_step(&self, artifacts_dir: &Path, spec: &StepSpec) -> Result<Executable> {
+        let path = artifacts_dir.join(&spec.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, spec: spec.clone() })
+    }
+}
+
+/// A compiled step function plus its I/O contract.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: StepSpec,
+}
+
+// SAFETY: `PjRtLoadedExecutable` wraps a PJRT executable handle whose
+// `Execute` entry point is thread-safe in the PJRT C API contract (the CPU
+// client dispatches onto its own thread pool and the handle is never
+// mutated after compilation). `Executable::run` only takes `&self`, and the
+// multi-worker trainer relies on concurrent `run` calls — the same pattern
+// the paper uses with one CUDA stream per trainer process.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub fn spec(&self) -> &StepSpec {
+        &self.spec
+    }
+
+    /// Execute with host tensors; returns host tensors in the manifest's
+    /// output order. Inputs must match the spec in count, shape and dtype.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "step `{}` expects {} inputs, got {}",
+                self.spec.hlo,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, ts) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != ts.shape {
+                bail!(
+                    "step `{}` input `{}`: expected shape {:?}, got {:?}",
+                    self.spec.hlo,
+                    ts.name,
+                    ts.shape,
+                    t.shape
+                );
+            }
+            if t.dtype() != ts.dtype {
+                bail!(
+                    "step `{}` input `{}`: expected dtype {}, got {}",
+                    self.spec.hlo,
+                    ts.name,
+                    ts.dtype.name(),
+                    t.dtype().name()
+                );
+            }
+            literals.push(tensor_to_literal(t)?);
+        }
+
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{}`", self.spec.hlo))?;
+        // Lowered with return_tuple=True: single tuple literal in [0][0].
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "step `{}` returned {} outputs, manifest says {}",
+                self.spec.hlo,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, ts)| literal_to_tensor(&lit, ts.name.as_str()))
+            .collect()
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype() {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.raw_bytes())
+        .map_err(|e| anyhow::anyhow!("creating literal: {e:?}"))
+}
+
+fn literal_to_tensor(lit: &xla::Literal, name: &str) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .with_context(|| format!("output `{name}`: shape"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.element_type() {
+        xla::ElementType::F32 => {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("output `{name}` to_vec: {e:?}"))?;
+            Tensor::f32(&dims, v)
+        }
+        xla::ElementType::S32 => {
+            let v = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("output `{name}` to_vec: {e:?}"))?;
+            Tensor::i32(&dims, v)
+        }
+        other => bail!("output `{name}`: unsupported element type {other:?}"),
+    }
+}

@@ -1,0 +1,264 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust coordinator (which
+//! marshals inputs/outputs purely from this description — Python is never
+//! imported at run time).
+
+use crate::runtime::DType;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype + name of one executable input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match j.get("dtype")?.as_str()? {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unsupported dtype `{other}` in manifest"),
+        };
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered step function (train / eval / clf ...).
+#[derive(Debug, Clone)]
+pub struct StepSpec {
+    /// HLO text file name, relative to the artifacts directory.
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl StepSpec {
+    fn from_json(j: &Json) -> Result<StepSpec> {
+        Ok(StepSpec {
+            hlo: j.get("hlo")?.as_str()?.to_string(),
+            inputs: j
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            outputs: j
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("step has no input `{name}`"))
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("step has no output `{name}`"))
+    }
+}
+
+/// One named parameter block inside the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Everything aot.py recorded about one model variant.
+#[derive(Debug, Clone)]
+pub struct VariantManifest {
+    pub name: String,
+    /// Static dimensions the steps were lowered with (batch, fanout, ...).
+    pub dims: BTreeMap<String, usize>,
+    pub param_count: usize,
+    pub clf_param_count: usize,
+    pub params: Vec<ParamEntry>,
+    pub steps: BTreeMap<String, StepSpec>,
+    /// Top-level string fields (init_file, clf_init_file, model, ...).
+    pub extras: BTreeMap<String, String>,
+}
+
+impl VariantManifest {
+    pub fn dim(&self, key: &str) -> Result<usize> {
+        self.dims
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("variant `{}` has no dim `{key}`", self.name))
+    }
+
+    pub fn step(&self, name: &str) -> Result<&StepSpec> {
+        self.steps
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("variant `{}` has no step `{name}`", self.name))
+    }
+
+    /// A top-level string field (e.g. `init_file`).
+    pub fn extra_str(&self, key: &str) -> Result<String> {
+        self.extras
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("variant `{}` has no field `{key}`", self.name))
+    }
+
+    /// Alias of [`Self::extra_str`] for file-name fields.
+    pub fn extra_file(&self, key: &str) -> Result<String> {
+        self.extra_str(key)
+    }
+}
+
+/// The whole `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, VariantManifest>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` to AOT-compile the models first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        for (name, vj) in j.get("variants")?.as_obj()? {
+            let mut dims = BTreeMap::new();
+            for (k, v) in vj.get("dims")?.as_obj()? {
+                dims.insert(k.clone(), v.as_usize()?);
+            }
+            let mut steps = BTreeMap::new();
+            for (k, v) in vj.get("steps")?.as_obj()? {
+                steps.insert(k.clone(), StepSpec::from_json(v)?);
+            }
+            let params = match vj.opt("params") {
+                Some(pj) => pj
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamEntry {
+                            name: p.get("name")?.as_str()?.to_string(),
+                            offset: p.get("offset")?.as_usize()?,
+                            shape: p
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<Vec<_>>>()?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            };
+            let mut extras = BTreeMap::new();
+            for (k, v) in vj.as_obj()? {
+                if let Json::Str(s) = v {
+                    extras.insert(k.clone(), s.clone());
+                }
+            }
+            variants.insert(
+                name.clone(),
+                VariantManifest {
+                    name: name.clone(),
+                    dims,
+                    param_count: vj.get("param_count")?.as_usize()?,
+                    clf_param_count: vj
+                        .opt("clf_param_count")
+                        .map(|v| v.as_usize())
+                        .transpose()?
+                        .unwrap_or(0),
+                    params,
+                    steps,
+                    extras,
+                },
+            );
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantManifest> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "manifest has no variant `{name}` (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "variants": {
+        "tgn": {
+          "dims": {"batch": 600, "fanout": 10, "mem_dim": 100},
+          "param_count": 1234,
+          "params": [{"name": "w_q", "offset": 0, "shape": [100, 100]}],
+          "steps": {
+            "train": {
+              "hlo": "tgn_train.hlo.txt",
+              "inputs": [
+                {"name": "params", "shape": [1234], "dtype": "f32"},
+                {"name": "mask", "shape": [600, 10], "dtype": "f32"}
+              ],
+              "outputs": [
+                {"name": "loss", "shape": [], "dtype": "f32"}
+              ]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("tgl_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let v = m.variant("tgn").unwrap();
+        assert_eq!(v.dim("batch").unwrap(), 600);
+        assert_eq!(v.param_count, 1234);
+        let s = v.step("train").unwrap();
+        assert_eq!(s.inputs.len(), 2);
+        assert_eq!(s.inputs[1].shape, vec![600, 10]);
+        assert_eq!(s.inputs[1].numel(), 6000);
+        assert_eq!(s.input_index("mask").unwrap(), 1);
+        assert!(s.input_index("nope").is_err());
+        assert!(m.variant("tgat").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

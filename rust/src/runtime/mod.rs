@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute AOT-compiled HLO artifacts.
+//!
+//! Layer 2 (`python/compile/aot.py`) lowers every model variant to **HLO
+//! text** (not a serialized `HloModuleProto`: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly). This module wraps the `xla`
+//! crate's PJRT CPU client so the rest of the crate never touches raw
+//! XLA types.
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactManifest, ParamEntry, StepSpec, TensorSpec, VariantManifest};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,179 @@
+//! Host-side dense tensors exchanged with PJRT executables.
+//!
+//! The coordinator assembles MFG (message-flow-graph) inputs as plain
+//! row-major `f32`/`i32` buffers; this type carries them together with a
+//! shape so [`super::Engine`] can marshal them into XLA literals.
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`Tensor`]. Only the two types the TGL step functions
+/// exchange: features/state/masks are `F32`, class labels are `I32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    data: Data,
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    /// Build an `f32` tensor; `data.len()` must equal the shape product.
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("tensor shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data: Data::F32(data) })
+    }
+
+    /// Build an `i32` tensor; `data.len()` must equal the shape product.
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("tensor shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data: Data::I32(data) })
+    }
+
+    /// All-zero `f32` tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: Data::F32(vec![0.0; n]) }
+    }
+
+    /// A scalar (rank-0) `f32` tensor.
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow the `f32` payload (errors on dtype mismatch).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Mutably borrow the `f32` payload (errors on dtype mismatch).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Borrow the `i32` payload (errors on dtype mismatch).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Consume into the `f32` payload.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Raw little-endian bytes of the payload (for literal marshalling).
+    pub fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            Data::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            Data::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        }
+    }
+
+    /// Scalar extraction: rank-0 or single-element f32 tensor.
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected single-element tensor, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_product_enforced() {
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(&[4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        let t = Tensor::zeros(&[3, 2]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(Tensor::scalar(4.25).scalar_f32().unwrap(), 4.25);
+    }
+
+    #[test]
+    fn raw_bytes_roundtrip() {
+        let t = Tensor::f32(&[2], vec![1.0, -2.0]).unwrap();
+        let b = t.raw_bytes();
+        assert_eq!(b.len(), 8);
+        assert_eq!(f32::from_le_bytes(b[0..4].try_into().unwrap()), 1.0);
+        assert_eq!(f32::from_le_bytes(b[4..8].try_into().unwrap()), -2.0);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::i32(&[1], vec![7]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[7]);
+    }
+}

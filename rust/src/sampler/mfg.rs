@@ -1,0 +1,148 @@
+//! Message-Flow-Graph (MFG) output of the temporal sampler.
+//!
+//! TGL emits DGL MFGs; our equivalent is a set of dense, statically-shaped
+//! arrays per (snapshot, hop) ready for feature/state gathering and literal
+//! marshalling — the "CPU slices, device computes" split of the paper.
+
+/// One hop of sampled neighbors for a list of roots.
+///
+/// All per-neighbor arrays have length `roots.len() * fanout`, padded and
+/// masked: slot `r * fanout + k` is the k-th sampled neighbor of root `r`
+/// (`mask == 1.0`) or padding (`mask == 0.0`, `nbr == 0`, `dt == 0`).
+#[derive(Debug, Clone)]
+pub struct MfgBlock {
+    pub fanout: usize,
+    /// Root node ids (hop 0: the batch; hop l: the flattened samples of
+    /// hop l-1, including masked padding slots).
+    pub roots: Vec<u32>,
+    /// Root timestamps (a sampled neighbor's root-ts for the next hop is
+    /// its *edge* timestamp — TGAT's timestamp propagation).
+    pub root_ts: Vec<f64>,
+    /// 1.0 where the root slot itself is valid (hop > 0 roots inherit the
+    /// mask of the slot they were sampled into).
+    pub root_mask: Vec<f32>,
+    pub nbr: Vec<u32>,
+    /// Time delta `root_ts - edge_ts` (non-negative by the leak guard).
+    pub dt: Vec<f32>,
+    /// Chronological edge id of the sampled edge (indexes edge features).
+    pub eid: Vec<u32>,
+    pub mask: Vec<f32>,
+}
+
+impl MfgBlock {
+    pub fn new_empty(roots: Vec<u32>, root_ts: Vec<f64>, root_mask: Vec<f32>, fanout: usize) -> Self {
+        let n = roots.len() * fanout;
+        MfgBlock {
+            fanout,
+            roots,
+            root_ts,
+            root_mask,
+            nbr: vec![0; n],
+            dt: vec![0.0; n],
+            eid: vec![0; n],
+            mask: vec![0.0; n],
+        }
+    }
+
+    pub fn num_roots(&self) -> usize {
+        self.roots.len()
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.nbr.len()
+    }
+
+    /// Count of valid (unmasked) sampled neighbors.
+    pub fn valid_count(&self) -> usize {
+        self.mask.iter().filter(|&&m| m == 1.0).count()
+    }
+
+    /// The next hop's roots: this hop's sampled slots (ids, edge
+    /// timestamps, masks), flattened.
+    pub fn next_hop_roots(&self) -> (Vec<u32>, Vec<f64>, Vec<f32>) {
+        let ts = self
+            .dt
+            .iter()
+            .enumerate()
+            .map(|(i, &dt)| self.root_ts[i / self.fanout] - dt as f64)
+            .collect();
+        (self.nbr.clone(), ts, self.mask.clone())
+    }
+}
+
+/// Full sampler output: `snapshots[s][l]` is hop l+1 of snapshot s.
+/// Non-snapshot models have `snapshots.len() == 1`.
+#[derive(Debug, Clone)]
+pub struct Mfg {
+    pub snapshots: Vec<Vec<MfgBlock>>,
+}
+
+impl Mfg {
+    /// Total sampled (valid) neighbor slots across all blocks.
+    pub fn total_valid(&self) -> usize {
+        self.snapshots
+            .iter()
+            .flat_map(|hops| hops.iter())
+            .map(|b| b.valid_count())
+            .sum()
+    }
+
+    /// The batch roots (shared across snapshots, hop 0 of snapshot 0).
+    pub fn batch_roots(&self) -> (&[u32], &[f64]) {
+        let b = &self.snapshots[0][0];
+        (&b.roots, &b.root_ts)
+    }
+
+    /// Every (node, time, valid) appearing anywhere in the MFG — batch
+    /// roots first, then sampled slots of every snapshot/hop in order.
+    /// This is the gather list for node memory / features.
+    pub fn all_nodes(&self) -> Vec<(u32, f64, bool)> {
+        let mut out = Vec::new();
+        let b0 = &self.snapshots[0][0];
+        for i in 0..b0.roots.len() {
+            out.push((b0.roots[i], b0.root_ts[i], b0.root_mask[i] == 1.0));
+        }
+        for hops in &self.snapshots {
+            for b in hops {
+                for i in 0..b.num_slots() {
+                    let t = b.root_ts[i / b.fanout] - b.dt[i] as f64;
+                    out.push((b.nbr[i], t, b.mask[i] == 1.0));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_hop_roots_propagate_edge_time() {
+        let mut b = MfgBlock::new_empty(vec![10, 11], vec![100.0, 200.0], vec![1.0, 1.0], 2);
+        b.nbr = vec![1, 2, 3, 4];
+        b.dt = vec![5.0, 10.0, 20.0, 0.0];
+        b.mask = vec![1.0, 1.0, 1.0, 0.0];
+        let (ids, ts, mask) = b.next_hop_roots();
+        assert_eq!(ids, vec![1, 2, 3, 4]);
+        assert_eq!(ts, vec![95.0, 90.0, 180.0, 200.0]);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(b.valid_count(), 3);
+    }
+
+    #[test]
+    fn all_nodes_enumerates_roots_then_slots() {
+        let mut b = MfgBlock::new_empty(vec![7], vec![50.0], vec![1.0], 2);
+        b.nbr = vec![1, 0];
+        b.dt = vec![10.0, 0.0];
+        b.mask = vec![1.0, 0.0];
+        let m = Mfg { snapshots: vec![vec![b]] };
+        let nodes = m.all_nodes();
+        assert_eq!(nodes.len(), 3);
+        assert_eq!(nodes[0], (7, 50.0, true));
+        assert_eq!(nodes[1], (1, 40.0, true));
+        assert_eq!(nodes[2].2, false);
+        assert_eq!(m.total_valid(), 1);
+    }
+}

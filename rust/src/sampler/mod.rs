@@ -1,0 +1,104 @@
+//! The parallel temporal sampler (paper §3.1, Algorithm 1).
+//!
+//! Given a mini-batch of root nodes with timestamps (non-decreasing across
+//! batches), produce the multi-hop, multi-snapshot MFGs that feed the AOT
+//! step functions. Root nodes are distributed over threads; per-node
+//! snapshot pointers give O(1) amortized candidate-window identification;
+//! fine-grained node locks (or a lock-free `fetch_max` variant — see
+//! [`PointerMode`]) resolve races when the same node appears in a batch at
+//! different timestamps; sampled neighbors are strictly earlier than their
+//! root (information-leak guard).
+
+mod baseline;
+mod mfg;
+mod parallel;
+mod pointer;
+
+pub use baseline::BaselineSampler;
+pub use mfg::{Mfg, MfgBlock};
+pub use parallel::{SampleStats, TemporalSampler};
+pub(crate) use parallel::{mix_seed as parallel_seed, sample_distinct_small};
+pub use pointer::{PointerMode, PointerState};
+
+/// Neighbor selection strategy within the candidate window (paper §2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Uniform over all past neighbors in the window (TGAT, DySAT).
+    Uniform,
+    /// The most recent neighbors in the window (TGN, JODIE, APAN).
+    MostRecent,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
+        match s {
+            "uniform" => Ok(Strategy::Uniform),
+            "recent" | "most_recent" => Ok(Strategy::MostRecent),
+            other => anyhow::bail!("unknown sampling strategy `{other}`"),
+        }
+    }
+}
+
+/// Per-hop sampling configuration; `layers[0]` is hop-1 (nearest to roots).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCfg {
+    pub fanout: usize,
+    pub strategy: Strategy,
+}
+
+/// Full sampler configuration.
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    pub layers: Vec<LayerCfg>,
+    /// Number of snapshots S (1 for non-snapshot TGNNs).
+    pub num_snapshots: usize,
+    /// Snapshot duration; ignored when `num_snapshots == 1` (infinite
+    /// window: all past neighbors are candidates).
+    pub snapshot_len: f64,
+    pub threads: usize,
+    pub pointer_mode: PointerMode,
+    /// Base seed; combined with batch seed + root index so sampling is
+    /// deterministic regardless of thread count.
+    pub seed: u64,
+    /// Collect per-phase wall-time stats (Figure 4b). Off by default:
+    /// two `Instant::now()` calls per root would dominate the hot loop.
+    pub collect_stats: bool,
+}
+
+impl SamplerConfig {
+    /// Single-snapshot config with identical layers (the common case).
+    pub fn uniform_hops(hops: usize, fanout: usize, strategy: Strategy, threads: usize) -> Self {
+        SamplerConfig {
+            layers: vec![LayerCfg { fanout, strategy }; hops],
+            num_snapshots: 1,
+            snapshot_len: f64::INFINITY,
+            threads,
+            pointer_mode: PointerMode::Locked,
+            seed: 0x7617,
+            collect_stats: false,
+        }
+    }
+
+    /// DySAT-style config: S snapshots of duration `len`.
+    pub fn snapshots(
+        hops: usize,
+        fanout: usize,
+        num_snapshots: usize,
+        len: f64,
+        threads: usize,
+    ) -> Self {
+        SamplerConfig {
+            layers: vec![LayerCfg { fanout, strategy: Strategy::Uniform }; hops],
+            num_snapshots,
+            snapshot_len: len,
+            threads,
+            pointer_mode: PointerMode::Locked,
+            seed: 0x7617,
+            collect_stats: false,
+        }
+    }
+
+    pub fn hops(&self) -> usize {
+        self.layers.len()
+    }
+}

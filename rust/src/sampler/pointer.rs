@@ -1,0 +1,294 @@
+//! Per-node snapshot pointers (the heart of T-CSR sampling).
+//!
+//! For a model with S snapshots the paper keeps S+1 pointers per node;
+//! pointer k tracks `lower_bound(t - k * snapshot_len)` within the node's
+//! time-sorted slice as the batch timestamp `t` advances monotonically
+//! through an epoch. Snapshot j's candidate window is
+//! `[pt[j+1], pt[j])`; for single-snapshot models the window is
+//! `[slice_start, pt[0])`.
+//!
+//! Because a mini-batch may contain the same node at *different*
+//! timestamps, the stored pointer is a **monotone maximum** — it may
+//! overshoot the boundary of a root with a smaller timestamp. Every read
+//! therefore *corrects*: if the stored hint overshoots, a bounded binary
+//! search in `[lo, hint)` recovers the exact boundary; if it undershoots,
+//! a forward scan advances it (amortized O(|E|) per epoch, the paper's
+//! cost claim). Three modes:
+//!
+//! - [`PointerMode::Locked`] — paper-faithful: per-node fine-grained locks
+//!   serialize advancement (Algorithm 1's race-condition guard).
+//! - [`PointerMode::Atomic`] — optimized: `fetch_max` publication, no
+//!   locks; the correction step makes overshoot harmless, so the lock is
+//!   unnecessary (ablation for §Perf).
+//! - [`PointerMode::BinarySearch`] — no pointer state at all; every window
+//!   boundary found by full binary search (the paper's `O(|E| log |E|)`
+//!   comparison baseline).
+
+use crate::graph::TCsr;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PointerMode {
+    Locked,
+    Atomic,
+    BinarySearch,
+}
+
+impl PointerMode {
+    pub fn parse(s: &str) -> anyhow::Result<PointerMode> {
+        match s {
+            "locked" => Ok(PointerMode::Locked),
+            "atomic" => Ok(PointerMode::Atomic),
+            "binsearch" | "binary_search" => Ok(PointerMode::BinarySearch),
+            other => anyhow::bail!("unknown pointer mode `{other}`"),
+        }
+    }
+}
+
+/// Pointer table: `(S+1)` `u32` slice-relative offsets per node, plus one
+/// lock per node (lock striping caps the lock table for huge graphs).
+pub struct PointerState {
+    mode: PointerMode,
+    num_snapshots: usize,
+    snapshot_len: f64,
+    /// Slice-relative offsets, `node * (S+1) + k`. Empty in BinarySearch mode.
+    ptrs: Vec<AtomicU32>,
+    /// Fine-grained node locks (striped at `lock_mask + 1` entries).
+    locks: Vec<Mutex<()>>,
+    lock_mask: usize,
+}
+
+impl PointerState {
+    pub fn new(num_nodes: usize, num_snapshots: usize, snapshot_len: f64, mode: PointerMode) -> Self {
+        let width = num_snapshots + 1;
+        let ptrs = if mode == PointerMode::BinarySearch {
+            Vec::new()
+        } else {
+            (0..num_nodes * width).map(|_| AtomicU32::new(0)).collect()
+        };
+        // Per-node locks up to 2^20, striped beyond (memory cap for
+        // MAG-scale graphs; below the cap this IS a per-node lock).
+        let lock_count = num_nodes.clamp(1, 1 << 20).next_power_of_two();
+        let locks = if mode == PointerMode::Locked {
+            (0..lock_count).map(|_| Mutex::new(())).collect()
+        } else {
+            Vec::new()
+        };
+        PointerState {
+            mode,
+            num_snapshots,
+            snapshot_len,
+            ptrs,
+            locks,
+            lock_mask: lock_count - 1,
+        }
+    }
+
+    pub fn mode(&self) -> PointerMode {
+        self.mode
+    }
+
+    /// Reset all pointers to slice start (called at every epoch boundary —
+    /// chronology restarts).
+    pub fn reset(&self) {
+        for p in &self.ptrs {
+            p.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Boundary timestamp of pointer `k` for root time `t`.
+    #[inline]
+    fn boundary(&self, t: f64, k: usize) -> f64 {
+        if self.snapshot_len.is_infinite() {
+            if k == 0 {
+                t
+            } else {
+                f64::NEG_INFINITY
+            }
+        } else {
+            t - k as f64 * self.snapshot_len
+        }
+    }
+
+    /// Compute the S+1 exact window boundaries (absolute slot positions)
+    /// for root `(v, t)`, advancing the shared pointers as a side effect.
+    /// `out` must have length S+2; on return `out[k]` = lower_bound of
+    /// boundary k, so snapshot j's window is `[out[j+1], out[j])`.
+    ///
+    /// Returns the number of forward-scan steps (pointer work) and binary
+    /// search invocations (for the Figure-4b breakdown).
+    pub fn advance(&self, csr: &TCsr, v: u32, t: f64, out: &mut [usize]) -> (u64, u64) {
+        let width = self.num_snapshots + 1;
+        debug_assert!(out.len() >= width + 1);
+        let (lo, hi) = csr.slice(v);
+        let mut scan_steps = 0u64;
+        let mut bs_calls = 0u64;
+
+        if self.mode == PointerMode::BinarySearch {
+            for k in 0..width {
+                let b = self.boundary(t, k);
+                out[k] = if b == f64::NEG_INFINITY {
+                    lo
+                } else {
+                    csr.lower_bound_in(lo, hi, b)
+                };
+                bs_calls += 1;
+            }
+            out[width] = lo;
+            return (scan_steps, bs_calls);
+        }
+
+        let base = v as usize * width;
+        let _guard = if self.mode == PointerMode::Locked {
+            Some(self.locks[v as usize & self.lock_mask].lock().unwrap())
+        } else {
+            None
+        };
+        for k in 0..width {
+            let b = self.boundary(t, k);
+            if b == f64::NEG_INFINITY {
+                out[k] = lo;
+                continue;
+            }
+            let slot = &self.ptrs[base + k];
+            let hint = lo + slot.load(Ordering::Acquire) as usize;
+            let hint = hint.min(hi);
+            let exact = if hint > lo && csr.times[hint - 1] >= b {
+                // Overshoot (another root of this node had a larger t):
+                // correct backwards with a bounded binary search.
+                bs_calls += 1;
+                csr.lower_bound_in(lo, hint, b)
+            } else {
+                // Advance forward; amortized O(degree) per epoch.
+                let mut p = hint;
+                while p < hi && csr.times[p] < b {
+                    p += 1;
+                    scan_steps += 1;
+                }
+                p
+            };
+            // Publish the monotone maximum.
+            let rel = (exact - lo) as u32;
+            if self.mode == PointerMode::Atomic {
+                slot.fetch_max(rel, Ordering::AcqRel);
+            } else if rel > slot.load(Ordering::Relaxed) {
+                slot.store(rel, Ordering::Release);
+            }
+            out[k] = exact;
+        }
+        out[width] = lo;
+        (scan_steps, bs_calls)
+    }
+
+    /// Memory footprint of the pointer table in bytes (for DESIGN §Perf).
+    pub fn table_bytes(&self) -> usize {
+        self.ptrs.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TemporalGraph;
+
+    fn csr() -> TCsr {
+        // Node 0 with 6 out-edges at t = 1..=6.
+        let g = TemporalGraph::new(
+            7,
+            vec![0; 6],
+            vec![1, 2, 3, 4, 5, 6],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        )
+        .unwrap();
+        TCsr::build(&g, false)
+    }
+
+    fn windows(ps: &PointerState, csr: &TCsr, v: u32, t: f64, s: usize) -> Vec<(usize, usize)> {
+        let mut out = vec![0usize; s + 2];
+        ps.advance(csr, v, t, &mut out);
+        (0..s).map(|j| (out[j + 1], out[j])).collect()
+    }
+
+    #[test]
+    fn single_snapshot_infinite_window() {
+        let csr = csr();
+        for mode in [PointerMode::Locked, PointerMode::Atomic, PointerMode::BinarySearch] {
+            let ps = PointerState::new(csr.num_nodes, 1, f64::INFINITY, mode);
+            let w = windows(&ps, &csr, 0, 3.5, 1);
+            assert_eq!(w, vec![(0, 3)], "mode {mode:?}"); // t<3.5: slots 0..3
+            let w = windows(&ps, &csr, 0, 6.5, 1);
+            assert_eq!(w, vec![(0, 6)], "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn pointer_monotone_but_reads_exact_for_stale_roots() {
+        let csr = csr();
+        for mode in [PointerMode::Locked, PointerMode::Atomic] {
+            let ps = PointerState::new(csr.num_nodes, 1, f64::INFINITY, mode);
+            // Advance far ...
+            let w = windows(&ps, &csr, 0, 6.0, 1);
+            assert_eq!(w, vec![(0, 5)]);
+            // ... then a smaller-timestamp root of the same node must
+            // still see its exact (earlier) boundary.
+            let w = windows(&ps, &csr, 0, 2.5, 1);
+            assert_eq!(w, vec![(0, 2)], "mode {mode:?}");
+            // And the stored pointer stayed at the max.
+            let w = windows(&ps, &csr, 0, 6.0, 1);
+            assert_eq!(w, vec![(0, 5)]);
+        }
+    }
+
+    #[test]
+    fn multi_snapshot_windows() {
+        let csr = csr();
+        // S=2 snapshots of length 2.0 at t=6.0:
+        //   snapshot 0 (recent): [4.0, 6.0) -> slots 3..5
+        //   snapshot 1:          [2.0, 4.0) -> slots 1..3
+        for mode in [PointerMode::Locked, PointerMode::Atomic, PointerMode::BinarySearch] {
+            let ps = PointerState::new(csr.num_nodes, 2, 2.0, mode);
+            let w = windows(&ps, &csr, 0, 6.0, 2);
+            assert_eq!(w, vec![(3, 5), (1, 3)], "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn reset_rewinds() {
+        let csr = csr();
+        let ps = PointerState::new(csr.num_nodes, 1, f64::INFINITY, PointerMode::Locked);
+        windows(&ps, &csr, 0, 6.0, 1);
+        ps.reset();
+        let w = windows(&ps, &csr, 0, 1.5, 1);
+        assert_eq!(w, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn concurrent_advancement_correct() {
+        let csr = csr();
+        for mode in [PointerMode::Locked, PointerMode::Atomic] {
+            let ps = PointerState::new(csr.num_nodes, 1, f64::INFINITY, mode);
+            std::thread::scope(|s| {
+                for t in 1..=6 {
+                    let ps = &ps;
+                    let csr = &csr;
+                    s.spawn(move || {
+                        let mut out = vec![0usize; 3];
+                        ps.advance(csr, 0, t as f64 + 0.5, &mut out);
+                        assert_eq!(out[0], t, "boundary for t+0.5 must be t (mode {mode:?})");
+                    });
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn empty_slice_node() {
+        let csr = csr();
+        let ps = PointerState::new(csr.num_nodes, 1, f64::INFINITY, PointerMode::Locked);
+        let w = windows(&ps, &csr, 6, 10.0, 1);
+        let (lo, hi) = csr.slice(6);
+        assert_eq!(lo, hi);
+        assert_eq!(w, vec![(lo, lo)]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Algorithm 2: random chunk scheduling.
+//!
+//! ```text
+//! for each epoch:
+//!     e_s <- rand(0, bs/cs) * cs        # random chunk-aligned offset
+//!     e_e <- e_s + bs
+//!     while e_e <= |E|: train on [e_s, e_e); advance both by bs
+//! ```
+//!
+//! With `chunks_per_batch == 1` (`cs == bs`) the offset is always a whole
+//! batch, which degenerates to the plain scheduler shifted by whole
+//! batches; the interesting regime is `cs < bs`, where epoch-to-epoch
+//! offsets differ by sub-batch amounts so edge pairs that straddled a
+//! batch boundary in one epoch share a batch in another (inter-batch
+//! dependencies get their gradient turn).
+
+use crate::util::rng::Rng;
+
+/// Produces, per epoch, the chronological list of edge windows to train on.
+#[derive(Debug, Clone)]
+pub struct ChunkScheduler {
+    num_edges: usize,
+    batch_size: usize,
+    chunk_size: usize,
+    rng: Rng,
+}
+
+/// One epoch's batch windows.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    pub start_offset: usize,
+    pub batches: Vec<std::ops::Range<usize>>,
+}
+
+impl ChunkScheduler {
+    /// `chunk_size == batch_size` disables sub-batch rotation (the paper's
+    /// "no chunk" baseline). `chunk_size` must divide `batch_size`.
+    pub fn new(num_edges: usize, batch_size: usize, chunk_size: usize, seed: u64) -> anyhow::Result<Self> {
+        anyhow::ensure!(batch_size > 0, "batch_size must be positive");
+        anyhow::ensure!(
+            chunk_size > 0 && batch_size % chunk_size == 0,
+            "chunk_size {chunk_size} must divide batch_size {batch_size}"
+        );
+        Ok(ChunkScheduler { num_edges, batch_size, chunk_size, rng: Rng::new(seed) })
+    }
+
+    /// Plain chronological batching (no randomization): offset 0 and a
+    /// final short batch so every edge trains every epoch. Used by the
+    /// small-batch baselines.
+    pub fn plain(num_edges: usize, batch_size: usize) -> Self {
+        ChunkScheduler {
+            num_edges,
+            batch_size,
+            chunk_size: 0, // sentinel: plain mode
+            rng: Rng::new(0),
+        }
+    }
+
+    pub fn chunks_per_batch(&self) -> usize {
+        if self.chunk_size == 0 {
+            1
+        } else {
+            self.batch_size / self.chunk_size
+        }
+    }
+
+    /// Algorithm 2, one epoch.
+    pub fn epoch(&mut self) -> EpochPlan {
+        if self.chunk_size == 0 {
+            // Plain mode: cover everything, allow a ragged tail.
+            let mut batches = Vec::new();
+            let mut s = 0;
+            while s < self.num_edges {
+                batches.push(s..(s + self.batch_size).min(self.num_edges));
+                s += self.batch_size;
+            }
+            return EpochPlan { start_offset: 0, batches };
+        }
+        let n_offsets = self.batch_size / self.chunk_size; // bs/cs
+        let start = self.rng.below(n_offsets) * self.chunk_size;
+        let mut batches = Vec::new();
+        let (mut s, mut e) = (start, start + self.batch_size);
+        while e <= self.num_edges {
+            batches.push(s..e);
+            s += self.batch_size;
+            e += self.batch_size;
+        }
+        EpochPlan { start_offset: start, batches }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_covers_all_edges() {
+        let mut s = ChunkScheduler::plain(1000, 128);
+        let plan = s.epoch();
+        assert_eq!(plan.start_offset, 0);
+        assert_eq!(plan.batches.first().unwrap().start, 0);
+        assert_eq!(plan.batches.last().unwrap().end, 1000);
+        let covered: usize = plan.batches.iter().map(|b| b.len()).sum();
+        assert_eq!(covered, 1000);
+        // Contiguity.
+        for w in plan.batches.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn chunk_offsets_are_chunk_aligned_and_varied() {
+        let mut s = ChunkScheduler::new(100_000, 4800, 300, 7).unwrap();
+        assert_eq!(s.chunks_per_batch(), 16);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..64 {
+            let plan = s.epoch();
+            assert_eq!(plan.start_offset % 300, 0);
+            assert!(plan.start_offset < 4800);
+            for b in &plan.batches {
+                assert_eq!(b.len(), 4800);
+                assert!(b.end <= 100_000);
+            }
+            seen.insert(plan.start_offset);
+        }
+        assert!(seen.len() > 8, "offsets should vary across epochs: {seen:?}");
+    }
+
+    #[test]
+    fn no_chunks_single_offset_degenerate() {
+        // cs == bs -> rand(0, 1) == 0 always: identical epochs (the
+        // "cannot learn" configuration of Figure 6).
+        let mut s = ChunkScheduler::new(10_000, 4800, 4800, 3).unwrap();
+        for _ in 0..8 {
+            assert_eq!(s.epoch().start_offset, 0);
+        }
+    }
+
+    #[test]
+    fn full_batches_only_in_chunk_mode() {
+        // Algorithm 2's `while e_e <= |E|` drops the ragged tail.
+        let mut s = ChunkScheduler::new(1000, 300, 100, 1).unwrap();
+        let plan = s.epoch();
+        assert!(plan.batches.iter().all(|b| b.len() == 300));
+    }
+
+    #[test]
+    fn invalid_chunk_size_rejected() {
+        assert!(ChunkScheduler::new(100, 600, 250, 0).is_err());
+        assert!(ChunkScheduler::new(100, 600, 0, 0).is_err());
+    }
+}

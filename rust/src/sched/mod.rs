@@ -1,0 +1,110 @@
+//! Training-order scheduling: the chronological batcher and the paper's
+//! **random chunk scheduling** (Algorithm 2, §3.2).
+//!
+//! Training edges must be visited chronologically (node-memory causality),
+//! so a mini-batch is always a contiguous window of the time-sorted edge
+//! list. Large batches discard intra-batch dependencies; random chunk
+//! scheduling rotates the epoch's starting offset in chunk-size steps so
+//! adjacent chunks land in different mini-batches across epochs, recovering
+//! inter-batch dependencies.
+
+mod chunk;
+
+pub use chunk::{ChunkScheduler, EpochPlan};
+
+use crate::graph::TemporalGraph;
+use crate::util::rng::Rng;
+
+/// One training mini-batch: `bs` positive edges plus `bs` sampled negative
+/// destinations (the standard 1:1 negative sampling of the baselines).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Chronological edge-id range this batch covers.
+    pub edge_range: std::ops::Range<usize>,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    /// Negative-sample destinations, one per positive edge.
+    pub neg: Vec<u32>,
+    pub ts: Vec<f64>,
+    /// Chronological edge ids of the positives (edge-feature lookup).
+    pub eids: Vec<u32>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    /// Root layout fed to the models: `[src | dst | neg]`, each of length
+    /// `len()`, with the positives' timestamps replicated onto the
+    /// negatives (a negative is "what else could have happened at t").
+    pub fn roots(&self) -> (Vec<u32>, Vec<f64>) {
+        let mut nodes = Vec::with_capacity(3 * self.len());
+        nodes.extend_from_slice(&self.src);
+        nodes.extend_from_slice(&self.dst);
+        nodes.extend_from_slice(&self.neg);
+        let mut ts = Vec::with_capacity(3 * self.len());
+        for _ in 0..3 {
+            ts.extend_from_slice(&self.ts);
+        }
+        (nodes, ts)
+    }
+}
+
+/// Materialize a batch from an edge window, drawing negatives uniformly
+/// from `[0, num_nodes)` (matching the baselines' corruption scheme).
+pub fn make_batch(g: &TemporalGraph, range: std::ops::Range<usize>, rng: &mut Rng) -> Batch {
+    let n = range.len();
+    let mut b = Batch {
+        edge_range: range.clone(),
+        src: Vec::with_capacity(n),
+        dst: Vec::with_capacity(n),
+        neg: Vec::with_capacity(n),
+        ts: Vec::with_capacity(n),
+        eids: Vec::with_capacity(n),
+    };
+    for e in range {
+        b.src.push(g.src[e]);
+        b.dst.push(g.dst[e]);
+        b.neg.push(rng.below(g.num_nodes) as u32);
+        b.ts.push(g.time[e]);
+        b.eids.push(e as u32);
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph() -> TemporalGraph {
+        TemporalGraph::new(
+            10,
+            vec![0, 1, 2, 3, 4, 5],
+            vec![5, 6, 7, 8, 9, 0],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batch_layout() {
+        let g = graph();
+        let mut rng = Rng::new(1);
+        let b = make_batch(&g, 1..4, &mut rng);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.src, vec![1, 2, 3]);
+        assert_eq!(b.eids, vec![1, 2, 3]);
+        assert!(b.neg.iter().all(|&v| v < 10));
+        let (roots, ts) = b.roots();
+        assert_eq!(roots.len(), 9);
+        assert_eq!(&roots[0..3], &[1, 2, 3]);
+        assert_eq!(&roots[3..6], &[6, 7, 8]);
+        assert_eq!(&ts[0..3], &ts[3..6]);
+        assert_eq!(&ts[0..3], &ts[6..9]);
+    }
+}

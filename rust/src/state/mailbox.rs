@@ -1,0 +1,189 @@
+//! The mailbox (paper §3, adopted from APAN): a fixed number of most
+//! recent *mails* per node, cached from previous mini-batches. Updating
+//! the node memory from cached mails — instead of the current batch's own
+//! edges — removes the information leak and lets the memory receive
+//! gradients (TGN's scheme, unified here for all memory-based variants).
+//!
+//! Each node's slots form a ring buffer: `write` overwrites the oldest
+//! slot. TGN-style models use 1 slot; APAN uses 10.
+
+/// Fixed-capacity per-node mail ring buffers.
+#[derive(Debug, Clone)]
+pub struct Mailbox {
+    slots: usize,
+    dim: usize,
+    mail: Vec<f32>,
+    mail_ts: Vec<f64>,
+    /// Number of mails ever written per node (ring position = count % slots).
+    count: Vec<u64>,
+}
+
+impl Mailbox {
+    pub fn new(num_nodes: usize, slots: usize, dim: usize) -> Self {
+        assert!(slots >= 1);
+        Mailbox {
+            slots,
+            dim,
+            mail: vec![0.0; num_nodes * slots * dim],
+            mail_ts: vec![0.0; num_nodes * slots],
+            count: vec![0; num_nodes],
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.count.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.mail.fill(0.0);
+        self.mail_ts.fill(0.0);
+        self.count.fill(0);
+    }
+
+    /// Number of valid mails currently held for `v`.
+    pub fn valid(&self, v: u32) -> usize {
+        (self.count[v as usize] as usize).min(self.slots)
+    }
+
+    /// Append one mail for node `v` at time `t` (overwrites the oldest
+    /// slot when full).
+    pub fn write(&mut self, v: u32, t: f64, mail: &[f32]) {
+        debug_assert_eq!(mail.len(), self.dim);
+        let vi = v as usize;
+        let pos = (self.count[vi] as usize) % self.slots;
+        let base = (vi * self.slots + pos) * self.dim;
+        self.mail[base..base + self.dim].copy_from_slice(mail);
+        self.mail_ts[vi * self.slots + pos] = t;
+        self.count[vi] += 1;
+    }
+
+    /// Gather, for each `(node, t, valid)`, the node's mails ordered
+    /// **newest first** into `out_mail` (`[n, slots, dim]` flat), with
+    /// `Δt = t - mail_ts` into `out_dt` and validity into `out_mask`
+    /// (`[n, slots]` each). Padding slots and invalid nodes are zeroed.
+    pub fn gather(
+        &self,
+        nodes: &[(u32, f64, bool)],
+        out_mail: &mut Vec<f32>,
+        out_dt: &mut Vec<f32>,
+        out_mask: &mut Vec<f32>,
+    ) {
+        out_mail.reserve(nodes.len() * self.slots * self.dim);
+        out_dt.reserve(nodes.len() * self.slots);
+        out_mask.reserve(nodes.len() * self.slots);
+        for &(v, t, node_valid) in nodes {
+            let vi = v as usize;
+            let have = if node_valid { self.valid(v) } else { 0 };
+            for k in 0..self.slots {
+                if k < have {
+                    // Newest-first: k-th newest is at ring position
+                    // (count - 1 - k) % slots.
+                    let pos = ((self.count[vi] as usize + self.slots - 1 - k)
+                        % self.slots
+                        + self.slots)
+                        % self.slots;
+                    let base = (vi * self.slots + pos) * self.dim;
+                    out_mail.extend_from_slice(&self.mail[base..base + self.dim]);
+                    out_dt.push((t - self.mail_ts[vi * self.slots + pos]).max(0.0) as f32);
+                    out_mask.push(1.0);
+                } else {
+                    out_mail.extend(std::iter::repeat_n(0.0, self.dim));
+                    out_dt.push(0.0);
+                    out_mask.push(0.0);
+                }
+            }
+        }
+    }
+
+    /// Approximate resident bytes (capacity planning; the paper's MAG/APAN
+    /// OOM discussion).
+    pub fn bytes(&self) -> usize {
+        self.mail.len() * 4 + self.mail_ts.len() * 8 + self.count.len() * 8
+    }
+
+    /// Checkpoint view: (mail, mail_ts, count).
+    pub fn raw_parts(&self) -> (&[f32], &[f64], &[u64]) {
+        (&self.mail, &self.mail_ts, &self.count)
+    }
+
+    /// Restore from checkpointed parts.
+    pub fn restore(&mut self, mail: &[f32], ts: &[f64], count: &[u64]) -> anyhow::Result<()> {
+        anyhow::ensure!(mail.len() == self.mail.len(), "mail size mismatch");
+        anyhow::ensure!(ts.len() == self.mail_ts.len(), "mail_ts size mismatch");
+        anyhow::ensure!(count.len() == self.count.len(), "count size mismatch");
+        self.mail.copy_from_slice(mail);
+        self.mail_ts.copy_from_slice(ts);
+        self.count.copy_from_slice(count);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut mb = Mailbox::new(2, 2, 1);
+        mb.write(0, 1.0, &[10.0]);
+        mb.write(0, 2.0, &[20.0]);
+        mb.write(0, 3.0, &[30.0]); // evicts t=1
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(0, 4.0, true)], &mut mail, &mut dt, &mut mask);
+        // Newest first: t=3 then t=2.
+        assert_eq!(mail, vec![30.0, 20.0]);
+        assert_eq!(dt, vec![1.0, 2.0]);
+        assert_eq!(mask, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn partial_fill_masked() {
+        let mut mb = Mailbox::new(3, 3, 2);
+        mb.write(1, 5.0, &[1.0, 2.0]);
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(1, 10.0, true), (2, 10.0, true)], &mut mail, &mut dt, &mut mask);
+        assert_eq!(mask, vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&mail[0..2], &[1.0, 2.0]);
+        assert_eq!(&mail[2..], &[0.0; 10]);
+        assert_eq!(dt[0], 5.0);
+    }
+
+    #[test]
+    fn invalid_node_gathers_zero() {
+        let mut mb = Mailbox::new(1, 1, 1);
+        mb.write(0, 1.0, &[9.0]);
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(0, 2.0, false)], &mut mail, &mut dt, &mut mask);
+        assert_eq!(mail, vec![0.0]);
+        assert_eq!(mask, vec![0.0]);
+        let _ = dt;
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut mb = Mailbox::new(1, 1, 1);
+        mb.write(0, 1.0, &[9.0]);
+        mb.reset();
+        assert_eq!(mb.valid(0), 0);
+    }
+
+    #[test]
+    fn single_slot_tgn_mode() {
+        let mut mb = Mailbox::new(1, 1, 2);
+        mb.write(0, 1.0, &[1.0, 1.0]);
+        mb.write(0, 2.0, &[2.0, 2.0]);
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(0, 3.0, true)], &mut mail, &mut dt, &mut mask);
+        assert_eq!(mail, vec![2.0, 2.0]);
+        assert_eq!(dt, vec![1.0]);
+        assert_eq!(mask, vec![1.0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Node memory `s_v` (paper §2.1): one `dim`-vector per node summarizing
+//! its history, plus `t_v^-`, the time of its last update — needed for the
+//! `Φ(t - t_v^-)` term in mail construction (Eq. 1–3).
+
+/// Dense node-memory table.
+#[derive(Debug, Clone)]
+pub struct NodeMemory {
+    dim: usize,
+    mem: Vec<f32>,
+    last_update: Vec<f64>,
+}
+
+impl NodeMemory {
+    pub fn new(num_nodes: usize, dim: usize) -> Self {
+        NodeMemory {
+            dim,
+            mem: vec![0.0; num_nodes * dim],
+            last_update: vec![0.0; num_nodes],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.last_update.len()
+    }
+
+    /// Reset to the initial (all-zero) state — done before every training
+    /// epoch and before validation replays, as in TGN/TGL.
+    pub fn reset(&mut self) {
+        self.mem.fill(0.0);
+        self.last_update.fill(0.0);
+    }
+
+    #[inline]
+    pub fn row(&self, v: u32) -> &[f32] {
+        &self.mem[v as usize * self.dim..(v as usize + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn last_update(&self, v: u32) -> f64 {
+        self.last_update[v as usize]
+    }
+
+    /// Gather memory rows and `Δt = t - t_v^-` for a node list into flat
+    /// buffers (appended to `out_mem` / `out_dt`). Invalid slots gather
+    /// zeros so padded MFG slots stay inert.
+    pub fn gather(
+        &self,
+        nodes: &[(u32, f64, bool)],
+        out_mem: &mut Vec<f32>,
+        out_dt: &mut Vec<f32>,
+    ) {
+        out_mem.reserve(nodes.len() * self.dim);
+        out_dt.reserve(nodes.len());
+        for &(v, t, valid) in nodes {
+            if valid {
+                out_mem.extend_from_slice(self.row(v));
+                out_dt.push((t - self.last_update[v as usize]).max(0.0) as f32);
+            } else {
+                out_mem.extend(std::iter::repeat_n(0.0, self.dim));
+                out_dt.push(0.0);
+            }
+        }
+    }
+
+    /// Scatter updated memory rows back (step ⑥). `rows` is `[n, dim]`
+    /// flat; later entries win on duplicate nodes, so callers pass nodes
+    /// in chronological order (the batch is chronological by construction).
+    pub fn scatter(&mut self, nodes: &[u32], ts: &[f64], rows: &[f32]) {
+        debug_assert_eq!(nodes.len(), ts.len());
+        debug_assert_eq!(rows.len(), nodes.len() * self.dim);
+        for (i, &v) in nodes.iter().enumerate() {
+            let dst = v as usize * self.dim;
+            self.mem[dst..dst + self.dim]
+                .copy_from_slice(&rows[i * self.dim..(i + 1) * self.dim]);
+            self.last_update[v as usize] = ts[i];
+        }
+    }
+
+    /// Mean absolute staleness (age of memory entries at time `t`) over
+    /// the given nodes — the obsolescence metric behind the random-chunk
+    /// discussion (§3.2).
+    pub fn staleness(&self, nodes: &[u32], t: f64) -> f64 {
+        if nodes.is_empty() {
+            return 0.0;
+        }
+        nodes
+            .iter()
+            .map(|&v| (t - self.last_update[v as usize]).max(0.0))
+            .sum::<f64>()
+            / nodes.len() as f64
+    }
+
+    pub fn raw(&self) -> &[f32] {
+        &self.mem
+    }
+
+    /// Restore from checkpointed rows + last-update timestamps.
+    pub fn restore(&mut self, rows: &[f32], ts: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(rows.len() == self.mem.len(), "memory size mismatch");
+        anyhow::ensure!(ts.len() == self.last_update.len(), "timestamp size mismatch");
+        self.mem.copy_from_slice(rows);
+        self.last_update.copy_from_slice(ts);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut m = NodeMemory::new(5, 3);
+        m.scatter(&[2, 4], &[10.0, 20.0], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(2), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(4), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.last_update(2), 10.0);
+
+        let mut mem = Vec::new();
+        let mut dt = Vec::new();
+        m.gather(&[(2, 15.0, true), (0, 5.0, true), (4, 25.0, false)], &mut mem, &mut dt);
+        assert_eq!(mem.len(), 9);
+        assert_eq!(&mem[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&mem[3..6], &[0.0, 0.0, 0.0]);
+        assert_eq!(&mem[6..9], &[0.0, 0.0, 0.0], "invalid slot gathers zeros");
+        assert_eq!(dt, vec![5.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn duplicate_scatter_last_wins() {
+        let mut m = NodeMemory::new(2, 1);
+        m.scatter(&[1, 1], &[1.0, 2.0], &[10.0, 20.0]);
+        assert_eq!(m.row(1), &[20.0]);
+        assert_eq!(m.last_update(1), 2.0);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut m = NodeMemory::new(2, 2);
+        m.scatter(&[0], &[9.0], &[1.0, 1.0]);
+        m.reset();
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(m.last_update(0), 0.0);
+    }
+
+    #[test]
+    fn staleness_mean_age() {
+        let mut m = NodeMemory::new(3, 1);
+        m.scatter(&[0, 1], &[10.0, 30.0], &[0.0, 0.0]);
+        let s = m.staleness(&[0, 1], 40.0);
+        assert_eq!(s, (30.0 + 10.0) / 2.0);
+    }
+
+    #[test]
+    fn negative_dt_clamped() {
+        // A stale validation replay can see t < t_v^-; Δt clamps at 0.
+        let mut m = NodeMemory::new(1, 1);
+        m.scatter(&[0], &[100.0], &[0.0]);
+        let (mut mem, mut dt) = (Vec::new(), Vec::new());
+        m.gather(&[(0, 50.0, true)], &mut mem, &mut dt);
+        assert_eq!(dt[0], 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Non-learnable state (paper Figure 2): the **node memory** `s_v` and the
+//! **mailbox** of cached messages, stored host-side (main memory) exactly
+//! as TGL stores them for large graphs. The AOT step functions *compute*
+//! memory updates; this module owns the authoritative copies and performs
+//! the gather (step ②) / scatter (step ⑥) around each mini-batch.
+
+mod mailbox;
+mod memory;
+
+pub use mailbox::Mailbox;
+pub use memory::NodeMemory;

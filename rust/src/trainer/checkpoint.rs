@@ -1,0 +1,79 @@
+//! Checkpointing: persist and restore full training state — parameters,
+//! Adam moments, step counter, node memory, and mailbox — so long
+//! (billion-edge) runs survive interruption and trained models can be
+//! shipped to the node-classification pipeline without retraining.
+//!
+//! Format: the crate's binary container (`util::binfmt`), one section per
+//! state component, independent of the artifacts (a checkpoint is valid
+//! as long as the variant's dims match).
+
+use super::single::Trainer;
+use crate::util::binfmt::{Reader, Writer};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+impl Trainer<'_> {
+    /// Write the full training state to `path`.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut w = Writer::new();
+        w.put_bytes("variant", self.model.name.as_bytes().to_vec());
+        w.put_u32(
+            "meta",
+            vec![
+                self.model.mf.param_count as u32,
+                self.model.uses_memory() as u32,
+                self.graph.num_nodes as u32,
+            ],
+        );
+        w.put_f32("params", self.state.params.clone());
+        w.put_f32("adam_m", self.state.adam_m.clone());
+        w.put_f32("adam_v", self.state.adam_v.clone());
+        w.put_f32("step", vec![self.state.step]);
+        if let Some(mem) = &self.state.memory {
+            w.put_f32("memory", mem.raw().to_vec());
+            w.put_f64(
+                "memory_ts",
+                (0..self.graph.num_nodes as u32).map(|v| mem.last_update(v)).collect(),
+            );
+        }
+        if let Some(mb) = &self.state.mailbox {
+            let (mail, ts, count) = mb.raw_parts();
+            w.put_f32("mail", mail.to_vec());
+            w.put_f64("mail_ts", ts.to_vec());
+            w.put_f64("mail_count", count.iter().map(|&c| c as f64).collect());
+        }
+        w.write_to(path).with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Restore state from `path`; validates variant name and sizes.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let mut r = Reader::open(path)?;
+        let variant = String::from_utf8(r.take_bytes("variant")?)?;
+        if variant != self.model.name {
+            bail!("checkpoint is for `{variant}`, trainer runs `{}`", self.model.name);
+        }
+        let meta = r.take_u32("meta")?;
+        if meta[0] as usize != self.model.mf.param_count {
+            bail!("checkpoint param_count {} != model {}", meta[0], self.model.mf.param_count);
+        }
+        if meta[2] as usize != self.graph.num_nodes {
+            bail!("checkpoint was taken on a graph with {} nodes, have {}", meta[2], self.graph.num_nodes);
+        }
+        self.state.params = r.take_f32("params")?;
+        self.state.adam_m = r.take_f32("adam_m")?;
+        self.state.adam_v = r.take_f32("adam_v")?;
+        self.state.step = r.take_f32("step")?[0];
+        if let Some(mem) = &mut self.state.memory {
+            let rows = r.take_f32("memory")?;
+            let ts = r.take_f64("memory_ts")?;
+            mem.restore(&rows, &ts)?;
+        }
+        if let Some(mb) = &mut self.state.mailbox {
+            let mail = r.take_f32("mail")?;
+            let ts = r.take_f64("mail_ts")?;
+            let count: Vec<u64> = r.take_f64("mail_count")?.iter().map(|&c| c as u64).collect();
+            mb.restore(&mail, &ts, &count)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,13 @@
+//! The training loop (paper Figure 2): ① sample → ② lookup state →
+//! ③ marshal → ④⑤ execute the AOT step (memory refresh, message passing,
+//! loss, backprop, Adam — all in-graph) → ⑥ scatter memory/mailbox
+//! updates. Python never runs here.
+
+mod checkpoint;
+mod multi;
+mod nodeclf;
+mod single;
+
+pub use multi::{MultiTrainer, MultiEpochStats};
+pub use nodeclf::{node_classification, NodeClfResult};
+pub use single::{EpochStats, EvalResult, Trainer, TrainerCfg};

@@ -1,0 +1,138 @@
+//! Multi-worker data-parallel training (paper §3.2 / §4.5).
+//!
+//! The paper's multi-GPU setup — n trainer processes, node memory and
+//! mailbox in shared host memory, synchronized weight/memory/mailbox
+//! updates over NCCL — maps onto n worker *threads* sharing one PJRT CPU
+//! client: each global step takes n consecutive mini-batches, workers
+//! prepare (sample + gather) and execute them concurrently against the
+//! same parameter snapshot, then the leader averages the n Adam results
+//! (all replicas start identical, so the average of the updates equals
+//! the update of the averaged gradients) and applies memory/mailbox
+//! scatters in chronological (worker-id) order — the paper's
+//! synchronized scheme, including its intra-group dependency discard.
+
+use super::single::{EpochStats, Trainer};
+use crate::sched::EpochPlan;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Per-epoch stats for the multi-worker trainer.
+#[derive(Debug, Clone)]
+pub struct MultiEpochStats {
+    pub mean_loss: f64,
+    pub global_steps: usize,
+    pub seconds: f64,
+    pub workers: usize,
+}
+
+/// Orchestrates data-parallel epochs over a shared [`Trainer`].
+pub struct MultiTrainer {
+    pub workers: usize,
+}
+
+impl MultiTrainer {
+    pub fn new(workers: usize) -> Self {
+        MultiTrainer { workers: workers.max(1) }
+    }
+
+    /// One epoch: groups of `workers` consecutive batches execute
+    /// concurrently; state is synchronized after every group.
+    pub fn train_epoch(&self, trainer: &mut Trainer<'_>, plan: &EpochPlan) -> Result<MultiEpochStats> {
+        trainer.reset_chronology();
+        let t0 = Instant::now();
+        let spec = trainer.model.mf.step("train")?.clone();
+        let i_loss = spec.output_index("loss")?;
+        let i_params = spec.output_index("new_params")?;
+        let i_m = spec.output_index("new_adam_m")?;
+        let i_v = spec.output_index("new_adam_v")?;
+        let uses_memory = trainer.model.uses_memory();
+        let (i_mem, i_mail) = if uses_memory {
+            (spec.output_index("new_mem")?, spec.output_index("new_mail")?)
+        } else {
+            (0, 0)
+        };
+
+        let mut loss_sum = 0.0;
+        let mut steps = 0usize;
+        for (gi, group) in plan.batches.chunks(self.workers).enumerate() {
+            // Parallel phase: prepare + execute each worker's batch against
+            // the same state snapshot.
+            let results: Vec<_> = std::thread::scope(|scope| {
+                let handles: Vec<_> = group
+                    .iter()
+                    .enumerate()
+                    .map(|(w, range)| {
+                        let t: &Trainer<'_> = &*trainer;
+                        let range = range.clone();
+                        let seed = (gi * self.workers + w) as u64;
+                        scope.spawn(move || -> Result<_> {
+                            let (batch, mfg, inputs, _, _) =
+                                t.prepare_range(range, seed, true)?;
+                            let outputs =
+                                t.model.train_exe.run(&inputs).context("worker train step")?;
+                            Ok((batch, mfg, outputs))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            // Synchronization phase (leader): average parameter replicas,
+            // then apply state updates chronologically.
+            let mut group_out = Vec::with_capacity(results.len());
+            for r in results {
+                group_out.push(r?);
+            }
+            let n = group_out.len() as f32;
+            let pc = trainer.model.mf.param_count;
+            let mut params = vec![0.0f32; pc];
+            let mut am = vec![0.0f32; pc];
+            let mut av = vec![0.0f32; pc];
+            for (_, _, outputs) in &group_out {
+                loss_sum += outputs[i_loss].scalar_f32()? as f64;
+                for (acc, src) in [
+                    (&mut params, outputs[i_params].as_f32()?),
+                    (&mut am, outputs[i_m].as_f32()?),
+                    (&mut av, outputs[i_v].as_f32()?),
+                ] {
+                    for (a, &b) in acc.iter_mut().zip(src) {
+                        *a += b / n;
+                    }
+                }
+            }
+            trainer.state.params = params;
+            trainer.state.adam_m = am;
+            trainer.state.adam_v = av;
+            trainer.state.step += 1.0;
+            if uses_memory {
+                for (batch, mfg, outputs) in &group_out {
+                    trainer.apply_state_updates(
+                        batch,
+                        mfg.as_ref(),
+                        &outputs[i_mem],
+                        &outputs[i_mail],
+                    )?;
+                }
+            }
+            steps += 1;
+        }
+        Ok(MultiEpochStats {
+            mean_loss: loss_sum / plan.batches.len().max(1) as f64,
+            global_steps: steps,
+            seconds: t0.elapsed().as_secs_f64(),
+            workers: self.workers,
+        })
+    }
+}
+
+/// Convert multi-worker stats into the single-trainer shape for shared
+/// reporting code.
+impl From<MultiEpochStats> for EpochStats {
+    fn from(m: MultiEpochStats) -> EpochStats {
+        EpochStats {
+            mean_loss: m.mean_loss,
+            batches: m.global_steps * m.workers,
+            seconds: m.seconds,
+        }
+    }
+}

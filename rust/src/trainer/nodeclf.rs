@@ -1,0 +1,189 @@
+//! Dynamic node classification (paper §4.3 / Table 6).
+//!
+//! The link-prediction-trained TGNN is used *without fine-tuning*: edges
+//! are replayed chronologically (so node memory evolves exactly as during
+//! training) and whenever dynamic labels fall inside the replayed window,
+//! the labelled nodes' embeddings are computed with the current state.
+//! An MLP classifier is then trained on the collected embeddings with the
+//! variant's `clf` step. For binary tasks the classifier sees each
+//! positive alongside a sampled negative (the paper's balanced scheme).
+
+use super::single::Trainer;
+use crate::graph::NodeLabel;
+use crate::metrics::{argmax_rows, average_precision, f1_micro};
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+
+/// Result of the node-classification pipeline.
+#[derive(Debug, Clone)]
+pub struct NodeClfResult {
+    /// Binary tasks: AP on positives + sampled negatives.
+    pub ap: f64,
+    /// Multi-class tasks: F1-micro on the test split.
+    pub f1_micro: f64,
+    pub train_labels: usize,
+    pub test_labels: usize,
+}
+
+/// Replay edges, harvest embeddings at label times, train + evaluate the
+/// MLP head. `label_split` is the fraction of (chronological) labels used
+/// for classifier training.
+pub fn node_classification(
+    trainer: &mut Trainer<'_>,
+    label_split: f64,
+    clf_epochs: usize,
+    clf_lr: f32,
+    seed: u64,
+) -> Result<NodeClfResult> {
+    let labels: Vec<NodeLabel> = trainer.graph.labels.clone();
+    ensure!(!labels.is_empty(), "dataset has no dynamic node labels");
+    let classes = trainer.graph.num_classes.max(2);
+    let bs = trainer.model.dim("bs");
+    let dh = trainer.model.dim("dh");
+    let mut rng = Rng::new(seed ^ 0xC1F);
+
+    // Chronological replay with interleaved embedding harvests.
+    trainer.reset_chronology();
+    let mut embs: Vec<f32> = Vec::with_capacity(labels.len() * dh);
+    let mut ys: Vec<u32> = Vec::with_capacity(labels.len());
+    let mut cursor = 0usize; // next label to harvest
+    let mut s = 0usize;
+    let n_edges = trainer.graph.num_edges();
+    while s < n_edges && cursor < labels.len() {
+        let e = (s + bs).min(n_edges);
+        let window_end = if e == n_edges { f64::INFINITY } else { trainer.graph.time[e] };
+        // Replay this edge window (eval step updates memory).
+        trainer.eval_range(s..e).context("replay window")?;
+        // Harvest labels that fall before the next window.
+        let mut batch_nodes = Vec::new();
+        let mut batch_ts = Vec::new();
+        let mut batch_y = Vec::new();
+        while cursor < labels.len() && labels[cursor].time <= window_end {
+            batch_nodes.push(labels[cursor].node);
+            batch_ts.push(labels[cursor].time);
+            batch_y.push(labels[cursor].label);
+            cursor += 1;
+            if batch_nodes.len() == bs {
+                let rows = trainer.embed_nodes(&batch_nodes, &batch_ts)?;
+                embs.extend_from_slice(&rows);
+                ys.extend_from_slice(&batch_y);
+                batch_nodes.clear();
+                batch_ts.clear();
+                batch_y.clear();
+            }
+        }
+        if !batch_nodes.is_empty() {
+            let rows = trainer.embed_nodes(&batch_nodes, &batch_ts)?;
+            embs.extend_from_slice(&rows);
+            ys.extend_from_slice(&batch_y);
+        }
+        s = e;
+    }
+    ensure!(!ys.is_empty(), "no labels harvested");
+
+    // Chronological split.
+    let n = ys.len();
+    let split = ((n as f64) * label_split) as usize;
+    let split = split.clamp(1, n - 1);
+
+    // Train the MLP head.
+    let clf_exe = trainer.model.clf_exe.as_ref().context("variant has no clf step")?;
+    let spec = trainer.model.mf.step("clf")?;
+    let pc = trainer.model.mf.clf_param_count;
+    let mut params = trainer.model.init_clf_params.clone();
+    let mut m = vec![0.0f32; pc];
+    let mut v = vec![0.0f32; pc];
+    let mut step = 0.0f32;
+    let run_clf = |params: &[f32],
+                   m: &[f32],
+                   v: &[f32],
+                   step: f32,
+                   lr: f32,
+                   emb: &[f32],
+                   lab: &[i32],
+                   mask: &[f32]|
+     -> Result<Vec<Tensor>> {
+        clf_exe.run(&[
+            Tensor::f32(&[pc], params.to_vec())?,
+            Tensor::f32(&[pc], m.to_vec())?,
+            Tensor::f32(&[pc], v.to_vec())?,
+            Tensor::scalar(step),
+            Tensor::scalar(lr),
+            Tensor::f32(&[bs, dh], emb.to_vec())?,
+            Tensor::i32(&[bs], lab.to_vec())?,
+            Tensor::f32(&[bs], mask.to_vec())?,
+        ])
+    };
+
+    let mut order: Vec<usize> = (0..split).collect();
+    for _ in 0..clf_epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(bs) {
+            let mut emb = vec![0.0f32; bs * dh];
+            let mut lab = vec![0i32; bs];
+            let mut mask = vec![0.0f32; bs];
+            for (j, &i) in chunk.iter().enumerate() {
+                emb[j * dh..(j + 1) * dh].copy_from_slice(&embs[i * dh..(i + 1) * dh]);
+                lab[j] = ys[i] as i32;
+                mask[j] = 1.0;
+            }
+            let out = run_clf(&params, &m, &v, step, clf_lr, &emb, &lab, &mask)?;
+            params = out[spec.output_index("new_params")?].as_f32()?.to_vec();
+            m = out[spec.output_index("new_adam_m")?].as_f32()?.to_vec();
+            v = out[spec.output_index("new_adam_v")?].as_f32()?.to_vec();
+            step += 1.0;
+        }
+    }
+
+    // Evaluate on the held-out tail.
+    let mut preds = Vec::new();
+    let mut truths = Vec::new();
+    let mut pos_scores = Vec::new();
+    let mut neg_scores = Vec::new();
+    let logits_idx = spec.output_index("logits")?;
+    for chunk_start in (split..n).step_by(bs) {
+        let chunk_end = (chunk_start + bs).min(n);
+        let mut emb = vec![0.0f32; bs * dh];
+        let mut lab = vec![0i32; bs];
+        let mut mask = vec![0.0f32; bs];
+        for (j, i) in (chunk_start..chunk_end).enumerate() {
+            emb[j * dh..(j + 1) * dh].copy_from_slice(&embs[i * dh..(i + 1) * dh]);
+            lab[j] = ys[i] as i32;
+            mask[j] = 1.0;
+        }
+        let out = run_clf(&params, &m, &v, step, 0.0, &emb, &lab, &mask)?;
+        let logits = out[logits_idx].as_f32()?;
+        let c = logits.len() / bs;
+        let pred = argmax_rows(logits, c);
+        for (j, i) in (chunk_start..chunk_end).enumerate() {
+            preds.push(pred[j]);
+            truths.push(ys[i]);
+            if classes == 2 {
+                // Binary AP: score = logit margin of class 1.
+                let row = &logits[j * c..(j + 1) * c];
+                let sc = row[1] - row[0];
+                if ys[i] == 1 {
+                    pos_scores.push(sc);
+                } else {
+                    neg_scores.push(sc);
+                }
+            }
+        }
+    }
+
+    // Balanced AP for binary tasks (equal positives and negatives).
+    let ap = if !pos_scores.is_empty() && !neg_scores.is_empty() {
+        let take = pos_scores.len().min(neg_scores.len());
+        rng.shuffle(&mut neg_scores);
+        average_precision(&pos_scores, &neg_scores[..take])
+    } else {
+        0.0
+    };
+    Ok(NodeClfResult {
+        ap,
+        f1_micro: f1_micro(&preds, &truths),
+        train_labels: split,
+        test_labels: n - split,
+    })
+}

@@ -1,0 +1,481 @@
+//! Single-device trainer.
+
+use crate::graph::{TCsr, TemporalGraph};
+use crate::metrics::average_precision;
+use crate::models::Model;
+use crate::runtime::Tensor;
+use crate::sampler::{Mfg, SamplerConfig, Strategy, TemporalSampler};
+use crate::sched::{make_batch, Batch, EpochPlan};
+use crate::state::{Mailbox, NodeMemory};
+use crate::util::rng::Rng;
+use crate::util::stats::PhaseTimer;
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// Trainer options (everything else comes from the manifest dims).
+#[derive(Debug, Clone)]
+pub struct TrainerCfg {
+    pub lr: f32,
+    pub threads: usize,
+    pub seed: u64,
+    pub strategy: Strategy,
+    pub snapshot_len: f64,
+    /// APAN: deliver new mails to sampled hop-1 neighbors as well.
+    pub deliver_to_neighbors: bool,
+    /// JODIE: Δt normalization for the time-projection embedding.
+    pub dt_scale: f32,
+}
+
+impl TrainerCfg {
+    pub fn for_model(model: &Model, graph: &TemporalGraph, lr: f32, threads: usize) -> Self {
+        // Mean per-node inter-event gap ≈ max_t · |V| / (2|E|); its inverse
+        // keeps JODIE's (1 + Δt·scale·w) projection well-conditioned.
+        let mean_gap =
+            graph.max_time() * graph.num_nodes as f64 / (2.0 * graph.num_edges().max(1) as f64);
+        TrainerCfg {
+            lr,
+            threads,
+            seed: 0x7617,
+            strategy: Strategy::MostRecent,
+            snapshot_len: f64::INFINITY,
+            deliver_to_neighbors: model.arch == "apan",
+            dt_scale: (1.0 / mean_gap.max(1e-9)) as f32,
+        }
+    }
+}
+
+/// Learnable + stateful training state.
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub step: f32,
+    pub memory: Option<NodeMemory>,
+    pub mailbox: Option<Mailbox>,
+}
+
+/// Per-epoch result.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub mean_loss: f64,
+    pub batches: usize,
+    pub seconds: f64,
+}
+
+/// Link-prediction evaluation result.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub ap: f64,
+    pub mean_loss: f64,
+    pub edges: usize,
+}
+
+/// Single-process trainer over one model + dataset.
+pub struct Trainer<'g> {
+    pub model: &'g Model,
+    pub graph: &'g TemporalGraph,
+    sampler: Option<TemporalSampler<'g>>,
+    pub state: TrainState,
+    pub cfg: TrainerCfg,
+    /// Figure-5 phase breakdown (labels = the paper's circled steps).
+    pub timers: PhaseTimer,
+}
+
+impl<'g> Trainer<'g> {
+    pub fn new(
+        model: &'g Model,
+        graph: &'g TemporalGraph,
+        csr: &'g TCsr,
+        cfg: TrainerCfg,
+    ) -> Result<Trainer<'g>> {
+        let hops = model.dim("hops");
+        let fanout = model.dim("fanout");
+        let snapshots = model.dim("snapshots");
+        // APAN computes with 0 hops but needs hop-1 samples for mail
+        // delivery; sample 1 hop in that case.
+        let sample_hops = if cfg.deliver_to_neighbors { hops.max(1) } else { hops };
+        let sampler = if sample_hops > 0 {
+            let mut sc = SamplerConfig::uniform_hops(sample_hops, fanout, cfg.strategy, cfg.threads);
+            sc.num_snapshots = snapshots;
+            sc.snapshot_len = cfg.snapshot_len;
+            sc.seed = cfg.seed;
+            Some(TemporalSampler::new(csr, sc))
+        } else {
+            None
+        };
+        let state = TrainState {
+            params: model.init_params.clone(),
+            adam_m: vec![0.0; model.mf.param_count],
+            adam_v: vec![0.0; model.mf.param_count],
+            step: 0.0,
+            memory: model
+                .uses_memory()
+                .then(|| NodeMemory::new(graph.num_nodes, model.dim("dm"))),
+            mailbox: model
+                .uses_memory()
+                .then(|| Mailbox::new(graph.num_nodes, model.dim("mail_slots"), model.dim("maild"))),
+        };
+        Ok(Trainer { model, graph, sampler, state, cfg, timers: PhaseTimer::new() })
+    }
+
+    /// Reset the chronological state (memory, mailbox, sampler pointers) —
+    /// done at every epoch start and before evaluation replays.
+    pub fn reset_chronology(&mut self) {
+        if let Some(m) = &mut self.state.memory {
+            m.reset();
+        }
+        if let Some(mb) = &mut self.state.mailbox {
+            mb.reset();
+        }
+        if let Some(s) = &self.sampler {
+            s.reset();
+        }
+    }
+
+    /// Train one epoch over the given plan. Memory/mailbox evolve
+    /// chronologically; parameters carry over between epochs.
+    pub fn train_epoch(&mut self, plan: &EpochPlan) -> Result<EpochStats> {
+        self.reset_chronology();
+        let t0 = Instant::now();
+        let mut loss_sum = 0.0;
+        let mut n = 0usize;
+        for (bi, range) in plan.batches.iter().enumerate() {
+            let loss = self.train_batch(range.clone(), bi as u64)?;
+            loss_sum += loss;
+            n += 1;
+        }
+        Ok(EpochStats { mean_loss: loss_sum / n.max(1) as f64, batches: n, seconds: t0.elapsed().as_secs_f64() })
+    }
+
+    /// One optimization step over an edge window.
+    pub fn train_batch(&mut self, range: std::ops::Range<usize>, batch_seed: u64) -> Result<f64> {
+        let (batch, mfg, inputs, t_sample, t_gather) = self.prepare_range(range, batch_seed, true)?;
+        self.timers.add("1:sample", t_sample);
+        self.timers.add("2:lookup", t_gather);
+        let t = Instant::now();
+        let outputs = self.model.train_exe.run(&inputs).context("train step")?;
+        self.timers.add("4:compute", t.elapsed());
+
+        let spec = self.model.mf.step("train")?;
+        let loss = outputs[spec.output_index("loss")?].scalar_f32()? as f64;
+        ensure!(loss.is_finite(), "training diverged: loss = {loss}");
+        let t = Instant::now();
+        self.state.params = outputs[spec.output_index("new_params")?].as_f32()?.to_vec();
+        self.state.adam_m = outputs[spec.output_index("new_adam_m")?].as_f32()?.to_vec();
+        self.state.adam_v = outputs[spec.output_index("new_adam_v")?].as_f32()?.to_vec();
+        self.state.step += 1.0;
+        if self.model.uses_memory() {
+            let new_mem = &outputs[spec.output_index("new_mem")?];
+            let new_mail = &outputs[spec.output_index("new_mail")?];
+            self.apply_state_updates(&batch, mfg.as_ref(), new_mem, new_mail)?;
+        }
+        self.timers.add("6:update", t.elapsed());
+        Ok(loss)
+    }
+
+    /// Evaluate link prediction over an edge range (replaying memory).
+    pub fn eval_range(&mut self, range: std::ops::Range<usize>) -> Result<EvalResult> {
+        let bs = self.model.dim("bs");
+        let spec = self.model.mf.step("eval")?;
+        let mut pos = Vec::new();
+        let mut neg = Vec::new();
+        let mut loss_sum = 0.0;
+        let mut batches = 0usize;
+        let mut s = range.start;
+        let mut bi = 0u64;
+        while s < range.end {
+            let e = (s + bs).min(range.end);
+            let (batch, mfg, inputs, _, _) = self.prepare_range(s..e, 0x5EED ^ bi, false)?;
+            let n_valid = batch.len();
+            let outputs = self.model.eval_exe.run(&inputs).context("eval step")?;
+            loss_sum += outputs[spec.output_index("loss")?].scalar_f32()? as f64;
+            batches += 1;
+            pos.extend_from_slice(&outputs[spec.output_index("pos_score")?].as_f32()?[..n_valid]);
+            neg.extend_from_slice(&outputs[spec.output_index("neg_score")?].as_f32()?[..n_valid]);
+            if self.model.uses_memory() {
+                let new_mem = &outputs[spec.output_index("new_mem")?];
+                let new_mail = &outputs[spec.output_index("new_mail")?];
+                self.apply_state_updates(&batch, mfg.as_ref(), new_mem, new_mail)?;
+            }
+            s = e;
+            bi += 1;
+        }
+        Ok(EvalResult {
+            ap: average_precision(&pos, &neg),
+            mean_loss: loss_sum / batches.max(1) as f64,
+            edges: range.len(),
+        })
+    }
+
+    /// Compute embeddings for arbitrary (node, t) roots using the current
+    /// state — read-only (memory is NOT updated). Returns `[n, dh]` rows.
+    pub fn embed_nodes(&mut self, nodes: &[u32], ts: &[f64]) -> Result<Vec<f32>> {
+        let bs = self.model.dim("bs");
+        let dh = self.model.dim("dh");
+        ensure!(nodes.len() <= bs, "embed batch too large: {} > {bs}", nodes.len());
+        // Pack the query nodes into the src slots of a synthetic batch.
+        let n = nodes.len();
+        let pad_t = ts.last().copied().unwrap_or(0.0);
+        let mut batch = Batch {
+            edge_range: 0..0,
+            src: nodes.to_vec(),
+            dst: vec![0; n],
+            neg: vec![0; n],
+            ts: ts.to_vec(),
+            eids: vec![0; n],
+        };
+        batch.src.resize(bs, 0);
+        batch.dst.resize(bs, 0);
+        batch.neg.resize(bs, 0);
+        batch.ts.resize(bs, pad_t);
+        batch.eids.resize(bs, 0);
+        let (_, inputs, _, _) = self.prepare_padded(&batch, n, 0xE3BED, false)?;
+        let spec = self.model.mf.step("eval")?;
+        let outputs = self.model.eval_exe.run(&inputs).context("embed step")?;
+        let emb = outputs[spec.output_index("emb")?].as_f32()?;
+        Ok(emb[..n * dh].to_vec())
+    }
+
+    // ------------------------------------------------------------ internals
+
+    /// Build + sample + gather + marshal one batch from an edge range.
+    /// `&self` on purpose: the multi-worker trainer calls this from worker
+    /// threads concurrently (all mutability is in the sampler's atomics /
+    /// fine-grained locks). Negatives are drawn from a per-batch RNG so
+    /// results are independent of which thread prepares which batch.
+    ///
+    /// Returns (batch, mfg, inputs, sample_time, gather_time).
+    pub(crate) fn prepare_range(
+        &self,
+        range: std::ops::Range<usize>,
+        batch_seed: u64,
+        train: bool,
+    ) -> Result<(Batch, Option<Mfg>, Vec<Tensor>, std::time::Duration, std::time::Duration)> {
+        let bs = self.model.dim("bs");
+        ensure!(range.len() <= bs, "batch {} exceeds compiled bs {bs}", range.len());
+        let mut rng = Rng::new(self.cfg.seed ^ batch_seed.wrapping_mul(0x9e37_79b9));
+        let batch = make_batch(self.graph, range, &mut rng);
+        let n_valid = batch.len();
+        let mut padded = batch.clone();
+        let pad_t = padded.ts.last().copied().unwrap_or(0.0);
+        padded.src.resize(bs, 0);
+        padded.dst.resize(bs, 0);
+        padded.neg.resize(bs, 0);
+        padded.ts.resize(bs, pad_t);
+        padded.eids.resize(bs, 0);
+        let (mfg, inputs, t_s, t_g) = self.prepare_padded(&padded, n_valid, batch_seed, train)?;
+        Ok((batch, mfg, inputs, t_s, t_g))
+    }
+
+    pub(crate) fn prepare_padded(
+        &self,
+        padded: &Batch,
+        n_valid: usize,
+        batch_seed: u64,
+        train: bool,
+    ) -> Result<(Option<Mfg>, Vec<Tensor>, std::time::Duration, std::time::Duration)> {
+        let bs = self.model.dim("bs");
+        let (roots, root_ts) = padded.roots();
+
+        // ① sample.
+        let t = Instant::now();
+        let mfg = self.sampler.as_ref().map(|s| s.sample(&roots, &root_ts, batch_seed));
+        let t_sample = t.elapsed();
+
+        // ② lookup + ③ marshal.
+        let t = Instant::now();
+        let n_total = self.model.dim("n_total");
+        let mut nodes: Vec<(u32, f64, bool)> = match &mfg {
+            Some(m) => m.all_nodes(),
+            None => roots.iter().zip(&root_ts).map(|(&v, &ts)| (v, ts, true)).collect(),
+        };
+        nodes.truncate(n_total);
+        ensure!(nodes.len() == n_total, "node list {} != n_total {n_total}", nodes.len());
+
+        let step_name = if train { "train" } else { "eval" };
+        let spec = self.model.mf.step(step_name)?;
+        let mut inputs = Vec::with_capacity(spec.inputs.len());
+        for ts_spec in &spec.inputs {
+            let tensor = self.build_input(&ts_spec.name, &ts_spec.shape, padded, n_valid, &nodes, mfg.as_ref(), bs)?;
+            inputs.push(tensor);
+        }
+        Ok((mfg, inputs, t_sample, t.elapsed()))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_input(
+        &self,
+        name: &str,
+        shape: &[usize],
+        batch: &Batch,
+        n_valid: usize,
+        nodes: &[(u32, f64, bool)],
+        mfg: Option<&Mfg>,
+        bs: usize,
+    ) -> Result<Tensor> {
+        let g = self.graph;
+        match name {
+            "params" => Tensor::f32(shape, self.state.params.clone()),
+            "adam_m" => Tensor::f32(shape, self.state.adam_m.clone()),
+            "adam_v" => Tensor::f32(shape, self.state.adam_v.clone()),
+            "step" => Ok(Tensor::scalar(self.state.step)),
+            "lr" => Ok(Tensor::scalar(self.cfg.lr)),
+            "dt_scale" => Ok(Tensor::scalar(self.cfg.dt_scale)),
+            "edge_mask" => {
+                let mut m = vec![0.0f32; bs];
+                m[..n_valid].fill(1.0);
+                Tensor::f32(shape, m)
+            }
+            "mem" | "mem_dt" => {
+                let memory = self.state.memory.as_ref().expect("memory state");
+                let mut mem = Vec::new();
+                let mut dt = Vec::new();
+                memory.gather(nodes, &mut mem, &mut dt);
+                if name == "mem" {
+                    Tensor::f32(shape, mem)
+                } else {
+                    Tensor::f32(shape, dt)
+                }
+            }
+            "mail" | "mail_dt" | "mail_mask" => {
+                let mailbox = self.state.mailbox.as_ref().expect("mailbox state");
+                let mut mail = Vec::new();
+                let mut dt = Vec::new();
+                let mut mask = Vec::new();
+                mailbox.gather(nodes, &mut mail, &mut dt, &mut mask);
+                match name {
+                    "mail" => Tensor::f32(shape, mail),
+                    "mail_dt" => Tensor::f32(shape, dt),
+                    _ => Tensor::f32(shape, mask),
+                }
+            }
+            "node_feat" => {
+                let dv = shape[1];
+                let mut out = vec![0.0f32; nodes.len() * dv];
+                if let Some(nf) = &g.node_feat {
+                    let copy = dv.min(nf.dim);
+                    for (i, &(v, _, valid)) in nodes.iter().enumerate() {
+                        if valid {
+                            out[i * dv..i * dv + copy].copy_from_slice(&nf.row(v as usize)[..copy]);
+                        }
+                    }
+                }
+                Tensor::f32(shape, out)
+            }
+            "batch_efeat" => {
+                let de = shape[1];
+                let mut out = vec![0.0f32; bs * de];
+                if let Some(ef) = &g.edge_feat {
+                    let copy = de.min(ef.dim);
+                    for i in 0..n_valid {
+                        out[i * de..i * de + copy]
+                            .copy_from_slice(&ef.row(batch.eids[i] as usize)[..copy]);
+                    }
+                }
+                Tensor::f32(shape, out)
+            }
+            _ if name.starts_with("dt_s") || name.starts_with("mask_s") || name.starts_with("efeat_s") => {
+                let (s, l) = parse_hop_name(name)?;
+                let mfg = mfg.expect("hop inputs require a sampler");
+                let block = &mfg.snapshots[s][l];
+                if name.starts_with("dt_") {
+                    Tensor::f32(shape, block.dt.clone())
+                } else if name.starts_with("mask_") {
+                    Tensor::f32(shape, block.mask.clone())
+                } else {
+                    let de = shape[2];
+                    let mut out = vec![0.0f32; block.num_slots() * de];
+                    if let Some(ef) = &g.edge_feat {
+                        let copy = de.min(ef.dim);
+                        for i in 0..block.num_slots() {
+                            if block.mask[i] == 1.0 {
+                                out[i * de..i * de + copy]
+                                    .copy_from_slice(&ef.row(block.eid[i] as usize)[..copy]);
+                            }
+                        }
+                    }
+                    Tensor::f32(shape, out)
+                }
+            }
+            other => anyhow::bail!("trainer cannot build input `{other}`"),
+        }
+    }
+
+    /// Step ⑥: persist refreshed memory + new mails for the batch's
+    /// src/dst roots (valid entries only; padding rows are dropped).
+    pub(crate) fn apply_state_updates(
+        &mut self,
+        batch: &Batch,
+        mfg: Option<&Mfg>,
+        new_mem: &Tensor,
+        new_mail: &Tensor,
+    ) -> Result<()> {
+        let bs = self.model.dim("bs");
+        let dm = self.model.dim("dm");
+        let maild = self.model.dim("maild");
+        let n_valid = batch.len();
+        let mem_rows = new_mem.as_f32()?;
+        let mail_rows = new_mail.as_f32()?;
+        let memory = self.state.memory.as_mut().expect("memory");
+        let mailbox = self.state.mailbox.as_mut().expect("mailbox");
+
+        // Memory rows: [roots] segment of new_mem holds the refreshed
+        // memory in MFG order; persist src (rows 0..bs) and dst (bs..2bs).
+        for i in 0..n_valid {
+            let t = batch.ts[i];
+            let src_row = &mem_rows[i * dm..(i + 1) * dm];
+            memory.scatter(&[batch.src[i]], &[t], src_row);
+            let dst_row = &mem_rows[(bs + i) * dm..(bs + i + 1) * dm];
+            memory.scatter(&[batch.dst[i]], &[t], dst_row);
+        }
+        // Mail rows: [src mails | dst mails].
+        for i in 0..n_valid {
+            let t = batch.ts[i];
+            let m_src = &mail_rows[i * maild..(i + 1) * maild];
+            let m_dst = &mail_rows[(bs + i) * maild..(bs + i + 1) * maild];
+            mailbox.write(batch.src[i], t, m_src);
+            mailbox.write(batch.dst[i], t, m_dst);
+            if self.cfg.deliver_to_neighbors {
+                // APAN: propagate each endpoint's mail to its sampled
+                // hop-1 neighbors.
+                if let Some(m) = mfg {
+                    let block = &m.snapshots[0][0];
+                    let k = block.fanout;
+                    for slot in i * k..(i + 1) * k {
+                        if block.mask[slot] == 1.0 {
+                            mailbox.write(block.nbr[slot], t, m_src);
+                        }
+                    }
+                    for slot in (bs + i) * k..(bs + i + 1) * k {
+                        if block.mask[slot] == 1.0 {
+                            mailbox.write(block.nbr[slot], t, m_dst);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse `dt_s{s}_h{l}` / `mask_s{s}_h{l}` / `efeat_s{s}_h{l}`.
+fn parse_hop_name(name: &str) -> Result<(usize, usize)> {
+    let idx = name.find("_s").ok_or_else(|| anyhow::anyhow!("bad hop input `{name}`"))?;
+    let rest = &name[idx + 2..];
+    let (s, l) = rest
+        .split_once("_h")
+        .ok_or_else(|| anyhow::anyhow!("bad hop input `{name}`"))?;
+    Ok((s.parse()?, l.parse()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hop_name_parsing() {
+        assert_eq!(parse_hop_name("dt_s0_h1").unwrap(), (0, 1));
+        assert_eq!(parse_hop_name("efeat_s2_h0").unwrap(), (2, 0));
+        assert!(parse_hop_name("dt_nope").is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Binary on-disk format for temporal-graph datasets.
+//!
+//! The generators in [`crate::datasets`] write datasets once; training runs
+//! load them with a single sequential read. Layout (little-endian):
+//!
+//! ```text
+//! magic "TGLBIN01" (8 bytes)
+//! u64 section_count
+//! per section: u64 name_len, name bytes, u64 tag, u64 elem_count, payload
+//!   tag 0 = u32 array, tag 1 = f32 array, tag 2 = f64 array, tag 3 = raw bytes
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"TGLBIN01";
+
+/// A named-section container, write side.
+#[derive(Default)]
+pub struct Writer {
+    sections: Vec<(String, Section)>,
+}
+
+enum Section {
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    Bytes(Vec<u8>),
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u32(&mut self, name: &str, data: Vec<u32>) -> &mut Self {
+        self.sections.push((name.to_string(), Section::U32(data)));
+        self
+    }
+
+    pub fn put_f32(&mut self, name: &str, data: Vec<f32>) -> &mut Self {
+        self.sections.push((name.to_string(), Section::F32(data)));
+        self
+    }
+
+    pub fn put_f64(&mut self, name: &str, data: Vec<f64>) -> &mut Self {
+        self.sections.push((name.to_string(), Section::F64(data)));
+        self
+    }
+
+    pub fn put_bytes(&mut self, name: &str, data: Vec<u8>) -> &mut Self {
+        self.sections.push((name.to_string(), Section::Bytes(data)));
+        self
+    }
+
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.sections.len() as u64).to_le_bytes())?;
+        for (name, sec) in &self.sections {
+            w.write_all(&(name.len() as u64).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            let (tag, count, bytes): (u64, u64, &[u8]) = match sec {
+                Section::U32(v) => (0, v.len() as u64, bytemuck(v)),
+                Section::F32(v) => (1, v.len() as u64, bytemuck(v)),
+                Section::F64(v) => (2, v.len() as u64, bytemuck(v)),
+                Section::Bytes(v) => (3, v.len() as u64, v),
+            };
+            w.write_all(&tag.to_le_bytes())?;
+            w.write_all(&count.to_le_bytes())?;
+            w.write_all(bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+fn bytemuck<T>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+/// Read side: all sections loaded into memory keyed by name.
+pub struct Reader {
+    u32s: BTreeMap<String, Vec<u32>>,
+    f32s: BTreeMap<String, Vec<f32>>,
+    f64s: BTreeMap<String, Vec<f64>>,
+    bytes: BTreeMap<String, Vec<u8>>,
+}
+
+impl Reader {
+    pub fn open(path: &Path) -> Result<Reader> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a TGL binary dataset (bad magic)", path.display());
+        }
+        let n = read_u64(&mut r)? as usize;
+        let mut out = Reader {
+            u32s: BTreeMap::new(),
+            f32s: BTreeMap::new(),
+            f64s: BTreeMap::new(),
+            bytes: BTreeMap::new(),
+        };
+        for _ in 0..n {
+            let name_len = read_u64(&mut r)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            r.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf)?;
+            let tag = read_u64(&mut r)?;
+            let count = read_u64(&mut r)? as usize;
+            match tag {
+                0 => {
+                    let mut buf = vec![0u8; count * 4];
+                    r.read_exact(&mut buf)?;
+                    let v = buf
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    out.u32s.insert(name, v);
+                }
+                1 => {
+                    let mut buf = vec![0u8; count * 4];
+                    r.read_exact(&mut buf)?;
+                    let v = buf
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    out.f32s.insert(name, v);
+                }
+                2 => {
+                    let mut buf = vec![0u8; count * 8];
+                    r.read_exact(&mut buf)?;
+                    let v = buf
+                        .chunks_exact(8)
+                        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    out.f64s.insert(name, v);
+                }
+                3 => {
+                    let mut buf = vec![0u8; count];
+                    r.read_exact(&mut buf)?;
+                    out.bytes.insert(name, buf);
+                }
+                t => bail!("{}: unknown section tag {t}", path.display()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn take_u32(&mut self, name: &str) -> Result<Vec<u32>> {
+        self.u32s.remove(name).ok_or_else(|| anyhow::anyhow!("missing u32 section `{name}`"))
+    }
+
+    pub fn take_f32(&mut self, name: &str) -> Result<Vec<f32>> {
+        self.f32s.remove(name).ok_or_else(|| anyhow::anyhow!("missing f32 section `{name}`"))
+    }
+
+    pub fn take_f64(&mut self, name: &str) -> Result<Vec<f64>> {
+        self.f64s.remove(name).ok_or_else(|| anyhow::anyhow!("missing f64 section `{name}`"))
+    }
+
+    pub fn opt_f32(&mut self, name: &str) -> Option<Vec<f32>> {
+        self.f32s.remove(name)
+    }
+
+    pub fn take_bytes(&mut self, name: &str) -> Result<Vec<u8>> {
+        self.bytes.remove(name).ok_or_else(|| anyhow::anyhow!("missing bytes section `{name}`"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.u32s.contains_key(name)
+            || self.f32s.contains_key(name)
+            || self.f64s.contains_key(name)
+            || self.bytes.contains_key(name)
+    }
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_section_types() {
+        let dir = std::env::temp_dir().join(format!("tgl_binfmt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut w = Writer::new();
+        w.put_u32("src", vec![1, 2, 3])
+            .put_f32("feat", vec![0.5, -1.5])
+            .put_f64("time", vec![1e9, 2e9])
+            .put_bytes("meta", b"{\"a\":1}".to_vec());
+        w.write_to(&path).unwrap();
+
+        let mut r = Reader::open(&path).unwrap();
+        assert!(r.has("src"));
+        assert_eq!(r.take_u32("src").unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.take_f32("feat").unwrap(), vec![0.5, -1.5]);
+        assert_eq!(r.take_f64("time").unwrap(), vec![1e9, 2e9]);
+        assert_eq!(r.take_bytes("meta").unwrap(), b"{\"a\":1}");
+        assert!(r.take_u32("src").is_err(), "sections are take-once");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join(format!("tgl_binfmt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC????????").unwrap();
+        assert!(Reader::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

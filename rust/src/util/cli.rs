@@ -1,0 +1,208 @@
+//! Tiny declarative CLI argument parser (the registry has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands handled by the caller. Produces `--help` text from the
+//! declared options.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self { program: program.to_string(), about, ..Default::default() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse a raw argument list (without argv[0]). On `--help`, prints
+    /// usage and exits.
+    pub fn parse(mut self, argv: &[String]) -> Result<Self> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let Some(opt) = self.opts.iter().find(|o| o.name == key) else {
+                    bail!("unknown option --{key} (see --help)");
+                };
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    self.flags.insert(opt.name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= argv.len() {
+                                bail!("option --{key} expects a value");
+                            }
+                            argv[i].clone()
+                        }
+                    };
+                    self.values.insert(opt.name, val);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Required options present?
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !self.values.contains_key(o.name) {
+                bail!("missing required option --{} (see --help)", o.name);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(s, "USAGE: {} [options]\n\nOPTIONS:", self.program);
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let default = match &o.default {
+                Some(d) if !d.is_empty() => format!(" [default: {d}]"),
+                Some(_) => String::new(),
+                None if o.is_flag => String::new(),
+                None => " [required]".to_string(),
+            };
+            let _ = writeln!(s, "  {lhs:<24} {}{default}", o.help);
+        }
+        let _ = writeln!(s, "  {:<24} print this help", "--help");
+        s
+    }
+
+    // -- typed getters ----------------------------------------------------
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name);
+        v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name);
+        v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("tgl train", "train a TGNN")
+            .opt("config", "configs/tgn.yml", "model config file")
+            .opt("epochs", "5", "training epochs")
+            .opt("lr", "0.001", "learning rate")
+            .flag("chunks", "enable random chunk scheduling")
+            .req("data", "dataset path")
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = spec()
+            .parse(&argv(&["--data", "wiki.bin", "--epochs=10", "--chunks", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("data"), "wiki.bin");
+        assert_eq!(a.get_usize("epochs").unwrap(), 10);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.001); // default
+        assert!(a.get_flag("chunks"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(spec().parse(&argv(&["--epochs", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(spec().parse(&argv(&["--data", "d", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_fails() {
+        assert!(spec().parse(&argv(&["--data", "d", "--chunks=1"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage();
+        assert!(u.contains("--config"));
+        assert!(u.contains("[required]"));
+    }
+}

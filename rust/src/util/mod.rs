@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch on `std` (the build is offline:
+//! only the `xla` crate's dependency closure is vendored, so rayon / serde /
+//! clap / criterion / proptest equivalents all live here).
+
+pub mod binfmt;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod yamlish;

@@ -1,0 +1,231 @@
+//! Timing / summary statistics: Welford accumulators, percentiles, and a
+//! phase-labelled stopwatch used for the paper's runtime-breakdown figures
+//! (Figure 4b sampler phases, Figure 5 training steps ①–⑥).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Streaming mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile summary over a stored sample set.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Percentile in `[0, 100]` by linear interpolation; 0 on empty input.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let rank = (p / 100.0) * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Accumulates wall time per named phase. Phases are labelled with the
+/// paper's own step names so breakdown output maps 1:1 onto Figures 4b / 5.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase label.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+    }
+
+    pub fn get(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Merge another timer into this one (used to reduce per-thread timers).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+    }
+
+    /// `(phase, seconds, fraction-of-total)` rows, insertion order = BTree order.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total().as_secs_f64().max(1e-12);
+        self.totals
+            .iter()
+            .map(|(k, v)| (*k, v.as_secs_f64(), v.as_secs_f64() / total))
+            .collect()
+    }
+}
+
+/// Convenience stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut w = Welford::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 8);
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of this classic set is 32/7.
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_timer_accumulates_and_merges() {
+        let mut t = PhaseTimer::new();
+        t.add("sample", Duration::from_millis(30));
+        t.add("compute", Duration::from_millis(70));
+        t.add("sample", Duration::from_millis(10));
+        assert_eq!(t.get("sample"), Duration::from_millis(40));
+        let mut u = PhaseTimer::new();
+        u.add("compute", Duration::from_millis(30));
+        t.merge(&u);
+        assert_eq!(t.get("compute"), Duration::from_millis(100));
+        let rows = t.breakdown();
+        let total: f64 = rows.iter().map(|r| r.1).sum();
+        assert!((total - 0.14).abs() < 1e-9);
+        let frac: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((frac - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,413 @@
+//! YAML-subset parser for TGL-style model configuration files.
+//!
+//! The paper's headline usability claim is that "users can compose various
+//! Temporal Graph Neural Networks with simple configuration files" (yaml).
+//! This module parses the subset those files need — nested maps by
+//! indentation, block lists (`- item`), inline lists (`[a, b]`), scalars
+//! (string / number / bool / null), and `#` comments:
+//!
+//! ```yaml
+//! # configs/tgn.yml
+//! model: tgn
+//! memory:
+//!   dim: 100
+//!   updater: gru
+//! sampling:
+//!   - layer: 1
+//!     neighbors: 10
+//!     strategy: recent
+//! train:
+//!   lr: 0.001
+//!   batch_size: 600
+//! ```
+//!
+//! Anchors, multi-document streams, flow mappings and block scalars are out
+//! of scope (TGL's own configs don't use them).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    List(Vec<Yaml>),
+    Map(BTreeMap<String, Yaml>),
+}
+
+impl Yaml {
+    pub fn parse(text: &str) -> Result<Yaml> {
+        let lines: Vec<Line> = text
+            .lines()
+            .enumerate()
+            .filter_map(|(no, raw)| Line::lex(no + 1, raw))
+            .collect();
+        let mut pos = 0;
+        let v = parse_block(&lines, &mut pos, 0)?;
+        if pos != lines.len() {
+            bail!("line {}: unexpected dedent/indent structure", lines[pos].no);
+        }
+        Ok(v)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<Yaml> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Yaml::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Result<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.get(key).ok_or_else(|| anyhow::anyhow!("missing key `{key}`")),
+            _ => bail!("expected map while looking up `{key}`"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Yaml::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Yaml::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected non-negative integer, got {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Yaml::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_list(&self) -> Result<&[Yaml]> {
+        match self {
+            Yaml::List(v) => Ok(v),
+            _ => bail!("expected list, got {self:?}"),
+        }
+    }
+
+    /// Typed optional lookups with defaults — the config-reading idiom.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).and_then(|v| v.as_str().ok().map(str::to_owned)).unwrap_or_else(|| default.to_owned())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|v| v.as_usize().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.opt(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+}
+
+/// One significant (non-blank, non-comment) line.
+struct Line {
+    no: usize,
+    indent: usize,
+    /// `- ` list item marker stripped?
+    dash: bool,
+    /// Content after indent (and dash, if any).
+    body: String,
+}
+
+impl Line {
+    fn lex(no: usize, raw: &str) -> Option<Line> {
+        let without_comment = strip_comment(raw);
+        let trimmed_end = without_comment.trim_end();
+        if trimmed_end.trim().is_empty() {
+            return None;
+        }
+        let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+        let mut body = trimmed_end.trim_start().to_string();
+        let dash = body == "-" || body.starts_with("- ");
+        if dash {
+            body = body[1..].trim_start().to_string();
+        }
+        Some(Line { no, indent, dash, body })
+    }
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(s: &str) -> &str {
+    let mut in_sq = false;
+    let mut in_dq = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_dq => in_sq = !in_sq,
+            '"' if !in_sq => in_dq = !in_dq,
+            '#' if !in_sq && !in_dq => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml> {
+    if *pos >= lines.len() {
+        return Ok(Yaml::Null);
+    }
+    if lines[*pos].dash {
+        parse_list(lines, pos, lines[*pos].indent)
+    } else {
+        parse_map(lines, pos, indent.max(lines[*pos].indent))
+    }
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent || (line.indent == indent && !line.dash) {
+            break;
+        }
+        if line.indent > indent {
+            bail!("line {}: unexpected indent inside list", line.no);
+        }
+        // A dash item may itself open a map: `- key: value` plus continued
+        // lines at deeper indent.
+        if line.body.is_empty() {
+            // `-` alone: nested block follows.
+            *pos += 1;
+            items.push(parse_block(lines, pos, indent + 1)?);
+        } else if let Some((k, v)) = split_key(&line.body) {
+            // Item is a map; its first entry sits on the dash line. The
+            // map's effective indent is the dash line's indent + 2 (where
+            // the key starts after "- ").
+            let item_indent = indent + 2;
+            let mut map = BTreeMap::new();
+            let first = parse_entry_value(lines, pos, item_indent, v)?;
+            map.insert(k, first);
+            while *pos < lines.len()
+                && !lines[*pos].dash
+                && lines[*pos].indent >= item_indent
+            {
+                let l = &lines[*pos];
+                let Some((k, v)) = split_key(&l.body) else {
+                    bail!("line {}: expected `key:` inside list item map", l.no);
+                };
+                let val = parse_entry_value(lines, pos, l.indent, v)?;
+                map.insert(k, val);
+            }
+            items.push(Yaml::Map(map));
+        } else {
+            let scalar = parse_scalar(&line.body);
+            *pos += 1;
+            items.push(scalar);
+        }
+    }
+    Ok(Yaml::List(items))
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent || line.dash {
+            break;
+        }
+        if line.indent > indent {
+            bail!("line {}: unexpected indent", line.no);
+        }
+        let Some((k, v)) = split_key(&line.body) else {
+            bail!("line {}: expected `key: value`, got `{}`", line.no, line.body);
+        };
+        let val = parse_entry_value(lines, pos, indent, v)?;
+        if map.insert(k.clone(), val).is_some() {
+            bail!("line {}: duplicate key `{k}`", line.no);
+        }
+    }
+    Ok(Yaml::Map(map))
+}
+
+/// Parse the value part of `key: <v>`; `*pos` sits on the key line and is
+/// advanced past the value (including any nested block).
+fn parse_entry_value(lines: &[Line], pos: &mut usize, indent: usize, v: &str) -> Result<Yaml> {
+    if !v.is_empty() {
+        *pos += 1;
+        return Ok(parse_scalar(v));
+    }
+    // Value on following deeper-indented lines (or empty -> null).
+    *pos += 1;
+    if *pos < lines.len() && lines[*pos].indent > indent {
+        parse_block(lines, pos, lines[*pos].indent)
+    } else if *pos < lines.len() && lines[*pos].dash && lines[*pos].indent == indent {
+        // Lists are commonly written at the same indent as their key.
+        parse_list(lines, pos, indent)
+    } else {
+        Ok(Yaml::Null)
+    }
+}
+
+/// Split `key: value` (value may be empty). Returns None when the line has
+/// no unquoted `:` separator.
+fn split_key(body: &str) -> Option<(String, &str)> {
+    let mut in_sq = false;
+    let mut in_dq = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '\'' if !in_dq => in_sq = !in_sq,
+            '"' if !in_sq => in_dq = !in_dq,
+            ':' if !in_sq && !in_dq => {
+                let rest = &body[i + 1..];
+                if rest.is_empty() || rest.starts_with(' ') {
+                    let key = unquote(body[..i].trim());
+                    return Some((key, rest.trim()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let b = s.as_bytes();
+    if b.len() >= 2
+        && ((b[0] == b'"' && b[b.len() - 1] == b'"')
+            || (b[0] == b'\'' && b[b.len() - 1] == b'\''))
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn parse_scalar(s: &str) -> Yaml {
+    let s = s.trim();
+    // Inline list [a, b, c]
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Yaml::List(vec![]);
+        }
+        return Yaml::List(inner.split(',').map(|p| parse_scalar(p.trim())).collect());
+    }
+    match s {
+        "null" | "~" | "" => return Yaml::Null,
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        return Yaml::Str(unquote(s));
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        if !s.contains(|c: char| c.is_alphabetic() && c != 'e' && c != 'E') || s.ends_with("e0") {
+            return Yaml::Num(n);
+        }
+    }
+    Yaml::Str(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a TGL-style config
+model: tgn
+memory:
+  dim: 100
+  updater: gru
+  mailbox_size: 1
+sampling:
+  - layer: 1
+    neighbors: 10
+    strategy: recent
+  - layer: 2
+    neighbors: 10
+    strategy: uniform
+train:
+  lr: 0.001
+  batch_size: 600
+  epochs: 5
+  use_chunks: false
+gnn:
+  heads: 2
+  dims: [100, 100]
+"#;
+
+    #[test]
+    fn parses_nested_config() {
+        let y = Yaml::parse(SAMPLE).unwrap();
+        assert_eq!(y.get("model").unwrap().as_str().unwrap(), "tgn");
+        assert_eq!(y.get("memory").unwrap().get("dim").unwrap().as_usize().unwrap(), 100);
+        let sampling = y.get("sampling").unwrap().as_list().unwrap();
+        assert_eq!(sampling.len(), 2);
+        assert_eq!(sampling[0].get("strategy").unwrap().as_str().unwrap(), "recent");
+        assert_eq!(sampling[1].get("neighbors").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(y.get("train").unwrap().f64_or("lr", 0.0), 0.001);
+        assert!(!y.get("train").unwrap().bool_or("use_chunks", true));
+        let dims = y.get("gnn").unwrap().get("dims").unwrap().as_list().unwrap();
+        assert_eq!(dims.len(), 2);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_scalar("42"), Yaml::Num(42.0));
+        assert_eq!(parse_scalar("-1e-3"), Yaml::Num(-0.001));
+        assert_eq!(parse_scalar("true"), Yaml::Bool(true));
+        assert_eq!(parse_scalar("hello"), Yaml::Str("hello".into()));
+        assert_eq!(parse_scalar("'quoted: str'"), Yaml::Str("quoted: str".into()));
+        assert_eq!(parse_scalar("[1, 2]"), Yaml::List(vec![Yaml::Num(1.0), Yaml::Num(2.0)]));
+        assert_eq!(parse_scalar("~"), Yaml::Null);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let y = Yaml::parse("a: 1 # trailing\n\n# full line\nb: 'x # not comment'\n").unwrap();
+        assert_eq!(y.get("a").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(y.get("b").unwrap().as_str().unwrap(), "x # not comment");
+    }
+
+    #[test]
+    fn top_level_list() {
+        let y = Yaml::parse("- 1\n- 2\n- x: 3\n  y: 4\n").unwrap();
+        let l = y.as_list().unwrap();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[2].get("y").unwrap().as_usize().unwrap(), 4);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Yaml::parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let y = Yaml::parse("a: 1\n").unwrap();
+        assert_eq!(y.usize_or("missing", 7), 7);
+        assert_eq!(y.str_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,181 @@
+//! End-to-end integration tests over real AOT artifacts.
+//!
+//! These compile the `_tiny` variants through the PJRT CPU client and run
+//! the full Figure-2 loop. They require `make artifacts` to have run; if
+//! the artifacts directory is missing the tests are skipped (so
+//! `cargo test` stays usable straight after checkout).
+
+use std::path::Path;
+use tgl::coordinator::RunPlan;
+use tgl::sched::ChunkScheduler;
+use tgl::trainer::{node_classification, MultiTrainer};
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+fn plan(variant: &str, dataset: &str, scale: f64) -> RunPlan {
+    RunPlan::new(
+        Path::new("artifacts"),
+        Path::new("configs"),
+        variant,
+        dataset,
+        scale,
+        2,
+        7,
+    )
+    .expect("plan")
+}
+
+#[test]
+fn tgn_learns_on_wikipedia_like_data() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let p = plan("tgn_tiny", "wikipedia", 0.03);
+    let (report, _) = p.train_link_prediction(2, 1, 1, "wikipedia", false).unwrap();
+    let first = report.epochs.first().unwrap().1;
+    let last = report.epochs.last().unwrap().1;
+    assert!(last < first, "loss should decrease: {first} -> {last}");
+    assert!(report.test_ap > 0.75, "memory model should beat chance by a margin: {}", report.test_ap);
+}
+
+#[test]
+fn all_variants_run_one_epoch() {
+    if !have_artifacts() {
+        return;
+    }
+    for variant in ["jodie_tiny", "tgat_tiny", "apan_tiny", "dysat_tiny"] {
+        let p = plan(variant, "wikipedia", 0.02);
+        let (report, _) = p.train_link_prediction(1, 1, 1, "wikipedia", false).unwrap();
+        assert!(report.epochs[0].1.is_finite(), "{variant} loss finite");
+        assert!(report.test_ap > 0.5, "{variant} AP {:.3} should beat random", report.test_ap);
+    }
+}
+
+#[test]
+fn training_is_deterministic_for_fixed_seed() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = || {
+        let p = plan("tgn_tiny", "wikipedia", 0.02);
+        let (report, _) = p.train_link_prediction(1, 1, 1, "wikipedia", false).unwrap();
+        (report.epochs[0].1, report.test_ap)
+    };
+    let (l1, ap1) = run();
+    let (l2, ap2) = run();
+    assert_eq!(l1, l2, "losses must match bit-for-bit");
+    assert_eq!(ap1, ap2);
+}
+
+#[test]
+fn multiworker_single_worker_equals_sequential() {
+    if !have_artifacts() {
+        return;
+    }
+    let p = plan("tgn_tiny", "wikipedia", 0.02);
+    let bs = p.model.dim("bs");
+    let (train_end, _) = p.graph.chrono_split(0.70, 0.15);
+
+    let mut t1 = p.trainer().unwrap();
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    let ep = sched.epoch();
+    let s1 = t1.train_epoch(&ep).unwrap();
+
+    let mut t2 = p.trainer().unwrap();
+    let multi = MultiTrainer::new(1);
+    let s2 = multi.train_epoch(&mut t2, &ep).unwrap();
+    assert!(
+        (s1.mean_loss - s2.mean_loss).abs() < 1e-9,
+        "1-worker multi ({}) must equal sequential ({})",
+        s2.mean_loss,
+        s1.mean_loss
+    );
+}
+
+#[test]
+fn multiworker_four_workers_still_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    let p = plan("tgn_tiny", "wikipedia", 0.03);
+    let (report, _) = p.train_link_prediction(2, 1, 4, "wikipedia", false).unwrap();
+    assert!(report.test_ap > 0.7, "4-worker AP {:.3}", report.test_ap);
+}
+
+#[test]
+fn chunked_large_batch_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    // tgn_big (8x batch) with 8 chunks/batch should stay close to the
+    // small-batch run on the same data.
+    let p = plan("tgn_big", "wikipedia", 0.05);
+    let (report, _) = p.train_link_prediction(2, 8, 1, "wikipedia", false).unwrap();
+    assert!(report.test_ap > 0.6, "chunked big-batch AP {:.3}", report.test_ap);
+}
+
+#[test]
+fn node_classification_pipeline_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let p = plan("tgn_tiny", "wikipedia", 0.05);
+    let (_, mut trainer) = p.train_link_prediction(1, 1, 1, "wikipedia", false).unwrap();
+    let clf = node_classification(&mut trainer, 0.7, 20, 0.01, 7).unwrap();
+    assert!(clf.train_labels + clf.test_labels > 0);
+    assert!(clf.f1_micro >= 0.0 && clf.f1_micro <= 1.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    if !have_artifacts() {
+        return;
+    }
+    let p = plan("tgn_tiny", "wikipedia", 0.02);
+    let bs = p.model.dim("bs");
+    let (train_end, val_end) = p.graph.chrono_split(0.70, 0.15);
+    let mut t = p.trainer().unwrap();
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    t.train_epoch(&sched.epoch()).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("tgl_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tgn.ckpt");
+    t.save_checkpoint(&path).unwrap();
+    let after_save = t.eval_range(train_end..val_end).unwrap();
+
+    // Restore into a fresh trainer: evaluation must match bit-for-bit.
+    let mut t2 = p.trainer().unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let after_load = t2.eval_range(train_end..val_end).unwrap();
+    assert_eq!(after_save.ap, after_load.ap);
+    assert_eq!(after_save.mean_loss, after_load.mean_loss);
+
+    // Wrong-variant checkpoints are rejected.
+    let p2 = plan("jodie_tiny", "wikipedia", 0.02);
+    let mut t3 = p2.trainer().unwrap();
+    assert!(t3.load_checkpoint(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_scores_move_with_training() {
+    if !have_artifacts() {
+        return;
+    }
+    // Untrained vs trained AP on the same split: training must help.
+    let p = plan("tgn_tiny", "wikipedia", 0.03);
+    let (train_end, val_end) = p.graph.chrono_split(0.70, 0.15);
+    let mut fresh = p.trainer().unwrap();
+    let untrained = fresh.eval_range(train_end..val_end).unwrap();
+    let (report, _) = p.train_link_prediction(2, 1, 1, "wikipedia", false).unwrap();
+    assert!(
+        report.test_ap > untrained.ap + 0.05,
+        "trained {:.3} should beat untrained {:.3}",
+        report.test_ap,
+        untrained.ap
+    );
+}

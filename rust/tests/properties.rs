@@ -1,0 +1,233 @@
+//! Property-based tests (proptest-lite): randomized invariants with a
+//! seeded RNG — every case prints its seed on failure so it replays
+//! deterministically.
+
+use tgl::graph::{TCsr, TemporalGraph};
+use tgl::sampler::{PointerMode, SamplerConfig, Strategy, TemporalSampler};
+use tgl::sched::ChunkScheduler;
+use tgl::state::Mailbox;
+use tgl::util::json::Json;
+use tgl::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng, max_nodes: usize, max_edges: usize) -> TemporalGraph {
+    let n = 2 + rng.below(max_nodes - 1);
+    let m = 1 + rng.below(max_edges);
+    let src: Vec<u32> = (0..m).map(|_| rng.below(n) as u32).collect();
+    let dst: Vec<u32> = (0..m).map(|_| rng.below(n) as u32).collect();
+    // Include duplicate timestamps on purpose (simultaneous events).
+    let time: Vec<f64> = (0..m).map(|_| (rng.below(500)) as f64).collect();
+    TemporalGraph::new(n, src, dst, time).unwrap()
+}
+
+/// T-CSR window queries must agree with a brute-force scan of the edge
+/// list, for random (node, t) and random snapshot windows.
+#[test]
+fn prop_tcsr_windows_match_bruteforce() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng, 40, 800);
+        let csr = TCsr::build(&g, true);
+        csr.check_invariants().unwrap();
+        for _ in 0..50 {
+            let v = rng.below(g.num_nodes) as u32;
+            let t = rng.below(600) as f64;
+            let cut = csr.lower_bound(v, t);
+            let (lo, hi) = csr.slice(v);
+            // Brute force: count directed+reverse edges of v earlier than t.
+            let mut expect = 0usize;
+            for e in 0..g.num_edges() {
+                if (g.src[e] == v || g.dst[e] == v) && g.time[e] < t {
+                    expect += 1;
+                }
+                if g.src[e] == v && g.dst[e] == v && g.time[e] < t {
+                    expect += 1; // self-loop occupies two slots
+                }
+            }
+            assert_eq!(cut - lo, expect, "seed={seed} v={v} t={t}");
+            assert!(cut <= hi);
+        }
+    }
+}
+
+/// Sampled neighbors must (a) never leak the future, (b) be actual
+/// temporal neighbors of the root, (c) carry the matching edge id.
+#[test]
+fn prop_sampler_sound_samples() {
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(100 + seed);
+        let g = random_graph(&mut rng, 30, 600);
+        let csr = TCsr::build(&g, true);
+        let cfg = SamplerConfig::uniform_hops(2, 5, Strategy::Uniform, 2);
+        let s = TemporalSampler::new(&csr, cfg);
+        let b = 16;
+        let roots: Vec<u32> = (0..b).map(|_| rng.below(g.num_nodes) as u32).collect();
+        let mut ts: Vec<f64> = (0..b).map(|_| rng.below(700) as f64).collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap()); // chronological batch
+        let mfg = s.sample(&roots, &ts, seed);
+        for hops in &mfg.snapshots {
+            for block in hops {
+                for i in 0..block.num_slots() {
+                    if block.mask[i] != 1.0 {
+                        continue;
+                    }
+                    let root = block.roots[i / block.fanout];
+                    let root_t = block.root_ts[i / block.fanout];
+                    let nb = block.nbr[i];
+                    let et = root_t - block.dt[i] as f64;
+                    assert!(et < root_t + 1e-9, "leak: edge at {et} for root t {root_t}");
+                    // The (root, nb, et, eid) tuple must exist in the graph.
+                    let e = block.eid[i] as usize;
+                    let ok = (g.src[e] == root && g.dst[e] == nb)
+                        || (g.dst[e] == root && g.src[e] == nb);
+                    assert!(ok, "seed={seed}: edge id {e} does not connect {root}-{nb}");
+                    assert!((g.time[e] - et).abs() < 1e-6);
+                }
+            }
+        }
+    }
+}
+
+/// Pointer modes are interchangeable: same samples for the same seeds.
+#[test]
+fn prop_pointer_modes_equivalent() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(200 + seed);
+        let g = random_graph(&mut rng, 25, 500);
+        let csr = TCsr::build(&g, true);
+        let run = |mode| {
+            let mut cfg = SamplerConfig::uniform_hops(1, 4, Strategy::MostRecent, 3);
+            cfg.pointer_mode = mode;
+            let s = TemporalSampler::new(&csr, cfg);
+            let mut out = Vec::new();
+            // Three chronological batches exercise pointer advancement.
+            for (bi, t0) in [100.0, 300.0, 500.0].iter().enumerate() {
+                let roots: Vec<u32> = (0..8).map(|i| ((i * 3) % g.num_nodes) as u32).collect();
+                let ts: Vec<f64> = (0..8).map(|i| t0 + i as f64).collect();
+                let m = s.sample(&roots, &ts, bi as u64);
+                out.push((m.snapshots[0][0].nbr.clone(), m.snapshots[0][0].eid.clone()));
+            }
+            out
+        };
+        let locked = run(PointerMode::Locked);
+        assert_eq!(locked, run(PointerMode::Atomic), "seed={seed}");
+        assert_eq!(locked, run(PointerMode::BinarySearch), "seed={seed}");
+    }
+}
+
+/// Mailbox behaves like a per-node "keep the most recent M" reference
+/// model under random write/gather interleavings.
+#[test]
+fn prop_mailbox_matches_reference_model() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(300 + seed);
+        let nodes = 1 + rng.below(10);
+        let slots = 1 + rng.below(4);
+        let dim = 1 + rng.below(3);
+        let mut mb = Mailbox::new(nodes, slots, dim);
+        let mut model: Vec<Vec<(f64, Vec<f32>)>> = vec![Vec::new(); nodes];
+        let mut t = 0.0;
+        for _ in 0..200 {
+            let v = rng.below(nodes);
+            t += rng.f64();
+            let mail: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+            mb.write(v as u32, t, &mail);
+            model[v].push((t, mail));
+            if model[v].len() > slots {
+                model[v].remove(0);
+            }
+
+            // Gather a random node and compare against the model.
+            let q = rng.below(nodes);
+            let qt = t + 1.0;
+            let (mut m, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+            mb.gather(&[(q as u32, qt, true)], &mut m, &mut dt, &mut mask);
+            let expect = &model[q];
+            for k in 0..slots {
+                if k < expect.len() {
+                    let (et, email) = &expect[expect.len() - 1 - k]; // newest first
+                    assert_eq!(mask[k], 1.0, "seed={seed}");
+                    assert_eq!(&m[k * dim..(k + 1) * dim], &email[..], "seed={seed}");
+                    assert!((dt[k] as f64 - (qt - et)).abs() < 1e-3);
+                } else {
+                    assert_eq!(mask[k], 0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Algorithm 2 invariants under random (bs, cs, |E|).
+#[test]
+fn prop_chunk_scheduler_invariants() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(400 + seed);
+        let cs = 1 + rng.below(50);
+        let chunks = 1 + rng.below(32);
+        let bs = cs * chunks;
+        let edges = bs + rng.below(100_000);
+        let mut s = ChunkScheduler::new(edges, bs, cs, seed).unwrap();
+        for _ in 0..5 {
+            let plan = s.epoch();
+            assert!(plan.start_offset < bs && plan.start_offset % cs == 0);
+            let mut prev_end = None;
+            for b in &plan.batches {
+                assert_eq!(b.len(), bs);
+                assert!(b.end <= edges);
+                if let Some(pe) = prev_end {
+                    assert_eq!(b.start, pe, "batches contiguous");
+                }
+                prev_end = Some(b.end);
+            }
+        }
+    }
+}
+
+/// JSON writer/parser round-trips random structures.
+#[test]
+fn prop_json_roundtrip_random() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.below(100000) as f64) - 5000.0),
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(500 + seed);
+        let j = random_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed={seed}: {e}\n{text}"));
+        assert_eq!(j, back, "seed={seed}");
+    }
+}
+
+/// Dataset save/load round-trips random graphs bit-for-bit.
+#[test]
+fn prop_dataset_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("tgl_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(600 + seed);
+        let g = random_graph(&mut rng, 20, 300);
+        let path = dir.join(format!("g{seed}.bin"));
+        g.save(&path).unwrap();
+        let h = TemporalGraph::load(&path).unwrap();
+        assert_eq!(g.src, h.src);
+        assert_eq!(g.dst, h.dst);
+        assert_eq!(g.time, h.time);
+        assert_eq!(g.num_nodes, h.num_nodes);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
