@@ -1,13 +1,17 @@
 //! **Table 4 + Figure 4**: parallel temporal sampler vs the baseline
 //! sampler on the Wikipedia workload, across thread counts, with the
 //! Ptr./BS/Spl./Oth. runtime breakdown — plus the pointer-mode ablation
-//! (locked vs lock-free fetch_max vs pure binary search) for §Perf.
+//! (locked vs lock-free fetch_max vs pure binary search) and the MFG
+//! arena-reuse comparison (fresh `sample` vs `sample_into`) for §Perf.
+//! Zero-allocation proof for the arena steady state lives in
+//! `rust/tests/alloc.rs` (a dedicated counting-allocator binary) so the
+//! timing tables here stay free of allocator-instrumentation bias.
 //!
 //! Run: `cargo bench --bench sampler` (env: TGL_BENCH_SCALE=0.1 shrinks
 //! the dataset; default runs the full 157k-edge Wikipedia workload).
 
 use tgl::bench::{bench_scale, Table};
-use tgl::coordinator::{run_epoch_baseline, run_epoch_parallel};
+use tgl::coordinator::{run_epoch_baseline, run_epoch_parallel, run_epoch_parallel_reuse};
 use tgl::graph::TCsr;
 use tgl::sampler::{BaselineSampler, PointerMode, SamplerConfig, Strategy, TemporalSampler};
 use tgl::util::stats::Stopwatch;
@@ -106,5 +110,36 @@ fn main() -> anyhow::Result<()> {
     }
     ab.print();
     ab.write_csv("results/ablation_pointer_modes.csv")?;
+
+    // ---- Arena reuse: fresh Mfg per batch vs sample_into, 8 threads.
+    // (Allocation-freedom of the arena steady state is asserted by
+    // rust/tests/alloc.rs; counting allocations here would bias the rows.)
+    let mut ar = Table::new(
+        "Arena reuse: one sampling epoch, fresh `sample` vs `sample_into` (8 threads)",
+        &["algorithm", "fresh (s)", "arena (s)", "speedup"],
+    );
+    for (name, mk) in algos {
+        let sampler = TemporalSampler::new(&csr, mk(8, &graph));
+        // Warm both paths once (first arena epoch grows capacities).
+        run_epoch_parallel(&graph, &sampler, bs);
+        run_epoch_parallel_reuse(&graph, &sampler, bs);
+
+        let sw = Stopwatch::start();
+        run_epoch_parallel(&graph, &sampler, bs);
+        let fresh_s = sw.secs();
+
+        let sw = Stopwatch::start();
+        run_epoch_parallel_reuse(&graph, &sampler, bs);
+        let arena_s = sw.secs();
+
+        ar.row(vec![
+            name.to_string(),
+            format!("{fresh_s:.4}"),
+            format!("{arena_s:.4}"),
+            format!("{:.2}x", fresh_s / arena_s),
+        ]);
+    }
+    ar.print();
+    ar.write_csv("results/arena_reuse.csv")?;
     Ok(())
 }

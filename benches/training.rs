@@ -1,10 +1,16 @@
 //! **Table 5 + Figure 1 + Figure 5**: per-epoch training time, link-
 //! prediction AP and the step ①–⑥ runtime breakdown for all five TGNN
-//! variants on the Wikipedia workload.
+//! variants on the Wikipedia workload — plus the **pipeline benchmark**
+//! (prefetch on vs off) whose rows land in `BENCH_pipeline.json` so future
+//! PRs can track the perf trajectory.
 //!
 //! Default profile: the `_tiny` variants on a scaled dataset (fast, CI-
 //! friendly). `TGL_BENCH_FULL=1` runs the paper-faithful bs=600/d=100
 //! profiles; `TGL_BENCH_SCALE` rescales the dataset.
+//!
+//! Without AOT artifacts the training rows are skipped, but the pipeline
+//! JSON is still emitted from the sampler-level arena comparison so the
+//! perf trajectory never has holes.
 //!
 //! Notes vs the paper: the "Baseline" column of Table 5 measures the
 //! original authors' PyTorch code, which cannot exist inside this compiled
@@ -15,7 +21,12 @@
 
 use std::path::Path;
 use tgl::bench::{bench_full, bench_scale, Table};
-use tgl::coordinator::RunPlan;
+use tgl::coordinator::{run_epoch_parallel, run_epoch_parallel_reuse, RunPlan};
+use tgl::graph::TCsr;
+use tgl::sampler::{SamplerConfig, Strategy, TemporalSampler};
+use tgl::sched::ChunkScheduler;
+use tgl::util::json::{obj, Json};
+use tgl::util::stats::Stopwatch;
 
 fn main() -> anyhow::Result<()> {
     let full = bench_full();
@@ -23,58 +34,159 @@ fn main() -> anyhow::Result<()> {
     let suffix = if full { "" } else { "_tiny" };
     let epochs = if full { 1 } else { 2 };
     let variants = ["jodie", "tgn", "apan", "tgat", "dysat"];
+    let have_artifacts = Path::new("artifacts/manifest.json").exists();
+    let mut pipeline_rows: Vec<Json> = Vec::new();
 
-    let mut t5 = Table::new(
-        "Table 5 / Figure 1: link prediction on Wikipedia (AP, epoch time)",
-        &["variant", "AP", "epoch time (s)", "batches/s"],
-    );
-    let mut f5 = Table::new(
-        "Figure 5: training runtime breakdown (fraction of total)",
-        &["variant", "1:sample", "2:lookup", "4:compute", "6:update"],
-    );
+    if have_artifacts {
+        let mut t5 = Table::new(
+            "Table 5 / Figure 1: link prediction on Wikipedia (AP, epoch time)",
+            &["variant", "AP", "epoch time (s)", "batches/s"],
+        );
+        let mut f5 = Table::new(
+            "Figure 5: training runtime breakdown (fraction of total)",
+            &["variant", "1:sample", "2:lookup", "4:compute", "6:update"],
+        );
 
-    for base in variants {
-        let variant = format!("{base}{suffix}");
-        let plan = RunPlan::new(
-            Path::new("artifacts"),
-            Path::new("configs"),
-            &variant,
-            "wikipedia",
-            scale,
-            8,
-            42,
-        )?;
-        let (report, trainer) =
-            plan.train_link_prediction(epochs, 1, 1, "wikipedia", false)?;
-        let batches: usize = report.epochs.last().map(|_| {
-            let (tr, _) = plan.graph.chrono_split(0.70, 0.15);
-            tr / plan.model.dim("bs")
-        }).unwrap_or(0);
-        t5.row(vec![
-            variant.clone(),
-            format!("{:.4}", report.test_ap),
-            format!("{:.2}", report.epoch_seconds),
-            format!("{:.1}", batches as f64 / report.epoch_seconds.max(1e-9)),
-        ]);
-        let bd = trainer.timers.breakdown();
-        let frac = |key: &str| {
-            bd.iter().find(|(k, _, _)| *k == key).map(|(_, _, f)| *f).unwrap_or(0.0)
-        };
-        f5.row(vec![
-            variant,
-            format!("{:.1}%", frac("1:sample") * 100.0),
-            format!("{:.1}%", frac("2:lookup") * 100.0),
-            format!("{:.1}%", frac("4:compute") * 100.0),
-            format!("{:.1}%", frac("6:update") * 100.0),
-        ]);
+        for base in variants {
+            let variant = format!("{base}{suffix}");
+            let plan = RunPlan::new(
+                Path::new("artifacts"),
+                Path::new("configs"),
+                &variant,
+                "wikipedia",
+                scale,
+                8,
+                42,
+            )?;
+            let (report, trainer) =
+                plan.train_link_prediction(epochs, 1, 1, "wikipedia", false)?;
+            let batches: usize = report.epochs.last().map(|_| {
+                let (tr, _) = plan.graph.chrono_split(0.70, 0.15);
+                tr / plan.model.dim("bs")
+            }).unwrap_or(0);
+            t5.row(vec![
+                variant.clone(),
+                format!("{:.4}", report.test_ap),
+                format!("{:.2}", report.epoch_seconds),
+                format!("{:.1}", batches as f64 / report.epoch_seconds.max(1e-9)),
+            ]);
+            let bd = trainer.timers.breakdown();
+            let frac = |key: &str| {
+                bd.iter().find(|(k, _, _)| *k == key).map(|(_, _, f)| *f).unwrap_or(0.0)
+            };
+            f5.row(vec![
+                variant,
+                format!("{:.1}%", frac("1:sample") * 100.0),
+                format!("{:.1}%", frac("2:lookup") * 100.0),
+                format!("{:.1}%", frac("4:compute") * 100.0),
+                format!("{:.1}%", frac("6:update") * 100.0),
+            ]);
+        }
+        t5.print();
+        t5.write_csv("results/table5_training.csv")?;
+        f5.print();
+        f5.write_csv("results/figure5_breakdown.csv")?;
+        println!(
+            "\nShape checks vs paper: JODIE should be fastest and DySAT/TGAT slowest;\n\
+             TGN should have top-tier AP; sampling fraction should be small."
+        );
+
+        // ---- Pipeline benchmark: prefetch off vs on, identical losses.
+        let mut tp = Table::new(
+            "Pipelined epoch: prefetch off vs on (same plan, bitwise-identical losses)",
+            &["variant", "sequential (s)", "pipelined (s)", "speedup", "losses identical"],
+        );
+        for base in ["tgn", "tgat"] {
+            let variant = format!("{base}{suffix}");
+            let plan = RunPlan::new(
+                Path::new("artifacts"),
+                Path::new("configs"),
+                &variant,
+                "wikipedia",
+                scale,
+                8,
+                42,
+            )?;
+            let bs = plan.model.dim("bs");
+            let (train_end, _) = plan.graph.chrono_split(0.70, 0.15);
+            let mut sched = ChunkScheduler::plain(train_end, bs);
+            let ep = sched.epoch();
+
+            let mut t_off = plan.trainer()?;
+            t_off.prep.cfg.prefetch = false;
+            t_off.train_epoch(&ep)?; // warm-up epoch
+            let off = t_off.train_epoch(&ep)?;
+
+            let mut t_on = plan.trainer()?;
+            t_on.prep.cfg.prefetch = true;
+            t_on.train_epoch(&ep)?; // warm-up epoch
+            let on = t_on.train_epoch(&ep)?;
+
+            let identical = off.losses == on.losses;
+            let speedup = off.seconds / on.seconds.max(1e-12);
+            tp.row(vec![
+                variant.clone(),
+                format!("{:.3}", off.seconds),
+                format!("{:.3}", on.seconds),
+                format!("{speedup:.2}x"),
+                identical.to_string(),
+            ]);
+            pipeline_rows.push(obj(vec![
+                ("workload", Json::Str(variant)),
+                ("mode", Json::Str("training-epoch".into())),
+                ("prefetch_off_s", Json::Num(off.seconds)),
+                ("prefetch_on_s", Json::Num(on.seconds)),
+                ("speedup", Json::Num(speedup)),
+                ("batches", Json::Num(on.batches as f64)),
+                ("losses_identical", Json::Bool(identical)),
+            ]));
+        }
+        tp.print();
+        tp.write_csv("results/pipeline_epoch.csv")?;
+    } else {
+        println!("no artifacts/manifest.json — skipping training rows (run `make artifacts`)");
     }
-    t5.print();
-    t5.write_csv("results/table5_training.csv")?;
-    f5.print();
-    f5.write_csv("results/figure5_breakdown.csv")?;
-    println!(
-        "\nShape checks vs paper: JODIE should be fastest and DySAT/TGAT slowest;\n\
-         TGN should have top-tier AP; sampling fraction should be small."
-    );
+
+    // ---- Sampler-level arena rows (always available, artifacts or not):
+    // fresh `sample` vs `sample_into` over one Wikipedia sampling epoch.
+    let graph = tgl::datasets::by_name("wikipedia", scale, 42)?;
+    let csr = TCsr::build(&graph, true);
+    let bs = 600;
+    for (name, cfg) in [
+        ("tgn-1layer-sampling", SamplerConfig::uniform_hops(1, 10, Strategy::MostRecent, 8)),
+        ("tgat-2layer-sampling", SamplerConfig::uniform_hops(2, 10, Strategy::Uniform, 8)),
+    ] {
+        let sampler = TemporalSampler::new(&csr, cfg);
+        run_epoch_parallel(&graph, &sampler, bs); // warm-up
+        let sw = Stopwatch::start();
+        run_epoch_parallel(&graph, &sampler, bs);
+        let fresh_s = sw.secs();
+        run_epoch_parallel_reuse(&graph, &sampler, bs); // warm-up
+        let sw = Stopwatch::start();
+        run_epoch_parallel_reuse(&graph, &sampler, bs);
+        let arena_s = sw.secs();
+        println!(
+            "{name}: fresh {fresh_s:.4}s vs arena {arena_s:.4}s ({:.2}x)",
+            fresh_s / arena_s.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str(name.into())),
+            ("mode", Json::Str("sampling-epoch".into())),
+            ("fresh_s", Json::Num(fresh_s)),
+            ("arena_s", Json::Num(arena_s)),
+            ("speedup", Json::Num(fresh_s / arena_s.max(1e-12))),
+        ]));
+    }
+
+    let out = obj(vec![
+        ("bench", Json::Str("pipeline".into())),
+        ("dataset", Json::Str("wikipedia".into())),
+        ("scale", Json::Num(scale)),
+        ("full_profile", Json::Bool(full)),
+        ("have_artifacts", Json::Bool(have_artifacts)),
+        ("rows", Json::Arr(pipeline_rows)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", out.to_string())?;
+    println!("[json] wrote BENCH_pipeline.json");
     Ok(())
 }

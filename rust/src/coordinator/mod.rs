@@ -6,7 +6,9 @@
 
 mod run;
 
-pub use run::{run_epoch_baseline, run_epoch_parallel, LinkPredReport, RunPlan};
+pub use run::{
+    run_epoch_baseline, run_epoch_parallel, run_epoch_parallel_reuse, LinkPredReport, RunPlan,
+};
 
 use anyhow::{bail, Result};
 use std::path::PathBuf;

@@ -22,6 +22,11 @@ pub struct RunPlan {
     pub options: RunOptions,
     pub threads: usize,
     pub seed: u64,
+    /// Pipelined epoch execution (producer thread prefetches sampling +
+    /// static gathers). Deterministic: same losses as sequential.
+    pub prefetch: bool,
+    /// Prepared-batch queue depth for the pipelined epoch.
+    pub prefetch_depth: usize,
 }
 
 /// Per-epoch row + final metrics of a link-prediction run.
@@ -61,7 +66,17 @@ impl RunPlan {
             datasets::by_name(dataset, scale, seed)?
         };
         let csr = TCsr::build(&graph, true);
-        Ok(RunPlan { engine, model, graph, csr, options, threads, seed })
+        Ok(RunPlan {
+            engine,
+            model,
+            graph,
+            csr,
+            options,
+            threads,
+            seed,
+            prefetch: true,
+            prefetch_depth: 2,
+        })
     }
 
     pub fn trainer(&self) -> Result<Trainer<'_>> {
@@ -70,6 +85,8 @@ impl RunPlan {
         cfg.strategy = self.options.strategy;
         cfg.snapshot_len = self.options.snapshot_len;
         cfg.seed = self.seed;
+        cfg.prefetch = self.prefetch;
+        cfg.prefetch_depth = self.prefetch_depth;
         Trainer::new(&self.model, &self.graph, &self.csr, cfg)
     }
 
@@ -144,11 +161,13 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         .opt("chunks", "1", "chunks per batch (>1 enables Algorithm 2)")
         .opt("workers", "1", "data-parallel trainer workers")
         .opt("threads", "8", "sampler threads")
+        .opt("prefetch", "on", "pipelined epoch execution: on|off (deterministic either way)")
+        .opt("prefetch-depth", "2", "prepared-batch queue depth for the pipeline")
         .opt("seed", "42", "RNG seed")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("configs", "configs", "model config directory")
         .parse(args)?;
-    let plan = RunPlan::new(
+    let mut plan = RunPlan::new(
         &PathBuf::from(a.get("artifacts")),
         &PathBuf::from(a.get("configs")),
         &a.get("variant"),
@@ -157,6 +176,12 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         a.get_usize("threads")?,
         a.get_usize("seed")? as u64,
     )?;
+    plan.prefetch = match a.get("prefetch").as_str() {
+        "on" | "1" | "true" => true,
+        "off" | "0" | "false" => false,
+        other => anyhow::bail!("bad --prefetch value `{other}` (want on|off)"),
+    };
+    plan.prefetch_depth = a.get_usize("prefetch-depth")?;
     crate::info!(
         "dataset `{}`: |V|={} |E|={} max(t)={:.3e}",
         a.get("data"),
@@ -304,6 +329,26 @@ pub fn run_epoch_parallel(g: &TemporalGraph, s: &TemporalSampler<'_>, bs: usize)
     }
 }
 
+/// One sampling epoch reusing a single [`crate::sampler::Mfg`] arena and
+/// root buffers (`sample_into`): the zero-allocation steady state the
+/// pipelined trainer runs in. Row source for the arena-reuse bench.
+pub fn run_epoch_parallel_reuse(g: &TemporalGraph, s: &TemporalSampler<'_>, bs: usize) {
+    s.reset();
+    let mut rng = crate::util::rng::Rng::new(7);
+    let mut mfg = crate::sampler::Mfg::new();
+    let mut roots = Vec::new();
+    let mut ts = Vec::new();
+    let mut start = 0usize;
+    let mut bi = 0u64;
+    while start + bs <= g.num_edges() {
+        bench_roots_into(g, start, bs, &mut rng, &mut roots, &mut ts);
+        s.sample_into(&mut mfg, &roots, &ts, bi);
+        std::hint::black_box(&mfg);
+        start += bs;
+        bi += 1;
+    }
+}
+
 /// Baseline epoch.
 pub fn run_epoch_baseline(g: &TemporalGraph, s: &BaselineSampler, bs: usize) {
     let mut rng = crate::util::rng::Rng::new(7);
@@ -325,8 +370,25 @@ fn bench_roots(
     bs: usize,
     rng: &mut crate::util::rng::Rng,
 ) -> (Vec<u32>, Vec<f64>) {
-    let mut roots = Vec::with_capacity(2 * bs);
-    let mut ts = Vec::with_capacity(2 * bs);
+    let mut roots = Vec::new();
+    let mut ts = Vec::new();
+    bench_roots_into(g, start, bs, rng, &mut roots, &mut ts);
+    (roots, ts)
+}
+
+/// In-place variant of [`bench_roots`] (recycles the buffers).
+fn bench_roots_into(
+    g: &TemporalGraph,
+    start: usize,
+    bs: usize,
+    rng: &mut crate::util::rng::Rng,
+    roots: &mut Vec<u32>,
+    ts: &mut Vec<f64>,
+) {
+    roots.clear();
+    roots.reserve(2 * bs);
+    ts.clear();
+    ts.reserve(2 * bs);
     for e in start..start + bs {
         roots.push(g.src[e]);
         ts.push(g.time[e]);
@@ -335,7 +397,6 @@ fn bench_roots(
         roots.push(rng.below(g.num_nodes) as u32);
         ts.push(g.time[e]);
     }
-    (roots, ts)
 }
 
 pub(super) fn cli_gen_data(args: &[String]) -> Result<()> {

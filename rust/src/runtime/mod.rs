@@ -9,6 +9,7 @@
 
 mod engine;
 mod manifest;
+mod pjrt_stub;
 mod tensor;
 
 pub use engine::{Engine, Executable};

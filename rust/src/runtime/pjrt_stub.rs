@@ -1,0 +1,143 @@
+//! Offline stand-in for the `xla` crate's PJRT bindings.
+//!
+//! The real backend links `xla_extension` (PJRT CPU client + HLO parser),
+//! which cannot be built in a registry-less environment. This module keeps
+//! [`super::engine`] compiling against the exact same API surface so the
+//! rest of the crate — sampler, trainer, state, scheduler — builds and
+//! tests offline. Every execution entry point returns a descriptive error;
+//! artifact-gated integration tests detect the missing `artifacts/` tree
+//! first and skip, so `cargo test` passes end to end.
+//!
+//! Restoring real execution is a two-line change: depend on the `xla`
+//! crate and swap the `use crate::runtime::pjrt_stub as xla;` alias in
+//! `engine.rs` (tracked in ROADMAP.md "Open items").
+#![allow(dead_code)]
+
+use std::path::Path;
+
+/// Stub error type (mirrors `xla::Error` for `?` / `.context(..)` use).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT backend unavailable: this build uses the offline stub; link the real `xla` \
+         bindings to execute AOT artifacts"
+            .to_string(),
+    )
+}
+
+/// Stand-in for the PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (PJRT unavailable)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, Error> {
+        if path.exists() {
+            // Parsing is deferred to the real backend; reaching this point
+            // at all means artifacts exist but the stub cannot run them.
+            Ok(HloModuleProto)
+        } else {
+            Err(Error(format!("no such HLO artifact: {}", path.display())))
+        }
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Element types the engine marshals (the real enum has many more, so the
+/// engine's catch-all match arm stays reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    Pred,
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Err(unavailable())
+    }
+}

@@ -30,6 +30,9 @@ pub struct BaselineSampler {
 
 impl BaselineSampler {
     pub fn new(g: &TemporalGraph, add_reverse: bool, cfg: SamplerConfig) -> Self {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid SamplerConfig: {e}");
+        }
         let mut adj_nbr = vec![Vec::new(); g.num_nodes];
         let mut adj_ts = vec![Vec::new(); g.num_nodes];
         let mut adj_eid = vec![Vec::new(); g.num_nodes];
@@ -50,17 +53,31 @@ impl BaselineSampler {
     /// Sample a batch — same MFG contract as the parallel sampler, computed
     /// the baseline way (sequential roots, per-query array copies).
     pub fn sample(&self, roots: &[u32], root_ts: &[f64], batch_seed: u64) -> Mfg {
-        let root_mask = vec![1.0f32; roots.len()];
-        let mut snapshots = Vec::with_capacity(self.cfg.num_snapshots);
-        for s in 0..self.cfg.num_snapshots {
-            let mut hops: Vec<MfgBlock> = Vec::new();
+        let mut mfg = Mfg::new();
+        self.sample_into(&mut mfg, roots, root_ts, batch_seed);
+        mfg
+    }
+
+    /// Arena variant mirroring `TemporalSampler::sample_into`: the MFG
+    /// blocks are reset in place. The *per-root* candidate-array copies are
+    /// deliberately kept — they are the baseline idiom being measured.
+    pub fn sample_into(&self, mfg: &mut Mfg, roots: &[u32], root_ts: &[f64], batch_seed: u64) {
+        let num_snapshots = self.cfg.num_snapshots;
+        let hops = self.cfg.layers.len();
+        mfg.snapshots.resize_with(num_snapshots, Vec::new);
+        for hop_blocks in &mut mfg.snapshots {
+            hop_blocks.resize_with(hops, MfgBlock::new);
+        }
+        for s in 0..num_snapshots {
             for (l, layer) in self.cfg.layers.iter().enumerate() {
-                let (r, ts, m) = if l == 0 {
-                    (roots.to_vec(), root_ts.to_vec(), root_mask.clone())
+                let hop_blocks = &mut mfg.snapshots[s];
+                if l == 0 {
+                    hop_blocks[0].reset_for(roots, root_ts, layer.fanout);
                 } else {
-                    hops[l - 1].next_hop_roots()
-                };
-                let mut block = MfgBlock::new_empty(r, ts, m, layer.fanout);
+                    let (prev, cur) = hop_blocks.split_at_mut(l);
+                    cur[0].reset_from_prev(&prev[l - 1], layer.fanout);
+                }
+                let block = &mut hop_blocks[l];
                 for i in 0..block.num_roots() {
                     if block.root_mask[i] == 0.0 {
                         continue;
@@ -104,8 +121,9 @@ impl BaselineSampler {
                             if count <= fanout {
                                 picked.extend(wlo..whi);
                             } else {
-                                let mut rng =
-                                    Rng::new(super::parallel_seed(self.cfg.seed, batch_seed, s, l, i));
+                                let mix =
+                                    super::parallel_seed(self.cfg.seed, batch_seed, s, l, i);
+                                let mut rng = Rng::new(mix);
                                 let mut buf = [0usize; 64];
                                 super::sample_distinct_small(&mut rng, count, fanout, &mut buf);
                                 picked.extend(buf[..fanout].iter().map(|&p| wlo + p));
@@ -119,11 +137,8 @@ impl BaselineSampler {
                         block.mask[base + k] = 1.0;
                     }
                 }
-                hops.push(block);
             }
-            snapshots.push(hops);
         }
-        Mfg { snapshots }
     }
 }
 

@@ -3,6 +3,14 @@
 //! TGL emits DGL MFGs; our equivalent is a set of dense, statically-shaped
 //! arrays per (snapshot, hop) ready for feature/state gathering and literal
 //! marshalling — the "CPU slices, device computes" split of the paper.
+//!
+//! Blocks are **arenas**: every vector supports in-place reset
+//! ([`MfgBlock::reset_for`] / [`MfgBlock::reset_from_prev`],
+//! [`Mfg::all_nodes_into`]) so a reused [`Mfg`] performs zero heap
+//! allocation at steady state — the buffer-reuse half of the pipelined
+//! epoch design (see `trainer::single`). The owning constructors
+//! ([`MfgBlock::new_empty`], [`Mfg::all_nodes`]) remain as thin wrappers
+//! for one-shot callers.
 
 /// One hop of sampled neighbors for a list of roots.
 ///
@@ -30,6 +38,21 @@ pub struct MfgBlock {
 }
 
 impl MfgBlock {
+    /// Empty arena block; shape it with [`Self::reset_for`] or
+    /// [`Self::reset_from_prev`] before filling.
+    pub fn new() -> MfgBlock {
+        MfgBlock {
+            fanout: 0,
+            roots: Vec::new(),
+            root_ts: Vec::new(),
+            root_mask: Vec::new(),
+            nbr: Vec::new(),
+            dt: Vec::new(),
+            eid: Vec::new(),
+            mask: Vec::new(),
+        }
+    }
+
     pub fn new_empty(roots: Vec<u32>, root_ts: Vec<f64>, root_mask: Vec<f32>, fanout: usize) -> Self {
         let n = roots.len() * fanout;
         MfgBlock {
@@ -42,6 +65,50 @@ impl MfgBlock {
             eid: vec![0; n],
             mask: vec![0.0; n],
         }
+    }
+
+    /// Arena reset for a hop-0 block: adopt the batch roots (all valid,
+    /// mask = 1.0) and clear every slot array to padding. Steady-state
+    /// calls reuse the existing capacities — no allocation.
+    pub fn reset_for(&mut self, roots: &[u32], root_ts: &[f64], fanout: usize) {
+        debug_assert_eq!(roots.len(), root_ts.len());
+        self.fanout = fanout;
+        self.roots.clear();
+        self.roots.extend_from_slice(roots);
+        self.root_ts.clear();
+        self.root_ts.extend_from_slice(root_ts);
+        self.root_mask.clear();
+        self.root_mask.resize(roots.len(), 1.0);
+        self.reset_slots();
+    }
+
+    /// Arena reset for a hop-l (l > 0) block: the roots are `prev`'s
+    /// sampled slots — ids, *edge* timestamps, and inherited masks — the
+    /// in-place equivalent of [`Self::next_hop_roots`].
+    pub fn reset_from_prev(&mut self, prev: &MfgBlock, fanout: usize) {
+        self.fanout = fanout;
+        self.roots.clear();
+        self.roots.extend_from_slice(&prev.nbr);
+        self.root_mask.clear();
+        self.root_mask.extend_from_slice(&prev.mask);
+        self.root_ts.clear();
+        self.root_ts.reserve(prev.num_slots());
+        for i in 0..prev.num_slots() {
+            self.root_ts.push(prev.root_ts[i / prev.fanout] - prev.dt[i] as f64);
+        }
+        self.reset_slots();
+    }
+
+    fn reset_slots(&mut self) {
+        let n = self.roots.len() * self.fanout;
+        self.nbr.clear();
+        self.nbr.resize(n, 0);
+        self.dt.clear();
+        self.dt.resize(n, 0.0);
+        self.eid.clear();
+        self.eid.resize(n, 0);
+        self.mask.clear();
+        self.mask.resize(n, 0.0);
     }
 
     pub fn num_roots(&self) -> usize {
@@ -58,7 +125,8 @@ impl MfgBlock {
     }
 
     /// The next hop's roots: this hop's sampled slots (ids, edge
-    /// timestamps, masks), flattened.
+    /// timestamps, masks), flattened. Allocating variant of
+    /// [`Self::reset_from_prev`].
     pub fn next_hop_roots(&self) -> (Vec<u32>, Vec<f64>, Vec<f32>) {
         let ts = self
             .dt
@@ -70,14 +138,25 @@ impl MfgBlock {
     }
 }
 
+impl Default for MfgBlock {
+    fn default() -> Self {
+        MfgBlock::new()
+    }
+}
+
 /// Full sampler output: `snapshots[s][l]` is hop l+1 of snapshot s.
 /// Non-snapshot models have `snapshots.len() == 1`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Mfg {
     pub snapshots: Vec<Vec<MfgBlock>>,
 }
 
 impl Mfg {
+    /// Empty arena; pass to `TemporalSampler::sample_into` to (re)fill.
+    pub fn new() -> Mfg {
+        Mfg { snapshots: Vec::new() }
+    }
+
     /// Total sampled (valid) neighbor slots across all blocks.
     pub fn total_valid(&self) -> usize {
         self.snapshots
@@ -93,11 +172,15 @@ impl Mfg {
         (&b.roots, &b.root_ts)
     }
 
-    /// Every (node, time, valid) appearing anywhere in the MFG — batch
-    /// roots first, then sampled slots of every snapshot/hop in order.
-    /// This is the gather list for node memory / features.
-    pub fn all_nodes(&self) -> Vec<(u32, f64, bool)> {
-        let mut out = Vec::new();
+    /// Fill `out` with every (node, time, valid) appearing anywhere in the
+    /// MFG — batch roots first, then sampled slots of every snapshot/hop
+    /// in order. This is the gather list for node memory / features; the
+    /// buffer is cleared and reused, so steady-state calls do not allocate.
+    pub fn all_nodes_into(&self, out: &mut Vec<(u32, f64, bool)>) {
+        out.clear();
+        if self.snapshots.is_empty() {
+            return;
+        }
         let b0 = &self.snapshots[0][0];
         for i in 0..b0.roots.len() {
             out.push((b0.roots[i], b0.root_ts[i], b0.root_mask[i] == 1.0));
@@ -110,6 +193,12 @@ impl Mfg {
                 }
             }
         }
+    }
+
+    /// Allocating wrapper around [`Self::all_nodes_into`].
+    pub fn all_nodes(&self) -> Vec<(u32, f64, bool)> {
+        let mut out = Vec::new();
+        self.all_nodes_into(&mut out);
         out
     }
 }
@@ -142,7 +231,55 @@ mod tests {
         assert_eq!(nodes.len(), 3);
         assert_eq!(nodes[0], (7, 50.0, true));
         assert_eq!(nodes[1], (1, 40.0, true));
-        assert_eq!(nodes[2].2, false);
+        assert!(!nodes[2].2);
         assert_eq!(m.total_valid(), 1);
+    }
+
+    #[test]
+    fn reset_from_prev_matches_next_hop_roots() {
+        let mut prev = MfgBlock::new_empty(vec![10, 11], vec![100.0, 200.0], vec![1.0, 1.0], 2);
+        prev.nbr = vec![1, 2, 3, 4];
+        prev.dt = vec![5.0, 10.0, 20.0, 0.0];
+        prev.mask = vec![1.0, 1.0, 1.0, 0.0];
+        let (ids, ts, mask) = prev.next_hop_roots();
+        let mut b = MfgBlock::new();
+        b.reset_from_prev(&prev, 3);
+        assert_eq!(b.roots, ids);
+        assert_eq!(b.root_ts, ts);
+        assert_eq!(b.root_mask, mask);
+        assert_eq!(b.num_slots(), 4 * 3);
+        assert!(b.mask.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn reset_for_clears_stale_slots_without_realloc() {
+        let mut b = MfgBlock::new();
+        b.reset_for(&[1, 2, 3], &[10.0, 11.0, 12.0], 4);
+        b.nbr.fill(9);
+        b.mask.fill(1.0);
+        let nbr_ptr = b.nbr.as_ptr();
+        b.reset_for(&[4, 5, 6], &[20.0, 21.0, 22.0], 4);
+        assert_eq!(b.roots, vec![4, 5, 6]);
+        assert_eq!(b.root_mask, vec![1.0; 3]);
+        assert!(b.nbr.iter().all(|&v| v == 0));
+        assert!(b.mask.iter().all(|&m| m == 0.0));
+        assert_eq!(b.nbr.as_ptr(), nbr_ptr, "same-shape reset must reuse the buffer");
+    }
+
+    #[test]
+    fn all_nodes_into_reuses_buffer() {
+        let mut b = MfgBlock::new_empty(vec![7], vec![50.0], vec![1.0], 2);
+        b.nbr = vec![1, 0];
+        b.dt = vec![10.0, 0.0];
+        b.mask = vec![1.0, 0.0];
+        let m = Mfg { snapshots: vec![vec![b]] };
+        let mut out = Vec::new();
+        m.all_nodes_into(&mut out);
+        assert_eq!(out.len(), 3);
+        let ptr = out.as_ptr();
+        m.all_nodes_into(&mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.as_ptr(), ptr, "second gather must reuse the buffer");
+        assert!(Mfg::new().all_nodes().is_empty());
     }
 }

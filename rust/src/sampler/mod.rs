@@ -8,6 +8,14 @@
 //! [`PointerMode`]) resolve races when the same node appears in a batch at
 //! different timestamps; sampled neighbors are strictly earlier than their
 //! root (information-leak guard).
+//!
+//! Sampling feeds the trainer's epoch pipeline: `sample_into` refills a
+//! caller-owned [`Mfg`] arena with zero steady-state heap allocation, and
+//! pointer reads self-correct, so the trainer may prefetch future batches
+//! off the critical path (knobs: `TrainerCfg::prefetch` on/off,
+//! `TrainerCfg::prefetch_depth`; both preserve bitwise determinism).
+//! Config limits ([`MAX_SNAPSHOTS`], [`MAX_FANOUT`]) are enforced at
+//! construction via [`SamplerConfig::validate`].
 
 mod baseline;
 mod mfg;
@@ -19,6 +27,17 @@ pub use mfg::{Mfg, MfgBlock};
 pub use parallel::{SampleStats, TemporalSampler};
 pub(crate) use parallel::{mix_seed as parallel_seed, sample_distinct_small};
 pub use pointer::{PointerMode, PointerState};
+
+/// Largest supported snapshot count S. The hot sampling kernel keeps its
+/// S+2 window boundaries in a fixed stack buffer, so the bound is enforced
+/// at sampler construction ([`SamplerConfig::validate`]) instead of
+/// silently overflowing (the pre-validation code documented "up to 16
+/// snapshots" but never checked it).
+pub const MAX_SNAPSHOTS: usize = 16;
+
+/// Largest supported per-layer fanout: the uniform strategy draws into a
+/// fixed 64-slot stack buffer (see `sample_distinct_small`).
+pub const MAX_FANOUT: usize = 64;
 
 /// Neighbor selection strategy within the candidate window (paper §2.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,5 +119,32 @@ impl SamplerConfig {
 
     pub fn hops(&self) -> usize {
         self.layers.len()
+    }
+
+    /// Reject configurations the fixed-size sampling kernels cannot hold.
+    /// Called by both sampler constructors; kept public so config-file
+    /// loaders can surface the error before building a graph.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "sampler config needs at least one layer");
+        anyhow::ensure!(
+            (1..=MAX_SNAPSHOTS).contains(&self.num_snapshots),
+            "num_snapshots {} out of range [1, {MAX_SNAPSHOTS}]",
+            self.num_snapshots
+        );
+        for (l, layer) in self.layers.iter().enumerate() {
+            anyhow::ensure!(
+                (1..=MAX_FANOUT).contains(&layer.fanout),
+                "layer {l} fanout {} out of range [1, {MAX_FANOUT}]",
+                layer.fanout
+            );
+        }
+        if self.num_snapshots > 1 {
+            anyhow::ensure!(
+                self.snapshot_len.is_finite() && self.snapshot_len > 0.0,
+                "snapshot_len must be positive and finite with {} snapshots",
+                self.num_snapshots
+            );
+        }
+        Ok(())
     }
 }

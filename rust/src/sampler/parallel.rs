@@ -11,8 +11,16 @@
 //! map 1:1 onto Figure 4b; phase timing is collected only when
 //! [`SamplerConfig::collect_stats`] is set (the `Instant` calls would
 //! otherwise dominate sub-microsecond roots).
+//!
+//! Two sampling entry points: [`TemporalSampler::sample`] allocates a fresh
+//! [`Mfg`]; [`TemporalSampler::sample_into`] refills a caller-owned arena
+//! with zero steady-state allocation. Because the snapshot pointers are
+//! monotone maxima whose reads always *correct* to the exact boundary (see
+//! [`super::PointerState`]), sampling results are independent of batch
+//! interleaving — the property the pipelined trainer relies on to prefetch
+//! batch i+1's MFG while batch i computes.
 
-use super::{LayerCfg, Mfg, MfgBlock, PointerState, SamplerConfig, Strategy};
+use super::{LayerCfg, Mfg, MfgBlock, PointerState, SamplerConfig, Strategy, MAX_SNAPSHOTS};
 use crate::graph::TCsr;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
@@ -75,7 +83,13 @@ unsafe impl<T: Send> Send for OutPtr<T> {}
 unsafe impl<T: Send> Sync for OutPtr<T> {}
 
 impl<'g> TemporalSampler<'g> {
+    /// Build a sampler. Panics on a config the fixed-size kernels cannot
+    /// hold (see [`SamplerConfig::validate`]); use `validate()` first to
+    /// surface the error as a `Result`.
     pub fn new(csr: &'g TCsr, cfg: SamplerConfig) -> Self {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid SamplerConfig: {e}");
+        }
         let ptrs = PointerState::new(
             csr.num_nodes,
             cfg.num_snapshots,
@@ -98,30 +112,43 @@ impl<'g> TemporalSampler<'g> {
     /// Sample the multi-hop, multi-snapshot MFG for a batch of roots.
     ///
     /// `batch_seed` + per-root indexes make the draw deterministic and
-    /// independent of the thread count.
+    /// independent of the thread count. Allocating wrapper around
+    /// [`Self::sample_into`].
     pub fn sample(&self, roots: &[u32], root_ts: &[f64], batch_seed: u64) -> Mfg {
+        let mut mfg = Mfg::new();
+        self.sample_into(&mut mfg, roots, root_ts, batch_seed);
+        mfg
+    }
+
+    /// Sample into a reusable [`Mfg`] arena. The arena's blocks are reset
+    /// in place (`reset_for` / `reset_from_prev`), so once the buffer
+    /// capacities are warm, steady-state sampling performs **zero heap
+    /// allocation** — verified by `tests/alloc.rs`. Draws are identical to
+    /// [`Self::sample`] for the same `(roots, root_ts, batch_seed)`.
+    pub fn sample_into(&self, mfg: &mut Mfg, roots: &[u32], root_ts: &[f64], batch_seed: u64) {
         assert_eq!(roots.len(), root_ts.len());
-        let root_mask = vec![1.0f32; roots.len()];
-        let mut snapshots = Vec::with_capacity(self.cfg.num_snapshots);
-        for s in 0..self.cfg.num_snapshots {
-            let mut hops: Vec<MfgBlock> = Vec::with_capacity(self.cfg.layers.len());
+        let num_snapshots = self.cfg.num_snapshots;
+        let hops = self.cfg.layers.len();
+        mfg.snapshots.resize_with(num_snapshots, Vec::new);
+        for hop_blocks in &mut mfg.snapshots {
+            hop_blocks.resize_with(hops, MfgBlock::new);
+        }
+        for s in 0..num_snapshots {
             for (l, layer) in self.cfg.layers.iter().enumerate() {
                 let t_mfg = self.cfg.collect_stats.then(Instant::now);
-                let (r, ts, m) = if l == 0 {
-                    (roots.to_vec(), root_ts.to_vec(), root_mask.clone())
+                let hop_blocks = &mut mfg.snapshots[s];
+                if l == 0 {
+                    hop_blocks[0].reset_for(roots, root_ts, layer.fanout);
                 } else {
-                    hops[l - 1].next_hop_roots()
-                };
-                let mut block = MfgBlock::new_empty(r, ts, m, layer.fanout);
+                    let (prev, cur) = hop_blocks.split_at_mut(l);
+                    cur[0].reset_from_prev(&prev[l - 1], layer.fanout);
+                }
                 if let Some(t) = t_mfg {
                     self.stats.mfg_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 }
-                self.fill_block(&mut block, *layer, s, l, batch_seed);
-                hops.push(block);
+                self.fill_block(&mut hop_blocks[l], *layer, s, l, batch_seed);
             }
-            snapshots.push(hops);
         }
-        Mfg { snapshots }
     }
 
     /// Fill one (snapshot, hop) block in parallel over its roots.
@@ -185,7 +212,8 @@ impl<'g> TemporalSampler<'g> {
         let cfg = &self.cfg;
         let fanout = layer.fanout;
         let collect = cfg.collect_stats;
-        let mut windows = [0usize; 18]; // up to 16 snapshots
+        // S+2 boundaries; S ≤ MAX_SNAPSHOTS is enforced at construction.
+        let mut windows = [0usize; MAX_SNAPSHOTS + 2];
         let (mut ptr_ns, mut bs_ns, mut spl_ns) = (0u64, 0u64, 0u64);
         let (mut scans, mut bss, mut slots) = (0u64, 0u64, 0u64);
         for i in range {
@@ -487,6 +515,71 @@ mod tests {
         let c = run(PointerMode::Atomic);
         assert_eq!(a, b);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    #[should_panic(expected = "num_snapshots")]
+    fn too_many_snapshots_rejected_at_construction() {
+        // Regression: the windows kernel buffer holds MAX_SNAPSHOTS + 2
+        // boundaries; an unchecked larger S used to overflow it silently.
+        let g = chain(4);
+        let csr = crate::graph::TCsr::build(&g, false);
+        let cfg = SamplerConfig::snapshots(1, 2, crate::sampler::MAX_SNAPSHOTS + 1, 1.0, 1);
+        let _ = TemporalSampler::new(&csr, cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "fanout")]
+    fn oversized_fanout_rejected_at_construction() {
+        let g = chain(4);
+        let csr = crate::graph::TCsr::build(&g, false);
+        let cfg =
+            SamplerConfig::uniform_hops(1, crate::sampler::MAX_FANOUT + 1, Strategy::Uniform, 1);
+        let _ = TemporalSampler::new(&csr, cfg);
+    }
+
+    #[test]
+    fn max_snapshots_config_is_accepted() {
+        let g = chain(40);
+        let csr = crate::graph::TCsr::build(&g, false);
+        let cfg = SamplerConfig::snapshots(1, 3, crate::sampler::MAX_SNAPSHOTS, 2.0, 2);
+        let s = TemporalSampler::new(&csr, cfg);
+        let mfg = s.sample(&[0], &[35.0], 1);
+        assert_eq!(mfg.snapshots.len(), crate::sampler::MAX_SNAPSHOTS);
+    }
+
+    #[test]
+    fn sample_into_arena_matches_fresh_and_reuses_buffers() {
+        let g = chain(300);
+        let csr = crate::graph::TCsr::build(&g, true);
+        let cfg = SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, 4);
+        let fresh = TemporalSampler::new(&csr, cfg.clone());
+        let arena_s = TemporalSampler::new(&csr, cfg);
+        let mut arena = Mfg::new();
+        let mut slot_ptr = std::ptr::null();
+        for bi in 0..4u64 {
+            let roots: Vec<u32> = (0..64).map(|i| (i % 13) as u32).collect();
+            let ts: Vec<f64> = (0..64).map(|i| 100.0 + bi as f64 * 64.0 + i as f64).collect();
+            let a = fresh.sample(&roots, &ts, bi);
+            arena_s.sample_into(&mut arena, &roots, &ts, bi);
+            for (ha, hb) in a.snapshots.iter().zip(&arena.snapshots) {
+                for (ba, bb) in ha.iter().zip(hb) {
+                    assert_eq!(ba.roots, bb.roots, "batch {bi}");
+                    assert_eq!(ba.root_ts, bb.root_ts, "batch {bi}");
+                    assert_eq!(ba.root_mask, bb.root_mask, "batch {bi}");
+                    assert_eq!(ba.nbr, bb.nbr, "batch {bi}");
+                    assert_eq!(ba.dt, bb.dt, "batch {bi}");
+                    assert_eq!(ba.eid, bb.eid, "batch {bi}");
+                    assert_eq!(ba.mask, bb.mask, "batch {bi}");
+                }
+            }
+            let p = arena.snapshots[0][1].nbr.as_ptr();
+            if bi == 1 {
+                slot_ptr = p;
+            } else if bi > 1 {
+                assert_eq!(p, slot_ptr, "same-shape batches must not reallocate the arena");
+            }
+        }
     }
 
     #[test]

@@ -32,6 +32,21 @@ pub struct EpochPlan {
     pub batches: Vec<std::ops::Range<usize>>,
 }
 
+impl EpochPlan {
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// `(batch_seed, edge_window)` pairs in chronological order. The seed
+    /// is the batch's epoch-relative index — THE per-batch seed contract
+    /// shared by the sequential, pipelined, and multi-worker trainers, so
+    /// every execution mode draws identical negatives and samples and
+    /// produces bitwise-identical losses.
+    pub fn seeded(&self) -> impl Iterator<Item = (u64, std::ops::Range<usize>)> + '_ {
+        self.batches.iter().enumerate().map(|(i, r)| (i as u64, r.clone()))
+    }
+}
+
 impl ChunkScheduler {
     /// `chunk_size == batch_size` disables sub-batch rotation (the paper's
     /// "no chunk" baseline). `chunk_size` must divide `batch_size`.
@@ -142,6 +157,19 @@ mod tests {
         let mut s = ChunkScheduler::new(1000, 300, 100, 1).unwrap();
         let plan = s.epoch();
         assert!(plan.batches.iter().all(|b| b.len() == 300));
+    }
+
+    #[test]
+    fn seeded_pairs_are_epoch_relative_indices() {
+        let mut s = ChunkScheduler::plain(1000, 300);
+        let plan = s.epoch();
+        assert_eq!(plan.num_batches(), 4);
+        let pairs: Vec<_> = plan.seeded().collect();
+        assert_eq!(pairs.len(), 4);
+        for (i, (seed, range)) in pairs.iter().enumerate() {
+            assert_eq!(*seed, i as u64);
+            assert_eq!(range, &plan.batches[i]);
+        }
     }
 
     #[test]

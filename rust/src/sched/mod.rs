@@ -17,7 +17,7 @@ use crate::util::rng::Rng;
 
 /// One training mini-batch: `bs` positive edges plus `bs` sampled negative
 /// destinations (the standard 1:1 negative sampling of the baselines).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Batch {
     /// Chronological edge-id range this batch covers.
     pub edge_range: std::ops::Range<usize>,
@@ -43,30 +43,55 @@ impl Batch {
     /// `len()`, with the positives' timestamps replicated onto the
     /// negatives (a negative is "what else could have happened at t").
     pub fn roots(&self) -> (Vec<u32>, Vec<f64>) {
-        let mut nodes = Vec::with_capacity(3 * self.len());
+        let mut nodes = Vec::new();
+        let mut ts = Vec::new();
+        self.roots_into(&mut nodes, &mut ts);
+        (nodes, ts)
+    }
+
+    /// In-place variant of [`Self::roots`]: refills caller-owned buffers so
+    /// the pipelined trainer's steady state does not allocate.
+    pub fn roots_into(&self, nodes: &mut Vec<u32>, ts: &mut Vec<f64>) {
+        nodes.clear();
+        nodes.reserve(3 * self.len());
         nodes.extend_from_slice(&self.src);
         nodes.extend_from_slice(&self.dst);
         nodes.extend_from_slice(&self.neg);
-        let mut ts = Vec::with_capacity(3 * self.len());
+        ts.clear();
+        ts.reserve(3 * self.len());
         for _ in 0..3 {
             ts.extend_from_slice(&self.ts);
         }
-        (nodes, ts)
     }
 }
 
 /// Materialize a batch from an edge window, drawing negatives uniformly
 /// from `[0, num_nodes)` (matching the baselines' corruption scheme).
 pub fn make_batch(g: &TemporalGraph, range: std::ops::Range<usize>, rng: &mut Rng) -> Batch {
+    let mut b = Batch::default();
+    make_batch_into(g, range, rng, &mut b);
+    b
+}
+
+/// In-place variant of [`make_batch`]: refills a recycled [`Batch`] arena.
+pub fn make_batch_into(
+    g: &TemporalGraph,
+    range: std::ops::Range<usize>,
+    rng: &mut Rng,
+    b: &mut Batch,
+) {
     let n = range.len();
-    let mut b = Batch {
-        edge_range: range.clone(),
-        src: Vec::with_capacity(n),
-        dst: Vec::with_capacity(n),
-        neg: Vec::with_capacity(n),
-        ts: Vec::with_capacity(n),
-        eids: Vec::with_capacity(n),
-    };
+    b.edge_range = range.clone();
+    b.src.clear();
+    b.src.reserve(n);
+    b.dst.clear();
+    b.dst.reserve(n);
+    b.neg.clear();
+    b.neg.reserve(n);
+    b.ts.clear();
+    b.ts.reserve(n);
+    b.eids.clear();
+    b.eids.reserve(n);
     for e in range {
         b.src.push(g.src[e]);
         b.dst.push(g.dst[e]);
@@ -74,7 +99,6 @@ pub fn make_batch(g: &TemporalGraph, range: std::ops::Range<usize>, rng: &mut Rn
         b.ts.push(g.time[e]);
         b.eids.push(e as u32);
     }
-    b
 }
 
 #[cfg(test)]

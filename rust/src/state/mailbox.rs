@@ -79,17 +79,34 @@ impl Mailbox {
         out_mail.reserve(nodes.len() * self.slots * self.dim);
         out_dt.reserve(nodes.len() * self.slots);
         out_mask.reserve(nodes.len() * self.slots);
+        if self.slots == 1 {
+            // TGN/JODIE fast path (the overwhelmingly common config): the
+            // single slot needs no ring arithmetic, and this gather sits on
+            // the trainer's JIT critical path (FAST's memory-I/O point).
+            for &(v, t, node_valid) in nodes {
+                let vi = v as usize;
+                if node_valid && self.count[vi] > 0 {
+                    let base = vi * self.dim;
+                    out_mail.extend_from_slice(&self.mail[base..base + self.dim]);
+                    out_dt.push((t - self.mail_ts[vi]).max(0.0) as f32);
+                    out_mask.push(1.0);
+                } else {
+                    out_mail.extend(std::iter::repeat_n(0.0, self.dim));
+                    out_dt.push(0.0);
+                    out_mask.push(0.0);
+                }
+            }
+            return;
+        }
         for &(v, t, node_valid) in nodes {
             let vi = v as usize;
             let have = if node_valid { self.valid(v) } else { 0 };
             for k in 0..self.slots {
                 if k < have {
                     // Newest-first: k-th newest is at ring position
-                    // (count - 1 - k) % slots.
-                    let pos = ((self.count[vi] as usize + self.slots - 1 - k)
-                        % self.slots
-                        + self.slots)
-                        % self.slots;
+                    // (count - 1 - k) % slots; k ≤ have - 1 ≤ count - 1
+                    // keeps the numerator non-negative.
+                    let pos = (self.count[vi] as usize + self.slots - 1 - k) % self.slots;
                     let base = (vi * self.slots + pos) * self.dim;
                     out_mail.extend_from_slice(&self.mail[base..base + self.dim]);
                     out_dt.push((t - self.mail_ts[vi * self.slots + pos]).max(0.0) as f32);
@@ -173,6 +190,17 @@ mod tests {
         mb.write(0, 1.0, &[9.0]);
         mb.reset();
         assert_eq!(mb.valid(0), 0);
+    }
+
+    #[test]
+    fn single_slot_unwritten_node_gathers_zero() {
+        let mut mb = Mailbox::new(3, 1, 2);
+        mb.write(0, 1.0, &[7.0, 8.0]);
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(0, 2.0, true), (1, 2.0, true)], &mut mail, &mut dt, &mut mask);
+        assert_eq!(mail, vec![7.0, 8.0, 0.0, 0.0]);
+        assert_eq!(dt, vec![1.0, 0.0]);
+        assert_eq!(mask, vec![1.0, 0.0]);
     }
 
     #[test]

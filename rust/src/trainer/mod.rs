@@ -2,12 +2,19 @@
 //! ③ marshal → ④⑤ execute the AOT step (memory refresh, message passing,
 //! loss, backprop, Adam — all in-graph) → ⑥ scatter memory/mailbox
 //! updates. Python never runs here.
+//!
+//! Steps ① and the graph-only part of ②③ are *prefetchable* and run on a
+//! producer thread ahead of the compute stream (see [`Preparer`] and the
+//! pipelined epoch in `single.rs`); the state-dependent part of ② and
+//! step ⑥ stay on the critical path. Knobs: `TrainerCfg::prefetch`
+//! (default on; bitwise-identical to sequential) and
+//! `TrainerCfg::prefetch_depth` (bounded queue depth, default 2).
 
 mod checkpoint;
 mod multi;
 mod nodeclf;
 mod single;
 
-pub use multi::{MultiTrainer, MultiEpochStats};
+pub use multi::{MultiEpochStats, MultiTrainer};
 pub use nodeclf::{node_classification, NodeClfResult};
-pub use single::{EpochStats, EvalResult, Trainer, TrainerCfg};
+pub use single::{EpochStats, EvalResult, PrepArena, PreparedBatch, Preparer, Trainer, TrainerCfg};

@@ -23,6 +23,8 @@ pub struct MultiEpochStats {
     pub global_steps: usize,
     pub seconds: f64,
     pub workers: usize,
+    /// Per-batch losses in chronological (worker-id) order.
+    pub losses: Vec<f64>,
 }
 
 /// Orchestrates data-parallel epochs over a shared [`Trainer`].
@@ -37,7 +39,11 @@ impl MultiTrainer {
 
     /// One epoch: groups of `workers` consecutive batches execute
     /// concurrently; state is synchronized after every group.
-    pub fn train_epoch(&self, trainer: &mut Trainer<'_>, plan: &EpochPlan) -> Result<MultiEpochStats> {
+    pub fn train_epoch(
+        &self,
+        trainer: &mut Trainer<'_>,
+        plan: &EpochPlan,
+    ) -> Result<MultiEpochStats> {
         trainer.reset_chronology();
         let t0 = Instant::now();
         let spec = trainer.model.mf.step("train")?.clone();
@@ -52,11 +58,16 @@ impl MultiTrainer {
             (0, 0)
         };
 
-        let mut loss_sum = 0.0;
+        let mut losses = Vec::with_capacity(plan.batches.len());
         let mut steps = 0usize;
         for (gi, group) in plan.batches.chunks(self.workers).enumerate() {
             // Parallel phase: prepare + execute each worker's batch against
-            // the same state snapshot.
+            // the same state snapshot. Workers use the same static/JIT
+            // split as the pipelined single trainer; the per-batch seed is
+            // the global batch index, so negative/sampling *draws* match
+            // the sequential path (losses do not for workers > 1: a group
+            // shares one state snapshot — the paper's intra-group
+            // dependency discard).
             let results: Vec<_> = std::thread::scope(|scope| {
                 let handles: Vec<_> = group
                     .iter()
@@ -66,11 +77,11 @@ impl MultiTrainer {
                         let range = range.clone();
                         let seed = (gi * self.workers + w) as u64;
                         scope.spawn(move || -> Result<_> {
-                            let (batch, mfg, inputs, _, _) =
-                                t.prepare_range(range, seed, true)?;
+                            let mut pb = t.prep.prepare_static(range, seed, true)?;
+                            let inputs = t.prep.finish_inputs(&t.state, &mut pb)?;
                             let outputs =
                                 t.model.train_exe.run(&inputs).context("worker train step")?;
-                            Ok((batch, mfg, outputs))
+                            Ok((pb, outputs))
                         })
                     })
                     .collect();
@@ -88,8 +99,8 @@ impl MultiTrainer {
             let mut params = vec![0.0f32; pc];
             let mut am = vec![0.0f32; pc];
             let mut av = vec![0.0f32; pc];
-            for (_, _, outputs) in &group_out {
-                loss_sum += outputs[i_loss].scalar_f32()? as f64;
+            for (_, outputs) in &group_out {
+                losses.push(outputs[i_loss].scalar_f32()? as f64);
                 for (acc, src) in [
                     (&mut params, outputs[i_params].as_f32()?),
                     (&mut am, outputs[i_m].as_f32()?),
@@ -105,10 +116,10 @@ impl MultiTrainer {
             trainer.state.adam_v = av;
             trainer.state.step += 1.0;
             if uses_memory {
-                for (batch, mfg, outputs) in &group_out {
+                for (pb, outputs) in &group_out {
                     trainer.apply_state_updates(
-                        batch,
-                        mfg.as_ref(),
+                        &pb.batch,
+                        pb.mfg.as_ref(),
                         &outputs[i_mem],
                         &outputs[i_mail],
                     )?;
@@ -117,10 +128,11 @@ impl MultiTrainer {
             steps += 1;
         }
         Ok(MultiEpochStats {
-            mean_loss: loss_sum / plan.batches.len().max(1) as f64,
+            mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
             global_steps: steps,
             seconds: t0.elapsed().as_secs_f64(),
             workers: self.workers,
+            losses,
         })
     }
 }
@@ -133,6 +145,7 @@ impl From<MultiEpochStats> for EpochStats {
             mean_loss: m.mean_loss,
             batches: m.global_steps * m.workers,
             seconds: m.seconds,
+            losses: m.losses,
         }
     }
 }

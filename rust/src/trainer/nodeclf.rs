@@ -50,15 +50,18 @@ pub fn node_classification(
     let mut cursor = 0usize; // next label to harvest
     let mut s = 0usize;
     let n_edges = trainer.graph.num_edges();
+    // Harvest buffers are hoisted out of the replay loop and recycled
+    // (clear, not reallocate) — the same buffer-reuse discipline as the
+    // pipelined trainer's sampling path.
+    let mut batch_nodes = Vec::new();
+    let mut batch_ts = Vec::new();
+    let mut batch_y: Vec<u32> = Vec::new();
     while s < n_edges && cursor < labels.len() {
         let e = (s + bs).min(n_edges);
         let window_end = if e == n_edges { f64::INFINITY } else { trainer.graph.time[e] };
         // Replay this edge window (eval step updates memory).
         trainer.eval_range(s..e).context("replay window")?;
         // Harvest labels that fall before the next window.
-        let mut batch_nodes = Vec::new();
-        let mut batch_ts = Vec::new();
-        let mut batch_y = Vec::new();
         while cursor < labels.len() && labels[cursor].time <= window_end {
             batch_nodes.push(labels[cursor].node);
             batch_ts.push(labels[cursor].time);
@@ -77,6 +80,9 @@ pub fn node_classification(
             let rows = trainer.embed_nodes(&batch_nodes, &batch_ts)?;
             embs.extend_from_slice(&rows);
             ys.extend_from_slice(&batch_y);
+            batch_nodes.clear();
+            batch_ts.clear();
+            batch_y.clear();
         }
         s = e;
     }

@@ -1,16 +1,37 @@
-//! Single-device trainer.
+//! Single-device trainer, with pipelined epoch execution.
+//!
+//! Batch preparation is split at the state boundary (the TGL insight that
+//! the sampler can run off the critical path):
+//!
+//! - **Prefetchable** ([`Preparer::prepare_static`]): negative sampling,
+//!   MFG sampling, and every gather that depends only on the graph —
+//!   node/edge features, hop dt/mask tensors, constants. Depends only on
+//!   the T-CSR and the monotone (order-independent, self-correcting)
+//!   snapshot pointers, so it can run for batch i+1 while batch i computes.
+//! - **Just-in-time** ([`Preparer::finish_inputs`]): parameters, Adam
+//!   moments, step counter, node-memory and mailbox gathers — everything
+//!   that depends on batch i-1's updates.
+//!
+//! [`Trainer::train_epoch`] runs a two-stage pipeline over a bounded
+//! double-buffered queue: a producer thread prepares batches ahead
+//! (`TrainerCfg::prefetch_depth` in flight) while the consumer executes the
+//! AOT step and applies state updates. Consumed batches hand their buffers
+//! back to the producer ([`PrepArena`]), so the steady-state sampling path
+//! performs zero heap allocation. Per-root seeding makes all draws
+//! independent of execution mode: pipelined and sequential epochs produce
+//! bitwise-identical losses (enforced by `rust/tests/integration.rs`).
 
 use crate::graph::{TCsr, TemporalGraph};
 use crate::metrics::average_precision;
 use crate::models::Model;
 use crate::runtime::Tensor;
 use crate::sampler::{Mfg, SamplerConfig, Strategy, TemporalSampler};
-use crate::sched::{make_batch, Batch, EpochPlan};
+use crate::sched::{make_batch_into, Batch, EpochPlan};
 use crate::state::{Mailbox, NodeMemory};
 use crate::util::rng::Rng;
 use crate::util::stats::PhaseTimer;
 use anyhow::{ensure, Context, Result};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Trainer options (everything else comes from the manifest dims).
 #[derive(Debug, Clone)]
@@ -24,6 +45,11 @@ pub struct TrainerCfg {
     pub deliver_to_neighbors: bool,
     /// JODIE: Δt normalization for the time-projection embedding.
     pub dt_scale: f32,
+    /// Overlap batch preparation with compute (the pipelined epoch).
+    /// Bitwise-identical to the sequential path; off → strictly serial.
+    pub prefetch: bool,
+    /// Bound on prepared-batches in flight (the double-buffer depth).
+    pub prefetch_depth: usize,
 }
 
 impl TrainerCfg {
@@ -40,6 +66,8 @@ impl TrainerCfg {
             snapshot_len: f64::INFINITY,
             deliver_to_neighbors: model.arch == "apan",
             dt_scale: (1.0 / mean_gap.max(1e-9)) as f32,
+            prefetch: true,
+            prefetch_depth: 2,
         }
     }
 }
@@ -60,6 +88,9 @@ pub struct EpochStats {
     pub mean_loss: f64,
     pub batches: usize,
     pub seconds: f64,
+    /// Per-batch losses in chronological order (pipeline determinism is
+    /// asserted against these, bit for bit).
+    pub losses: Vec<f64>,
 }
 
 /// Link-prediction evaluation result.
@@ -70,13 +101,430 @@ pub struct EvalResult {
     pub edges: usize,
 }
 
+/// The prefetchable half of the trainer: model/graph handles, the sampler,
+/// and the config — everything [`Self::prepare_static`] needs, and nothing
+/// the consumer mutates. Lives as its own struct so the pipelined epoch can
+/// borrow it on the producer thread while the trainer's mutable state stays
+/// with the consumer.
+pub struct Preparer<'g> {
+    pub model: &'g Model,
+    pub graph: &'g TemporalGraph,
+    sampler: Option<TemporalSampler<'g>>,
+    pub cfg: TrainerCfg,
+}
+
+/// Recyclable buffers of a consumed [`PreparedBatch`]: the consumer sends
+/// these back to the producer so steady-state preparation reuses every
+/// sampling-path allocation (MFG arena, gather list, batch vectors).
+#[derive(Default)]
+pub struct PrepArena {
+    mfg: Option<Mfg>,
+    nodes: Vec<(u32, f64, bool)>,
+    batch: Batch,
+    padded: Batch,
+    roots: Vec<u32>,
+    root_ts: Vec<f64>,
+}
+
+/// A batch after the prefetchable stage: sampled MFG, gather list, and the
+/// static input tensors. State-dependent input slots are `None` until
+/// [`Preparer::finish_inputs`] fills them just-in-time.
+pub struct PreparedBatch {
+    pub batch: Batch,
+    pub n_valid: usize,
+    pub mfg: Option<Mfg>,
+    padded: Batch,
+    nodes: Vec<(u32, f64, bool)>,
+    inputs: Vec<Option<Tensor>>,
+    roots: Vec<u32>,
+    root_ts: Vec<f64>,
+    train: bool,
+    pub t_sample: Duration,
+    pub t_static: Duration,
+}
+
+impl PreparedBatch {
+    /// Recycle the buffers for the next prepare call.
+    pub fn into_arena(self) -> PrepArena {
+        PrepArena {
+            mfg: self.mfg,
+            nodes: self.nodes,
+            batch: self.batch,
+            padded: self.padded,
+            roots: self.roots,
+            root_ts: self.root_ts,
+        }
+    }
+}
+
+/// Input names whose tensors depend on mutable training state (parameters,
+/// optimizer moments, node memory, mailbox) — everything else is static
+/// w.r.t. the graph and safe to prefetch.
+fn is_state_input(name: &str) -> bool {
+    matches!(
+        name,
+        "params" | "adam_m" | "adam_v" | "step" | "mem" | "mem_dt" | "mail" | "mail_dt"
+            | "mail_mask"
+    )
+}
+
+impl<'g> Preparer<'g> {
+    /// Shared sampler (for stats/reset); `None` for 0-hop models.
+    pub fn sampler(&self) -> Option<&TemporalSampler<'g>> {
+        self.sampler.as_ref()
+    }
+
+    /// Prefetchable stage over an edge window: negative draw, padding,
+    /// MFG sampling, static gathers. `&self` and state-free, so it can run
+    /// on a producer thread (or a multi-trainer worker) concurrently with
+    /// the consumer. Negatives come from a per-batch RNG, so results are
+    /// independent of which thread prepares which batch.
+    pub fn prepare_static(
+        &self,
+        range: std::ops::Range<usize>,
+        batch_seed: u64,
+        train: bool,
+    ) -> Result<PreparedBatch> {
+        self.prepare_static_reuse(range, batch_seed, train, PrepArena::default())
+    }
+
+    /// [`Self::prepare_static`] recycling a consumed batch's buffers: at
+    /// steady state the whole sampling path allocates nothing.
+    pub fn prepare_static_reuse(
+        &self,
+        range: std::ops::Range<usize>,
+        batch_seed: u64,
+        train: bool,
+        arena: PrepArena,
+    ) -> Result<PreparedBatch> {
+        let bs = self.model.dim("bs");
+        ensure!(range.len() <= bs, "batch {} exceeds compiled bs {bs}", range.len());
+        let PrepArena { mfg, nodes, mut batch, mut padded, roots, root_ts } = arena;
+        let mut rng = Rng::new(self.cfg.seed ^ batch_seed.wrapping_mul(0x9e37_79b9));
+        make_batch_into(self.graph, range, &mut rng, &mut batch);
+        let n_valid = batch.len();
+        pad_batch_into(&batch, bs, &mut padded);
+        self.static_stage(batch, padded, n_valid, batch_seed, train, mfg, nodes, roots, root_ts)
+    }
+
+    /// Prefetchable stage for an externally assembled, already padded batch
+    /// (the `embed_nodes` path). The `batch` field of the result is left
+    /// empty: this path never reaches `apply_state_updates`, which is the
+    /// only consumer of it.
+    pub(crate) fn prepare_padded_static(
+        &self,
+        padded: Batch,
+        n_valid: usize,
+        batch_seed: u64,
+        train: bool,
+    ) -> Result<PreparedBatch> {
+        self.static_stage(
+            Batch::default(),
+            padded,
+            n_valid,
+            batch_seed,
+            train,
+            None,
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn static_stage(
+        &self,
+        batch: Batch,
+        padded: Batch,
+        n_valid: usize,
+        batch_seed: u64,
+        train: bool,
+        mfg_arena: Option<Mfg>,
+        mut nodes: Vec<(u32, f64, bool)>,
+        mut roots: Vec<u32>,
+        mut root_ts: Vec<f64>,
+    ) -> Result<PreparedBatch> {
+        let bs = self.model.dim("bs");
+        padded.roots_into(&mut roots, &mut root_ts);
+
+        // ① sample (into the recycled arena when one is supplied).
+        let t = Instant::now();
+        let mfg = match &self.sampler {
+            Some(s) => {
+                let mut m = mfg_arena.unwrap_or_default();
+                s.sample_into(&mut m, &roots, &root_ts, batch_seed);
+                Some(m)
+            }
+            None => None,
+        };
+        let t_sample = t.elapsed();
+
+        // ② static lookup + ③ marshal. Node-memory / mailbox gathers are
+        // deferred to `finish_inputs` — they depend on the previous batch's
+        // updates and must stay on the critical path.
+        let t = Instant::now();
+        let n_total = self.model.dim("n_total");
+        match &mfg {
+            Some(m) => m.all_nodes_into(&mut nodes),
+            None => {
+                nodes.clear();
+                nodes.extend(roots.iter().zip(root_ts.iter()).map(|(&v, &ts)| (v, ts, true)));
+            }
+        }
+        nodes.truncate(n_total);
+        ensure!(nodes.len() == n_total, "node list {} != n_total {n_total}", nodes.len());
+
+        let step_name = if train { "train" } else { "eval" };
+        let spec = self.model.mf.step(step_name)?;
+        let mut inputs = Vec::with_capacity(spec.inputs.len());
+        for ts_spec in &spec.inputs {
+            if is_state_input(&ts_spec.name) {
+                inputs.push(None);
+            } else {
+                inputs.push(Some(self.build_static_input(
+                    &ts_spec.name,
+                    &ts_spec.shape,
+                    &padded,
+                    n_valid,
+                    &nodes,
+                    mfg.as_ref(),
+                    bs,
+                )?));
+            }
+        }
+        Ok(PreparedBatch {
+            batch,
+            n_valid,
+            mfg,
+            padded,
+            nodes,
+            inputs,
+            roots,
+            root_ts,
+            train,
+            t_sample,
+            t_static: t.elapsed(),
+        })
+    }
+
+    /// Just-in-time stage: fill the state-dependent inputs from the
+    /// *current* training state and return the full manifest-ordered input
+    /// list. Must run after batch i-1's `apply_state_updates`.
+    pub fn finish_inputs(&self, state: &TrainState, pb: &mut PreparedBatch) -> Result<Vec<Tensor>> {
+        let step_name = if pb.train { "train" } else { "eval" };
+        let spec = self.model.mf.step(step_name)?;
+        let mut out = Vec::with_capacity(spec.inputs.len());
+        for (slot, ts_spec) in pb.inputs.iter_mut().zip(&spec.inputs) {
+            let tensor = match slot.take() {
+                Some(t) => t,
+                None => self.build_state_input(&ts_spec.name, &ts_spec.shape, state, &pb.nodes)?,
+            };
+            out.push(tensor);
+        }
+        Ok(out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_static_input(
+        &self,
+        name: &str,
+        shape: &[usize],
+        batch: &Batch,
+        n_valid: usize,
+        nodes: &[(u32, f64, bool)],
+        mfg: Option<&Mfg>,
+        bs: usize,
+    ) -> Result<Tensor> {
+        let g = self.graph;
+        match name {
+            "lr" => Ok(Tensor::scalar(self.cfg.lr)),
+            "dt_scale" => Ok(Tensor::scalar(self.cfg.dt_scale)),
+            "edge_mask" => {
+                let mut m = vec![0.0f32; bs];
+                m[..n_valid].fill(1.0);
+                Tensor::f32(shape, m)
+            }
+            "node_feat" => {
+                let dv = shape[1];
+                let mut out = vec![0.0f32; nodes.len() * dv];
+                if let Some(nf) = &g.node_feat {
+                    let copy = dv.min(nf.dim);
+                    for (i, &(v, _, valid)) in nodes.iter().enumerate() {
+                        if valid {
+                            out[i * dv..i * dv + copy].copy_from_slice(&nf.row(v as usize)[..copy]);
+                        }
+                    }
+                }
+                Tensor::f32(shape, out)
+            }
+            "batch_efeat" => {
+                let de = shape[1];
+                let mut out = vec![0.0f32; bs * de];
+                if let Some(ef) = &g.edge_feat {
+                    let copy = de.min(ef.dim);
+                    for i in 0..n_valid {
+                        out[i * de..i * de + copy]
+                            .copy_from_slice(&ef.row(batch.eids[i] as usize)[..copy]);
+                    }
+                }
+                Tensor::f32(shape, out)
+            }
+            _ if name.starts_with("dt_s")
+                || name.starts_with("mask_s")
+                || name.starts_with("efeat_s") =>
+            {
+                let (s, l) = parse_hop_name(name)?;
+                let mfg = mfg.expect("hop inputs require a sampler");
+                let block = &mfg.snapshots[s][l];
+                if name.starts_with("dt_") {
+                    Tensor::f32(shape, block.dt.clone())
+                } else if name.starts_with("mask_") {
+                    Tensor::f32(shape, block.mask.clone())
+                } else {
+                    let de = shape[2];
+                    let mut out = vec![0.0f32; block.num_slots() * de];
+                    if let Some(ef) = &g.edge_feat {
+                        let copy = de.min(ef.dim);
+                        for i in 0..block.num_slots() {
+                            if block.mask[i] == 1.0 {
+                                out[i * de..i * de + copy]
+                                    .copy_from_slice(&ef.row(block.eid[i] as usize)[..copy]);
+                            }
+                        }
+                    }
+                    Tensor::f32(shape, out)
+                }
+            }
+            other => anyhow::bail!("trainer cannot build input `{other}`"),
+        }
+    }
+
+    fn build_state_input(
+        &self,
+        name: &str,
+        shape: &[usize],
+        state: &TrainState,
+        nodes: &[(u32, f64, bool)],
+    ) -> Result<Tensor> {
+        match name {
+            "params" => Tensor::f32(shape, state.params.clone()),
+            "adam_m" => Tensor::f32(shape, state.adam_m.clone()),
+            "adam_v" => Tensor::f32(shape, state.adam_v.clone()),
+            "step" => Ok(Tensor::scalar(state.step)),
+            "mem" | "mem_dt" => {
+                let memory = state.memory.as_ref().expect("memory state");
+                let mut mem = Vec::new();
+                let mut dt = Vec::new();
+                memory.gather(nodes, &mut mem, &mut dt);
+                if name == "mem" {
+                    Tensor::f32(shape, mem)
+                } else {
+                    Tensor::f32(shape, dt)
+                }
+            }
+            "mail" | "mail_dt" | "mail_mask" => {
+                let mailbox = state.mailbox.as_ref().expect("mailbox state");
+                let mut mail = Vec::new();
+                let mut dt = Vec::new();
+                let mut mask = Vec::new();
+                mailbox.gather(nodes, &mut mail, &mut dt, &mut mask);
+                match name {
+                    "mail" => Tensor::f32(shape, mail),
+                    "mail_dt" => Tensor::f32(shape, dt),
+                    _ => Tensor::f32(shape, mask),
+                }
+            }
+            other => anyhow::bail!("input `{other}` was not prepared by the static stage"),
+        }
+    }
+}
+
+/// Pad an unpadded batch to the compiled batch size (recycling `out`).
+fn pad_batch_into(src: &Batch, bs: usize, out: &mut Batch) {
+    let pad_t = src.ts.last().copied().unwrap_or(0.0);
+    out.edge_range = src.edge_range.clone();
+    out.src.clear();
+    out.src.extend_from_slice(&src.src);
+    out.src.resize(bs, 0);
+    out.dst.clear();
+    out.dst.extend_from_slice(&src.dst);
+    out.dst.resize(bs, 0);
+    out.neg.clear();
+    out.neg.extend_from_slice(&src.neg);
+    out.neg.resize(bs, 0);
+    out.ts.clear();
+    out.ts.extend_from_slice(&src.ts);
+    out.ts.resize(bs, pad_t);
+    out.eids.clear();
+    out.eids.extend_from_slice(&src.eids);
+    out.eids.resize(bs, 0);
+}
+
+/// Step ⑥ as a free function over split borrows, so the pipelined epoch can
+/// run it while the [`Preparer`] is lent to the producer thread.
+fn apply_state_updates_impl(
+    model: &Model,
+    deliver_to_neighbors: bool,
+    state: &mut TrainState,
+    batch: &Batch,
+    mfg: Option<&Mfg>,
+    new_mem: &Tensor,
+    new_mail: &Tensor,
+) -> Result<()> {
+    let bs = model.dim("bs");
+    let dm = model.dim("dm");
+    let maild = model.dim("maild");
+    let n_valid = batch.len();
+    let mem_rows = new_mem.as_f32()?;
+    let mail_rows = new_mail.as_f32()?;
+    let memory = state.memory.as_mut().expect("memory");
+    let mailbox = state.mailbox.as_mut().expect("mailbox");
+
+    // Memory rows: [roots] segment of new_mem holds the refreshed
+    // memory in MFG order; persist src (rows 0..bs) and dst (bs..2bs).
+    for i in 0..n_valid {
+        let t = batch.ts[i];
+        let src_row = &mem_rows[i * dm..(i + 1) * dm];
+        memory.scatter(&[batch.src[i]], &[t], src_row);
+        let dst_row = &mem_rows[(bs + i) * dm..(bs + i + 1) * dm];
+        memory.scatter(&[batch.dst[i]], &[t], dst_row);
+    }
+    // Mail rows: [src mails | dst mails].
+    for i in 0..n_valid {
+        let t = batch.ts[i];
+        let m_src = &mail_rows[i * maild..(i + 1) * maild];
+        let m_dst = &mail_rows[(bs + i) * maild..(bs + i + 1) * maild];
+        mailbox.write(batch.src[i], t, m_src);
+        mailbox.write(batch.dst[i], t, m_dst);
+        if deliver_to_neighbors {
+            // APAN: propagate each endpoint's mail to its sampled
+            // hop-1 neighbors.
+            if let Some(m) = mfg {
+                let block = &m.snapshots[0][0];
+                let k = block.fanout;
+                for slot in i * k..(i + 1) * k {
+                    if block.mask[slot] == 1.0 {
+                        mailbox.write(block.nbr[slot], t, m_src);
+                    }
+                }
+                for slot in (bs + i) * k..(bs + i + 1) * k {
+                    if block.mask[slot] == 1.0 {
+                        mailbox.write(block.nbr[slot], t, m_dst);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Single-process trainer over one model + dataset.
 pub struct Trainer<'g> {
     pub model: &'g Model,
     pub graph: &'g TemporalGraph,
-    sampler: Option<TemporalSampler<'g>>,
+    /// The prefetchable half (sampler + config); see [`Preparer`].
+    pub prep: Preparer<'g>,
     pub state: TrainState,
-    pub cfg: TrainerCfg,
     /// Figure-5 phase breakdown (labels = the paper's circled steps).
     pub timers: PhaseTimer,
 }
@@ -95,10 +543,12 @@ impl<'g> Trainer<'g> {
         // delivery; sample 1 hop in that case.
         let sample_hops = if cfg.deliver_to_neighbors { hops.max(1) } else { hops };
         let sampler = if sample_hops > 0 {
-            let mut sc = SamplerConfig::uniform_hops(sample_hops, fanout, cfg.strategy, cfg.threads);
+            let mut sc =
+                SamplerConfig::uniform_hops(sample_hops, fanout, cfg.strategy, cfg.threads);
             sc.num_snapshots = snapshots;
             sc.snapshot_len = cfg.snapshot_len;
             sc.seed = cfg.seed;
+            sc.validate().context("sampler config from model dims")?;
             Some(TemporalSampler::new(csr, sc))
         } else {
             None
@@ -111,11 +561,18 @@ impl<'g> Trainer<'g> {
             memory: model
                 .uses_memory()
                 .then(|| NodeMemory::new(graph.num_nodes, model.dim("dm"))),
-            mailbox: model
-                .uses_memory()
-                .then(|| Mailbox::new(graph.num_nodes, model.dim("mail_slots"), model.dim("maild"))),
+            mailbox: model.uses_memory().then(|| {
+                Mailbox::new(graph.num_nodes, model.dim("mail_slots"), model.dim("maild"))
+            }),
         };
-        Ok(Trainer { model, graph, sampler, state, cfg, timers: PhaseTimer::new() })
+        let prep = Preparer { model, graph, sampler, cfg };
+        Ok(Trainer { model, graph, prep, state, timers: PhaseTimer::new() })
+    }
+
+    /// Trainer options (owned by the prefetchable half; mutate via
+    /// `trainer.prep.cfg` before the first epoch).
+    pub fn cfg(&self) -> &TrainerCfg {
+        &self.prep.cfg
     }
 
     /// Reset the chronological state (memory, mailbox, sampler pointers) —
@@ -127,24 +584,123 @@ impl<'g> Trainer<'g> {
         if let Some(mb) = &mut self.state.mailbox {
             mb.reset();
         }
-        if let Some(s) = &self.sampler {
+        if let Some(s) = self.prep.sampler() {
             s.reset();
         }
     }
 
     /// Train one epoch over the given plan. Memory/mailbox evolve
-    /// chronologically; parameters carry over between epochs.
+    /// chronologically; parameters carry over between epochs. Dispatches to
+    /// the pipelined path unless `cfg.prefetch` is off (both produce
+    /// bitwise-identical losses).
     pub fn train_epoch(&mut self, plan: &EpochPlan) -> Result<EpochStats> {
+        if self.prep.cfg.prefetch && plan.num_batches() > 1 {
+            self.train_epoch_pipelined(plan)
+        } else {
+            self.train_epoch_sequential(plan)
+        }
+    }
+
+    /// Strictly serial epoch (sample → gather → compute → update per
+    /// batch); the pipelined path's determinism reference, and the
+    /// `prefetch: false` fallback.
+    pub fn train_epoch_sequential(&mut self, plan: &EpochPlan) -> Result<EpochStats> {
         self.reset_chronology();
         let t0 = Instant::now();
-        let mut loss_sum = 0.0;
-        let mut n = 0usize;
-        for (bi, range) in plan.batches.iter().enumerate() {
-            let loss = self.train_batch(range.clone(), bi as u64)?;
-            loss_sum += loss;
-            n += 1;
+        let mut losses = Vec::with_capacity(plan.num_batches());
+        for (seed, range) in plan.seeded() {
+            losses.push(self.train_batch(range, seed)?);
         }
-        Ok(EpochStats { mean_loss: loss_sum / n.max(1) as f64, batches: n, seconds: t0.elapsed().as_secs_f64() })
+        Ok(epoch_stats(losses, t0))
+    }
+
+    /// Two-stage pipelined epoch: a producer thread runs the prefetchable
+    /// stage up to `prefetch_depth` batches ahead over a bounded queue;
+    /// the consumer (this thread) fills state-dependent inputs
+    /// just-in-time, executes the AOT step, applies updates, and recycles
+    /// the batch's buffers back to the producer.
+    pub fn train_epoch_pipelined(&mut self, plan: &EpochPlan) -> Result<EpochStats> {
+        self.reset_chronology();
+        let t0 = Instant::now();
+        let model = self.model;
+        let prep = &self.prep;
+        let state = &mut self.state;
+        let timers = &mut self.timers;
+        let depth = prep.cfg.prefetch_depth.max(1);
+        let deliver = prep.cfg.deliver_to_neighbors;
+        let uses_memory = model.uses_memory();
+        let spec = model.mf.step("train")?;
+        let i_loss = spec.output_index("loss")?;
+        let i_params = spec.output_index("new_params")?;
+        let i_m = spec.output_index("new_adam_m")?;
+        let i_v = spec.output_index("new_adam_v")?;
+        let (i_mem, i_mail) = if uses_memory {
+            (spec.output_index("new_mem")?, spec.output_index("new_mail")?)
+        } else {
+            (0, 0)
+        };
+        let n_batches = plan.num_batches();
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth);
+        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
+
+        let losses = std::thread::scope(|scope| -> Result<Vec<f64>> {
+            scope.spawn(move || {
+                for (seed, range) in plan.seeded() {
+                    let arena = recycle_rx.try_recv().unwrap_or_default();
+                    let prepared = prep.prepare_static_reuse(range, seed, true, arena);
+                    let failed = prepared.is_err();
+                    // The consumer dropping `rx` (early exit) unblocks this
+                    // send with an Err; stop producing either way.
+                    if tx.send(prepared).is_err() || failed {
+                        break;
+                    }
+                }
+            });
+            // The consumer closure owns `rx`: every exit path (success or
+            // `?`) drops it, which unblocks a producer waiting on the full
+            // queue so the scope can join.
+            let mut consumer = move || -> Result<Vec<f64>> {
+                let mut losses = Vec::with_capacity(n_batches);
+                for _ in 0..n_batches {
+                    let mut pb = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("prefetch producer exited early"))??;
+                    timers.add("1:sample", pb.t_sample);
+                    let t = Instant::now();
+                    let inputs = prep.finish_inputs(state, &mut pb)?;
+                    timers.add("2:lookup", pb.t_static + t.elapsed());
+                    let t = Instant::now();
+                    let outputs = model.train_exe.run(&inputs).context("train step")?;
+                    timers.add("4:compute", t.elapsed());
+                    let loss = outputs[i_loss].scalar_f32()? as f64;
+                    ensure!(loss.is_finite(), "training diverged: loss = {loss}");
+                    let t = Instant::now();
+                    state.params = outputs[i_params].as_f32()?.to_vec();
+                    state.adam_m = outputs[i_m].as_f32()?.to_vec();
+                    state.adam_v = outputs[i_v].as_f32()?.to_vec();
+                    state.step += 1.0;
+                    if uses_memory {
+                        apply_state_updates_impl(
+                            model,
+                            deliver,
+                            state,
+                            &pb.batch,
+                            pb.mfg.as_ref(),
+                            &outputs[i_mem],
+                            &outputs[i_mail],
+                        )?;
+                    }
+                    timers.add("6:update", t.elapsed());
+                    losses.push(loss);
+                    // Hand the buffers back for reuse (best effort: the
+                    // producer may already be done).
+                    let _ = recycle_tx.send(pb.into_arena());
+                }
+                Ok(losses)
+            };
+            consumer()
+        })?;
+        Ok(epoch_stats(losses, t0))
     }
 
     /// One optimization step over an edge window.
@@ -229,7 +785,8 @@ impl<'g> Trainer<'g> {
         batch.neg.resize(bs, 0);
         batch.ts.resize(bs, pad_t);
         batch.eids.resize(bs, 0);
-        let (_, inputs, _, _) = self.prepare_padded(&batch, n, 0xE3BED, false)?;
+        let mut pb = self.prep.prepare_padded_static(batch, n, 0xE3BED, false)?;
+        let inputs = self.prep.finish_inputs(&self.state, &mut pb)?;
         let spec = self.model.mf.step("eval")?;
         let outputs = self.model.eval_exe.run(&inputs).context("embed step")?;
         let emb = outputs[spec.output_index("emb")?].as_f32()?;
@@ -238,11 +795,9 @@ impl<'g> Trainer<'g> {
 
     // ------------------------------------------------------------ internals
 
-    /// Build + sample + gather + marshal one batch from an edge range.
-    /// `&self` on purpose: the multi-worker trainer calls this from worker
-    /// threads concurrently (all mutability is in the sampler's atomics /
-    /// fine-grained locks). Negatives are drawn from a per-batch RNG so
-    /// results are independent of which thread prepares which batch.
+    /// Compat path: both stages back to back (eval/embed and external
+    /// callers that don't pipeline). `&self` on purpose: the multi-worker
+    /// trainer calls this from worker threads concurrently.
     ///
     /// Returns (batch, mfg, inputs, sample_time, gather_time).
     pub(crate) fn prepare_range(
@@ -250,155 +805,13 @@ impl<'g> Trainer<'g> {
         range: std::ops::Range<usize>,
         batch_seed: u64,
         train: bool,
-    ) -> Result<(Batch, Option<Mfg>, Vec<Tensor>, std::time::Duration, std::time::Duration)> {
-        let bs = self.model.dim("bs");
-        ensure!(range.len() <= bs, "batch {} exceeds compiled bs {bs}", range.len());
-        let mut rng = Rng::new(self.cfg.seed ^ batch_seed.wrapping_mul(0x9e37_79b9));
-        let batch = make_batch(self.graph, range, &mut rng);
-        let n_valid = batch.len();
-        let mut padded = batch.clone();
-        let pad_t = padded.ts.last().copied().unwrap_or(0.0);
-        padded.src.resize(bs, 0);
-        padded.dst.resize(bs, 0);
-        padded.neg.resize(bs, 0);
-        padded.ts.resize(bs, pad_t);
-        padded.eids.resize(bs, 0);
-        let (mfg, inputs, t_s, t_g) = self.prepare_padded(&padded, n_valid, batch_seed, train)?;
-        Ok((batch, mfg, inputs, t_s, t_g))
-    }
-
-    pub(crate) fn prepare_padded(
-        &self,
-        padded: &Batch,
-        n_valid: usize,
-        batch_seed: u64,
-        train: bool,
-    ) -> Result<(Option<Mfg>, Vec<Tensor>, std::time::Duration, std::time::Duration)> {
-        let bs = self.model.dim("bs");
-        let (roots, root_ts) = padded.roots();
-
-        // ① sample.
+    ) -> Result<(Batch, Option<Mfg>, Vec<Tensor>, Duration, Duration)> {
+        let mut pb = self.prep.prepare_static(range, batch_seed, train)?;
         let t = Instant::now();
-        let mfg = self.sampler.as_ref().map(|s| s.sample(&roots, &root_ts, batch_seed));
-        let t_sample = t.elapsed();
-
-        // ② lookup + ③ marshal.
-        let t = Instant::now();
-        let n_total = self.model.dim("n_total");
-        let mut nodes: Vec<(u32, f64, bool)> = match &mfg {
-            Some(m) => m.all_nodes(),
-            None => roots.iter().zip(&root_ts).map(|(&v, &ts)| (v, ts, true)).collect(),
-        };
-        nodes.truncate(n_total);
-        ensure!(nodes.len() == n_total, "node list {} != n_total {n_total}", nodes.len());
-
-        let step_name = if train { "train" } else { "eval" };
-        let spec = self.model.mf.step(step_name)?;
-        let mut inputs = Vec::with_capacity(spec.inputs.len());
-        for ts_spec in &spec.inputs {
-            let tensor = self.build_input(&ts_spec.name, &ts_spec.shape, padded, n_valid, &nodes, mfg.as_ref(), bs)?;
-            inputs.push(tensor);
-        }
-        Ok((mfg, inputs, t_sample, t.elapsed()))
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn build_input(
-        &self,
-        name: &str,
-        shape: &[usize],
-        batch: &Batch,
-        n_valid: usize,
-        nodes: &[(u32, f64, bool)],
-        mfg: Option<&Mfg>,
-        bs: usize,
-    ) -> Result<Tensor> {
-        let g = self.graph;
-        match name {
-            "params" => Tensor::f32(shape, self.state.params.clone()),
-            "adam_m" => Tensor::f32(shape, self.state.adam_m.clone()),
-            "adam_v" => Tensor::f32(shape, self.state.adam_v.clone()),
-            "step" => Ok(Tensor::scalar(self.state.step)),
-            "lr" => Ok(Tensor::scalar(self.cfg.lr)),
-            "dt_scale" => Ok(Tensor::scalar(self.cfg.dt_scale)),
-            "edge_mask" => {
-                let mut m = vec![0.0f32; bs];
-                m[..n_valid].fill(1.0);
-                Tensor::f32(shape, m)
-            }
-            "mem" | "mem_dt" => {
-                let memory = self.state.memory.as_ref().expect("memory state");
-                let mut mem = Vec::new();
-                let mut dt = Vec::new();
-                memory.gather(nodes, &mut mem, &mut dt);
-                if name == "mem" {
-                    Tensor::f32(shape, mem)
-                } else {
-                    Tensor::f32(shape, dt)
-                }
-            }
-            "mail" | "mail_dt" | "mail_mask" => {
-                let mailbox = self.state.mailbox.as_ref().expect("mailbox state");
-                let mut mail = Vec::new();
-                let mut dt = Vec::new();
-                let mut mask = Vec::new();
-                mailbox.gather(nodes, &mut mail, &mut dt, &mut mask);
-                match name {
-                    "mail" => Tensor::f32(shape, mail),
-                    "mail_dt" => Tensor::f32(shape, dt),
-                    _ => Tensor::f32(shape, mask),
-                }
-            }
-            "node_feat" => {
-                let dv = shape[1];
-                let mut out = vec![0.0f32; nodes.len() * dv];
-                if let Some(nf) = &g.node_feat {
-                    let copy = dv.min(nf.dim);
-                    for (i, &(v, _, valid)) in nodes.iter().enumerate() {
-                        if valid {
-                            out[i * dv..i * dv + copy].copy_from_slice(&nf.row(v as usize)[..copy]);
-                        }
-                    }
-                }
-                Tensor::f32(shape, out)
-            }
-            "batch_efeat" => {
-                let de = shape[1];
-                let mut out = vec![0.0f32; bs * de];
-                if let Some(ef) = &g.edge_feat {
-                    let copy = de.min(ef.dim);
-                    for i in 0..n_valid {
-                        out[i * de..i * de + copy]
-                            .copy_from_slice(&ef.row(batch.eids[i] as usize)[..copy]);
-                    }
-                }
-                Tensor::f32(shape, out)
-            }
-            _ if name.starts_with("dt_s") || name.starts_with("mask_s") || name.starts_with("efeat_s") => {
-                let (s, l) = parse_hop_name(name)?;
-                let mfg = mfg.expect("hop inputs require a sampler");
-                let block = &mfg.snapshots[s][l];
-                if name.starts_with("dt_") {
-                    Tensor::f32(shape, block.dt.clone())
-                } else if name.starts_with("mask_") {
-                    Tensor::f32(shape, block.mask.clone())
-                } else {
-                    let de = shape[2];
-                    let mut out = vec![0.0f32; block.num_slots() * de];
-                    if let Some(ef) = &g.edge_feat {
-                        let copy = de.min(ef.dim);
-                        for i in 0..block.num_slots() {
-                            if block.mask[i] == 1.0 {
-                                out[i * de..i * de + copy]
-                                    .copy_from_slice(&ef.row(block.eid[i] as usize)[..copy]);
-                            }
-                        }
-                    }
-                    Tensor::f32(shape, out)
-                }
-            }
-            other => anyhow::bail!("trainer cannot build input `{other}`"),
-        }
+        let inputs = self.prep.finish_inputs(&self.state, &mut pb)?;
+        let t_gather = pb.t_static + t.elapsed();
+        let PreparedBatch { batch, mfg, t_sample, .. } = pb;
+        Ok((batch, mfg, inputs, t_sample, t_gather))
     }
 
     /// Step ⑥: persist refreshed memory + new mails for the batch's
@@ -410,51 +823,25 @@ impl<'g> Trainer<'g> {
         new_mem: &Tensor,
         new_mail: &Tensor,
     ) -> Result<()> {
-        let bs = self.model.dim("bs");
-        let dm = self.model.dim("dm");
-        let maild = self.model.dim("maild");
-        let n_valid = batch.len();
-        let mem_rows = new_mem.as_f32()?;
-        let mail_rows = new_mail.as_f32()?;
-        let memory = self.state.memory.as_mut().expect("memory");
-        let mailbox = self.state.mailbox.as_mut().expect("mailbox");
+        apply_state_updates_impl(
+            self.model,
+            self.prep.cfg.deliver_to_neighbors,
+            &mut self.state,
+            batch,
+            mfg,
+            new_mem,
+            new_mail,
+        )
+    }
+}
 
-        // Memory rows: [roots] segment of new_mem holds the refreshed
-        // memory in MFG order; persist src (rows 0..bs) and dst (bs..2bs).
-        for i in 0..n_valid {
-            let t = batch.ts[i];
-            let src_row = &mem_rows[i * dm..(i + 1) * dm];
-            memory.scatter(&[batch.src[i]], &[t], src_row);
-            let dst_row = &mem_rows[(bs + i) * dm..(bs + i + 1) * dm];
-            memory.scatter(&[batch.dst[i]], &[t], dst_row);
-        }
-        // Mail rows: [src mails | dst mails].
-        for i in 0..n_valid {
-            let t = batch.ts[i];
-            let m_src = &mail_rows[i * maild..(i + 1) * maild];
-            let m_dst = &mail_rows[(bs + i) * maild..(bs + i + 1) * maild];
-            mailbox.write(batch.src[i], t, m_src);
-            mailbox.write(batch.dst[i], t, m_dst);
-            if self.cfg.deliver_to_neighbors {
-                // APAN: propagate each endpoint's mail to its sampled
-                // hop-1 neighbors.
-                if let Some(m) = mfg {
-                    let block = &m.snapshots[0][0];
-                    let k = block.fanout;
-                    for slot in i * k..(i + 1) * k {
-                        if block.mask[slot] == 1.0 {
-                            mailbox.write(block.nbr[slot], t, m_src);
-                        }
-                    }
-                    for slot in (bs + i) * k..(bs + i + 1) * k {
-                        if block.mask[slot] == 1.0 {
-                            mailbox.write(block.nbr[slot], t, m_dst);
-                        }
-                    }
-                }
-            }
-        }
-        Ok(())
+fn epoch_stats(losses: Vec<f64>, t0: Instant) -> EpochStats {
+    let n = losses.len();
+    EpochStats {
+        mean_loss: losses.iter().sum::<f64>() / n.max(1) as f64,
+        batches: n,
+        seconds: t0.elapsed().as_secs_f64(),
+        losses,
     }
 }
 
@@ -477,5 +864,44 @@ mod tests {
         assert_eq!(parse_hop_name("dt_s0_h1").unwrap(), (0, 1));
         assert_eq!(parse_hop_name("efeat_s2_h0").unwrap(), (2, 0));
         assert!(parse_hop_name("dt_nope").is_err());
+    }
+
+    #[test]
+    fn state_input_classification() {
+        // The static/JIT split: state-dependent names must all be deferred.
+        let jit = [
+            "params", "adam_m", "adam_v", "step", "mem", "mem_dt", "mail", "mail_dt",
+            "mail_mask",
+        ];
+        for name in jit {
+            assert!(is_state_input(name), "{name} must be JIT");
+        }
+        let prefetchable = [
+            "lr", "dt_scale", "edge_mask", "node_feat", "batch_efeat", "dt_s0_h0",
+            "mask_s0_h1", "efeat_s1_h0",
+        ];
+        for name in prefetchable {
+            assert!(!is_state_input(name), "{name} must be prefetchable");
+        }
+    }
+
+    #[test]
+    fn pad_batch_reuses_and_pads() {
+        let src = Batch {
+            edge_range: 3..5,
+            src: vec![1, 2],
+            dst: vec![3, 4],
+            neg: vec![5, 6],
+            ts: vec![10.0, 11.0],
+            eids: vec![3, 4],
+        };
+        let mut out = Batch::default();
+        pad_batch_into(&src, 4, &mut out);
+        assert_eq!(out.src, vec![1, 2, 0, 0]);
+        assert_eq!(out.ts, vec![10.0, 11.0, 11.0, 11.0]);
+        assert_eq!(out.eids, vec![3, 4, 0, 0]);
+        let ptr = out.src.as_ptr();
+        pad_batch_into(&src, 4, &mut out);
+        assert_eq!(out.src.as_ptr(), ptr, "same-shape pad must reuse buffers");
     }
 }

@@ -1,0 +1,61 @@
+//! Heap-allocation counting for the zero-allocation guarantees of the
+//! sampling path.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! `alloc` / `realloc` call. Register it as the global allocator in a test
+//! or bench binary, then bracket the steady-state region with
+//! [`CountingAlloc::allocations`] to assert (tests) or report (benches)
+//! the allocation count:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: tgl::util::alloc::CountingAlloc = tgl::util::alloc::CountingAlloc;
+//! let before = CountingAlloc::allocations();
+//! // ... steady-state work ...
+//! assert_eq!(CountingAlloc::allocations() - before, 0);
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper that counts allocation calls and bytes.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Total `alloc`/`realloc` calls since process start.
+    pub fn allocations() -> u64 {
+        ALLOC_CALLS.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes requested since process start.
+    pub fn allocated_bytes() -> u64 {
+        ALLOC_BYTES.load(Ordering::Relaxed)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

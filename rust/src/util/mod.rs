@@ -1,7 +1,8 @@
-//! Substrate utilities built from scratch on `std` (the build is offline:
-//! only the `xla` crate's dependency closure is vendored, so rayon / serde /
-//! clap / criterion / proptest equivalents all live here).
+//! Substrate utilities built from scratch on `std` (the build is fully
+//! offline — even `anyhow` is an in-repo shim under `vendor/` — so rayon /
+//! serde / clap / criterion / proptest equivalents all live here).
 
+pub mod alloc;
 pub mod binfmt;
 pub mod cli;
 pub mod json;

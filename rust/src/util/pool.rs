@@ -1,122 +1,89 @@
-//! Scoped worker pool for data-parallel loops.
+//! Persistent worker pool for fine-grained data-parallel loops.
 //!
 //! The paper's parallel temporal sampler distributes the root nodes of a
-//! mini-batch evenly over OpenMP threads; this is the equivalent substrate
-//! on `std::thread::scope`. Two entry points:
+//! mini-batch evenly over OpenMP threads; [`WorkerPool`] is the equivalent
+//! substrate. Workers are parked on a condition variable and woken by a
+//! **generation counter** — one `notify_all` per dispatch, one shared job
+//! descriptor, no per-job boxing and no channel nodes, so a `run_chunks`
+//! call performs **zero heap allocation**. That matters because the
+//! pipelined trainer requires the whole steady-state sampling path (this
+//! pool included) to be allocation-free (verified by `tests/alloc.rs`).
 //!
-//! - [`parallel_chunks`]: split an index range into `t` contiguous chunks
-//!   and run a closure per chunk (the sampler's distribution scheme —
-//!   contiguous so pointer updates touch node-disjoint regions more often).
-//! - [`parallel_map`]: map a closure over items, returning results in input
-//!   order.
-//!
-//! Threads are spawned per call. That matches the paper's measurement setup
-//! (sampler timings include thread fork/join) and keeps the pool free of
-//! shared mutable state; spawn cost on Linux is ~10 µs, negligible against
-//! per-batch sampling work.
+//! Earlier revisions also shipped spawn-per-call helpers (`parallel_chunks`
+//! / `parallel_map`, ~10 µs of thread fork/join per call); all callers have
+//! migrated to the pool and the free functions are gone.
 
-/// Split `0..n` into at most `threads` contiguous chunks and invoke
-/// `f(thread_idx, range)` for each in parallel. `f` runs on the caller
-/// thread when `threads <= 1` or `n` is small.
-pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
-where
-    F: Fn(usize, std::ops::Range<usize>) + Sync,
-{
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n == 0 {
-        f(0, 0..n);
-        return;
-    }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(t, lo..hi));
-        }
-    });
-}
-
-/// Parallel map preserving input order.
-pub fn parallel_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
-where
-    T: Sync,
-    U: Send,
-    F: Fn(&T) -> U + Sync,
-{
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads == 1 {
-        return items.iter().map(&f).collect();
-    }
-    let chunk = items.len().div_ceil(threads);
-    let mut parts: Vec<Vec<U>> = Vec::new();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = items
-            .chunks(chunk)
-            .map(|c| {
-                let f = &f;
-                s.spawn(move || c.iter().map(f).collect::<Vec<U>>())
-            })
-            .collect();
-        parts = handles.into_iter().map(|h| h.join().unwrap()).collect();
-    });
-    parts.into_iter().flatten().collect()
-}
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of available CPUs (fallback 1).
 pub fn num_cpus() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Persistent worker pool for fine-grained data-parallel dispatch.
-///
-/// [`parallel_chunks`] spawns OS threads per call (~10 µs each), which
-/// swamps sub-millisecond batches — exactly the regime of the temporal
-/// sampler's hop-1 blocks. `WorkerPool` keeps `n` workers parked on
-/// channels and dispatches borrowed closures with one message + one reply
-/// per worker (~1–2 µs), the OpenMP-parallel-for substrate of the paper's
-/// C++ sampler.
+/// Shared job descriptor: a lifetime-erased borrow of the dispatcher's
+/// closure. SAFETY: the dispatcher blocks until every worker finished the
+/// generation this reference was published for, so the borrow always
+/// outlives its uses (same contract as `std::thread::scope`).
+type Job = &'static (dyn Fn(usize, std::ops::Range<usize>) + Sync);
+
+struct Dispatch {
+    /// Bumped once per `run_chunks`; workers run each generation exactly once.
+    generation: u64,
+    /// Last generation every worker has completed.
+    done_gen: u64,
+    /// Workers still running the current generation.
+    active: usize,
+    job: Option<Job>,
+    n: usize,
+    chunk: usize,
+    /// Per-generation panic bits, keyed by `gen & 63` (re-raised on the
+    /// generation's own dispatcher; the bit is cleared when the slot is
+    /// reused, which needs 64 in-flight dispatchers — more than any pool
+    /// can have callers).
+    panicked_bits: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<Dispatch>,
+    /// Workers wait here for a new generation.
+    work_cv: Condvar,
+    /// Dispatchers wait here for generation completion (and for their turn:
+    /// concurrent `run_chunks` calls serialize, mirroring the paper's single
+    /// sampling process serving all trainer processes).
+    done_cv: Condvar,
+}
+
+/// Persistent fork-join worker pool (see module docs).
 pub struct WorkerPool {
-    /// Senders + reply receiver behind one mutex: concurrent `run_chunks`
-    /// calls (e.g. several data-parallel trainers sharing one sampler)
-    /// serialize their dispatch, mirroring the paper's single sampling
-    /// process serving all trainer processes.
-    chans: std::sync::Mutex<Chans>,
-    reply_tx: std::sync::mpsc::Sender<()>,
+    shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
-
-struct Chans {
-    senders: Vec<std::sync::mpsc::Sender<Job>>,
-    reply_rx: std::sync::mpsc::Receiver<()>,
-}
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl WorkerPool {
     pub fn new(threads: usize) -> WorkerPool {
         let threads = threads.max(1);
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let mut senders = Vec::with_capacity(threads);
-        let mut handles = Vec::with_capacity(threads);
-        for _ in 0..threads {
-            let (tx, rx) = std::sync::mpsc::channel::<Job>();
-            senders.push(tx);
-            handles.push(std::thread::spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    job();
-                }
-            }));
-        }
-        WorkerPool {
-            chans: std::sync::Mutex::new(Chans { senders, reply_rx }),
-            reply_tx,
-            handles,
-        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(Dispatch {
+                generation: 0,
+                done_gen: 0,
+                active: 0,
+                job: None,
+                n: 0,
+                chunk: 0,
+                panicked_bits: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|idx| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, idx))
+            })
+            .collect();
+        WorkerPool { shared, handles }
     }
 
     pub fn threads(&self) -> usize {
@@ -124,9 +91,10 @@ impl WorkerPool {
     }
 
     /// Run `f(worker_idx, chunk_range)` over `0..n` split into at most
-    /// `max_threads` contiguous chunks of at least `min_chunk` items.
-    /// Blocks until every chunk completes. `f` may borrow locals:
-    /// the barrier below guarantees the borrows outlive every job.
+    /// `threads()` contiguous chunks of at least `min_chunk` items. Blocks
+    /// until every chunk completes; `f` may borrow locals (the completion
+    /// barrier guarantees the borrows outlive every use). Runs inline on
+    /// the caller when one chunk suffices.
     pub fn run_chunks<F>(&self, n: usize, min_chunk: usize, f: F)
     where
         F: Fn(usize, std::ops::Range<usize>) + Sync,
@@ -141,39 +109,79 @@ impl WorkerPool {
             return;
         }
         let chunk = n.div_ceil(threads);
-        // SAFETY: the closure reference is only used by jobs dispatched in
-        // this call, and we block on exactly `dispatched` replies before
-        // returning (holding the channel lock, so no other call's replies
-        // interleave), so `f` and its borrows outlive all uses.
-        let f_ptr: &(dyn Fn(usize, std::ops::Range<usize>) + Sync) = &f;
-        let f_static: &'static (dyn Fn(usize, std::ops::Range<usize>) + Sync) =
-            unsafe { std::mem::transmute(f_ptr) };
-        let chans = self.chans.lock().unwrap();
-        let mut dispatched = 0;
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let reply = self.reply_tx.clone();
-            chans.senders[t]
-                .send(Box::new(move || {
-                    f_static(t, lo..hi);
-                    let _ = reply.send(());
-                }))
-                .expect("worker thread died");
-            dispatched += 1;
+        let f_ref: &(dyn Fn(usize, std::ops::Range<usize>) + Sync) = &f;
+        // SAFETY: lifetime erasure only; the barrier below outlives all uses.
+        let job: Job = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize, std::ops::Range<usize>) + Sync), Job>(f_ref)
+        };
+
+        let mut st = self.shared.state.lock().unwrap();
+        // Wait for our turn (another dispatcher's generation may be live).
+        while st.generation != st.done_gen {
+            st = self.shared.done_cv.wait(st).unwrap();
         }
-        for _ in 0..dispatched {
-            chans.reply_rx.recv().expect("worker thread died");
+        st.generation += 1;
+        let my_gen = st.generation;
+        let my_bit = 1u64 << (my_gen & 63);
+        st.panicked_bits &= !my_bit; // reclaim the slot for this generation
+        st.job = Some(job);
+        st.n = n;
+        st.chunk = chunk;
+        st.active = self.handles.len();
+        self.shared.work_cv.notify_all();
+        while st.done_gen < my_gen {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        let panicked = st.panicked_bits & my_bit != 0;
+        st.panicked_bits &= !my_bit;
+        drop(st);
+        if panicked {
+            panic!("WorkerPool job panicked");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, n, chunk, gen) = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && st.generation == seen {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.generation;
+            (st.job.expect("generation published without a job"), st.n, st.chunk, seen)
+        };
+        let lo = (idx * chunk).min(n);
+        let hi = ((idx + 1) * chunk).min(n);
+        if lo < hi {
+            // Catch panics so `active` still reaches zero and the
+            // dispatcher re-raises instead of hanging.
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(idx, lo..hi)));
+            if r.is_err() {
+                shared.state.lock().unwrap().panicked_bits |= 1u64 << (gen & 63);
+            }
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            st.done_gen = gen;
+            st.job = None;
+            shared.done_cv.notify_all();
         }
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.chans.lock().unwrap().senders.clear(); // closes channels; workers exit
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -184,41 +192,6 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
-
-    #[test]
-    fn chunks_cover_range_exactly_once() {
-        for threads in [1, 2, 3, 8, 33] {
-            for n in [0usize, 1, 7, 64, 1000] {
-                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
-                parallel_chunks(n, threads, |_, range| {
-                    for i in range {
-                        hits[i].fetch_add(1, Ordering::Relaxed);
-                    }
-                });
-                assert!(
-                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
-                    "threads={threads} n={n}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn map_preserves_order() {
-        let xs: Vec<usize> = (0..257).collect();
-        let ys = parallel_map(&xs, 8, |x| x * 3);
-        assert_eq!(ys, (0..257).map(|x| x * 3).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn chunk_ids_distinct() {
-        let n = 100;
-        let max_tid = AtomicUsize::new(0);
-        parallel_chunks(n, 4, |tid, _| {
-            max_tid.fetch_max(tid, Ordering::Relaxed);
-        });
-        assert!(max_tid.load(Ordering::Relaxed) < 4);
-    }
 
     #[test]
     fn worker_pool_covers_exactly_once() {
@@ -257,5 +230,49 @@ mod tests {
             total += acc.load(Ordering::Relaxed) as u64 * round;
         }
         assert_eq!(total, 64 * (0..50).sum::<u64>());
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize_correctly() {
+        // Several threads sharing one pool (the multi-worker trainer's
+        // pattern): every dispatch must still cover its range exactly once.
+        let pool = WorkerPool::new(4);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                let total = &total;
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        let acc = AtomicUsize::new(0);
+                        pool.run_chunks(97, 1, |_, range| {
+                            acc.fetch_add(range.len(), Ordering::Relaxed);
+                        });
+                        assert_eq!(acc.load(Ordering::Relaxed), 97);
+                        total.fetch_add(97, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 97);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_dispatcher() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks(10, 1, |_, range| {
+                if range.contains(&7) {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "dispatcher must re-raise worker panics");
+        // Pool stays usable afterwards.
+        let acc = AtomicUsize::new(0);
+        pool.run_chunks(10, 1, |_, range| {
+            acc.fetch_add(range.len(), Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 10);
     }
 }

@@ -179,3 +179,69 @@ fn eval_scores_move_with_training() {
         untrained.ap
     );
 }
+
+#[test]
+fn pipelined_epoch_bitwise_identical_to_sequential() {
+    if !have_artifacts() {
+        return;
+    }
+    // Memory-based (TGN) and non-memory (TGAT-style attention) models:
+    // the pipelined epoch must reproduce the sequential path bit for bit —
+    // per-batch losses AND the downstream eval AP — across queue depths.
+    for variant in ["tgn_tiny", "tgat_tiny"] {
+        let p = plan(variant, "wikipedia", 0.02);
+        let bs = p.model.dim("bs");
+        let (train_end, val_end) = p.graph.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+
+        let mut seq = p.trainer().unwrap();
+        seq.prep.cfg.prefetch = false;
+        let s_seq = seq.train_epoch(&ep).unwrap();
+        let val_seq = seq.eval_range(train_end..val_end).unwrap();
+        assert!(!s_seq.losses.is_empty());
+
+        for depth in [1usize, 2, 4] {
+            let mut pipe = p.trainer().unwrap();
+            pipe.prep.cfg.prefetch = true;
+            pipe.prep.cfg.prefetch_depth = depth;
+            let s_pipe = pipe.train_epoch(&ep).unwrap();
+            assert_eq!(
+                s_seq.losses, s_pipe.losses,
+                "{variant}: pipelined (depth {depth}) losses must be bitwise-identical"
+            );
+            let val_pipe = pipe.eval_range(train_end..val_end).unwrap();
+            assert_eq!(val_seq.ap, val_pipe.ap, "{variant} depth {depth}: eval AP");
+            assert_eq!(val_seq.mean_loss, val_pipe.mean_loss, "{variant} depth {depth}");
+        }
+    }
+}
+
+#[test]
+fn pipelined_epoch_independent_of_sampler_thread_count() {
+    if !have_artifacts() {
+        return;
+    }
+    // Per-root seeding makes draws thread-count-independent; the pipeline
+    // must preserve that across sampler worker counts.
+    let run = |threads: usize| {
+        let p = RunPlan::new(
+            Path::new("artifacts"),
+            Path::new("configs"),
+            "tgn_tiny",
+            "wikipedia",
+            0.02,
+            threads,
+            7,
+        )
+        .expect("plan");
+        let bs = p.model.dim("bs");
+        let (train_end, _) = p.graph.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+        let mut t = p.trainer().unwrap();
+        t.prep.cfg.prefetch = true;
+        t.train_epoch(&ep).unwrap().losses
+    };
+    assert_eq!(run(1), run(4), "losses must not depend on sampler threads");
+}

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, tests, formatting, lints.
+#
+# Usage: scripts/tier1.sh [--no-clippy] [--no-fmt]
+# Mirrors ROADMAP.md's "Tier-1 verify" contract plus the fmt/clippy gates;
+# CI and pre-PR checks should both run this script.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+RUN_CLIPPY=1
+RUN_FMT=1
+for arg in "$@"; do
+  case "$arg" in
+    --no-clippy) RUN_CLIPPY=0 ;;
+    --no-fmt) RUN_FMT=0 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "tier1: cargo not found on PATH — install a Rust toolchain first" >&2
+  exit 3
+fi
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+if [ "$RUN_FMT" = 1 ]; then
+  if cargo fmt --version >/dev/null 2>&1; then
+    echo "== tier1: cargo fmt --check (advisory) =="
+    # Advisory until the pre-rustfmt seed formatting is normalized in one
+    # dedicated sweep (ROADMAP open item); new code should be fmt-clean.
+    cargo fmt --check || echo "tier1: WARNING — formatting drift (advisory for now)" >&2
+  else
+    echo "tier1: rustfmt unavailable, skipping fmt gate" >&2
+  fi
+fi
+
+if [ "$RUN_CLIPPY" = 1 ]; then
+  if cargo clippy --version >/dev/null 2>&1; then
+    echo "== tier1: cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+  else
+    echo "tier1: clippy unavailable, skipping lint gate" >&2
+  fi
+fi
+
+echo "tier1: OK"

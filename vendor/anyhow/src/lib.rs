@@ -1,0 +1,188 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The workspace builds without network access, so instead of the crates.io
+//! `anyhow` this shim provides exactly the API subset the codebase uses:
+//!
+//! - [`Error`] / [`Result`] with context chains (`{e}` shows the outermost
+//!   context, `{e:#}` the full chain, matching anyhow's formatting contract)
+//! - the [`Context`] extension trait on `Result` and `Option`
+//! - the [`anyhow!`], [`bail!`] and [`ensure!`] macros
+//!
+//! Swapping back to the real crate is a one-line `Cargo.toml` change; no
+//! source edits are required.
+
+use std::fmt;
+
+/// Error type: a base message plus context frames (innermost message first,
+/// each `.context(..)` pushes an outer frame).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    fn push_context(mut self, outer: String) -> Error {
+        self.context.push(outer);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost context first.
+            for c in self.context.iter().rev() {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.msg)
+        } else {
+            // `{}`: the outermost context (or the base message).
+            write!(f, "{}", self.context.last().unwrap_or(&self.msg))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow prints the outer message then a "Caused by" chain; tests
+        // mostly see this through `unwrap()` panics.
+        write!(f, "{}", self.context.last().unwrap_or(&self.msg))?;
+        let mut frames: Vec<&String> = self.context.iter().rev().skip(1).collect();
+        frames.push(&self.msg);
+        if !self.context.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for fr in frames {
+                write!(f, "\n    {fr}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into [`Error`], capturing its source chain.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg, context: Vec::new() }
+    }
+}
+
+/// `anyhow::Result<T>` — plain alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an [`Error`] when the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_err() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = io_err().context("reading file").context("loading model").unwrap_err();
+        assert_eq!(format!("{e}"), "loading model");
+        assert_eq!(format!("{e:#}"), "loading model: reading file: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                crate::bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky");
+        let e = Error::msg("plain");
+        assert_eq!(format!("{e:#}"), "plain");
+    }
+}
