@@ -8,8 +8,11 @@
 //! friendly). `TGL_BENCH_FULL=1` runs the paper-faithful bs=600/d=100
 //! profiles; `TGL_BENCH_SCALE` rescales the dataset.
 //!
-//! Without AOT artifacts the training rows are skipped, but the pipeline
-//! JSON is still emitted from the sampler-level arena comparison so the
+//! Without AOT artifacts the per-variant training rows are skipped, but
+//! the pipeline JSON still gets end-to-end rows: the sampler-level arena
+//! comparison **and** full train-epoch rows on the synthetic reference
+//! backend — gather-path tensor arenas on/off, single-trainer prefetch
+//! on/off, and multi-trainer shared-producer prefetch on/off — so the
 //! perf trajectory never has holes.
 //!
 //! Notes vs the paper: the "Baseline" column of Table 5 measures the
@@ -23,8 +26,10 @@ use std::path::Path;
 use tgl::bench::{bench_full, bench_scale, Table};
 use tgl::coordinator::{run_epoch_parallel, run_epoch_parallel_reuse, RunPlan};
 use tgl::graph::TCsr;
+use tgl::models::synthetic;
 use tgl::sampler::{SamplerConfig, Strategy, TemporalSampler};
 use tgl::sched::ChunkScheduler;
+use tgl::trainer::{MultiTrainer, Trainer, TrainerCfg};
 use tgl::util::json::{obj, Json};
 use tgl::util::stats::Stopwatch;
 
@@ -145,6 +150,79 @@ fn main() -> anyhow::Result<()> {
         tp.write_csv("results/pipeline_epoch.csv")?;
     } else {
         println!("no artifacts/manifest.json — skipping training rows (run `make artifacts`)");
+    }
+
+    // ---- Synthetic end-to-end rows (reference backend; always
+    // available): gather-path tensor arenas on/off, prefetch on/off, and
+    // the multi-trainer shared producer on/off.
+    {
+        let model = synthetic("tgn")?;
+        let graph = tgl::datasets::by_name("wikipedia", scale, 42)?;
+        let csr = TCsr::build(&graph, true);
+        let bs = model.dim("bs");
+        let (train_end, _) = graph.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+
+        let epoch_secs = |prefetch: bool, arenas: bool| -> anyhow::Result<f64> {
+            let mut cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+            cfg.prefetch = prefetch;
+            cfg.tensor_arenas = arenas;
+            let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+            t.train_epoch(&ep)?; // warm-up epoch (grows arenas/pools)
+            Ok(t.train_epoch(&ep)?.seconds)
+        };
+        let arena_off = epoch_secs(false, false)?;
+        let arena_on = epoch_secs(false, true)?;
+        println!(
+            "syn_tgn gather arena: off {arena_off:.4}s vs on {arena_on:.4}s ({:.2}x)",
+            arena_off / arena_on.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str("syn_tgn-train-epoch".into())),
+            ("mode", Json::Str("gather-arena".into())),
+            ("arena_off_s", Json::Num(arena_off)),
+            ("arena_on_s", Json::Num(arena_on)),
+            ("speedup", Json::Num(arena_off / arena_on.max(1e-12))),
+        ]));
+
+        // Arenas-on/prefetch-off was just measured as `arena_on`; reuse it
+        // so the two rows report one number for the same configuration.
+        let seq_s = arena_on;
+        let pipe_s = epoch_secs(true, true)?;
+        println!(
+            "syn_tgn prefetch: off {seq_s:.4}s vs on {pipe_s:.4}s ({:.2}x)",
+            seq_s / pipe_s.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str("syn_tgn-train-epoch".into())),
+            ("mode", Json::Str("training-epoch".into())),
+            ("prefetch_off_s", Json::Num(seq_s)),
+            ("prefetch_on_s", Json::Num(pipe_s)),
+            ("speedup", Json::Num(seq_s / pipe_s.max(1e-12))),
+        ]));
+
+        let multi_secs = |prefetch: bool| -> anyhow::Result<f64> {
+            let cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+            let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+            let multi =
+                if prefetch { MultiTrainer::new(4) } else { MultiTrainer::sequential(4) };
+            multi.train_epoch(&mut t, &ep)?; // warm-up epoch
+            Ok(multi.train_epoch(&mut t, &ep)?.seconds)
+        };
+        let m_off = multi_secs(false)?;
+        let m_on = multi_secs(true)?;
+        println!(
+            "syn_tgn multi(4) producer: off {m_off:.4}s vs on {m_on:.4}s ({:.2}x)",
+            m_off / m_on.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str("syn_tgn-multi4-epoch".into())),
+            ("mode", Json::Str("multi-prefetch".into())),
+            ("prefetch_off_s", Json::Num(m_off)),
+            ("prefetch_on_s", Json::Num(m_on)),
+            ("speedup", Json::Num(m_off / m_on.max(1e-12))),
+        ]));
     }
 
     // ---- Sampler-level arena rows (always available, artifacts or not):

@@ -23,10 +23,15 @@ pub struct RunPlan {
     pub threads: usize,
     pub seed: u64,
     /// Pipelined epoch execution (producer thread prefetches sampling +
-    /// static gathers). Deterministic: same losses as sequential.
+    /// static gathers). Deterministic: same losses as sequential. Also
+    /// enables the multi-trainer shared producer and pipelined eval
+    /// replay.
     pub prefetch: bool,
     /// Prepared-batch queue depth for the pipelined epoch.
     pub prefetch_depth: usize,
+    /// Recycle input-tensor buffers through the tensor pool (the
+    /// zero-allocation gather path). Deterministic either way.
+    pub tensor_arenas: bool,
 }
 
 /// Per-epoch row + final metrics of a link-prediction run.
@@ -76,6 +81,7 @@ impl RunPlan {
             seed,
             prefetch: true,
             prefetch_depth: 2,
+            tensor_arenas: true,
         })
     }
 
@@ -87,7 +93,17 @@ impl RunPlan {
         cfg.seed = self.seed;
         cfg.prefetch = self.prefetch;
         cfg.prefetch_depth = self.prefetch_depth;
+        cfg.tensor_arenas = self.tensor_arenas;
         Trainer::new(&self.model, &self.graph, &self.csr, cfg)
+    }
+
+    /// A [`MultiTrainer`] honoring this plan's prefetch knobs (shared
+    /// producer on/off, queue depth).
+    pub fn multi_trainer(&self, workers: usize) -> MultiTrainer {
+        let mut multi = MultiTrainer::new(workers);
+        multi.prefetch = self.prefetch;
+        multi.prefetch_depth = self.prefetch_depth;
+        multi
     }
 
     /// The full link-prediction protocol: train on the chronological
@@ -115,7 +131,7 @@ impl RunPlan {
         } else {
             ChunkScheduler::plain(train_end, bs)
         };
-        let multi = MultiTrainer::new(workers);
+        let multi = self.multi_trainer(workers);
         for ep in 0..epochs {
             let plan = sched.epoch();
             let stats = if workers > 1 {
@@ -152,6 +168,15 @@ impl RunPlan {
 
 // ------------------------------------------------------------------- CLI
 
+/// Parse an `on|off` CLI switch.
+fn parse_switch(value: &str, flag: &str) -> Result<bool> {
+    match value {
+        "on" | "1" | "true" => Ok(true),
+        "off" | "0" | "false" => Ok(false),
+        other => anyhow::bail!("bad {flag} value `{other}` (want on|off)"),
+    }
+}
+
 pub(super) fn cli_train(args: &[String]) -> Result<()> {
     let a = Args::new("tgl train", "train a TGNN variant for link prediction")
         .opt("variant", "tgn", "model variant (manifest key, e.g. tgn, tgat_tiny)")
@@ -163,6 +188,7 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         .opt("threads", "8", "sampler threads")
         .opt("prefetch", "on", "pipelined epoch execution: on|off (deterministic either way)")
         .opt("prefetch-depth", "2", "prepared-batch queue depth for the pipeline")
+        .opt("arena", "on", "tensor-buffer arenas on the gather path: on|off (deterministic)")
         .opt("seed", "42", "RNG seed")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("configs", "configs", "model config directory")
@@ -176,12 +202,9 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         a.get_usize("threads")?,
         a.get_usize("seed")? as u64,
     )?;
-    plan.prefetch = match a.get("prefetch").as_str() {
-        "on" | "1" | "true" => true,
-        "off" | "0" | "false" => false,
-        other => anyhow::bail!("bad --prefetch value `{other}` (want on|off)"),
-    };
+    plan.prefetch = parse_switch(&a.get("prefetch"), "--prefetch")?;
     plan.prefetch_depth = a.get_usize("prefetch-depth")?;
+    plan.tensor_arenas = parse_switch(&a.get("arena"), "--arena")?;
     crate::info!(
         "dataset `{}`: |V|={} |E|={} max(t)={:.3e}",
         a.get("data"),
@@ -260,7 +283,8 @@ pub(super) fn cli_sample_bench(args: &[String]) -> Result<()> {
         .opt("seed", "42", "RNG seed")
         .flag("baseline", "also run the single-thread baseline sampler")
         .parse(args)?;
-    let graph = datasets::by_name(&a.get("data"), a.get_f64("scale")?, a.get_usize("seed")? as u64)?;
+    let graph =
+        datasets::by_name(&a.get("data"), a.get_f64("scale")?, a.get_usize("seed")? as u64)?;
     let csr = TCsr::build(&graph, true);
     let bs = a.get_usize("bs")?;
     let mode = PointerMode::parse(&a.get("pointer"))?;
@@ -301,7 +325,8 @@ pub(super) fn cli_sample_bench(args: &[String]) -> Result<()> {
             let sw = Stopwatch::start();
             run_epoch_parallel(&graph, &sampler, bs);
             let secs = sw.secs();
-            let improv = base_secs.map(|b| format!("  improv {:>6.1}x", b / secs)).unwrap_or_default();
+            let improv =
+                base_secs.map(|b| format!("  improv {:>6.1}x", b / secs)).unwrap_or_default();
             print!("{algo:<6} threads {threads:>2}: {secs:>7.3}s{improv}  breakdown:");
             for (phase, s) in sampler.stats.breakdown() {
                 print!(" {phase} {s:.3}s");

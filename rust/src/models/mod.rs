@@ -1,6 +1,11 @@
 //! Host-side model handling: load a variant's AOT artifacts + initial
 //! parameters, and mirror the run-time options from the `configs/*.yml`
 //! the variant was lowered from (single config source for both layers).
+//! [`synthetic`] builds artifact-free variants over the reference backend.
+
+mod synthetic;
+
+pub use synthetic::synthetic;
 
 use crate::runtime::{ArtifactManifest, Engine, Executable};
 use crate::sampler::Strategy;
@@ -72,7 +77,16 @@ impl Model {
             Err(_) => Vec::new(),
         };
         let arch = mf.extra_str("model").unwrap_or_else(|_| name.to_string());
-        Ok(Model { name: name.to_string(), arch, mf, train_exe, eval_exe, clf_exe, init_params, init_clf_params })
+        Ok(Model {
+            name: name.to_string(),
+            arch,
+            mf,
+            train_exe,
+            eval_exe,
+            clf_exe,
+            init_params,
+            init_clf_params,
+        })
     }
 
     pub fn dim(&self, key: &str) -> usize {

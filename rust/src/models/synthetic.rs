@@ -1,0 +1,248 @@
+//! Synthetic model variants over the deterministic reference backend.
+//!
+//! [`synthetic`] assembles a [`Model`] entirely in-process — manifest,
+//! dims, init params, and [`Executable::reference`] step functions — so
+//! the full training loop (prepare → execute → state update) runs without
+//! AOT artifacts. Tests use these variants to assert pipeline/multi-
+//! trainer bitwise identity and the zero-allocation guarantee; benches
+//! use them for end-to-end rows on machines without `make artifacts`.
+//!
+//! Two variants cover both trainer dataflows:
+//!
+//! - `syn_tgn`: 1 hop, node memory + 1-slot mailbox (the TGN shape) —
+//!   exercises the JIT state gathers and step-⑥ scatters.
+//! - `syn_tgat`: 2 hops, no memory (the TGAT shape) — exercises deep
+//!   hop inputs with an empty JIT stage beyond params/step.
+//!
+//! Dims are deliberately tiny (bs = 16, fanout = 3) so identity tests can
+//! sweep queue depths and worker counts in well under a second each.
+
+use super::Model;
+use crate::runtime::{DType, Executable, StepSpec, TensorSpec, VariantManifest};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+const BS: usize = 16;
+const FANOUT: usize = 3;
+const DV: usize = 4;
+const DE: usize = 4;
+const DM: usize = 8;
+const MAILD: usize = 8;
+const DH: usize = 8;
+const PC: usize = 64;
+const CLF_PC: usize = 32;
+const CLASSES: usize = 2;
+
+fn f(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+fn i(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::I32 }
+}
+
+/// Deterministic pseudo-random init vector (no RNG state needed).
+fn init_vec(n: usize, salt: f32) -> Vec<f32> {
+    (0..n).map(|i| 0.1 * (i as f32 * 0.7 + salt).sin()).collect()
+}
+
+/// Build a synthetic variant (`"tgn"` or `"tgat"`, see module docs).
+pub fn synthetic(arch: &str) -> Result<Model> {
+    let (hops, use_memory) = match arch {
+        "tgn" => (1usize, true),
+        "tgat" => (2usize, false),
+        other => bail!("no synthetic variant for arch `{other}` (have: tgn, tgat)"),
+    };
+    let roots = 3 * BS;
+    // n_total = roots + Σ_l roots · fanout^l (each hop fans out the
+    // previous hop's slots).
+    let mut n_total = roots;
+    let mut level = roots;
+    for _ in 0..hops {
+        level *= FANOUT;
+        n_total += level;
+    }
+
+    // Inputs shared by the train and eval steps, in manifest order. The
+    // state-dependent names (params/adam/step/mem/mail*) are exactly the
+    // ones `trainer::single::is_state_input` defers to the JIT stage.
+    let mut inputs = vec![
+        f("params", &[PC]),
+        f("adam_m", &[PC]),
+        f("adam_v", &[PC]),
+        f("step", &[]),
+        f("lr", &[]),
+        f("dt_scale", &[]),
+        f("edge_mask", &[BS]),
+        f("node_feat", &[n_total, DV]),
+        f("batch_efeat", &[BS, DE]),
+    ];
+    let mut hop_roots = roots;
+    for l in 0..hops {
+        inputs.push(f(&format!("dt_s0_h{l}"), &[hop_roots, FANOUT]));
+        inputs.push(f(&format!("mask_s0_h{l}"), &[hop_roots, FANOUT]));
+        inputs.push(f(&format!("efeat_s0_h{l}"), &[hop_roots, FANOUT, DE]));
+        hop_roots *= FANOUT;
+    }
+    if use_memory {
+        inputs.push(f("mem", &[n_total, DM]));
+        inputs.push(f("mem_dt", &[n_total]));
+        inputs.push(f("mail", &[n_total, MAILD]));
+        inputs.push(f("mail_dt", &[n_total]));
+        inputs.push(f("mail_mask", &[n_total]));
+    }
+
+    let mut train_outputs = vec![
+        f("loss", &[]),
+        f("new_params", &[PC]),
+        f("new_adam_m", &[PC]),
+        f("new_adam_v", &[PC]),
+    ];
+    let mut eval_outputs = vec![
+        f("loss", &[]),
+        f("pos_score", &[BS]),
+        f("neg_score", &[BS]),
+        f("emb", &[BS, DH]),
+    ];
+    if use_memory {
+        for outs in [&mut train_outputs, &mut eval_outputs] {
+            outs.push(f("new_mem", &[2 * BS, DM]));
+            outs.push(f("new_mail", &[2 * BS, MAILD]));
+        }
+    }
+
+    let name = format!("syn_{arch}");
+    let train = StepSpec {
+        hlo: format!("reference://{name}/train"),
+        inputs: inputs.clone(),
+        outputs: train_outputs,
+    };
+    let eval = StepSpec {
+        hlo: format!("reference://{name}/eval"),
+        inputs,
+        outputs: eval_outputs,
+    };
+    let clf = use_memory.then(|| StepSpec {
+        hlo: format!("reference://{name}/clf"),
+        inputs: vec![
+            f("params", &[CLF_PC]),
+            f("adam_m", &[CLF_PC]),
+            f("adam_v", &[CLF_PC]),
+            f("step", &[]),
+            f("lr", &[]),
+            f("emb", &[BS, DH]),
+            i("labels", &[BS]),
+            f("label_mask", &[BS]),
+        ],
+        outputs: vec![
+            f("new_params", &[CLF_PC]),
+            f("new_adam_m", &[CLF_PC]),
+            f("new_adam_v", &[CLF_PC]),
+            f("logits", &[BS, CLASSES]),
+        ],
+    });
+
+    let mut dims = BTreeMap::new();
+    for (k, v) in [
+        ("bs", BS),
+        ("hops", hops),
+        ("fanout", FANOUT),
+        ("snapshots", 1),
+        ("n_total", n_total),
+        ("dv", DV),
+        ("de", DE),
+        ("dm", DM),
+        ("maild", MAILD),
+        ("mail_slots", 1),
+        ("dh", DH),
+        ("use_memory", use_memory as usize),
+    ] {
+        dims.insert(k.to_string(), v);
+    }
+
+    let mut steps = BTreeMap::new();
+    let train_exe = Executable::reference(train.clone());
+    let eval_exe = Executable::reference(eval.clone());
+    let clf_exe = clf.clone().map(Executable::reference);
+    steps.insert("train".to_string(), train);
+    steps.insert("eval".to_string(), eval);
+    if let Some(c) = clf {
+        steps.insert("clf".to_string(), c);
+    }
+
+    let mut extras = BTreeMap::new();
+    extras.insert("model".to_string(), arch.to_string());
+
+    let mf = VariantManifest {
+        name: name.clone(),
+        dims,
+        param_count: PC,
+        clf_param_count: if use_memory { CLF_PC } else { 0 },
+        params: Vec::new(),
+        steps,
+        extras,
+    };
+    Ok(Model {
+        name,
+        arch: arch.to_string(),
+        mf,
+        train_exe,
+        eval_exe,
+        clf_exe,
+        init_params: init_vec(PC, 0.13),
+        init_clf_params: if use_memory { init_vec(CLF_PC, 0.57) } else { Vec::new() },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_variants_are_consistent() {
+        for arch in ["tgn", "tgat"] {
+            let m = synthetic(arch).unwrap();
+            assert_eq!(m.dim("bs"), BS);
+            let spec = m.mf.step("train").unwrap();
+            for ts in &spec.inputs {
+                assert!(ts.numel() > 0, "{arch}: input {} empty", ts.name);
+            }
+            // n_total must match the root + hop-slot count the sampler
+            // will produce (3bs roots, fanout^l expansion per hop).
+            let hops = m.dim("hops");
+            let mut expect = 3 * BS;
+            let mut level = 3 * BS;
+            for _ in 0..hops {
+                level *= FANOUT;
+                expect += level;
+            }
+            assert_eq!(m.dim("n_total"), expect);
+        }
+        assert!(synthetic("nope").is_err());
+    }
+
+    #[test]
+    fn reference_step_executes_and_is_deterministic() {
+        let m = synthetic("tgat").unwrap();
+        let spec = m.mf.step("train").unwrap();
+        let inputs: Vec<_> = spec
+            .inputs
+            .iter()
+            .map(|ts| {
+                crate::runtime::Tensor::f32(
+                    &ts.shape,
+                    (0..ts.numel()).map(|i| (i as f32 * 0.01).sin()).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let a = m.train_exe.run(&inputs).unwrap();
+        let b = m.train_exe.run(&inputs).unwrap();
+        assert_eq!(a.len(), spec.outputs.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap(), "bitwise deterministic");
+        }
+        let loss = a[0].scalar_f32().unwrap();
+        assert!(loss.is_finite() && loss > 0.0 && loss < 1.0);
+    }
+}

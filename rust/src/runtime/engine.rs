@@ -1,5 +1,13 @@
 //! PJRT engine: compile HLO-text artifacts once, execute many times.
+//!
+//! Two backends sit behind [`Executable`]: the PJRT client (real AOT
+//! artifacts; unavailable in offline builds, where the stub errors at
+//! execution time) and the in-process [`reference`](super::reference)
+//! backend — a deterministic pure function of the inputs used by the
+//! synthetic model variants so training-path properties are testable
+//! without artifacts.
 
+use super::reference::RefExec;
 use super::{DType, StepSpec, Tensor};
 // Offline builds compile against the in-tree PJRT stub; swap this alias for
 // `use xla;` (plus the Cargo dependency) to restore real artifact execution.
@@ -39,13 +47,18 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, spec: spec.clone() })
+        Ok(Executable { backend: Backend::Pjrt(exe), spec: spec.clone() })
     }
+}
+
+enum Backend {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Reference(RefExec),
 }
 
 /// A compiled step function plus its I/O contract.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    backend: Backend,
     spec: StepSpec,
 }
 
@@ -54,11 +67,18 @@ pub struct Executable {
 // client dispatches onto its own thread pool and the handle is never
 // mutated after compilation). `Executable::run` only takes `&self`, and the
 // multi-worker trainer relies on concurrent `run` calls — the same pattern
-// the paper uses with one CUDA stream per trainer process.
+// the paper uses with one CUDA stream per trainer process. The reference
+// backend is naturally `Send + Sync` (its pool is a mutex-guarded Arc).
 unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
 
 impl Executable {
+    /// An executable backed by the deterministic in-process reference
+    /// interpreter (used by `models::synthetic`; no artifacts required).
+    pub fn reference(spec: StepSpec) -> Executable {
+        Executable { backend: Backend::Reference(RefExec::new()), spec }
+    }
+
     pub fn spec(&self) -> &StepSpec {
         &self.spec
     }
@@ -66,6 +86,17 @@ impl Executable {
     /// Execute with host tensors; returns host tensors in the manifest's
     /// output order. Inputs must match the spec in count, shape and dtype.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(self.spec.outputs.len());
+        self.run_into(inputs, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::run`] into a recycled output vector: `out` is cleared (its
+    /// tensors drop back into their pools) and refilled in manifest
+    /// output order — the steady-state path performs no allocation on the
+    /// reference backend.
+    pub fn run_into(&self, inputs: &[Tensor], out: &mut Vec<Tensor>) -> Result<()> {
+        out.clear();
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "step `{}` expects {} inputs, got {}",
@@ -74,9 +105,8 @@ impl Executable {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (t, ts) in inputs.iter().zip(&self.spec.inputs) {
-            if t.shape != ts.shape {
+            if t.shape.as_slice() != ts.shape.as_slice() {
                 bail!(
                     "step `{}` input `{}`: expected shape {:?}, got {:?}",
                     self.spec.hlo,
@@ -94,31 +124,35 @@ impl Executable {
                     t.dtype().name()
                 );
             }
-            literals.push(tensor_to_literal(t)?);
         }
-
-        let bufs = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing `{}`", self.spec.hlo))?;
-        // Lowered with return_tuple=True: single tuple literal in [0][0].
-        let tuple = bufs[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "step `{}` returned {} outputs, manifest says {}",
-                self.spec.hlo,
-                parts.len(),
-                self.spec.outputs.len()
-            );
+        match &self.backend {
+            Backend::Reference(r) => r.run_into(&self.spec, inputs, out),
+            Backend::Pjrt(exe) => {
+                let mut literals = Vec::with_capacity(inputs.len());
+                for t in inputs {
+                    literals.push(tensor_to_literal(t)?);
+                }
+                let bufs = exe
+                    .execute::<xla::Literal>(&literals)
+                    .with_context(|| format!("executing `{}`", self.spec.hlo))?;
+                // Lowered with return_tuple=True: single tuple literal in
+                // [0][0].
+                let tuple = bufs[0][0].to_literal_sync().context("fetching result literal")?;
+                let parts = tuple.to_tuple().context("decomposing result tuple")?;
+                if parts.len() != self.spec.outputs.len() {
+                    bail!(
+                        "step `{}` returned {} outputs, manifest says {}",
+                        self.spec.hlo,
+                        parts.len(),
+                        self.spec.outputs.len()
+                    );
+                }
+                for (lit, ts) in parts.into_iter().zip(&self.spec.outputs) {
+                    out.push(literal_to_tensor(&lit, ts.name.as_str())?);
+                }
+                Ok(())
+            }
         }
-        parts
-            .into_iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, ts)| literal_to_tensor(&lit, ts.name.as_str()))
-            .collect()
     }
 }
 
@@ -127,7 +161,7 @@ fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
         DType::F32 => xla::ElementType::F32,
         DType::I32 => xla::ElementType::S32,
     };
-    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.raw_bytes())
+    xla::Literal::create_from_shape_and_untyped_data(ty, t.shape.as_slice(), t.raw_bytes())
         .map_err(|e| anyhow::anyhow!("creating literal: {e:?}"))
 }
 

@@ -10,8 +10,10 @@
 mod engine;
 mod manifest;
 mod pjrt_stub;
+mod reference;
 mod tensor;
 
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactManifest, ParamEntry, StepSpec, TensorSpec, VariantManifest};
-pub use tensor::{DType, Tensor};
+pub use reference::RefExec;
+pub use tensor::{DType, Shape, SharedVec, Tensor, MAX_RANK};

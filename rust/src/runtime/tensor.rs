@@ -3,8 +3,83 @@
 //! The coordinator assembles MFG (message-flow-graph) inputs as plain
 //! row-major `f32`/`i32` buffers; this type carries them together with a
 //! shape so [`super::Engine`] can marshal them into XLA literals.
+//!
+//! Storage comes in three modes (the owned / pooled / aliased contract,
+//! documented in [`crate::util::tensor_pool`]): owned `Vec`s for one-shot
+//! callers, pool-recycled buffers ([`PoolBuf`]) for the steady-state
+//! prepare path, and `Arc`-aliased views ([`SharedVec`]) for the
+//! per-step-constant `params` / `adam_m` / `adam_v` vectors, which are
+//! shared with the executable instead of cloned. Shapes are stored inline
+//! (rank ≤ [`MAX_RANK`]) so constructing a tensor never allocates for the
+//! shape either.
 
+use crate::util::tensor_pool::PoolBuf;
 use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Maximum tensor rank the inline [`Shape`] supports. The TGL step
+/// functions exchange at most rank-3 tensors (`[roots, fanout, de]`); 4
+/// leaves headroom.
+pub const MAX_RANK: usize = 4;
+
+/// Inline, allocation-free tensor shape (row-major dims, rank ≤
+/// [`MAX_RANK`]). Derefs to `&[usize]` so existing slice-based callers
+/// keep working.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    dims: [usize; MAX_RANK],
+    rank: u8,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Result<Shape> {
+        if dims.len() > MAX_RANK {
+            bail!("tensor rank {} exceeds MAX_RANK {MAX_RANK}", dims.len());
+        }
+        let mut s = Shape { dims: [0; MAX_RANK], rank: dims.len() as u8 };
+        s.dims[..dims.len()].copy_from_slice(dims);
+        Ok(s)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.dims[..self.rank as usize]
+    }
+
+    /// Product of the dims (1 for rank 0).
+    pub fn numel(&self) -> usize {
+        self.as_slice().iter().product()
+    }
+}
+
+impl std::ops::Deref for Shape {
+    type Target = [usize];
+
+    fn deref(&self) -> &[usize] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl PartialEq<[usize]> for Shape {
+    fn eq(&self, other: &[usize]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<usize>> for Shape {
+    fn eq(&self, other: &Vec<usize>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
 
 /// Element type of a [`Tensor`]. Only the two types the TGL step functions
 /// exchange: features/state/masks are `F32`, class labels are `I32`.
@@ -27,52 +102,153 @@ impl DType {
     }
 }
 
+/// A per-step-constant `f32` vector shared (not copied) into input
+/// tensors: the trainer's `params` / `adam_m` / `adam_v`.
+///
+/// [`SharedVec::arc`] hands out zero-copy aliases for
+/// [`Tensor::f32_shared`]; [`SharedVec::copy_from`] writes the step's
+/// results back in place via `Arc::make_mut` — allocation-free whenever
+/// every alias has been dropped (the JIT-stage contract; see
+/// `util::tensor_pool` module docs), and copy-on-write otherwise, so a
+/// surviving alias can never observe a torn update.
+#[derive(Debug, Clone)]
+pub struct SharedVec {
+    inner: Arc<Vec<f32>>,
+}
+
+impl SharedVec {
+    pub fn new(v: Vec<f32>) -> SharedVec {
+        SharedVec { inner: Arc::new(v) }
+    }
+
+    /// A zero-copy alias of the current contents.
+    pub fn arc(&self) -> Arc<Vec<f32>> {
+        Arc::clone(&self.inner)
+    }
+
+    /// Overwrite the contents in place (no allocation when unaliased and
+    /// `src.len()` fits the existing capacity).
+    pub fn copy_from(&mut self, src: &[f32]) {
+        let v = Arc::make_mut(&mut self.inner);
+        v.clear();
+        v.extend_from_slice(src);
+    }
+
+    /// Replace the contents wholesale (checkpoint restore, sync phases).
+    pub fn set(&mut self, v: Vec<f32>) {
+        self.inner = Arc::new(v);
+    }
+
+    /// Mutable access to the underlying vector (`Arc::make_mut`
+    /// semantics).
+    pub fn make_mut(&mut self) -> &mut Vec<f32> {
+        Arc::make_mut(&mut self.inner)
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.inner.as_ref().clone()
+    }
+}
+
+impl From<Vec<f32>> for SharedVec {
+    fn from(v: Vec<f32>) -> SharedVec {
+        SharedVec::new(v)
+    }
+}
+
+impl std::ops::Deref for SharedVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.inner.as_slice()
+    }
+}
+
 /// A dense row-major host tensor.
 #[derive(Debug, Clone)]
 pub struct Tensor {
-    pub shape: Vec<usize>,
+    pub shape: Shape,
     data: Data,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 enum Data {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// Pool-recycled storage; returns to its
+    /// [`TensorPool`](crate::util::tensor_pool::TensorPool) when the
+    /// tensor drops.
+    F32Pooled(PoolBuf),
+    /// Zero-copy alias of a [`SharedVec`] (params / Adam moments).
+    F32Shared(Arc<Vec<f32>>),
+}
+
+impl Clone for Data {
+    fn clone(&self) -> Data {
+        match self {
+            Data::F32(v) => Data::F32(v.clone()),
+            Data::I32(v) => Data::I32(v.clone()),
+            // A clone escapes the pool's custody: deep-copy to owned.
+            Data::F32Pooled(b) => Data::F32(b.to_vec()),
+            Data::F32Shared(a) => Data::F32Shared(Arc::clone(a)),
+        }
+    }
 }
 
 impl Tensor {
     /// Build an `f32` tensor; `data.len()` must equal the shape product.
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
-        let n: usize = shape.iter().product();
-        if data.len() != n {
-            bail!("tensor shape {:?} wants {} elements, got {}", shape, n, data.len());
+        let shape = Shape::new(shape)?;
+        if data.len() != shape.numel() {
+            bail!("tensor shape {:?} wants {} elements, got {}", shape, shape.numel(), data.len());
         }
-        Ok(Self { shape: shape.to_vec(), data: Data::F32(data) })
+        Ok(Self { shape, data: Data::F32(data) })
     }
 
     /// Build an `i32` tensor; `data.len()` must equal the shape product.
     pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
-        let n: usize = shape.iter().product();
-        if data.len() != n {
-            bail!("tensor shape {:?} wants {} elements, got {}", shape, n, data.len());
+        let shape = Shape::new(shape)?;
+        if data.len() != shape.numel() {
+            bail!("tensor shape {:?} wants {} elements, got {}", shape, shape.numel(), data.len());
         }
-        Ok(Self { shape: shape.to_vec(), data: Data::I32(data) })
+        Ok(Self { shape, data: Data::I32(data) })
+    }
+
+    /// Build an `f32` tensor over a pool-recycled buffer (allocation-free
+    /// at steady state).
+    pub fn f32_pooled(shape: &[usize], buf: PoolBuf) -> Result<Self> {
+        let shape = Shape::new(shape)?;
+        if buf.len() != shape.numel() {
+            bail!("tensor shape {:?} wants {} elements, got {}", shape, shape.numel(), buf.len());
+        }
+        Ok(Self { shape, data: Data::F32Pooled(buf) })
+    }
+
+    /// Build an `f32` tensor aliasing shared storage — no copy. The alias
+    /// is read-only ([`Self::as_f32_mut`] refuses it).
+    pub fn f32_shared(shape: &[usize], data: Arc<Vec<f32>>) -> Result<Self> {
+        let shape = Shape::new(shape)?;
+        if data.len() != shape.numel() {
+            bail!("tensor shape {:?} wants {} elements, got {}", shape, shape.numel(), data.len());
+        }
+        Ok(Self { shape, data: Data::F32Shared(data) })
     }
 
     /// All-zero `f32` tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
-        let n: usize = shape.iter().product();
-        Self { shape: shape.to_vec(), data: Data::F32(vec![0.0; n]) }
+        let s = Shape::new(shape).expect("shape rank");
+        let n = s.numel();
+        Self { shape: s, data: Data::F32(vec![0.0; n]) }
     }
 
     /// A scalar (rank-0) `f32` tensor.
     pub fn scalar(v: f32) -> Self {
-        Self { shape: vec![], data: Data::F32(vec![v]) }
+        Self { shape: Shape::new(&[]).unwrap(), data: Data::F32(vec![v]) }
     }
 
     pub fn dtype(&self) -> DType {
         match &self.data {
-            Data::F32(_) => DType::F32,
+            Data::F32(_) | Data::F32Pooled(_) | Data::F32Shared(_) => DType::F32,
             Data::I32(_) => DType::I32,
         }
     }
@@ -81,6 +257,8 @@ impl Tensor {
         match &self.data {
             Data::F32(v) => v.len(),
             Data::I32(v) => v.len(),
+            Data::F32Pooled(b) => b.len(),
+            Data::F32Shared(a) => a.len(),
         }
     }
 
@@ -88,18 +266,29 @@ impl Tensor {
         self.len() == 0
     }
 
+    /// Whether the storage is a zero-copy alias (shared) rather than
+    /// owned/pooled — the "no params copy" assertion hook for tests.
+    pub fn is_aliased(&self) -> bool {
+        matches!(self.data, Data::F32Shared(_))
+    }
+
     /// Borrow the `f32` payload (errors on dtype mismatch).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
+            Data::F32Pooled(b) => Ok(b),
+            Data::F32Shared(a) => Ok(a.as_slice()),
             Data::I32(_) => bail!("tensor is i32, expected f32"),
         }
     }
 
-    /// Mutably borrow the `f32` payload (errors on dtype mismatch).
+    /// Mutably borrow the `f32` payload (errors on dtype mismatch or an
+    /// aliased tensor, which is read-only by contract).
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),
+            Data::F32Pooled(b) => Ok(&mut b[..]),
+            Data::F32Shared(_) => bail!("tensor aliases shared storage (read-only)"),
             Data::I32(_) => bail!("tensor is i32, expected f32"),
         }
     }
@@ -108,7 +297,7 @@ impl Tensor {
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),
-            Data::F32(_) => bail!("tensor is f32, expected i32"),
+            _ => bail!("tensor is f32, expected i32"),
         }
     }
 
@@ -116,16 +305,21 @@ impl Tensor {
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self.data {
             Data::F32(v) => Ok(v),
+            Data::F32Pooled(b) => Ok(b.detach()),
+            Data::F32Shared(a) => Ok(Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone())),
             Data::I32(_) => bail!("tensor is i32, expected f32"),
         }
     }
 
     /// Raw little-endian bytes of the payload (for literal marshalling).
     pub fn raw_bytes(&self) -> &[u8] {
+        fn f32_bytes(v: &[f32]) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+        }
         match &self.data {
-            Data::F32(v) => unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            },
+            Data::F32(v) => f32_bytes(v),
+            Data::F32Pooled(b) => f32_bytes(b),
+            Data::F32Shared(a) => f32_bytes(a.as_slice()),
             Data::I32(v) => unsafe {
                 std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
             },
@@ -145,12 +339,24 @@ impl Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::tensor_pool::TensorPool;
 
     #[test]
     fn shape_product_enforced() {
         assert!(Tensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
         assert!(Tensor::f32(&[2, 3], vec![0.0; 5]).is_err());
         assert!(Tensor::i32(&[4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn shape_is_inline_and_sliceable() {
+        let s = Shape::new(&[2, 3, 4]).unwrap();
+        assert_eq!(s.rank(), 3);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.as_slice(), &[2, 3, 4]);
+        assert_eq!(s[1], 3, "Deref to slice indexing");
+        assert_eq!(Shape::new(&[]).unwrap().numel(), 1);
+        assert!(Shape::new(&[1; MAX_RANK + 1]).is_err());
     }
 
     #[test]
@@ -175,5 +381,57 @@ mod tests {
         let t = Tensor::i32(&[1], vec![7]).unwrap();
         assert!(t.as_f32().is_err());
         assert_eq!(t.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn pooled_tensor_recycles_on_drop() {
+        let pool = TensorPool::new();
+        let mut b = pool.take(6);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = Tensor::f32_pooled(&[2, 3], b).unwrap();
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        drop(t);
+        assert_eq!(pool.free_len(), 1, "dropping a pooled tensor returns the buffer");
+    }
+
+    #[test]
+    fn pooled_clone_detaches_to_owned() {
+        let pool = TensorPool::new();
+        let t = Tensor::f32_pooled(&[2], pool.take(2)).unwrap();
+        let c = t.clone();
+        drop(t);
+        assert_eq!(pool.free_len(), 1);
+        drop(c);
+        assert_eq!(pool.free_len(), 1, "the clone owns its storage");
+    }
+
+    #[test]
+    fn shared_tensor_aliases_without_copy() {
+        let mut sv = SharedVec::new(vec![1.0, 2.0, 3.0]);
+        let base_ptr = sv.as_ptr();
+        let t = Tensor::f32_shared(&[3], sv.arc()).unwrap();
+        assert!(t.is_aliased());
+        assert_eq!(t.as_f32().unwrap().as_ptr(), base_ptr, "zero-copy alias");
+        // In-place update requires the alias to be gone.
+        drop(t);
+        sv.copy_from(&[4.0, 5.0, 6.0]);
+        assert_eq!(sv.as_ptr(), base_ptr, "unaliased copy_from updates in place");
+        assert_eq!(&sv[..], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shared_copy_on_write_when_aliased() {
+        let mut sv = SharedVec::new(vec![1.0, 2.0]);
+        let t = Tensor::f32_shared(&[2], sv.arc()).unwrap();
+        sv.copy_from(&[9.0, 9.0]); // alias alive: must not corrupt the reader
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(&sv[..], &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn shared_tensor_is_read_only() {
+        let sv = SharedVec::new(vec![1.0]);
+        let mut t = Tensor::f32_shared(&[1], sv.arc()).unwrap();
+        assert!(t.as_f32_mut().is_err());
     }
 }

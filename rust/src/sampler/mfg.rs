@@ -53,7 +53,12 @@ impl MfgBlock {
         }
     }
 
-    pub fn new_empty(roots: Vec<u32>, root_ts: Vec<f64>, root_mask: Vec<f32>, fanout: usize) -> Self {
+    pub fn new_empty(
+        roots: Vec<u32>,
+        root_ts: Vec<f64>,
+        root_mask: Vec<f32>,
+        fanout: usize,
+    ) -> Self {
         let n = roots.len() * fanout;
         MfgBlock {
             fanout,

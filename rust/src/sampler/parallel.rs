@@ -262,7 +262,16 @@ impl<'g> TemporalSampler<'g> {
                 match layer.strategy {
                     Strategy::MostRecent => {
                         for k in 0..take {
-                            write_slot(nbr_c, dt_c, eid_c, mask_c, base + k, csr, whi - take + k, t);
+                            write_slot(
+                                nbr_c,
+                                dt_c,
+                                eid_c,
+                                mask_c,
+                                base + k,
+                                csr,
+                                whi - take + k,
+                                t,
+                            );
                         }
                     }
                     Strategy::Uniform => {
@@ -356,7 +365,13 @@ fn write_slot(
 /// Stable seed mixing for per-root deterministic draws. Shared with the
 /// baseline sampler so both draw identical uniform samples.
 #[inline]
-pub(crate) fn mix_seed(seed: u64, batch_seed: u64, snapshot: usize, hop: usize, root_idx: usize) -> u64 {
+pub(crate) fn mix_seed(
+    seed: u64,
+    batch_seed: u64,
+    snapshot: usize,
+    hop: usize,
+    root_idx: usize,
+) -> u64 {
     let mut h = seed ^ batch_seed.rotate_left(17);
     for x in [snapshot as u64, hop as u64, root_idx as u64] {
         h ^= x.wrapping_mul(0x9e3779b97f4a7c15);

@@ -60,7 +60,12 @@ pub struct PointerState {
 }
 
 impl PointerState {
-    pub fn new(num_nodes: usize, num_snapshots: usize, snapshot_len: f64, mode: PointerMode) -> Self {
+    pub fn new(
+        num_nodes: usize,
+        num_snapshots: usize,
+        snapshot_len: f64,
+        mode: PointerMode,
+    ) -> Self {
         let width = num_snapshots + 1;
         let ptrs = if mode == PointerMode::BinarySearch {
             Vec::new()

@@ -50,7 +50,12 @@ impl EpochPlan {
 impl ChunkScheduler {
     /// `chunk_size == batch_size` disables sub-batch rotation (the paper's
     /// "no chunk" baseline). `chunk_size` must divide `batch_size`.
-    pub fn new(num_edges: usize, batch_size: usize, chunk_size: usize, seed: u64) -> anyhow::Result<Self> {
+    pub fn new(
+        num_edges: usize,
+        batch_size: usize,
+        chunk_size: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(batch_size > 0, "batch_size must be positive");
         anyhow::ensure!(
             chunk_size > 0 && batch_size % chunk_size == 0,

@@ -76,45 +76,66 @@ impl Mailbox {
         out_dt: &mut Vec<f32>,
         out_mask: &mut Vec<f32>,
     ) {
-        out_mail.reserve(nodes.len() * self.slots * self.dim);
-        out_dt.reserve(nodes.len() * self.slots);
-        out_mask.reserve(nodes.len() * self.slots);
+        let (l0, d0, k0) = (out_mail.len(), out_dt.len(), out_mask.len());
+        out_mail.resize(l0 + nodes.len() * self.slots * self.dim, 0.0);
+        out_dt.resize(d0 + nodes.len() * self.slots, 0.0);
+        out_mask.resize(k0 + nodes.len() * self.slots, 0.0);
+        self.gather_into(nodes, &mut out_mail[l0..], &mut out_dt[d0..], &mut out_mask[k0..]);
+    }
+
+    /// Slice variant of [`Self::gather`]: fills caller-owned (typically
+    /// pool-recycled) buffers in place — the allocation-free JIT gather of
+    /// the pipelined trainer. Lengths must be `n·slots·dim` / `n·slots` /
+    /// `n·slots`.
+    pub fn gather_into(
+        &self,
+        nodes: &[(u32, f64, bool)],
+        out_mail: &mut [f32],
+        out_dt: &mut [f32],
+        out_mask: &mut [f32],
+    ) {
+        debug_assert_eq!(out_mail.len(), nodes.len() * self.slots * self.dim);
+        debug_assert_eq!(out_dt.len(), nodes.len() * self.slots);
+        debug_assert_eq!(out_mask.len(), nodes.len() * self.slots);
         if self.slots == 1 {
             // TGN/JODIE fast path (the overwhelmingly common config): the
             // single slot needs no ring arithmetic, and this gather sits on
             // the trainer's JIT critical path (FAST's memory-I/O point).
-            for &(v, t, node_valid) in nodes {
+            for (i, &(v, t, node_valid)) in nodes.iter().enumerate() {
                 let vi = v as usize;
+                let row = &mut out_mail[i * self.dim..(i + 1) * self.dim];
                 if node_valid && self.count[vi] > 0 {
                     let base = vi * self.dim;
-                    out_mail.extend_from_slice(&self.mail[base..base + self.dim]);
-                    out_dt.push((t - self.mail_ts[vi]).max(0.0) as f32);
-                    out_mask.push(1.0);
+                    row.copy_from_slice(&self.mail[base..base + self.dim]);
+                    out_dt[i] = (t - self.mail_ts[vi]).max(0.0) as f32;
+                    out_mask[i] = 1.0;
                 } else {
-                    out_mail.extend(std::iter::repeat_n(0.0, self.dim));
-                    out_dt.push(0.0);
-                    out_mask.push(0.0);
+                    row.fill(0.0);
+                    out_dt[i] = 0.0;
+                    out_mask[i] = 0.0;
                 }
             }
             return;
         }
-        for &(v, t, node_valid) in nodes {
+        for (i, &(v, t, node_valid)) in nodes.iter().enumerate() {
             let vi = v as usize;
             let have = if node_valid { self.valid(v) } else { 0 };
             for k in 0..self.slots {
+                let slot = i * self.slots + k;
+                let row = &mut out_mail[slot * self.dim..(slot + 1) * self.dim];
                 if k < have {
                     // Newest-first: k-th newest is at ring position
                     // (count - 1 - k) % slots; k ≤ have - 1 ≤ count - 1
                     // keeps the numerator non-negative.
                     let pos = (self.count[vi] as usize + self.slots - 1 - k) % self.slots;
                     let base = (vi * self.slots + pos) * self.dim;
-                    out_mail.extend_from_slice(&self.mail[base..base + self.dim]);
-                    out_dt.push((t - self.mail_ts[vi * self.slots + pos]).max(0.0) as f32);
-                    out_mask.push(1.0);
+                    row.copy_from_slice(&self.mail[base..base + self.dim]);
+                    out_dt[slot] = (t - self.mail_ts[vi * self.slots + pos]).max(0.0) as f32;
+                    out_mask[slot] = 1.0;
                 } else {
-                    out_mail.extend(std::iter::repeat_n(0.0, self.dim));
-                    out_dt.push(0.0);
-                    out_mask.push(0.0);
+                    row.fill(0.0);
+                    out_dt[slot] = 0.0;
+                    out_mask[slot] = 0.0;
                 }
             }
         }

@@ -53,15 +53,27 @@ impl NodeMemory {
         out_mem: &mut Vec<f32>,
         out_dt: &mut Vec<f32>,
     ) {
-        out_mem.reserve(nodes.len() * self.dim);
-        out_dt.reserve(nodes.len());
-        for &(v, t, valid) in nodes {
+        let (m0, d0) = (out_mem.len(), out_dt.len());
+        out_mem.resize(m0 + nodes.len() * self.dim, 0.0);
+        out_dt.resize(d0 + nodes.len(), 0.0);
+        self.gather_into(nodes, &mut out_mem[m0..], &mut out_dt[d0..]);
+    }
+
+    /// Slice variant of [`Self::gather`]: fills caller-owned (typically
+    /// pool-recycled) buffers in place — the allocation-free JIT gather of
+    /// the pipelined trainer. `out_mem` must hold `nodes.len() * dim`
+    /// elements and `out_dt` `nodes.len()`.
+    pub fn gather_into(&self, nodes: &[(u32, f64, bool)], out_mem: &mut [f32], out_dt: &mut [f32]) {
+        debug_assert_eq!(out_mem.len(), nodes.len() * self.dim);
+        debug_assert_eq!(out_dt.len(), nodes.len());
+        for (i, &(v, t, valid)) in nodes.iter().enumerate() {
+            let row = &mut out_mem[i * self.dim..(i + 1) * self.dim];
             if valid {
-                out_mem.extend_from_slice(self.row(v));
-                out_dt.push((t - self.last_update[v as usize]).max(0.0) as f32);
+                row.copy_from_slice(self.row(v));
+                out_dt[i] = (t - self.last_update[v as usize]).max(0.0) as f32;
             } else {
-                out_mem.extend(std::iter::repeat_n(0.0, self.dim));
-                out_dt.push(0.0);
+                row.fill(0.0);
+                out_dt[i] = 0.0;
             }
         }
     }

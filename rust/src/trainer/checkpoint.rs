@@ -25,9 +25,9 @@ impl Trainer<'_> {
                 self.graph.num_nodes as u32,
             ],
         );
-        w.put_f32("params", self.state.params.clone());
-        w.put_f32("adam_m", self.state.adam_m.clone());
-        w.put_f32("adam_v", self.state.adam_v.clone());
+        w.put_f32("params", self.state.params.to_vec());
+        w.put_f32("adam_m", self.state.adam_m.to_vec());
+        w.put_f32("adam_v", self.state.adam_v.to_vec());
         w.put_f32("step", vec![self.state.step]);
         if let Some(mem) = &self.state.memory {
             w.put_f32("memory", mem.raw().to_vec());
@@ -57,11 +57,15 @@ impl Trainer<'_> {
             bail!("checkpoint param_count {} != model {}", meta[0], self.model.mf.param_count);
         }
         if meta[2] as usize != self.graph.num_nodes {
-            bail!("checkpoint was taken on a graph with {} nodes, have {}", meta[2], self.graph.num_nodes);
+            bail!(
+                "checkpoint was taken on a graph with {} nodes, have {}",
+                meta[2],
+                self.graph.num_nodes
+            );
         }
-        self.state.params = r.take_f32("params")?;
-        self.state.adam_m = r.take_f32("adam_m")?;
-        self.state.adam_v = r.take_f32("adam_v")?;
+        self.state.params.set(r.take_f32("params")?);
+        self.state.adam_m.set(r.take_f32("adam_m")?);
+        self.state.adam_v.set(r.take_f32("adam_v")?);
         self.state.step = r.take_f32("step")?[0];
         if let Some(mem) = &mut self.state.memory {
             let rows = r.take_f32("memory")?;

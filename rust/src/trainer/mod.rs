@@ -6,9 +6,13 @@
 //! Steps ① and the graph-only part of ②③ are *prefetchable* and run on a
 //! producer thread ahead of the compute stream (see [`Preparer`] and the
 //! pipelined epoch in `single.rs`); the state-dependent part of ② and
-//! step ⑥ stay on the critical path. Knobs: `TrainerCfg::prefetch`
-//! (default on; bitwise-identical to sequential) and
-//! `TrainerCfg::prefetch_depth` (bounded queue depth, default 2).
+//! step ⑥ stay on the critical path. The same split pipelines the
+//! multi-worker trainer (one shared producer feeding all workers across
+//! group boundaries), evaluation replay, and the node-classification
+//! replay. Knobs: `TrainerCfg::prefetch` (default on;
+//! bitwise-identical to sequential), `TrainerCfg::prefetch_depth`
+//! (bounded queue depth, default 2), and `TrainerCfg::tensor_arenas`
+//! (pool-recycled input tensors; the zero-allocation gather path).
 
 mod checkpoint;
 mod multi;
@@ -17,4 +21,6 @@ mod single;
 
 pub use multi::{MultiEpochStats, MultiTrainer};
 pub use nodeclf::{node_classification, NodeClfResult};
-pub use single::{EpochStats, EvalResult, PrepArena, PreparedBatch, Preparer, Trainer, TrainerCfg};
+pub use single::{
+    EpochStats, EvalResult, PreparedBatch, PrepArena, Preparer, Trainer, TrainerCfg, TrainState,
+};

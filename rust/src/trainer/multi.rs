@@ -4,16 +4,31 @@
 //! mailbox in shared host memory, synchronized weight/memory/mailbox
 //! updates over NCCL — maps onto n worker *threads* sharing one PJRT CPU
 //! client: each global step takes n consecutive mini-batches, workers
-//! prepare (sample + gather) and execute them concurrently against the
-//! same parameter snapshot, then the leader averages the n Adam results
-//! (all replicas start identical, so the average of the updates equals
-//! the update of the averaged gradients) and applies memory/mailbox
-//! scatters in chronological (worker-id) order — the paper's
-//! synchronized scheme, including its intra-group dependency discard.
+//! execute them concurrently against the same parameter snapshot, then
+//! the leader averages the n Adam results (all replicas start identical,
+//! so the average of the updates equals the update of the averaged
+//! gradients) and applies memory/mailbox scatters in chronological
+//! (worker-id) order — the paper's synchronized scheme, including its
+//! intra-group dependency discard.
+//!
+//! With `prefetch` on (default), a **single shared producer** thread runs
+//! the prefetchable stage for *all* workers in chronological order — TGL's
+//! one-sampler-many-trainers design. Preparation overlaps both the
+//! current group's execution *and* the sync phase, and crosses group
+//! boundaries (while group g executes, batches of group g+1 are already
+//! being sampled). Off → each worker prepares its own batch inside the
+//! group, strictly synchronously. Both modes consume identical batches in
+//! identical group order, so they produce bitwise-identical losses
+//! (`rust/tests/pipeline_identity.rs`).
 
-use super::single::{EpochStats, Trainer};
+use super::single::{
+    apply_state_updates_impl, EpochStats, PreparedBatch, PrepArena, Preparer, spawn_producer,
+    Trainer, TrainIdx, TrainState,
+};
+use crate::models::Model;
+use crate::runtime::Tensor;
 use crate::sched::EpochPlan;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::time::Instant;
 
 /// Per-epoch stats for the multi-worker trainer.
@@ -30,11 +45,22 @@ pub struct MultiEpochStats {
 /// Orchestrates data-parallel epochs over a shared [`Trainer`].
 pub struct MultiTrainer {
     pub workers: usize,
+    /// Shared producer prefetching every worker's static stage across
+    /// group boundaries (bitwise-identical to off).
+    pub prefetch: bool,
+    /// Prepared batches in flight beyond the executing group.
+    pub prefetch_depth: usize,
 }
 
 impl MultiTrainer {
     pub fn new(workers: usize) -> Self {
-        MultiTrainer { workers: workers.max(1) }
+        MultiTrainer { workers: workers.max(1), prefetch: true, prefetch_depth: 2 }
+    }
+
+    /// The strictly synchronous variant (workers prepare their own
+    /// batches inside each group) — the prefetch baseline.
+    pub fn sequential(workers: usize) -> Self {
+        MultiTrainer { prefetch: false, ..MultiTrainer::new(workers) }
     }
 
     /// One epoch: groups of `workers` consecutive batches execute
@@ -46,87 +72,83 @@ impl MultiTrainer {
     ) -> Result<MultiEpochStats> {
         trainer.reset_chronology();
         let t0 = Instant::now();
-        let spec = trainer.model.mf.step("train")?.clone();
-        let i_loss = spec.output_index("loss")?;
-        let i_params = spec.output_index("new_params")?;
-        let i_m = spec.output_index("new_adam_m")?;
-        let i_v = spec.output_index("new_adam_v")?;
-        let uses_memory = trainer.model.uses_memory();
-        let (i_mem, i_mail) = if uses_memory {
-            (spec.output_index("new_mem")?, spec.output_index("new_mail")?)
-        } else {
-            (0, 0)
-        };
-
+        let model = trainer.model;
+        let idx = TrainIdx::new(model)?;
+        let deliver = trainer.prep.cfg.deliver_to_neighbors;
+        let workers = self.workers;
+        let prep = &trainer.prep;
+        let state = &mut trainer.state;
         let mut losses = Vec::with_capacity(plan.batches.len());
         let mut steps = 0usize;
-        for (gi, group) in plan.batches.chunks(self.workers).enumerate() {
-            // Parallel phase: prepare + execute each worker's batch against
-            // the same state snapshot. Workers use the same static/JIT
-            // split as the pipelined single trainer; the per-batch seed is
-            // the global batch index, so negative/sampling *draws* match
-            // the sequential path (losses do not for workers > 1: a group
-            // shares one state snapshot — the paper's intra-group
-            // dependency discard).
-            let results: Vec<_> = std::thread::scope(|scope| {
-                let handles: Vec<_> = group
-                    .iter()
-                    .enumerate()
-                    .map(|(w, range)| {
-                        let t: &Trainer<'_> = &*trainer;
-                        let range = range.clone();
-                        let seed = (gi * self.workers + w) as u64;
-                        scope.spawn(move || -> Result<_> {
-                            let mut pb = t.prep.prepare_static(range, seed, true)?;
-                            let inputs = t.prep.finish_inputs(&t.state, &mut pb)?;
-                            let outputs =
-                                t.model.train_exe.run(&inputs).context("worker train step")?;
-                            Ok((pb, outputs))
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
 
-            // Synchronization phase (leader): average parameter replicas,
-            // then apply state updates chronologically.
-            let mut group_out = Vec::with_capacity(results.len());
-            for r in results {
-                group_out.push(r?);
-            }
-            let n = group_out.len() as f32;
-            let pc = trainer.model.mf.param_count;
-            let mut params = vec![0.0f32; pc];
-            let mut am = vec![0.0f32; pc];
-            let mut av = vec![0.0f32; pc];
-            for (_, outputs) in &group_out {
-                losses.push(outputs[i_loss].scalar_f32()? as f64);
-                for (acc, src) in [
-                    (&mut params, outputs[i_params].as_f32()?),
-                    (&mut am, outputs[i_m].as_f32()?),
-                    (&mut av, outputs[i_v].as_f32()?),
-                ] {
-                    for (a, &b) in acc.iter_mut().zip(src) {
-                        *a += b / n;
+        if self.prefetch && plan.num_batches() > workers {
+            // Shared-producer mode: one thread samples + gathers for all
+            // workers, queue bounded at (group in flight + depth).
+            let depth = workers + self.prefetch_depth.max(1);
+            std::thread::scope(|scope| -> Result<()> {
+                // The channels are locals of this closure: every exit path
+                // (including `?`) drops `rx`, which unblocks a producer
+                // waiting on the full queue so the scope can join.
+                let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth);
+                let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
+                spawn_producer(scope, prep, true, plan.seeded(), tx, recycle_rx);
+                // Consumer (this thread).
+                loop {
+                    let mut pbs = Vec::with_capacity(workers);
+                    while pbs.len() < workers {
+                        match rx.recv() {
+                            Ok(p) => pbs.push(p?),
+                            Err(_) => break,
+                        }
+                    }
+                    if pbs.is_empty() {
+                        return Ok(());
+                    }
+                    let results = execute_group(prep, model, &*state, pbs);
+                    let mut group = Vec::with_capacity(results.len());
+                    for r in results {
+                        group.push(r?);
+                    }
+                    sync_group(model, deliver, &idx, state, &group, &mut losses)?;
+                    steps += 1;
+                    for (pb, _) in group {
+                        let _ = recycle_tx.send(pb.into_arena());
                     }
                 }
-            }
-            trainer.state.params = params;
-            trainer.state.adam_m = am;
-            trainer.state.adam_v = av;
-            trainer.state.step += 1.0;
-            if uses_memory {
-                for (pb, outputs) in &group_out {
-                    trainer.apply_state_updates(
-                        &pb.batch,
-                        pb.mfg.as_ref(),
-                        &outputs[i_mem],
-                        &outputs[i_mail],
-                    )?;
+            })?;
+        } else {
+            // Synchronous mode: workers prepare + execute their own batch
+            // per group (the pre-producer behavior; prefetch baseline).
+            for (gi, group_ranges) in plan.batches.chunks(workers).enumerate() {
+                let state_ref: &TrainState = &*state;
+                let results: Vec<Result<(PreparedBatch, Vec<Tensor>)>> =
+                    std::thread::scope(|scope| {
+                        let handles: Vec<_> = group_ranges
+                            .iter()
+                            .enumerate()
+                            .map(|(w, range)| {
+                                let range = range.clone();
+                                let seed = (gi * workers + w) as u64;
+                                scope.spawn(move || -> Result<(PreparedBatch, Vec<Tensor>)> {
+                                    let mut pb = prep.prepare_static(range, seed, true)?;
+                                    let inputs = prep.finish_inputs(state_ref, &mut pb)?;
+                                    let outputs =
+                                        model.train_exe.run(&inputs).context("worker train step")?;
+                                    Ok((pb, outputs))
+                                })
+                            })
+                            .collect();
+                        handles.into_iter().map(|h| h.join().unwrap()).collect()
+                    });
+                let mut group = Vec::with_capacity(results.len());
+                for r in results {
+                    group.push(r?);
                 }
+                sync_group(model, deliver, &idx, state, &group, &mut losses)?;
+                steps += 1;
             }
-            steps += 1;
         }
+
         Ok(MultiEpochStats {
             mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
             global_steps: steps,
@@ -135,6 +157,85 @@ impl MultiTrainer {
             losses,
         })
     }
+}
+
+/// Parallel phase: finish the JIT inputs and execute every worker's batch
+/// against the same settled state snapshot.
+fn execute_group(
+    prep: &Preparer<'_>,
+    model: &Model,
+    state: &TrainState,
+    pbs: Vec<PreparedBatch>,
+) -> Vec<Result<(PreparedBatch, Vec<Tensor>)>> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = pbs
+            .into_iter()
+            .map(|mut pb| {
+                scope.spawn(move || -> Result<(PreparedBatch, Vec<Tensor>)> {
+                    let inputs = prep.finish_inputs(state, &mut pb)?;
+                    let outputs = model.train_exe.run(&inputs).context("worker train step")?;
+                    Ok((pb, outputs))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Synchronization phase (leader): average the parameter/moment replicas —
+/// `1/n` hoisted, one fused pass per output — then apply memory/mailbox
+/// updates chronologically.
+fn sync_group(
+    model: &Model,
+    deliver: bool,
+    idx: &TrainIdx,
+    state: &mut TrainState,
+    group: &[(PreparedBatch, Vec<Tensor>)],
+    losses: &mut Vec<f64>,
+) -> Result<()> {
+    for (_, outputs) in group {
+        let l = outputs[idx.loss].scalar_f32()? as f64;
+        ensure!(l.is_finite(), "training diverged: loss = {l}");
+        losses.push(l);
+    }
+    let inv = 1.0 / group.len() as f32;
+    for (out_idx, dst) in [
+        (idx.params, &mut state.params),
+        (idx.m, &mut state.adam_m),
+        (idx.v, &mut state.adam_v),
+    ] {
+        let mut reps: Vec<&[f32]> = Vec::with_capacity(group.len());
+        for (_, outputs) in group {
+            reps.push(outputs[out_idx].as_f32()?);
+        }
+        let dstv = dst.make_mut();
+        ensure!(
+            reps.iter().all(|r| r.len() == dstv.len()),
+            "replica output length mismatch in sync phase"
+        );
+        for (j, d) in dstv.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for r in &reps {
+                acc += r[j];
+            }
+            *d = acc * inv;
+        }
+    }
+    state.step += 1.0;
+    if idx.uses_memory {
+        for (pb, outputs) in group {
+            apply_state_updates_impl(
+                model,
+                deliver,
+                state,
+                &pb.batch,
+                pb.mfg.as_ref(),
+                &outputs[idx.mem],
+                &outputs[idx.mail],
+            )?;
+        }
+    }
+    Ok(())
 }
 
 /// Convert multi-worker stats into the single-trainer shape for shared
@@ -147,5 +248,36 @@ impl From<MultiEpochStats> for EpochStats {
             seconds: m.seconds,
             losses: m.losses,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SharedVec;
+
+    /// The fused averaging must equal the per-replica mean exactly on
+    /// values where both summation orders are exact (powers of two).
+    #[test]
+    fn sync_averaging_is_exact_mean() {
+        let mut state = TrainState {
+            params: SharedVec::new(vec![0.0; 4]),
+            adam_m: SharedVec::new(vec![0.0; 4]),
+            adam_v: SharedVec::new(vec![0.0; 4]),
+            step: 0.0,
+            memory: None,
+            mailbox: None,
+        };
+        let inv = 1.0f32 / 2.0;
+        let reps: Vec<Vec<f32>> = vec![vec![2.0, 4.0, -8.0, 0.5], vec![6.0, 4.0, 8.0, 1.5]];
+        let dstv = state.params.make_mut();
+        for (j, d) in dstv.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for r in &reps {
+                acc += r[j];
+            }
+            *d = acc * inv;
+        }
+        assert_eq!(&state.params[..], &[4.0, 4.0, 0.0, 1.0]);
     }
 }

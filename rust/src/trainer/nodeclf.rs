@@ -7,8 +7,20 @@
 //! An MLP classifier is then trained on the collected embeddings with the
 //! variant's `clf` step. For binary tasks the classifier sees each
 //! positive alongside a sampled negative (the paper's balanced scheme).
+//!
+//! The replay itself is **pipelined** when `cfg.prefetch` is on: a
+//! producer thread runs the prefetchable stage (sampling + static
+//! gathers) for upcoming edge windows while this thread executes the eval
+//! step, applies memory updates, and harvests label embeddings — the same
+//! static/JIT split as the training pipeline. Off → strictly serial.
+//! Both modes replay identical windows with identical seeds, so the
+//! harvested embeddings (and everything downstream) are bitwise-identical
+//! (`rust/tests/pipeline_identity.rs`).
 
-use super::single::Trainer;
+use super::single::{
+    eval_windows, EvalIdx, exec_eval_batch, PreparedBatch, PrepArena, run_pipelined, StepIo,
+    Trainer, TrainState,
+};
 use crate::graph::NodeLabel;
 use crate::metrics::{argmax_rows, average_precision, f1_micro};
 use crate::runtime::Tensor;
@@ -43,48 +55,91 @@ pub fn node_classification(
     let dh = trainer.model.dim("dh");
     let mut rng = Rng::new(seed ^ 0xC1F);
 
-    // Chronological replay with interleaved embedding harvests.
+    // Chronological replay with interleaved embedding harvests, pipelined
+    // behind a prefetch producer when enabled (split borrows: the
+    // producer thread holds `prep`, this thread mutates `state`).
     trainer.reset_chronology();
     let mut embs: Vec<f32> = Vec::with_capacity(labels.len() * dh);
     let mut ys: Vec<u32> = Vec::with_capacity(labels.len());
-    let mut cursor = 0usize; // next label to harvest
-    let mut s = 0usize;
     let n_edges = trainer.graph.num_edges();
+    let model = trainer.model;
+    let graph = trainer.graph;
+    let prep = &trainer.prep;
+    let state = &mut trainer.state;
+    let idx = EvalIdx::new(model)?;
+    let mut io = StepIo::default();
+    let mut cursor = 0usize; // next label to harvest
     // Harvest buffers are hoisted out of the replay loop and recycled
     // (clear, not reallocate) — the same buffer-reuse discipline as the
     // pipelined trainer's sampling path.
     let mut batch_nodes = Vec::new();
     let mut batch_ts = Vec::new();
     let mut batch_y: Vec<u32> = Vec::new();
-    while s < n_edges && cursor < labels.len() {
-        let e = (s + bs).min(n_edges);
-        let window_end = if e == n_edges { f64::INFINITY } else { trainer.graph.time[e] };
-        // Replay this edge window (eval step updates memory).
-        trainer.eval_range(s..e).context("replay window")?;
-        // Harvest labels that fall before the next window.
-        while cursor < labels.len() && labels[cursor].time <= window_end {
-            batch_nodes.push(labels[cursor].node);
-            batch_ts.push(labels[cursor].time);
-            batch_y.push(labels[cursor].label);
-            cursor += 1;
-            if batch_nodes.len() == bs {
-                let rows = trainer.embed_nodes(&batch_nodes, &batch_ts)?;
+    // Eval scores are not used by this pipeline; recycled scratch sinks.
+    let mut pos = Vec::new();
+    let mut neg = Vec::new();
+
+    {
+        // One replayed window: eval step (memory updates), then harvest
+        // every label that falls before the next window. Returns whether
+        // labels remain (= whether the replay should continue).
+        let mut handle = |pb: &mut PreparedBatch,
+                          state: &mut TrainState,
+                          io: &mut StepIo|
+         -> Result<bool> {
+            pos.clear();
+            neg.clear();
+            exec_eval_batch(model, prep, state, io, &idx, pb, &mut pos, &mut neg)
+                .context("replay window")?;
+            let e = pb.batch.edge_range.end;
+            let window_end = if e >= n_edges { f64::INFINITY } else { graph.time[e] };
+            while cursor < labels.len() && labels[cursor].time <= window_end {
+                batch_nodes.push(labels[cursor].node);
+                batch_ts.push(labels[cursor].time);
+                batch_y.push(labels[cursor].label);
+                cursor += 1;
+                if batch_nodes.len() == bs {
+                    let rows = prep.embed_nodes(state, &batch_nodes, &batch_ts)?;
+                    embs.extend_from_slice(&rows);
+                    ys.extend_from_slice(&batch_y);
+                    batch_nodes.clear();
+                    batch_ts.clear();
+                    batch_y.clear();
+                }
+            }
+            if !batch_nodes.is_empty() {
+                let rows = prep.embed_nodes(state, &batch_nodes, &batch_ts)?;
                 embs.extend_from_slice(&rows);
                 ys.extend_from_slice(&batch_y);
                 batch_nodes.clear();
                 batch_ts.clear();
                 batch_y.clear();
             }
+            Ok(cursor < labels.len())
+        };
+
+        if prep.cfg.prefetch {
+            run_pipelined(
+                prep,
+                prep.cfg.prefetch_depth,
+                false,
+                eval_windows(0..n_edges, bs),
+                |mut pb| {
+                    let more = handle(&mut pb, state, &mut io)?;
+                    Ok(if more { Some(pb.into_arena()) } else { None })
+                },
+            )?;
+        } else {
+            let mut arena = PrepArena::default();
+            for (window_seed, window) in eval_windows(0..n_edges, bs) {
+                let mut pb = prep.prepare_static_reuse(window, window_seed, false, arena)?;
+                let more = handle(&mut pb, state, &mut io)?;
+                arena = pb.into_arena();
+                if !more {
+                    break;
+                }
+            }
         }
-        if !batch_nodes.is_empty() {
-            let rows = trainer.embed_nodes(&batch_nodes, &batch_ts)?;
-            embs.extend_from_slice(&rows);
-            ys.extend_from_slice(&batch_y);
-            batch_nodes.clear();
-            batch_ts.clear();
-            batch_y.clear();
-        }
-        s = e;
     }
     ensure!(!ys.is_empty(), "no labels harvested");
 

@@ -16,20 +16,31 @@
 //! double-buffered queue: a producer thread prepares batches ahead
 //! (`TrainerCfg::prefetch_depth` in flight) while the consumer executes the
 //! AOT step and applies state updates. Consumed batches hand their buffers
-//! back to the producer ([`PrepArena`]), so the steady-state sampling path
-//! performs zero heap allocation. Per-root seeding makes all draws
+//! back to the producer ([`PrepArena`]). Per-root seeding makes all draws
 //! independent of execution mode: pipelined and sequential epochs produce
-//! bitwise-identical losses (enforced by `rust/tests/integration.rs`).
+//! bitwise-identical losses (enforced by `rust/tests/integration.rs` on
+//! artifacts and `rust/tests/pipeline_identity.rs` on the reference
+//! backend).
+//!
+//! Since the tensor-arena PR the *gather* half is allocation-free too, not
+//! just sampling: every input tensor fills a pool-recycled buffer
+//! ([`crate::util::tensor_pool`]), `params`/`adam_m`/`adam_v` are aliased
+//! ([`crate::runtime::SharedVec`]) instead of cloned, and the state
+//! gathers run one traversal per table (`mem`+`mem_dt` together,
+//! `mail`+`mail_dt`+`mail_mask` together). A whole steady-state train
+//! step — including reference-backend execution — allocates nothing
+//! (`rust/tests/alloc_train.rs`).
 
 use crate::graph::{TCsr, TemporalGraph};
 use crate::metrics::average_precision;
 use crate::models::Model;
-use crate::runtime::Tensor;
+use crate::runtime::{SharedVec, Tensor, TensorSpec};
 use crate::sampler::{Mfg, SamplerConfig, Strategy, TemporalSampler};
 use crate::sched::{make_batch_into, Batch, EpochPlan};
 use crate::state::{Mailbox, NodeMemory};
 use crate::util::rng::Rng;
 use crate::util::stats::PhaseTimer;
+use crate::util::tensor_pool::{PoolBuf, TensorPool};
 use anyhow::{ensure, Context, Result};
 use std::time::{Duration, Instant};
 
@@ -50,6 +61,10 @@ pub struct TrainerCfg {
     pub prefetch: bool,
     /// Bound on prepared-batches in flight (the double-buffer depth).
     pub prefetch_depth: usize,
+    /// Recycle input-tensor buffers through a [`TensorPool`] (the
+    /// zero-allocation gather path). Off → fresh buffers per batch, the
+    /// baseline for the arena benches. Values are bitwise-identical.
+    pub tensor_arenas: bool,
 }
 
 impl TrainerCfg {
@@ -68,15 +83,18 @@ impl TrainerCfg {
             dt_scale: (1.0 / mean_gap.max(1e-9)) as f32,
             prefetch: true,
             prefetch_depth: 2,
+            tensor_arenas: true,
         }
     }
 }
 
-/// Learnable + stateful training state.
+/// Learnable + stateful training state. `params` and the Adam moments are
+/// [`SharedVec`]s so the JIT stage aliases them into input tensors
+/// (zero-copy) instead of cloning per step.
 pub struct TrainState {
-    pub params: Vec<f32>,
-    pub adam_m: Vec<f32>,
-    pub adam_v: Vec<f32>,
+    pub params: SharedVec,
+    pub adam_m: SharedVec,
+    pub adam_v: SharedVec,
     pub step: f32,
     pub memory: Option<NodeMemory>,
     pub mailbox: Option<Mailbox>,
@@ -102,20 +120,23 @@ pub struct EvalResult {
 }
 
 /// The prefetchable half of the trainer: model/graph handles, the sampler,
-/// and the config — everything [`Self::prepare_static`] needs, and nothing
-/// the consumer mutates. Lives as its own struct so the pipelined epoch can
-/// borrow it on the producer thread while the trainer's mutable state stays
-/// with the consumer.
+/// the tensor pool, and the config — everything [`Self::prepare_static`]
+/// needs, and nothing the consumer mutates. Lives as its own struct so the
+/// pipelined epoch can borrow it on the producer thread while the
+/// trainer's mutable state stays with the consumer.
 pub struct Preparer<'g> {
     pub model: &'g Model,
     pub graph: &'g TemporalGraph,
     sampler: Option<TemporalSampler<'g>>,
+    pool: TensorPool,
     pub cfg: TrainerCfg,
 }
 
 /// Recyclable buffers of a consumed [`PreparedBatch`]: the consumer sends
 /// these back to the producer so steady-state preparation reuses every
-/// sampling-path allocation (MFG arena, gather list, batch vectors).
+/// sampling-path allocation (MFG arena, gather list, batch vectors, the
+/// input-slot list — the tensor payloads themselves recycle through the
+/// [`TensorPool`]).
 #[derive(Default)]
 pub struct PrepArena {
     mfg: Option<Mfg>,
@@ -124,6 +145,7 @@ pub struct PrepArena {
     padded: Batch,
     roots: Vec<u32>,
     root_ts: Vec<f64>,
+    inputs: Vec<Option<Tensor>>,
 }
 
 /// A batch after the prefetchable stage: sampled MFG, gather list, and the
@@ -153,6 +175,7 @@ impl PreparedBatch {
             padded: self.padded,
             roots: self.roots,
             root_ts: self.root_ts,
+            inputs: self.inputs,
         }
     }
 }
@@ -174,6 +197,12 @@ impl<'g> Preparer<'g> {
         self.sampler.as_ref()
     }
 
+    /// The input-tensor buffer pool (shared with the tensors it loans out;
+    /// disabled when `cfg.tensor_arenas` is off).
+    pub fn pool(&self) -> &TensorPool {
+        &self.pool
+    }
+
     /// Prefetchable stage over an edge window: negative draw, padding,
     /// MFG sampling, static gathers. `&self` and state-free, so it can run
     /// on a producer thread (or a multi-trainer worker) concurrently with
@@ -189,7 +218,7 @@ impl<'g> Preparer<'g> {
     }
 
     /// [`Self::prepare_static`] recycling a consumed batch's buffers: at
-    /// steady state the whole sampling path allocates nothing.
+    /// steady state the whole preparation path allocates nothing.
     pub fn prepare_static_reuse(
         &self,
         range: std::ops::Range<usize>,
@@ -199,12 +228,14 @@ impl<'g> Preparer<'g> {
     ) -> Result<PreparedBatch> {
         let bs = self.model.dim("bs");
         ensure!(range.len() <= bs, "batch {} exceeds compiled bs {bs}", range.len());
-        let PrepArena { mfg, nodes, mut batch, mut padded, roots, root_ts } = arena;
+        let PrepArena { mfg, nodes, mut batch, mut padded, roots, root_ts, inputs } = arena;
         let mut rng = Rng::new(self.cfg.seed ^ batch_seed.wrapping_mul(0x9e37_79b9));
         make_batch_into(self.graph, range, &mut rng, &mut batch);
         let n_valid = batch.len();
         pad_batch_into(&batch, bs, &mut padded);
-        self.static_stage(batch, padded, n_valid, batch_seed, train, mfg, nodes, roots, root_ts)
+        self.static_stage(
+            batch, padded, n_valid, batch_seed, train, mfg, nodes, roots, root_ts, inputs,
+        )
     }
 
     /// Prefetchable stage for an externally assembled, already padded batch
@@ -228,6 +259,7 @@ impl<'g> Preparer<'g> {
             Vec::new(),
             Vec::new(),
             Vec::new(),
+            Vec::new(),
         )
     }
 
@@ -243,6 +275,7 @@ impl<'g> Preparer<'g> {
         mut nodes: Vec<(u32, f64, bool)>,
         mut roots: Vec<u32>,
         mut root_ts: Vec<f64>,
+        mut inputs: Vec<Option<Tensor>>,
     ) -> Result<PreparedBatch> {
         let bs = self.model.dim("bs");
         padded.roots_into(&mut roots, &mut root_ts);
@@ -276,7 +309,7 @@ impl<'g> Preparer<'g> {
 
         let step_name = if train { "train" } else { "eval" };
         let spec = self.model.mf.step(step_name)?;
-        let mut inputs = Vec::with_capacity(spec.inputs.len());
+        inputs.clear();
         for ts_spec in &spec.inputs {
             if is_state_input(&ts_spec.name) {
                 inputs.push(None);
@@ -307,21 +340,78 @@ impl<'g> Preparer<'g> {
         })
     }
 
-    /// Just-in-time stage: fill the state-dependent inputs from the
-    /// *current* training state and return the full manifest-ordered input
-    /// list. Must run after batch i-1's `apply_state_updates`.
-    pub fn finish_inputs(&self, state: &TrainState, pb: &mut PreparedBatch) -> Result<Vec<Tensor>> {
+    /// Just-in-time stage into a recycled output vector: fill the
+    /// state-dependent inputs from the *current* training state and emit
+    /// the full manifest-ordered input list. Must run after batch i-1's
+    /// `apply_state_updates`. `params`/`adam_m`/`adam_v` are zero-copy
+    /// aliases of the state; `mem`+`mem_dt` (and the three `mail*`
+    /// tensors) are filled by a single gather traversal each.
+    pub fn finish_inputs_into(
+        &self,
+        state: &TrainState,
+        pb: &mut PreparedBatch,
+        out: &mut Vec<Tensor>,
+    ) -> Result<()> {
         let step_name = if pb.train { "train" } else { "eval" };
         let spec = self.model.mf.step(step_name)?;
-        let mut out = Vec::with_capacity(spec.inputs.len());
+        out.clear();
+        let mut mem_bufs: (Option<PoolBuf>, Option<PoolBuf>) = (None, None);
+        let mut mail_bufs: (Option<PoolBuf>, Option<PoolBuf>, Option<PoolBuf>) =
+            (None, None, None);
         for (slot, ts_spec) in pb.inputs.iter_mut().zip(&spec.inputs) {
             let tensor = match slot.take() {
                 Some(t) => t,
-                None => self.build_state_input(&ts_spec.name, &ts_spec.shape, state, &pb.nodes)?,
+                None => self.build_state_input(
+                    ts_spec,
+                    state,
+                    &pb.nodes,
+                    &mut mem_bufs,
+                    &mut mail_bufs,
+                )?,
             };
             out.push(tensor);
         }
+        Ok(())
+    }
+
+    /// Allocating wrapper around [`Self::finish_inputs_into`] for one-shot
+    /// callers.
+    pub fn finish_inputs(&self, state: &TrainState, pb: &mut PreparedBatch) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(pb.inputs.len());
+        self.finish_inputs_into(state, pb, &mut out)?;
         Ok(out)
+    }
+
+    /// Compute embeddings for arbitrary (node, t) roots using the given
+    /// state — read-only (memory is NOT updated). Returns `[n, dh]` rows.
+    /// Lives on the `Preparer` so replay loops can call it under split
+    /// borrows (shared `prep`, mutable `state`).
+    pub fn embed_nodes(&self, state: &TrainState, nodes: &[u32], ts: &[f64]) -> Result<Vec<f32>> {
+        let bs = self.model.dim("bs");
+        let dh = self.model.dim("dh");
+        ensure!(nodes.len() <= bs, "embed batch too large: {} > {bs}", nodes.len());
+        // Pack the query nodes into the src slots of a synthetic batch.
+        let n = nodes.len();
+        let pad_t = ts.last().copied().unwrap_or(0.0);
+        let mut batch = Batch {
+            edge_range: 0..0,
+            src: nodes.to_vec(),
+            dst: vec![0; n],
+            neg: vec![0; n],
+            ts: ts.to_vec(),
+            eids: vec![0; n],
+        };
+        batch.src.resize(bs, 0);
+        batch.dst.resize(bs, 0);
+        batch.neg.resize(bs, 0);
+        batch.ts.resize(bs, pad_t);
+        batch.eids.resize(bs, 0);
+        let mut pb = self.prepare_padded_static(batch, n, 0xE3BED, false)?;
+        let inputs = self.finish_inputs(state, &mut pb)?;
+        let spec = self.model.mf.step("eval")?;
+        let outputs = self.model.eval_exe.run(&inputs).context("embed step")?;
+        let emb = outputs[spec.output_index("emb")?].as_f32()?;
+        Ok(emb[..n * dh].to_vec())
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -337,16 +427,16 @@ impl<'g> Preparer<'g> {
     ) -> Result<Tensor> {
         let g = self.graph;
         match name {
-            "lr" => Ok(Tensor::scalar(self.cfg.lr)),
-            "dt_scale" => Ok(Tensor::scalar(self.cfg.dt_scale)),
+            "lr" => self.pooled_scalar(shape, self.cfg.lr),
+            "dt_scale" => self.pooled_scalar(shape, self.cfg.dt_scale),
             "edge_mask" => {
-                let mut m = vec![0.0f32; bs];
+                let mut m = self.pool.take(bs);
                 m[..n_valid].fill(1.0);
-                Tensor::f32(shape, m)
+                Tensor::f32_pooled(shape, m)
             }
             "node_feat" => {
                 let dv = shape[1];
-                let mut out = vec![0.0f32; nodes.len() * dv];
+                let mut out = self.pool.take(nodes.len() * dv);
                 if let Some(nf) = &g.node_feat {
                     let copy = dv.min(nf.dim);
                     for (i, &(v, _, valid)) in nodes.iter().enumerate() {
@@ -355,11 +445,11 @@ impl<'g> Preparer<'g> {
                         }
                     }
                 }
-                Tensor::f32(shape, out)
+                Tensor::f32_pooled(shape, out)
             }
             "batch_efeat" => {
                 let de = shape[1];
-                let mut out = vec![0.0f32; bs * de];
+                let mut out = self.pool.take(bs * de);
                 if let Some(ef) = &g.edge_feat {
                     let copy = de.min(ef.dim);
                     for i in 0..n_valid {
@@ -367,7 +457,7 @@ impl<'g> Preparer<'g> {
                             .copy_from_slice(&ef.row(batch.eids[i] as usize)[..copy]);
                     }
                 }
-                Tensor::f32(shape, out)
+                Tensor::f32_pooled(shape, out)
             }
             _ if name.starts_with("dt_s")
                 || name.starts_with("mask_s")
@@ -377,12 +467,16 @@ impl<'g> Preparer<'g> {
                 let mfg = mfg.expect("hop inputs require a sampler");
                 let block = &mfg.snapshots[s][l];
                 if name.starts_with("dt_") {
-                    Tensor::f32(shape, block.dt.clone())
+                    let mut out = self.pool.take(block.num_slots());
+                    out.copy_from_slice(&block.dt);
+                    Tensor::f32_pooled(shape, out)
                 } else if name.starts_with("mask_") {
-                    Tensor::f32(shape, block.mask.clone())
+                    let mut out = self.pool.take(block.num_slots());
+                    out.copy_from_slice(&block.mask);
+                    Tensor::f32_pooled(shape, out)
                 } else {
                     let de = shape[2];
-                    let mut out = vec![0.0f32; block.num_slots() * de];
+                    let mut out = self.pool.take(block.num_slots() * de);
                     if let Some(ef) = &g.edge_feat {
                         let copy = de.min(ef.dim);
                         for i in 0..block.num_slots() {
@@ -392,46 +486,70 @@ impl<'g> Preparer<'g> {
                             }
                         }
                     }
-                    Tensor::f32(shape, out)
+                    Tensor::f32_pooled(shape, out)
                 }
             }
             other => anyhow::bail!("trainer cannot build input `{other}`"),
         }
     }
 
+    fn pooled_scalar(&self, shape: &[usize], v: f32) -> Result<Tensor> {
+        let mut b = self.pool.take(1);
+        b[0] = v;
+        Tensor::f32_pooled(shape, b)
+    }
+
+    /// Build one JIT (state-dependent) input. `mem_bufs` / `mail_bufs`
+    /// cache the single-traversal gather results across the input slots of
+    /// one batch: the first `mem`-family name encountered gathers both
+    /// buffers, the other consumes its cached half (same for the three
+    /// `mail*` names).
     fn build_state_input(
         &self,
-        name: &str,
-        shape: &[usize],
+        spec: &TensorSpec,
         state: &TrainState,
         nodes: &[(u32, f64, bool)],
+        mem_bufs: &mut (Option<PoolBuf>, Option<PoolBuf>),
+        mail_bufs: &mut (Option<PoolBuf>, Option<PoolBuf>, Option<PoolBuf>),
     ) -> Result<Tensor> {
-        match name {
-            "params" => Tensor::f32(shape, state.params.clone()),
-            "adam_m" => Tensor::f32(shape, state.adam_m.clone()),
-            "adam_v" => Tensor::f32(shape, state.adam_v.clone()),
-            "step" => Ok(Tensor::scalar(state.step)),
+        let shape = spec.shape.as_slice();
+        match spec.name.as_str() {
+            "params" => Tensor::f32_shared(shape, state.params.arc()),
+            "adam_m" => Tensor::f32_shared(shape, state.adam_m.arc()),
+            "adam_v" => Tensor::f32_shared(shape, state.adam_v.arc()),
+            "step" => self.pooled_scalar(shape, state.step),
             "mem" | "mem_dt" => {
-                let memory = state.memory.as_ref().expect("memory state");
-                let mut mem = Vec::new();
-                let mut dt = Vec::new();
-                memory.gather(nodes, &mut mem, &mut dt);
-                if name == "mem" {
-                    Tensor::f32(shape, mem)
-                } else {
-                    Tensor::f32(shape, dt)
+                if mem_bufs.0.is_none() && mem_bufs.1.is_none() {
+                    let memory = state.memory.as_ref().expect("memory state");
+                    let mut mem = self.pool.take(nodes.len() * memory.dim());
+                    let mut dt = self.pool.take(nodes.len());
+                    memory.gather_into(nodes, &mut mem, &mut dt);
+                    *mem_bufs = (Some(mem), Some(dt));
+                }
+                let buf = if spec.name == "mem" { mem_bufs.0.take() } else { mem_bufs.1.take() };
+                match buf {
+                    Some(b) => Tensor::f32_pooled(shape, b),
+                    None => anyhow::bail!("duplicate `{}` input in step spec", spec.name),
                 }
             }
             "mail" | "mail_dt" | "mail_mask" => {
-                let mailbox = state.mailbox.as_ref().expect("mailbox state");
-                let mut mail = Vec::new();
-                let mut dt = Vec::new();
-                let mut mask = Vec::new();
-                mailbox.gather(nodes, &mut mail, &mut dt, &mut mask);
-                match name {
-                    "mail" => Tensor::f32(shape, mail),
-                    "mail_dt" => Tensor::f32(shape, dt),
-                    _ => Tensor::f32(shape, mask),
+                if mail_bufs.0.is_none() && mail_bufs.1.is_none() && mail_bufs.2.is_none() {
+                    let mailbox = state.mailbox.as_ref().expect("mailbox state");
+                    let per = nodes.len() * mailbox.slots();
+                    let mut mail = self.pool.take(per * mailbox.dim());
+                    let mut dt = self.pool.take(per);
+                    let mut mask = self.pool.take(per);
+                    mailbox.gather_into(nodes, &mut mail, &mut dt, &mut mask);
+                    *mail_bufs = (Some(mail), Some(dt), Some(mask));
+                }
+                let buf = match spec.name.as_str() {
+                    "mail" => mail_bufs.0.take(),
+                    "mail_dt" => mail_bufs.1.take(),
+                    _ => mail_bufs.2.take(),
+                };
+                match buf {
+                    Some(b) => Tensor::f32_pooled(shape, b),
+                    None => anyhow::bail!("duplicate `{}` input in step spec", spec.name),
                 }
             }
             other => anyhow::bail!("input `{other}` was not prepared by the static stage"),
@@ -462,7 +580,7 @@ fn pad_batch_into(src: &Batch, bs: usize, out: &mut Batch) {
 
 /// Step ⑥ as a free function over split borrows, so the pipelined epoch can
 /// run it while the [`Preparer`] is lent to the producer thread.
-fn apply_state_updates_impl(
+pub(crate) fn apply_state_updates_impl(
     model: &Model,
     deliver_to_neighbors: bool,
     state: &mut TrainState,
@@ -518,6 +636,247 @@ fn apply_state_updates_impl(
     Ok(())
 }
 
+/// Recycled input/output tensor lists for one executable step. Clearing
+/// either list drops its tensors, which returns their pooled buffers —
+/// the step-level half of the zero-allocation loop.
+#[derive(Default)]
+pub(crate) struct StepIo {
+    pub inputs: Vec<Tensor>,
+    pub outputs: Vec<Tensor>,
+}
+
+/// Cached output indices of the train step.
+pub(crate) struct TrainIdx {
+    pub loss: usize,
+    pub params: usize,
+    pub m: usize,
+    pub v: usize,
+    pub mem: usize,
+    pub mail: usize,
+    pub uses_memory: bool,
+}
+
+impl TrainIdx {
+    pub fn new(model: &Model) -> Result<TrainIdx> {
+        let spec = model.mf.step("train")?;
+        let uses_memory = model.uses_memory();
+        let (mem, mail) = if uses_memory {
+            (spec.output_index("new_mem")?, spec.output_index("new_mail")?)
+        } else {
+            (0, 0)
+        };
+        Ok(TrainIdx {
+            loss: spec.output_index("loss")?,
+            params: spec.output_index("new_params")?,
+            m: spec.output_index("new_adam_m")?,
+            v: spec.output_index("new_adam_v")?,
+            mem,
+            mail,
+            uses_memory,
+        })
+    }
+}
+
+/// Cached output indices of the eval step.
+pub(crate) struct EvalIdx {
+    pub loss: usize,
+    pub pos: usize,
+    pub neg: usize,
+    pub mem: usize,
+    pub mail: usize,
+    pub uses_memory: bool,
+}
+
+impl EvalIdx {
+    pub fn new(model: &Model) -> Result<EvalIdx> {
+        let spec = model.mf.step("eval")?;
+        let uses_memory = model.uses_memory();
+        let (mem, mail) = if uses_memory {
+            (spec.output_index("new_mem")?, spec.output_index("new_mail")?)
+        } else {
+            (0, 0)
+        };
+        Ok(EvalIdx {
+            loss: spec.output_index("loss")?,
+            pos: spec.output_index("pos_score")?,
+            neg: spec.output_index("neg_score")?,
+            mem,
+            mail,
+            uses_memory,
+        })
+    }
+}
+
+/// Steps ②(state)–⑥ for one train batch: JIT inputs, execute, write back
+/// params/moments, scatter memory/mailbox. Shared verbatim by the
+/// sequential and pipelined epochs (bitwise identity by construction).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn exec_train_step(
+    model: &Model,
+    prep: &Preparer<'_>,
+    state: &mut TrainState,
+    timers: &mut PhaseTimer,
+    io: &mut StepIo,
+    idx: &TrainIdx,
+    pb: &mut PreparedBatch,
+) -> Result<f64> {
+    timers.add("1:sample", pb.t_sample);
+    let t = Instant::now();
+    prep.finish_inputs_into(state, pb, &mut io.inputs)?;
+    timers.add("2:lookup", pb.t_static + t.elapsed());
+    let t = Instant::now();
+    model.train_exe.run_into(&io.inputs, &mut io.outputs).context("train step")?;
+    timers.add("4:compute", t.elapsed());
+    let loss = io.outputs[idx.loss].scalar_f32()? as f64;
+    ensure!(loss.is_finite(), "training diverged: loss = {loss}");
+    let t = Instant::now();
+    // Drop the aliased params/adam tensors before writing the update:
+    // `SharedVec::copy_from` then holds the only reference and updates in
+    // place (no copy, no allocation).
+    io.inputs.clear();
+    state.params.copy_from(io.outputs[idx.params].as_f32()?);
+    state.adam_m.copy_from(io.outputs[idx.m].as_f32()?);
+    state.adam_v.copy_from(io.outputs[idx.v].as_f32()?);
+    state.step += 1.0;
+    if idx.uses_memory {
+        apply_state_updates_impl(
+            model,
+            prep.cfg.deliver_to_neighbors,
+            state,
+            &pb.batch,
+            pb.mfg.as_ref(),
+            &io.outputs[idx.mem],
+            &io.outputs[idx.mail],
+        )?;
+    }
+    timers.add("6:update", t.elapsed());
+    io.outputs.clear();
+    Ok(loss)
+}
+
+/// One eval batch: JIT inputs, eval step, score harvest, state replay.
+/// Shared by `eval_range` (both modes) and the node-classification
+/// replay.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn exec_eval_batch(
+    model: &Model,
+    prep: &Preparer<'_>,
+    state: &mut TrainState,
+    io: &mut StepIo,
+    idx: &EvalIdx,
+    pb: &mut PreparedBatch,
+    pos: &mut Vec<f32>,
+    neg: &mut Vec<f32>,
+) -> Result<f64> {
+    prep.finish_inputs_into(state, pb, &mut io.inputs)?;
+    model.eval_exe.run_into(&io.inputs, &mut io.outputs).context("eval step")?;
+    io.inputs.clear();
+    let loss = io.outputs[idx.loss].scalar_f32()? as f64;
+    let n_valid = pb.n_valid;
+    pos.extend_from_slice(&io.outputs[idx.pos].as_f32()?[..n_valid]);
+    neg.extend_from_slice(&io.outputs[idx.neg].as_f32()?[..n_valid]);
+    if idx.uses_memory {
+        apply_state_updates_impl(
+            model,
+            prep.cfg.deliver_to_neighbors,
+            state,
+            &pb.batch,
+            pb.mfg.as_ref(),
+            &io.outputs[idx.mem],
+            &io.outputs[idx.mail],
+        )?;
+    }
+    io.outputs.clear();
+    Ok(loss)
+}
+
+/// Spawn the shared prefetch producer: runs the prefetchable stage over
+/// `jobs` in order, recycling consumed arenas from `recycle_rx`, sending
+/// prepared batches (or the first error) down `tx`. The consumer dropping
+/// its receiver unblocks a producer waiting on the full queue, so the
+/// enclosing [`std::thread::scope`] can always join. Shared by
+/// [`run_pipelined`] and the multi-trainer's grouped consumer — the
+/// producer protocol lives in exactly one place.
+pub(crate) fn spawn_producer<'scope, I>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    prep: &'scope Preparer<'_>,
+    train: bool,
+    jobs: I,
+    tx: std::sync::mpsc::SyncSender<Result<PreparedBatch>>,
+    recycle_rx: std::sync::mpsc::Receiver<PrepArena>,
+) where
+    I: Iterator<Item = (u64, std::ops::Range<usize>)> + Send + 'scope,
+{
+    scope.spawn(move || {
+        for (seed, range) in jobs {
+            let arena = recycle_rx.try_recv().unwrap_or_default();
+            let prepared = prep.prepare_static_reuse(range, seed, train, arena);
+            let failed = prepared.is_err();
+            if tx.send(prepared).is_err() || failed {
+                break;
+            }
+        }
+    });
+}
+
+/// The two-stage pipeline shared by the trainer's epochs, `eval_range`,
+/// and the node-classification replay: a producer thread runs the
+/// prefetchable stage over `jobs` (up to `depth` batches in flight on a
+/// bounded queue) while `consume` runs on the calling thread. `consume`
+/// returns the batch's recycled arena to keep the steady state
+/// allocation-light, or `None` to stop early (remaining prepared batches
+/// are dropped; the producer unblocks on the closed channel).
+pub(crate) fn run_pipelined<I, F>(
+    prep: &Preparer<'_>,
+    depth: usize,
+    train: bool,
+    jobs: I,
+    mut consume: F,
+) -> Result<()>
+where
+    I: Iterator<Item = (u64, std::ops::Range<usize>)> + Send,
+    F: FnMut(PreparedBatch) -> Result<Option<PrepArena>>,
+{
+    let depth = depth.max(1);
+    std::thread::scope(|scope| -> Result<()> {
+        // The channels are locals of this closure: every exit path
+        // (including `?`) drops `rx`, unblocking the producer.
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth);
+        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
+        spawn_producer(scope, prep, train, jobs, tx, recycle_rx);
+        while let Ok(prepared) = rx.recv() {
+            let pb = prepared?;
+            match consume(pb)? {
+                // Hand the buffers back for reuse (best effort: the
+                // producer may already be done).
+                Some(arena) => {
+                    let _ = recycle_tx.send(arena);
+                }
+                None => break,
+            }
+        }
+        Ok(())
+    })
+}
+
+/// `(seed, window)` jobs covering `range` in `bs`-sized chronological
+/// windows — the shared schedule of sequential and pipelined evaluation.
+pub(crate) fn eval_windows(
+    range: std::ops::Range<usize>,
+    bs: usize,
+) -> impl Iterator<Item = (u64, std::ops::Range<usize>)> + Send {
+    let end = range.end;
+    (0u64..).scan(range.start, move |s, bi| {
+        if *s >= end {
+            return None;
+        }
+        let e = (*s + bs).min(end);
+        let w = *s..e;
+        *s = e;
+        Some((0x5EED ^ bi, w))
+    })
+}
+
 /// Single-process trainer over one model + dataset.
 pub struct Trainer<'g> {
     pub model: &'g Model,
@@ -527,6 +886,9 @@ pub struct Trainer<'g> {
     pub state: TrainState,
     /// Figure-5 phase breakdown (labels = the paper's circled steps).
     pub timers: PhaseTimer,
+    /// Recycled step input/output lists (tensors return to the pool when
+    /// these are cleared between batches).
+    pub(crate) io: StepIo,
 }
 
 impl<'g> Trainer<'g> {
@@ -554,9 +916,9 @@ impl<'g> Trainer<'g> {
             None
         };
         let state = TrainState {
-            params: model.init_params.clone(),
-            adam_m: vec![0.0; model.mf.param_count],
-            adam_v: vec![0.0; model.mf.param_count],
+            params: SharedVec::new(model.init_params.clone()),
+            adam_m: SharedVec::new(vec![0.0; model.mf.param_count]),
+            adam_v: SharedVec::new(vec![0.0; model.mf.param_count]),
             step: 0.0,
             memory: model
                 .uses_memory()
@@ -565,8 +927,9 @@ impl<'g> Trainer<'g> {
                 Mailbox::new(graph.num_nodes, model.dim("mail_slots"), model.dim("maild"))
             }),
         };
-        let prep = Preparer { model, graph, sampler, cfg };
-        Ok(Trainer { model, graph, prep, state, timers: PhaseTimer::new() })
+        let pool = if cfg.tensor_arenas { TensorPool::new() } else { TensorPool::disabled() };
+        let prep = Preparer { model, graph, sampler, pool, cfg };
+        Ok(Trainer { model, graph, prep, state, timers: PhaseTimer::new(), io: StepIo::default() })
     }
 
     /// Trainer options (owned by the prefetchable half; mutate via
@@ -603,13 +966,23 @@ impl<'g> Trainer<'g> {
 
     /// Strictly serial epoch (sample → gather → compute → update per
     /// batch); the pipelined path's determinism reference, and the
-    /// `prefetch: false` fallback.
+    /// `prefetch: false` fallback. Recycles one [`PrepArena`] across the
+    /// epoch, so its steady state is allocation-free too.
     pub fn train_epoch_sequential(&mut self, plan: &EpochPlan) -> Result<EpochStats> {
         self.reset_chronology();
         let t0 = Instant::now();
+        let idx = TrainIdx::new(self.model)?;
+        let model = self.model;
+        let prep = &self.prep;
+        let state = &mut self.state;
+        let timers = &mut self.timers;
+        let io = &mut self.io;
         let mut losses = Vec::with_capacity(plan.num_batches());
+        let mut arena = PrepArena::default();
         for (seed, range) in plan.seeded() {
-            losses.push(self.train_batch(range, seed)?);
+            let mut pb = prep.prepare_static_reuse(range, seed, true, arena)?;
+            losses.push(exec_train_step(model, prep, state, timers, io, &idx, &mut pb)?);
+            arena = pb.into_arena();
         }
         Ok(epoch_stats(losses, t0))
     }
@@ -622,140 +995,114 @@ impl<'g> Trainer<'g> {
     pub fn train_epoch_pipelined(&mut self, plan: &EpochPlan) -> Result<EpochStats> {
         self.reset_chronology();
         let t0 = Instant::now();
+        let idx = TrainIdx::new(self.model)?;
         let model = self.model;
         let prep = &self.prep;
         let state = &mut self.state;
         let timers = &mut self.timers;
-        let depth = prep.cfg.prefetch_depth.max(1);
-        let deliver = prep.cfg.deliver_to_neighbors;
-        let uses_memory = model.uses_memory();
-        let spec = model.mf.step("train")?;
-        let i_loss = spec.output_index("loss")?;
-        let i_params = spec.output_index("new_params")?;
-        let i_m = spec.output_index("new_adam_m")?;
-        let i_v = spec.output_index("new_adam_v")?;
-        let (i_mem, i_mail) = if uses_memory {
-            (spec.output_index("new_mem")?, spec.output_index("new_mail")?)
-        } else {
-            (0, 0)
-        };
-        let n_batches = plan.num_batches();
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth);
-        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
-
-        let losses = std::thread::scope(|scope| -> Result<Vec<f64>> {
-            scope.spawn(move || {
-                for (seed, range) in plan.seeded() {
-                    let arena = recycle_rx.try_recv().unwrap_or_default();
-                    let prepared = prep.prepare_static_reuse(range, seed, true, arena);
-                    let failed = prepared.is_err();
-                    // The consumer dropping `rx` (early exit) unblocks this
-                    // send with an Err; stop producing either way.
-                    if tx.send(prepared).is_err() || failed {
-                        break;
-                    }
-                }
-            });
-            // The consumer closure owns `rx`: every exit path (success or
-            // `?`) drops it, which unblocks a producer waiting on the full
-            // queue so the scope can join.
-            let mut consumer = move || -> Result<Vec<f64>> {
-                let mut losses = Vec::with_capacity(n_batches);
-                for _ in 0..n_batches {
-                    let mut pb = rx
-                        .recv()
-                        .map_err(|_| anyhow::anyhow!("prefetch producer exited early"))??;
-                    timers.add("1:sample", pb.t_sample);
-                    let t = Instant::now();
-                    let inputs = prep.finish_inputs(state, &mut pb)?;
-                    timers.add("2:lookup", pb.t_static + t.elapsed());
-                    let t = Instant::now();
-                    let outputs = model.train_exe.run(&inputs).context("train step")?;
-                    timers.add("4:compute", t.elapsed());
-                    let loss = outputs[i_loss].scalar_f32()? as f64;
-                    ensure!(loss.is_finite(), "training diverged: loss = {loss}");
-                    let t = Instant::now();
-                    state.params = outputs[i_params].as_f32()?.to_vec();
-                    state.adam_m = outputs[i_m].as_f32()?.to_vec();
-                    state.adam_v = outputs[i_v].as_f32()?.to_vec();
-                    state.step += 1.0;
-                    if uses_memory {
-                        apply_state_updates_impl(
-                            model,
-                            deliver,
-                            state,
-                            &pb.batch,
-                            pb.mfg.as_ref(),
-                            &outputs[i_mem],
-                            &outputs[i_mail],
-                        )?;
-                    }
-                    timers.add("6:update", t.elapsed());
-                    losses.push(loss);
-                    // Hand the buffers back for reuse (best effort: the
-                    // producer may already be done).
-                    let _ = recycle_tx.send(pb.into_arena());
-                }
-                Ok(losses)
-            };
-            consumer()
+        let io = &mut self.io;
+        let mut losses = Vec::with_capacity(plan.num_batches());
+        run_pipelined(prep, prep.cfg.prefetch_depth, true, plan.seeded(), |mut pb| {
+            losses.push(exec_train_step(model, prep, state, timers, io, &idx, &mut pb)?);
+            Ok(Some(pb.into_arena()))
         })?;
         Ok(epoch_stats(losses, t0))
     }
 
-    /// One optimization step over an edge window.
+    /// One optimization step over an edge window (one-shot buffers).
     pub fn train_batch(&mut self, range: std::ops::Range<usize>, batch_seed: u64) -> Result<f64> {
-        let (batch, mfg, inputs, t_sample, t_gather) = self.prepare_range(range, batch_seed, true)?;
-        self.timers.add("1:sample", t_sample);
-        self.timers.add("2:lookup", t_gather);
-        let t = Instant::now();
-        let outputs = self.model.train_exe.run(&inputs).context("train step")?;
-        self.timers.add("4:compute", t.elapsed());
-
-        let spec = self.model.mf.step("train")?;
-        let loss = outputs[spec.output_index("loss")?].scalar_f32()? as f64;
-        ensure!(loss.is_finite(), "training diverged: loss = {loss}");
-        let t = Instant::now();
-        self.state.params = outputs[spec.output_index("new_params")?].as_f32()?.to_vec();
-        self.state.adam_m = outputs[spec.output_index("new_adam_m")?].as_f32()?.to_vec();
-        self.state.adam_v = outputs[spec.output_index("new_adam_v")?].as_f32()?.to_vec();
-        self.state.step += 1.0;
-        if self.model.uses_memory() {
-            let new_mem = &outputs[spec.output_index("new_mem")?];
-            let new_mail = &outputs[spec.output_index("new_mail")?];
-            self.apply_state_updates(&batch, mfg.as_ref(), new_mem, new_mail)?;
-        }
-        self.timers.add("6:update", t.elapsed());
+        let (loss, _) = self.train_batch_reuse(range, batch_seed, PrepArena::default())?;
         Ok(loss)
     }
 
+    /// [`Self::train_batch`] recycling a caller-held [`PrepArena`]: the
+    /// steady-state form driven by `rust/tests/alloc_train.rs`, which
+    /// asserts it performs **zero heap allocations** end to end (prepare,
+    /// JIT gathers, engine execution on the reference backend, state
+    /// update).
+    pub fn train_batch_reuse(
+        &mut self,
+        range: std::ops::Range<usize>,
+        batch_seed: u64,
+        arena: PrepArena,
+    ) -> Result<(f64, PrepArena)> {
+        let idx = TrainIdx::new(self.model)?;
+        let model = self.model;
+        let prep = &self.prep;
+        let state = &mut self.state;
+        let timers = &mut self.timers;
+        let io = &mut self.io;
+        let mut pb = prep.prepare_static_reuse(range, batch_seed, true, arena)?;
+        let loss = exec_train_step(model, prep, state, timers, io, &idx, &mut pb)?;
+        Ok((loss, pb.into_arena()))
+    }
+
     /// Evaluate link prediction over an edge range (replaying memory).
+    /// Pipelines preparation against execution when `cfg.prefetch` is on;
+    /// both modes are bitwise-identical.
     pub fn eval_range(&mut self, range: std::ops::Range<usize>) -> Result<EvalResult> {
         let bs = self.model.dim("bs");
-        let spec = self.model.mf.step("eval")?;
+        let n_batches = range.len().div_ceil(bs);
+        if self.prep.cfg.prefetch && n_batches > 1 {
+            self.eval_range_pipelined(range)
+        } else {
+            self.eval_range_sequential(range)
+        }
+    }
+
+    /// Strictly serial evaluation replay (the pipelined path's
+    /// determinism reference).
+    pub fn eval_range_sequential(&mut self, range: std::ops::Range<usize>) -> Result<EvalResult> {
+        let bs = self.model.dim("bs");
+        let idx = EvalIdx::new(self.model)?;
+        let model = self.model;
+        let prep = &self.prep;
+        let state = &mut self.state;
+        let io = &mut self.io;
         let mut pos = Vec::new();
         let mut neg = Vec::new();
         let mut loss_sum = 0.0;
         let mut batches = 0usize;
-        let mut s = range.start;
-        let mut bi = 0u64;
-        while s < range.end {
-            let e = (s + bs).min(range.end);
-            let (batch, mfg, inputs, _, _) = self.prepare_range(s..e, 0x5EED ^ bi, false)?;
-            let n_valid = batch.len();
-            let outputs = self.model.eval_exe.run(&inputs).context("eval step")?;
-            loss_sum += outputs[spec.output_index("loss")?].scalar_f32()? as f64;
+        let mut arena = PrepArena::default();
+        for (seed, window) in eval_windows(range.clone(), bs) {
+            let mut pb = prep.prepare_static_reuse(window, seed, false, arena)?;
+            loss_sum += exec_eval_batch(model, prep, state, io, &idx, &mut pb, &mut pos, &mut neg)?;
             batches += 1;
-            pos.extend_from_slice(&outputs[spec.output_index("pos_score")?].as_f32()?[..n_valid]);
-            neg.extend_from_slice(&outputs[spec.output_index("neg_score")?].as_f32()?[..n_valid]);
-            if self.model.uses_memory() {
-                let new_mem = &outputs[spec.output_index("new_mem")?];
-                let new_mail = &outputs[spec.output_index("new_mail")?];
-                self.apply_state_updates(&batch, mfg.as_ref(), new_mem, new_mail)?;
-            }
-            s = e;
-            bi += 1;
+            arena = pb.into_arena();
         }
+        Ok(EvalResult {
+            ap: average_precision(&pos, &neg),
+            mean_loss: loss_sum / batches.max(1) as f64,
+            edges: range.len(),
+        })
+    }
+
+    /// Pipelined evaluation replay: the same static/JIT split as the
+    /// training pipeline (eval state gathers are JIT, everything else
+    /// prefetchable).
+    pub fn eval_range_pipelined(&mut self, range: std::ops::Range<usize>) -> Result<EvalResult> {
+        let bs = self.model.dim("bs");
+        let idx = EvalIdx::new(self.model)?;
+        let model = self.model;
+        let prep = &self.prep;
+        let state = &mut self.state;
+        let io = &mut self.io;
+        let mut pos = Vec::new();
+        let mut neg = Vec::new();
+        let mut loss_sum = 0.0;
+        let mut batches = 0usize;
+        run_pipelined(
+            prep,
+            prep.cfg.prefetch_depth,
+            false,
+            eval_windows(range.clone(), bs),
+            |mut pb| {
+                loss_sum +=
+                    exec_eval_batch(model, prep, state, io, &idx, &mut pb, &mut pos, &mut neg)?;
+                batches += 1;
+                Ok(Some(pb.into_arena()))
+            },
+        )?;
         Ok(EvalResult {
             ap: average_precision(&pos, &neg),
             mean_loss: loss_sum / batches.max(1) as f64,
@@ -765,73 +1112,8 @@ impl<'g> Trainer<'g> {
 
     /// Compute embeddings for arbitrary (node, t) roots using the current
     /// state — read-only (memory is NOT updated). Returns `[n, dh]` rows.
-    pub fn embed_nodes(&mut self, nodes: &[u32], ts: &[f64]) -> Result<Vec<f32>> {
-        let bs = self.model.dim("bs");
-        let dh = self.model.dim("dh");
-        ensure!(nodes.len() <= bs, "embed batch too large: {} > {bs}", nodes.len());
-        // Pack the query nodes into the src slots of a synthetic batch.
-        let n = nodes.len();
-        let pad_t = ts.last().copied().unwrap_or(0.0);
-        let mut batch = Batch {
-            edge_range: 0..0,
-            src: nodes.to_vec(),
-            dst: vec![0; n],
-            neg: vec![0; n],
-            ts: ts.to_vec(),
-            eids: vec![0; n],
-        };
-        batch.src.resize(bs, 0);
-        batch.dst.resize(bs, 0);
-        batch.neg.resize(bs, 0);
-        batch.ts.resize(bs, pad_t);
-        batch.eids.resize(bs, 0);
-        let mut pb = self.prep.prepare_padded_static(batch, n, 0xE3BED, false)?;
-        let inputs = self.prep.finish_inputs(&self.state, &mut pb)?;
-        let spec = self.model.mf.step("eval")?;
-        let outputs = self.model.eval_exe.run(&inputs).context("embed step")?;
-        let emb = outputs[spec.output_index("emb")?].as_f32()?;
-        Ok(emb[..n * dh].to_vec())
-    }
-
-    // ------------------------------------------------------------ internals
-
-    /// Compat path: both stages back to back (eval/embed and external
-    /// callers that don't pipeline). `&self` on purpose: the multi-worker
-    /// trainer calls this from worker threads concurrently.
-    ///
-    /// Returns (batch, mfg, inputs, sample_time, gather_time).
-    pub(crate) fn prepare_range(
-        &self,
-        range: std::ops::Range<usize>,
-        batch_seed: u64,
-        train: bool,
-    ) -> Result<(Batch, Option<Mfg>, Vec<Tensor>, Duration, Duration)> {
-        let mut pb = self.prep.prepare_static(range, batch_seed, train)?;
-        let t = Instant::now();
-        let inputs = self.prep.finish_inputs(&self.state, &mut pb)?;
-        let t_gather = pb.t_static + t.elapsed();
-        let PreparedBatch { batch, mfg, t_sample, .. } = pb;
-        Ok((batch, mfg, inputs, t_sample, t_gather))
-    }
-
-    /// Step ⑥: persist refreshed memory + new mails for the batch's
-    /// src/dst roots (valid entries only; padding rows are dropped).
-    pub(crate) fn apply_state_updates(
-        &mut self,
-        batch: &Batch,
-        mfg: Option<&Mfg>,
-        new_mem: &Tensor,
-        new_mail: &Tensor,
-    ) -> Result<()> {
-        apply_state_updates_impl(
-            self.model,
-            self.prep.cfg.deliver_to_neighbors,
-            &mut self.state,
-            batch,
-            mfg,
-            new_mem,
-            new_mail,
-        )
+    pub fn embed_nodes(&self, nodes: &[u32], ts: &[f64]) -> Result<Vec<f32>> {
+        self.prep.embed_nodes(&self.state, nodes, ts)
     }
 }
 
@@ -903,5 +1185,15 @@ mod tests {
         let ptr = out.src.as_ptr();
         pad_batch_into(&src, 4, &mut out);
         assert_eq!(out.src.as_ptr(), ptr, "same-shape pad must reuse buffers");
+    }
+
+    #[test]
+    fn eval_windows_cover_range_with_per_batch_seeds() {
+        let windows: Vec<_> = eval_windows(10..35, 10).collect();
+        assert_eq!(
+            windows,
+            vec![(0x5EED ^ 0, 10..20), (0x5EED ^ 1, 20..30), (0x5EED ^ 2, 30..35)]
+        );
+        assert_eq!(eval_windows(5..5, 10).count(), 0, "empty range yields no windows");
     }
 }

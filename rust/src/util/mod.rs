@@ -10,4 +10,5 @@ pub mod logger;
 pub mod pool;
 pub mod rng;
 pub mod stats;
+pub mod tensor_pool;
 pub mod yamlish;

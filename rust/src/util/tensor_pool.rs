@@ -1,0 +1,244 @@
+//! Recycled `f32` tensor-buffer pool — the storage substrate that extends
+//! the zero-allocation guarantee from *sampling* (PR 1) to the **whole
+//! batch-preparation data path** (FAST 2026's memory-I/O argument: once
+//! sampling is off the critical path, per-batch buffer churn dominates
+//! temporal-GNN step time).
+//!
+//! # The owned / pooled / aliased storage contract
+//!
+//! A [`crate::runtime::Tensor`] now carries one of three storage modes:
+//!
+//! - **Owned** (`Data::F32` / `Data::I32`): a plain `Vec`, allocated and
+//!   freed per tensor. The default for one-shot callers (checkpointing,
+//!   examples, the node-classification head).
+//! - **Pooled** (`Data::F32Pooled`, backed by [`PoolBuf`] from this
+//!   module): the buffer is borrowed from a [`TensorPool`] and returns to
+//!   it automatically when the tensor is dropped. At steady state every
+//!   batch re-uses the previous batch's buffers, so preparing and
+//!   executing a training step performs **zero heap allocation**
+//!   (asserted by `rust/tests/alloc_train.rs`).
+//! - **Aliased** (`Data::F32Shared`, an `Arc<Vec<f32>>`): a zero-copy
+//!   view of a per-step-constant vector — `params`, `adam_m`, `adam_v`.
+//!   Cloning the `Arc` replaces the full `state.params.clone()` copies
+//!   the trainer used to make per step.
+//!
+//! # Why aliasing `params` is safe
+//!
+//! The JIT stage ([`crate::trainer::Preparer`]'s `finish_inputs`) runs on
+//! the consumer thread strictly *after* batch i-1's state update and
+//! strictly *before* batch i's execution — it reads a **settled
+//! snapshot**. The aliased tensors are dropped before the consumer writes
+//! the step's results back ([`crate::runtime::SharedVec::copy_from`] uses
+//! `Arc::make_mut`), so the writer always holds the only reference and
+//! updates in place; if a stale alias ever did survive, `make_mut` would
+//! copy-on-write instead of corrupting the reader — the failure mode is a
+//! lost optimization, never a data race.
+//!
+//! # Pool mechanics
+//!
+//! [`TensorPool::take`] hands out a zeroed length-`n` buffer, preferring
+//! the *smallest* free buffer whose capacity already fits (best-fit, so a
+//! large buffer is never wasted on a small request while a later large
+//! request goes hungry). Dropping the returned [`PoolBuf`] pushes the
+//! buffer back. After a warm-up batch the free list holds exactly the
+//! working set of the step's input/output shapes and `take`/drop cycle
+//! without touching the allocator. Pools are `Clone` + `Sync` (shared
+//! free list behind a mutex) so the prefetch producer can fill buffers
+//! that the consumer thread releases.
+//!
+//! [`TensorPool::disabled`] keeps the same call shape but allocates fresh
+//! buffers and never recycles — the `arena off` baseline for benches and
+//! the `--arena off` CLI knob.
+
+use std::sync::{Arc, Mutex};
+
+/// Shared free list. Buffers keep their capacity across cycles, so the
+/// pool converges on the per-batch working set after warm-up.
+type FreeList = Arc<Mutex<Vec<Vec<f32>>>>;
+
+/// A recycling pool of `f32` buffers (see module docs).
+#[derive(Debug, Clone)]
+pub struct TensorPool {
+    free: Option<FreeList>,
+}
+
+impl Default for TensorPool {
+    fn default() -> Self {
+        TensorPool::new()
+    }
+}
+
+impl TensorPool {
+    /// An enabled pool with an empty free list.
+    pub fn new() -> TensorPool {
+        TensorPool { free: Some(Arc::new(Mutex::new(Vec::with_capacity(64)))) }
+    }
+
+    /// A pass-through pool: `take` allocates fresh zeroed buffers and drop
+    /// frees them (the no-recycling baseline).
+    pub fn disabled() -> TensorPool {
+        TensorPool { free: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.free.is_some()
+    }
+
+    /// Number of buffers currently parked in the free list.
+    pub fn free_len(&self) -> usize {
+        self.free.as_ref().map_or(0, |f| f.lock().unwrap().len())
+    }
+
+    /// A zeroed buffer of exactly `n` elements. Enabled pools reuse the
+    /// best-fitting free buffer (no allocation once capacities are warm);
+    /// disabled pools allocate fresh.
+    pub fn take(&self, n: usize) -> PoolBuf {
+        let Some(free) = &self.free else {
+            return PoolBuf { data: vec![0.0; n], home: None };
+        };
+        let mut data = {
+            let mut list = free.lock().unwrap();
+            // Best fit: smallest capacity that already holds `n`.
+            let mut best: Option<(usize, usize)> = None;
+            for (i, b) in list.iter().enumerate() {
+                let cap = b.capacity();
+                if cap < n {
+                    continue;
+                }
+                match best {
+                    Some((_, c)) if cap >= c => {}
+                    _ => best = Some((i, cap)),
+                }
+            }
+            match best {
+                Some((i, _)) => list.swap_remove(i),
+                None => Vec::with_capacity(n),
+            }
+        };
+        data.clear();
+        data.resize(n, 0.0);
+        PoolBuf { data, home: Some(Arc::clone(free)) }
+    }
+}
+
+/// A zeroed `f32` buffer on loan from a [`TensorPool`]; returns home on
+/// drop. Detach with [`PoolBuf::detach`] to keep the storage.
+#[derive(Debug)]
+pub struct PoolBuf {
+    data: Vec<f32>,
+    home: Option<FreeList>,
+}
+
+impl PoolBuf {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Take the storage out of the pool's custody (it will not be
+    /// recycled).
+    pub fn detach(mut self) -> Vec<f32> {
+        self.home = None;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl std::ops::Deref for PoolBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            let data = std::mem::take(&mut self.data);
+            if data.capacity() > 0 {
+                home.lock().unwrap().push(data);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_zeroed_exact_len() {
+        let pool = TensorPool::new();
+        let mut b = pool.take(5);
+        assert_eq!(b.len(), 5);
+        assert!(b.iter().all(|&x| x == 0.0));
+        b[2] = 7.0;
+        drop(b);
+        // Recycled buffer is re-zeroed.
+        let b2 = pool.take(5);
+        assert!(b2.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn buffers_recycle_storage() {
+        let pool = TensorPool::new();
+        let b = pool.take(128);
+        let ptr = b.as_ptr();
+        drop(b);
+        assert_eq!(pool.free_len(), 1);
+        let b2 = pool.take(100); // fits in the recycled 128-capacity buffer
+        assert_eq!(b2.as_ptr(), ptr, "best-fit must reuse the parked buffer");
+        assert_eq!(pool.free_len(), 0);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let pool = TensorPool::new();
+        let small = pool.take(8);
+        let large = pool.take(1024);
+        let large_ptr = large.as_ptr();
+        drop(small);
+        drop(large);
+        // A mid-size request must not steal the small buffer.
+        let mid = pool.take(512);
+        assert_eq!(mid.as_ptr(), large_ptr);
+        assert_eq!(pool.free_len(), 1);
+    }
+
+    #[test]
+    fn detach_removes_from_custody() {
+        let pool = TensorPool::new();
+        let b = pool.take(4);
+        let v = b.detach();
+        assert_eq!(v.len(), 4);
+        assert_eq!(pool.free_len(), 0);
+    }
+
+    #[test]
+    fn disabled_pool_never_recycles() {
+        let pool = TensorPool::disabled();
+        assert!(!pool.is_enabled());
+        let b = pool.take(16);
+        assert_eq!(b.len(), 16);
+        drop(b);
+        assert_eq!(pool.free_len(), 0);
+    }
+
+    #[test]
+    fn shared_across_clones_and_threads() {
+        let pool = TensorPool::new();
+        let p2 = pool.clone();
+        let b = pool.take(32);
+        std::thread::spawn(move || drop(b)).join().unwrap();
+        assert_eq!(p2.free_len(), 1, "cross-thread drop must return to the shared list");
+    }
+}

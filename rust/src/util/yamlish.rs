@@ -113,7 +113,9 @@ impl Yaml {
 
     /// Typed optional lookups with defaults — the config-reading idiom.
     pub fn str_or(&self, key: &str, default: &str) -> String {
-        self.opt(key).and_then(|v| v.as_str().ok().map(str::to_owned)).unwrap_or_else(|| default.to_owned())
+        self.opt(key)
+            .and_then(|v| v.as_str().ok().map(str::to_owned))
+            .unwrap_or_else(|| default.to_owned())
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {

@@ -38,7 +38,11 @@ fn tgn_learns_on_wikipedia_like_data() {
     let first = report.epochs.first().unwrap().1;
     let last = report.epochs.last().unwrap().1;
     assert!(last < first, "loss should decrease: {first} -> {last}");
-    assert!(report.test_ap > 0.75, "memory model should beat chance by a margin: {}", report.test_ap);
+    assert!(
+        report.test_ap > 0.75,
+        "memory model should beat chance by a margin: {}",
+        report.test_ap
+    );
 }
 
 #[test]

@@ -1,0 +1,196 @@
+//! Bitwise-identity properties of every pipelined execution mode, proven
+//! on the artifact-free reference backend (`models::synthetic`), so they
+//! run in every CI environment — the artifact-gated twins live in
+//! `integration.rs`.
+//!
+//! Covered: single-trainer pipeline vs sequential (losses + downstream
+//! eval), tensor arenas on vs off, the multi-trainer shared producer vs
+//! synchronous workers (across worker counts and queue depths), pipelined
+//! eval replay, pipelined node-classification replay (harvested
+//! embeddings and classifier metrics), and checkpoint round-trips over
+//! the shared/aliased parameter storage.
+
+use tgl::graph::{TCsr, TemporalGraph};
+use tgl::models::{synthetic, Model};
+use tgl::sched::ChunkScheduler;
+use tgl::trainer::{node_classification, MultiTrainer, Trainer, TrainerCfg};
+
+fn graph() -> TemporalGraph {
+    tgl::datasets::by_name("wikipedia", 0.02, 7).expect("dataset")
+}
+
+fn trainer<'a>(
+    model: &'a Model,
+    graph: &'a TemporalGraph,
+    csr: &'a TCsr,
+    prefetch: bool,
+    depth: usize,
+    arenas: bool,
+) -> Trainer<'a> {
+    let mut cfg = TrainerCfg::for_model(model, graph, 1e-3, 2);
+    cfg.prefetch = prefetch;
+    cfg.prefetch_depth = depth;
+    cfg.tensor_arenas = arenas;
+    Trainer::new(model, graph, csr, cfg).expect("trainer")
+}
+
+#[test]
+fn pipelined_epoch_and_eval_bitwise_identical_to_sequential() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    for arch in ["tgn", "tgat"] {
+        let model = synthetic(arch).unwrap();
+        let bs = model.dim("bs");
+        let (train_end, val_end) = g.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+
+        let mut seq = trainer(&model, &g, &csr, false, 2, true);
+        let s_seq = seq.train_epoch(&ep).unwrap();
+        let val_seq = seq.eval_range(train_end..val_end).unwrap();
+        assert!(!s_seq.losses.is_empty());
+
+        for depth in [1usize, 2, 4] {
+            let mut pipe = trainer(&model, &g, &csr, true, depth, true);
+            let s_pipe = pipe.train_epoch(&ep).unwrap();
+            assert_eq!(
+                s_seq.losses, s_pipe.losses,
+                "{arch}: pipelined (depth {depth}) losses must be bitwise-identical"
+            );
+            let val_pipe = pipe.eval_range(train_end..val_end).unwrap();
+            assert_eq!(val_seq.ap, val_pipe.ap, "{arch} depth {depth}: eval AP");
+            assert_eq!(val_seq.mean_loss, val_pipe.mean_loss, "{arch} depth {depth}");
+
+            // Harvested embeddings after identical replays must match bit
+            // for bit (the nodeclf identity rests on this).
+            let nodes: Vec<u32> = (0..8u32).collect();
+            let ts: Vec<f64> = (0..8).map(|i| 1.0e5 + i as f64).collect();
+            let e_seq = seq.embed_nodes(&nodes, &ts).unwrap();
+            let e_pipe = pipe.embed_nodes(&nodes, &ts).unwrap();
+            assert_eq!(e_seq, e_pipe, "{arch} depth {depth}: embeddings");
+        }
+    }
+}
+
+#[test]
+fn tensor_arenas_do_not_change_results() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    for arch in ["tgn", "tgat"] {
+        let model = synthetic(arch).unwrap();
+        let bs = model.dim("bs");
+        let (train_end, val_end) = g.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+
+        let mut on = trainer(&model, &g, &csr, true, 2, true);
+        let mut off = trainer(&model, &g, &csr, true, 2, false);
+        let s_on = on.train_epoch(&ep).unwrap();
+        let s_off = off.train_epoch(&ep).unwrap();
+        assert_eq!(s_on.losses, s_off.losses, "{arch}: arenas must be value-invisible");
+        let v_on = on.eval_range(train_end..val_end).unwrap();
+        let v_off = off.eval_range(train_end..val_end).unwrap();
+        assert_eq!(v_on.ap, v_off.ap, "{arch}: eval AP arenas on/off");
+    }
+}
+
+#[test]
+fn params_are_aliased_not_cloned_in_finish_inputs() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+    let t = trainer(&model, &g, &csr, false, 2, true);
+    let bs = model.dim("bs");
+    let mut pb = t.prep.prepare_static(0..bs, 0, true).unwrap();
+    let inputs = t.prep.finish_inputs(&t.state, &mut pb).unwrap();
+    let spec = model.mf.step("train").unwrap();
+    for name in ["params", "adam_m", "adam_v"] {
+        let i = spec.input_index(name).unwrap();
+        assert!(inputs[i].is_aliased(), "{name} must be a zero-copy alias");
+    }
+    let i = spec.input_index("params").unwrap();
+    assert_eq!(
+        inputs[i].as_f32().unwrap().as_ptr(),
+        t.state.params.as_ptr(),
+        "params tensor must point at the state storage (no copy)"
+    );
+}
+
+#[test]
+fn multi_trainer_shared_producer_matches_synchronous_workers() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    let ep = sched.epoch();
+
+    for workers in [1usize, 2, 3] {
+        let mut sync_t = trainer(&model, &g, &csr, true, 2, true);
+        let sync_stats = MultiTrainer::sequential(workers).train_epoch(&mut sync_t, &ep).unwrap();
+        for depth in [1usize, 3] {
+            let mut pre_t = trainer(&model, &g, &csr, true, 2, true);
+            let mut multi = MultiTrainer::new(workers);
+            multi.prefetch_depth = depth;
+            let pre_stats = multi.train_epoch(&mut pre_t, &ep).unwrap();
+            assert_eq!(
+                sync_stats.losses, pre_stats.losses,
+                "workers {workers} depth {depth}: prefetched multi must be bitwise-identical"
+            );
+            assert_eq!(sync_stats.global_steps, pre_stats.global_steps);
+        }
+    }
+
+    // One worker degenerates to the sequential single trainer.
+    let mut single = trainer(&model, &g, &csr, false, 2, true);
+    let s = single.train_epoch(&ep).unwrap();
+    let mut multi1 = trainer(&model, &g, &csr, true, 2, true);
+    let m = MultiTrainer::new(1).train_epoch(&mut multi1, &ep).unwrap();
+    assert_eq!(s.losses, m.losses, "1-worker multi must equal the sequential trainer");
+}
+
+#[test]
+fn nodeclf_pipelined_replay_matches_sequential() {
+    let g = graph();
+    assert!(!g.labels.is_empty(), "wikipedia-like dataset must have labels");
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+
+    let mut seq_t = trainer(&model, &g, &csr, false, 2, true);
+    let seq = node_classification(&mut seq_t, 0.7, 3, 0.01, 7).unwrap();
+
+    for depth in [1usize, 2, 4] {
+        let mut pipe_t = trainer(&model, &g, &csr, true, depth, true);
+        let pipe = node_classification(&mut pipe_t, 0.7, 3, 0.01, 7).unwrap();
+        assert_eq!(seq.ap, pipe.ap, "depth {depth}: nodeclf AP");
+        assert_eq!(seq.f1_micro, pipe.f1_micro, "depth {depth}: nodeclf F1");
+        assert_eq!(seq.train_labels, pipe.train_labels);
+        assert_eq!(seq.test_labels, pipe.test_labels);
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_with_shared_params() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, val_end) = g.chrono_split(0.70, 0.15);
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    let mut t = trainer(&model, &g, &csr, true, 2, true);
+    t.train_epoch(&sched.epoch()).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("tgl_synckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("syn.ckpt");
+    t.save_checkpoint(&path).unwrap();
+    let after_save = t.eval_range(train_end..val_end).unwrap();
+
+    let mut t2 = trainer(&model, &g, &csr, true, 2, true);
+    t2.load_checkpoint(&path).unwrap();
+    let after_load = t2.eval_range(train_end..val_end).unwrap();
+    assert_eq!(after_save.ap, after_load.ap);
+    assert_eq!(after_save.mean_loss, after_load.mean_loss);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,102 @@
+#!/usr/bin/env bash
+# Compare a fresh BENCH_pipeline.json against the committed baseline and
+# fail on perf regressions.
+#
+# Usage:
+#   scripts/bench_compare.sh [--update] [--tolerance PCT] [--fresh PATH]
+#
+#   --update          copy the fresh results over the baseline (seeding or
+#                     intentionally re-baselining after a verified change)
+#   --tolerance PCT   allowed relative regression, percent (default 10)
+#   --fresh PATH      fresh results file (default ./BENCH_pipeline.json,
+#                     produced by `cargo bench --bench training`)
+#
+# Rows are matched on (workload, mode). Only the dimensionless `speedup`
+# field is compared — absolute seconds vary across machines, but the
+# arena/prefetch speedup ratios are what the perf work actually claims,
+# and a >tolerance drop in any of them fails the script (exit 1).
+#
+# Bootstrap: if no baseline is committed yet, the script reports what it
+# would compare and exits 0 with instructions (first toolchain-bearing CI
+# run seeds it via --update).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FRESH="BENCH_pipeline.json"
+BASELINE="benches/baseline/BENCH_pipeline.json"
+TOLERANCE=10
+UPDATE=0
+while [ $# -gt 0 ]; do
+  case "$1" in
+    --update) UPDATE=1 ;;
+    --tolerance) shift; TOLERANCE="${1:?--tolerance needs a value}" ;;
+    --fresh) shift; FRESH="${1:?--fresh needs a path}" ;;
+    *) echo "unknown flag: $1" >&2; exit 2 ;;
+  esac
+  shift
+done
+
+if [ ! -f "$FRESH" ]; then
+  echo "bench_compare: no fresh results at $FRESH — run \`cargo bench --bench training\` first" >&2
+  exit 2
+fi
+
+if [ "$UPDATE" = 1 ]; then
+  mkdir -p "$(dirname "$BASELINE")"
+  cp "$FRESH" "$BASELINE"
+  echo "bench_compare: baseline updated from $FRESH"
+  exit 0
+fi
+
+if [ ! -f "$BASELINE" ]; then
+  echo "bench_compare: no committed baseline at $BASELINE yet."
+  echo "Seed it from a trusted run with: scripts/bench_compare.sh --update"
+  python3 - "$FRESH" <<'EOF'
+import json, sys
+rows = json.load(open(sys.argv[1])).get("rows", [])
+print("fresh rows that will be tracked once a baseline exists:")
+for r in rows:
+    if "speedup" in r:
+        print(f"  {r.get('workload')}/{r.get('mode')}: speedup {r['speedup']:.3f}x")
+EOF
+  exit 0
+fi
+
+python3 - "$FRESH" "$BASELINE" "$TOLERANCE" <<'EOF'
+import json, sys
+
+fresh_path, base_path, tol_pct = sys.argv[1], sys.argv[2], float(sys.argv[3])
+fresh = {(r.get("workload"), r.get("mode")): r
+         for r in json.load(open(fresh_path)).get("rows", [])}
+base = {(r.get("workload"), r.get("mode")): r
+        for r in json.load(open(base_path)).get("rows", [])}
+
+failures, compared = [], 0
+for key, b in sorted(base.items()):
+    if "speedup" not in b:
+        continue
+    f = fresh.get(key)
+    if f is None:
+        failures.append(f"{key[0]}/{key[1]}: row missing from fresh results")
+        continue
+    if "speedup" not in f:
+        failures.append(f"{key[0]}/{key[1]}: fresh row lost its speedup field")
+        continue
+    compared += 1
+    b_s, f_s = b["speedup"], f["speedup"]
+    drop = (b_s - f_s) / b_s * 100.0 if b_s > 0 else 0.0
+    status = "OK"
+    if drop > tol_pct:
+        status = "REGRESSION"
+        failures.append(
+            f"{key[0]}/{key[1]}: speedup {b_s:.3f}x -> {f_s:.3f}x ({drop:.1f}% drop)")
+    print(f"  [{status}] {key[0]}/{key[1]}: baseline {b_s:.3f}x, fresh {f_s:.3f}x")
+
+print(f"bench_compare: {compared} rows compared, tolerance {tol_pct:.0f}%")
+if failures:
+    print("bench_compare: FAILED")
+    for msg in failures:
+        print(f"  - {msg}")
+    sys.exit(1)
+print("bench_compare: OK")
+EOF
