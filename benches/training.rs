@@ -26,6 +26,7 @@ use std::path::Path;
 use tgl::bench::{bench_full, bench_scale, Table};
 use tgl::coordinator::{run_epoch_parallel, run_epoch_parallel_reuse, RunPlan};
 use tgl::graph::TCsr;
+use tgl::metrics::Curve;
 use tgl::models::synthetic;
 use tgl::sampler::{SamplerConfig, Strategy, TemporalSampler};
 use tgl::sched::ChunkScheduler;
@@ -160,7 +161,7 @@ fn main() -> anyhow::Result<()> {
         let graph = tgl::datasets::by_name("wikipedia", scale, 42)?;
         let csr = TCsr::build(&graph, true);
         let bs = model.dim("bs");
-        let (train_end, _) = graph.chrono_split(0.70, 0.15);
+        let (train_end, val_end) = graph.chrono_split(0.70, 0.15);
         let mut sched = ChunkScheduler::plain(train_end, bs);
         let ep = sched.epoch();
 
@@ -223,6 +224,42 @@ fn main() -> anyhow::Result<()> {
             ("prefetch_on_s", Json::Num(m_on)),
             ("speedup", Json::Num(m_off / m_on.max(1e-12))),
         ]));
+
+        // ---- Convergence row: the neural reference backend is a real
+        // learner (runtime/nn.rs); record the epoch-1 smoothed loss curve
+        // (Figure-6-style CSV) and the held-out AP so learning-dynamics
+        // regressions are visible in the perf trajectory alongside the
+        // timing rows.
+        {
+            let cfg = TrainerCfg::for_model(&model, &graph, 5e-3, 8);
+            let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+            let stats = t.train_epoch(&ep)?;
+            let mut curve = Curve::default();
+            for (i, &l) in stats.losses.iter().enumerate() {
+                curve.push(i as f64, l);
+            }
+            let sm = curve.moving_average((stats.losses.len() / 6).max(4));
+            sm.write_csv(
+                Path::new("results/convergence_syn_tgn.csv"),
+                "batch",
+                "smoothed_loss",
+            )?;
+            let val = t.eval_range(train_end..val_end)?;
+            let first = stats.losses.first().copied().unwrap_or(0.0);
+            let last = sm.points.last().map(|p| p.1).unwrap_or(0.0);
+            println!(
+                "syn_tgn convergence: loss {first:.4} -> {last:.4} (smoothed), eval AP {:.4}",
+                val.ap
+            );
+            pipeline_rows.push(obj(vec![
+                ("workload", Json::Str("syn_tgn-convergence".into())),
+                ("mode", Json::Str("convergence".into())),
+                ("loss_first", Json::Num(first)),
+                ("loss_last_smoothed", Json::Num(last)),
+                ("eval_ap", Json::Num(val.ap)),
+                ("batches", Json::Num(stats.losses.len() as f64)),
+            ]));
+        }
     }
 
     // ---- Sampler-level arena rows (always available, artifacts or not):

@@ -1,11 +1,15 @@
-//! Synthetic model variants over the deterministic reference backend.
+//! Synthetic model variants over the neural reference backend.
 //!
 //! [`synthetic`] assembles a [`Model`] entirely in-process — manifest,
 //! dims, init params, and [`Executable::reference`] step functions — so
 //! the full training loop (prepare → execute → state update) runs without
-//! AOT artifacts. Tests use these variants to assert pipeline/multi-
-//! trainer bitwise identity and the zero-allocation guarantee; benches
-//! use them for end-to-end rows on machines without `make artifacts`.
+//! AOT artifacts. The steps execute the real tiny TGNN in
+//! [`crate::runtime::nn`] (GRU memory, temporal attention, BCE decoder,
+//! analytic gradients, Adam), so these variants genuinely *learn*: tests
+//! use them for pipeline/multi-trainer bitwise identity, the
+//! zero-allocation guarantee, and artifact-free convergence assertions
+//! (`rust/tests/convergence.rs`); benches use them for end-to-end rows on
+//! machines without `make artifacts`.
 //!
 //! Two variants cover both trainer dataflows:
 //!
@@ -18,7 +22,7 @@
 //! sweep queue depths and worker counts in well under a second each.
 
 use super::Model;
-use crate::runtime::{DType, Executable, StepSpec, TensorSpec, VariantManifest};
+use crate::runtime::{nn, DType, Executable, StepSpec, TensorSpec, VariantManifest};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -28,9 +32,8 @@ const DV: usize = 4;
 const DE: usize = 4;
 const DM: usize = 8;
 const MAILD: usize = 8;
-const DH: usize = 8;
-const PC: usize = 64;
-const CLF_PC: usize = 32;
+/// Embedding width is fixed by the reference network.
+const DH: usize = nn::DH;
 const CLASSES: usize = 2;
 
 fn f(name: &str, shape: &[usize]) -> TensorSpec {
@@ -53,6 +56,11 @@ pub fn synthetic(arch: &str) -> Result<Model> {
         "tgat" => (2usize, false),
         other => bail!("no synthetic variant for arch `{other}` (have: tgn, tgat)"),
     };
+    // Real weight-matrix layouts: the reference network defines how many
+    // floats the flat parameter vectors hold (GRU + projection +
+    // attention + decoder; classifier MLP for `clf`).
+    let pc = nn::tgnn_param_count(use_memory, DV, DE, DM, MAILD);
+    let clf_pc = nn::clf_param_count(DH, CLASSES);
     let roots = 3 * BS;
     // n_total = roots + Σ_l roots · fanout^l (each hop fans out the
     // previous hop's slots).
@@ -67,9 +75,9 @@ pub fn synthetic(arch: &str) -> Result<Model> {
     // state-dependent names (params/adam/step/mem/mail*) are exactly the
     // ones `trainer::single::is_state_input` defers to the JIT stage.
     let mut inputs = vec![
-        f("params", &[PC]),
-        f("adam_m", &[PC]),
-        f("adam_v", &[PC]),
+        f("params", &[pc]),
+        f("adam_m", &[pc]),
+        f("adam_v", &[pc]),
         f("step", &[]),
         f("lr", &[]),
         f("dt_scale", &[]),
@@ -94,9 +102,9 @@ pub fn synthetic(arch: &str) -> Result<Model> {
 
     let mut train_outputs = vec![
         f("loss", &[]),
-        f("new_params", &[PC]),
-        f("new_adam_m", &[PC]),
-        f("new_adam_v", &[PC]),
+        f("new_params", &[pc]),
+        f("new_adam_m", &[pc]),
+        f("new_adam_v", &[pc]),
     ];
     let mut eval_outputs = vec![
         f("loss", &[]),
@@ -125,9 +133,9 @@ pub fn synthetic(arch: &str) -> Result<Model> {
     let clf = use_memory.then(|| StepSpec {
         hlo: format!("reference://{name}/clf"),
         inputs: vec![
-            f("params", &[CLF_PC]),
-            f("adam_m", &[CLF_PC]),
-            f("adam_v", &[CLF_PC]),
+            f("params", &[clf_pc]),
+            f("adam_m", &[clf_pc]),
+            f("adam_v", &[clf_pc]),
             f("step", &[]),
             f("lr", &[]),
             f("emb", &[BS, DH]),
@@ -135,9 +143,10 @@ pub fn synthetic(arch: &str) -> Result<Model> {
             f("label_mask", &[BS]),
         ],
         outputs: vec![
-            f("new_params", &[CLF_PC]),
-            f("new_adam_m", &[CLF_PC]),
-            f("new_adam_v", &[CLF_PC]),
+            f("loss", &[]),
+            f("new_params", &[clf_pc]),
+            f("new_adam_m", &[clf_pc]),
+            f("new_adam_v", &[clf_pc]),
             f("logits", &[BS, CLASSES]),
         ],
     });
@@ -176,8 +185,8 @@ pub fn synthetic(arch: &str) -> Result<Model> {
     let mf = VariantManifest {
         name: name.clone(),
         dims,
-        param_count: PC,
-        clf_param_count: if use_memory { CLF_PC } else { 0 },
+        param_count: pc,
+        clf_param_count: if use_memory { clf_pc } else { 0 },
         params: Vec::new(),
         steps,
         extras,
@@ -189,8 +198,8 @@ pub fn synthetic(arch: &str) -> Result<Model> {
         train_exe,
         eval_exe,
         clf_exe,
-        init_params: init_vec(PC, 0.13),
-        init_clf_params: if use_memory { init_vec(CLF_PC, 0.57) } else { Vec::new() },
+        init_params: init_vec(pc, 0.13),
+        init_clf_params: if use_memory { init_vec(clf_pc, 0.57) } else { Vec::new() },
     })
 }
 
@@ -243,6 +252,26 @@ mod tests {
             assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap(), "bitwise deterministic");
         }
         let loss = a[0].scalar_f32().unwrap();
-        assert!(loss.is_finite() && loss > 0.0 && loss < 1.0);
+        // BCE with logits over pos+neg pairs: strictly positive, finite
+        // (≈ 2·ln 2 at an uninformative decoder).
+        assert!(loss.is_finite() && loss > 0.0, "loss = {loss}");
+    }
+
+    #[test]
+    fn param_layouts_match_reference_network() {
+        let tgn = synthetic("tgn").unwrap();
+        assert_eq!(
+            tgn.mf.param_count,
+            crate::runtime::nn::tgnn_param_count(true, DV, DE, DM, MAILD)
+        );
+        assert_eq!(tgn.mf.clf_param_count, crate::runtime::nn::clf_param_count(DH, CLASSES));
+        assert_eq!(tgn.init_params.len(), tgn.mf.param_count);
+        assert_eq!(tgn.init_clf_params.len(), tgn.mf.clf_param_count);
+        let tgat = synthetic("tgat").unwrap();
+        assert_eq!(
+            tgat.mf.param_count,
+            crate::runtime::nn::tgnn_param_count(false, DV, DE, DM, MAILD)
+        );
+        assert_eq!(tgat.mf.clf_param_count, 0);
     }
 }

@@ -9,6 +9,7 @@
 
 mod engine;
 mod manifest;
+pub mod nn;
 mod pjrt_stub;
 mod reference;
 mod tensor;

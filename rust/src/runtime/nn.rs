@@ -1,0 +1,1366 @@
+//! Tiny numerical TGNN for the reference backend: forward, analytic
+//! backward, and a real Adam step — pure Rust, no dependencies.
+//!
+//! This is the math behind `reference://syn_*` steps ([`super::RefExec`]
+//! dispatches here). One architecture covers both synthetic variants:
+//!
+//! - **Time encoding**: a fixed sinusoidal basis `φ_k(Δt) = cos(Δt ·
+//!   dt_scale / 3^k)`, k < [`DTE`] — no learned parameters (TGAT's Bochner
+//!   encoding with frozen frequencies).
+//! - **GRU memory updater** (memory variants): `m̃_v = GRU([mail_v,
+//!   φ(Δt_mail)], s_v)`, gated by `mail_mask` so mail-less nodes keep
+//!   their memory — TGN Eq. 1–3 with the mailbox decoupling.
+//! - **Input projection**: `x_v = tanh(W_in [m̃_v, feat_v, φ(Δt_mem)] +
+//!   b_in)` — the memory-age term encodes staleness (TGN's `Φ(t − t_v^-)`)
+//!   and makes every embedding sensitive to the `mem_dt` state gather.
+//! - **Single-head temporal attention** per hop (weights shared across
+//!   hops): queries from the target's projection, keys/values from
+//!   `[h_u, φ(Δt_uv), efeat_uv]` over the sampled neighbors, softmax over
+//!   valid slots, combined as `h_v = tanh(W_s x_v + W_a Σ α_u v_u + b_o)`.
+//! - **Link decoder**: 2-layer MLP on `[z_src, z_dst]` with BCE-with-
+//!   logits loss over positive and corrupted destinations.
+//! - **Node classifier** (`clf` step): softmax/cross-entropy MLP on
+//!   harvested embeddings.
+//!
+//! Training steps backpropagate through all of the above with
+//! hand-derived gradients (verified against finite differences in the
+//! tests below) and apply a bias-corrected Adam update; `new_mem` /
+//! `new_mail` persist the refreshed memory and partner messages
+//! (stop-gradient across batches, as in TGN/TGL).
+//!
+//! Everything is a pure, deterministic function of the inputs — bitwise
+//! identical across execution modes — and all intermediates live in
+//! fixed-size stack arrays or buffers recycled through the caller's
+//! [`TensorPool`], so a steady-state step performs **zero heap
+//! allocations** (`rust/tests/alloc_train.rs`).
+
+#![allow(clippy::needless_range_loop)] // index-heavy kernels: ranges are clearer
+
+use super::manifest::StepSpec;
+use super::tensor::Tensor;
+use crate::util::tensor_pool::{PoolBuf, TensorPool};
+use anyhow::{bail, ensure, Result};
+
+/// Embedding width of the reference TGNN (roots and hidden states).
+pub const DH: usize = 8;
+/// Width of the fixed sinusoidal time encoding.
+pub const DTE: usize = 4;
+/// Hidden width of the link-prediction decoder MLP.
+pub const DD: usize = 8;
+/// Hidden width of the node-classification MLP.
+pub const CH: usize = 8;
+
+/// Adam hyper-parameters (the standard defaults).
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Bounds for fixed-size stack scratch (checked at spec parse time).
+const MAX_HOPS: usize = 4;
+const MAX_VEC: usize = 64;
+const MAX_FANOUT: usize = 64;
+const MAX_CLASSES: usize = 64;
+
+// ---------------------------------------------------------------------
+// Parameter layout
+// ---------------------------------------------------------------------
+
+/// Byte-free offset bookkeeping for the flat parameter vector.
+struct Off(usize);
+
+impl Off {
+    fn take(&mut self, n: usize) -> usize {
+        let o = self.0;
+        self.0 += n;
+        o
+    }
+}
+
+/// Offsets of every weight matrix inside the flat `params` vector.
+/// Row-major matrices; the layout is a pure function of the dims, so the
+/// lowering side (`models::synthetic`) and this executor always agree.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Layout {
+    /// GRU input width: `maild + DTE`.
+    gi: usize,
+    /// Projection input width: `dm + dv + DTE` (memory: m̃, features,
+    /// memory-age encoding) or `dv`.
+    ui: usize,
+    /// Attention key/value input width: `DH + DTE + de`.
+    ki: usize,
+    w_r: usize,
+    u_r: usize,
+    b_r: usize,
+    w_z: usize,
+    u_z: usize,
+    b_z: usize,
+    w_n: usize,
+    u_n: usize,
+    b_n: usize,
+    w_in: usize,
+    b_in: usize,
+    w_q: usize,
+    w_k: usize,
+    w_v: usize,
+    w_s: usize,
+    w_a: usize,
+    b_o: usize,
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    b2: usize,
+    total: usize,
+}
+
+fn layout(use_memory: bool, dv: usize, de: usize, dm: usize, maild: usize) -> Layout {
+    let gi = maild + DTE;
+    let ui = if use_memory { dm + dv + DTE } else { dv };
+    let ki = DH + DTE + de;
+    let mut o = Off(0);
+    let (w_r, u_r, b_r, w_z, u_z, b_z, w_n, u_n, b_n) = if use_memory {
+        (
+            o.take(dm * gi),
+            o.take(dm * dm),
+            o.take(dm),
+            o.take(dm * gi),
+            o.take(dm * dm),
+            o.take(dm),
+            o.take(dm * gi),
+            o.take(dm * dm),
+            o.take(dm),
+        )
+    } else {
+        (0, 0, 0, 0, 0, 0, 0, 0, 0)
+    };
+    let w_in = o.take(DH * ui);
+    let b_in = o.take(DH);
+    let w_q = o.take(DH * DH);
+    let w_k = o.take(DH * ki);
+    let w_v = o.take(DH * ki);
+    let w_s = o.take(DH * DH);
+    let w_a = o.take(DH * DH);
+    let b_o = o.take(DH);
+    let w1 = o.take(DD * 2 * DH);
+    let b1 = o.take(DD);
+    let w2 = o.take(DD);
+    let b2 = o.take(1);
+    Layout {
+        gi,
+        ui,
+        ki,
+        w_r,
+        u_r,
+        b_r,
+        w_z,
+        u_z,
+        b_z,
+        w_n,
+        u_n,
+        b_n,
+        w_in,
+        b_in,
+        w_q,
+        w_k,
+        w_v,
+        w_s,
+        w_a,
+        b_o,
+        w1,
+        b1,
+        w2,
+        b2,
+        total: o.0,
+    }
+}
+
+/// Parameter count of the TGNN train/eval step for the given dims — the
+/// single source of truth for `models::synthetic`'s `param_count`.
+pub fn tgnn_param_count(use_memory: bool, dv: usize, de: usize, dm: usize, maild: usize) -> usize {
+    layout(use_memory, dv, de, dm, maild).total
+}
+
+/// Parameter count of the `clf` step MLP (`W1[CH,dh] b1 W2[classes,CH]
+/// b2`).
+pub fn clf_param_count(dh: usize, classes: usize) -> usize {
+    CH * dh + CH + classes * CH + classes
+}
+
+// ---------------------------------------------------------------------
+// Small dense kernels (slices only, no allocation)
+// ---------------------------------------------------------------------
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `out[r] = W[r,:]·x` for row-major `W[rows=out.len(), cols=x.len()]`.
+#[inline]
+fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let cols = x.len();
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot(&w[r * cols..(r + 1) * cols], x);
+    }
+}
+
+/// `out[c] += Σ_r W[r,c]·d[r]` (transpose apply, accumulating).
+#[inline]
+fn matvec_t_acc(w: &[f32], d: &[f32], out: &mut [f32]) {
+    let cols = out.len();
+    for (r, &dr) in d.iter().enumerate() {
+        if dr == 0.0 {
+            continue;
+        }
+        let row = &w[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            out[c] += dr * row[c];
+        }
+    }
+}
+
+/// `dW[r,c] += d[r]·x[c]` (outer-product accumulate).
+#[inline]
+fn outer_acc(dw: &mut [f32], d: &[f32], x: &[f32]) {
+    let cols = x.len();
+    for (r, &dr) in d.iter().enumerate() {
+        if dr == 0.0 {
+            continue;
+        }
+        let row = &mut dw[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            row[c] += dr * x[c];
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Numerically stable `ln(1 + e^x)`.
+#[inline]
+fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// Fixed sinusoidal time encoding: `out[k] = cos(dt·scale / 3^k)`.
+#[inline]
+fn time_enc(dt: f32, scale: f32, out: &mut [f32]) {
+    let t = dt * scale;
+    let mut w = 1.0f32;
+    for o in out.iter_mut() {
+        *o = (t * w).cos();
+        w *= 1.0 / 3.0;
+    }
+}
+
+/// Bias-corrected Adam: writes `new_params` / `new_m` / `new_v` from the
+/// current state and gradient.
+#[allow(clippy::too_many_arguments)]
+fn adam(
+    p: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    lr: f32,
+    step: f32,
+    np: &mut [f32],
+    nm: &mut [f32],
+    nv: &mut [f32],
+) {
+    let t = step + 1.0;
+    let bc1 = 1.0 - BETA1.powf(t);
+    let bc2 = 1.0 - BETA2.powf(t);
+    for k in 0..p.len() {
+        let gk = g[k];
+        let mk = BETA1 * m[k] + (1.0 - BETA1) * gk;
+        let vk = BETA2 * v[k] + (1.0 - BETA2) * gk * gk;
+        nm[k] = mk;
+        nv[k] = vk;
+        np[k] = p[k] - lr * (mk / bc1) / ((vk / bc2).sqrt() + ADAM_EPS);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spec-derived dimensions and input indices
+// ---------------------------------------------------------------------
+
+const NONE: usize = usize::MAX;
+
+/// Everything the TGNN step needs to know about a spec, derived from the
+/// input names/shapes in one allocation-free pass.
+struct Net {
+    bs: usize,
+    fanout: usize,
+    hops: usize,
+    dv: usize,
+    de: usize,
+    dm: usize,
+    maild: usize,
+    n_total: usize,
+    roots: usize,
+    pc: usize,
+    use_memory: bool,
+    /// `lvl_off[l]` = first node row of hop level `l` (level 0 = roots);
+    /// `lvl_off[hops] + lvl_size[hops] == n_total`.
+    lvl_off: [usize; MAX_HOPS + 1],
+    lvl_size: [usize; MAX_HOPS + 1],
+    i_params: usize,
+    i_adam_m: usize,
+    i_adam_v: usize,
+    i_step: usize,
+    i_lr: usize,
+    i_dt_scale: usize,
+    i_edge_mask: usize,
+    i_node_feat: usize,
+    i_batch_efeat: usize,
+    i_hop_dt: [usize; MAX_HOPS],
+    i_hop_mask: [usize; MAX_HOPS],
+    i_hop_efeat: [usize; MAX_HOPS],
+    i_mem: usize,
+    i_mem_dt: usize,
+    i_mail: usize,
+    i_mail_dt: usize,
+    i_mail_mask: usize,
+}
+
+fn hop_level(name: &str, prefix: &str) -> Result<usize> {
+    let l: usize = name[prefix.len()..].parse().map_err(|_| {
+        anyhow::anyhow!("reference nn: cannot parse hop level from input `{name}`")
+    })?;
+    ensure!(l < MAX_HOPS, "reference nn: hop level {l} exceeds MAX_HOPS {MAX_HOPS}");
+    Ok(l)
+}
+
+impl Net {
+    fn from_spec(spec: &StepSpec) -> Result<Net> {
+        let mut n = Net {
+            bs: 0,
+            fanout: 0,
+            hops: 0,
+            dv: 0,
+            de: 0,
+            dm: 0,
+            maild: 0,
+            n_total: 0,
+            roots: 0,
+            pc: 0,
+            use_memory: false,
+            lvl_off: [0; MAX_HOPS + 1],
+            lvl_size: [0; MAX_HOPS + 1],
+            i_params: NONE,
+            i_adam_m: NONE,
+            i_adam_v: NONE,
+            i_step: NONE,
+            i_lr: NONE,
+            i_dt_scale: NONE,
+            i_edge_mask: NONE,
+            i_node_feat: NONE,
+            i_batch_efeat: NONE,
+            i_hop_dt: [NONE; MAX_HOPS],
+            i_hop_mask: [NONE; MAX_HOPS],
+            i_hop_efeat: [NONE; MAX_HOPS],
+            i_mem: NONE,
+            i_mem_dt: NONE,
+            i_mail: NONE,
+            i_mail_dt: NONE,
+            i_mail_mask: NONE,
+        };
+        for (i, ts) in spec.inputs.iter().enumerate() {
+            match ts.name.as_str() {
+                "params" => {
+                    n.i_params = i;
+                    n.pc = ts.numel();
+                }
+                "adam_m" => n.i_adam_m = i,
+                "adam_v" => n.i_adam_v = i,
+                "step" => n.i_step = i,
+                "lr" => n.i_lr = i,
+                "dt_scale" => n.i_dt_scale = i,
+                "edge_mask" => {
+                    n.i_edge_mask = i;
+                    n.bs = ts.numel();
+                }
+                "node_feat" => {
+                    ensure!(ts.shape.len() == 2, "node_feat must be rank 2");
+                    n.i_node_feat = i;
+                    n.n_total = ts.shape[0];
+                    n.dv = ts.shape[1];
+                }
+                "batch_efeat" => {
+                    ensure!(ts.shape.len() == 2, "batch_efeat must be rank 2");
+                    n.i_batch_efeat = i;
+                    n.de = ts.shape[1];
+                }
+                "mem" => {
+                    ensure!(ts.shape.len() == 2, "mem must be rank 2");
+                    n.use_memory = true;
+                    n.i_mem = i;
+                    n.dm = ts.shape[1];
+                }
+                "mem_dt" => n.i_mem_dt = i,
+                "mail" => {
+                    ensure!(ts.shape.len() == 2, "mail must be rank 2");
+                    n.i_mail = i;
+                    n.maild = ts.shape[1];
+                }
+                "mail_dt" => n.i_mail_dt = i,
+                "mail_mask" => n.i_mail_mask = i,
+                name if name.starts_with("dt_s0_h") => {
+                    let l = hop_level(name, "dt_s0_h")?;
+                    ensure!(ts.shape.len() == 2, "hop dt must be rank 2");
+                    n.i_hop_dt[l] = i;
+                    n.fanout = ts.shape[1];
+                    n.hops = n.hops.max(l + 1);
+                }
+                name if name.starts_with("mask_s0_h") => {
+                    n.i_hop_mask[hop_level(name, "mask_s0_h")?] = i;
+                }
+                name if name.starts_with("efeat_s0_h") => {
+                    n.i_hop_efeat[hop_level(name, "efeat_s0_h")?] = i;
+                }
+                other => bail!("reference nn: unknown input `{other}`"),
+            }
+        }
+        for (idx, what) in [
+            (n.i_params, "params"),
+            (n.i_adam_m, "adam_m"),
+            (n.i_adam_v, "adam_v"),
+            (n.i_step, "step"),
+            (n.i_lr, "lr"),
+            (n.i_dt_scale, "dt_scale"),
+            (n.i_edge_mask, "edge_mask"),
+            (n.i_node_feat, "node_feat"),
+            (n.i_batch_efeat, "batch_efeat"),
+        ] {
+            ensure!(idx != NONE, "reference nn: spec is missing input `{what}`");
+        }
+        if n.use_memory {
+            for (idx, what) in [
+                (n.i_mem_dt, "mem_dt"),
+                (n.i_mail, "mail"),
+                (n.i_mail_dt, "mail_dt"),
+                (n.i_mail_mask, "mail_mask"),
+            ] {
+                ensure!(idx != NONE, "reference nn: memory spec is missing input `{what}`");
+            }
+        }
+        ensure!(n.hops >= 1 && n.hops <= MAX_HOPS, "reference nn: hops {} unsupported", n.hops);
+        ensure!(n.bs >= 1, "reference nn: empty batch");
+        ensure!(n.fanout >= 1 && n.fanout <= MAX_FANOUT, "reference nn: bad fanout {}", n.fanout);
+        n.roots = 3 * n.bs;
+        let mut off = 0usize;
+        let mut size = n.roots;
+        for l in 0..=n.hops {
+            n.lvl_off[l] = off;
+            n.lvl_size[l] = size;
+            off += size;
+            size *= n.fanout;
+        }
+        ensure!(
+            off == n.n_total,
+            "reference nn: node_feat rows {} != hop-tree size {off}",
+            n.n_total
+        );
+        for l in 0..n.hops {
+            for (idx, what) in [
+                (n.i_hop_dt[l], "dt"),
+                (n.i_hop_mask[l], "mask"),
+                (n.i_hop_efeat[l], "efeat"),
+            ] {
+                ensure!(idx != NONE, "reference nn: missing hop-{l} `{what}` input");
+            }
+            let dts = &spec.inputs[n.i_hop_dt[l]];
+            ensure!(
+                dts.shape[0] == n.lvl_size[l] && dts.shape[1] == n.fanout,
+                "reference nn: hop-{l} dt shape {:?} != [{}, {}]",
+                dts.shape,
+                n.lvl_size[l],
+                n.fanout
+            );
+        }
+        let lo = layout(n.use_memory, n.dv, n.de, n.dm, n.maild);
+        ensure!(
+            n.pc == lo.total,
+            "reference nn: params has {} floats, layout wants {}",
+            n.pc,
+            lo.total
+        );
+        ensure!(
+            lo.gi <= MAX_VEC && lo.ui <= MAX_VEC && lo.ki <= MAX_VEC && n.dm <= MAX_VEC,
+            "reference nn: dims exceed stack scratch bound {MAX_VEC}"
+        );
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------
+// TGNN train/eval step
+// ---------------------------------------------------------------------
+
+/// Execute a `train` or `eval` TGNN step (see module docs). `train` is
+/// detected from the presence of a `new_params` output; eval steps skip
+/// the backward/Adam phase entirely.
+pub(crate) fn run_tgnn_step(
+    spec: &StepSpec,
+    inputs: &[Tensor],
+    out: &mut Vec<Tensor>,
+    pool: &TensorPool,
+) -> Result<()> {
+    let net = Net::from_spec(spec)?;
+    let lo = layout(net.use_memory, net.dv, net.de, net.dm, net.maild);
+    let (bs, roots, n, fanout, hops) = (net.bs, net.roots, net.n_total, net.fanout, net.hops);
+    let (dv, de, dm, maild) = (net.dv, net.de, net.dm, net.maild);
+    let (gi, ui, ki) = (lo.gi, lo.ui, lo.ki);
+
+    let p = inputs[net.i_params].as_f32()?;
+    let adam_m = inputs[net.i_adam_m].as_f32()?;
+    let adam_v = inputs[net.i_adam_v].as_f32()?;
+    let step = inputs[net.i_step].scalar_f32()?;
+    let lr = inputs[net.i_lr].scalar_f32()?;
+    let dt_scale = inputs[net.i_dt_scale].scalar_f32()?;
+    let edge_mask = inputs[net.i_edge_mask].as_f32()?;
+    let node_feat = inputs[net.i_node_feat].as_f32()?;
+    let batch_efeat = inputs[net.i_batch_efeat].as_f32()?;
+    let train = spec.outputs.iter().any(|o| o.name == "new_params");
+
+    // ---- Memory update: m̃ = mail_mask·GRU([mail, φ(Δt)], mem) +
+    // (1-mail_mask)·mem, with gates saved for the backward pass.
+    let (mem, mem_dt, mail, mail_dt, mail_mask);
+    let (mut mt, mut g_r, mut g_z, mut g_c);
+    if net.use_memory {
+        mem = inputs[net.i_mem].as_f32()?;
+        mem_dt = inputs[net.i_mem_dt].as_f32()?;
+        mail = inputs[net.i_mail].as_f32()?;
+        mail_dt = inputs[net.i_mail_dt].as_f32()?;
+        mail_mask = inputs[net.i_mail_mask].as_f32()?;
+        ensure!(mem.len() == n * dm && mail.len() == n * maild, "state input size mismatch");
+        ensure!(mem_dt.len() == n, "mem_dt size mismatch");
+        ensure!(mail_dt.len() == n && mail_mask.len() == n, "mail dt/mask size mismatch");
+        mt = pool.take(n * dm);
+        g_r = pool.take(n * dm);
+        g_z = pool.take(n * dm);
+        g_c = pool.take(n * dm);
+        for i in 0..n {
+            let mem_i = &mem[i * dm..(i + 1) * dm];
+            let mut g_in = [0.0f32; MAX_VEC];
+            g_in[..maild].copy_from_slice(&mail[i * maild..(i + 1) * maild]);
+            time_enc(mail_dt[i], dt_scale, &mut g_in[maild..gi]);
+            let gin = &g_in[..gi];
+            let o = i * dm;
+            for k in 0..dm {
+                g_r[o + k] = sigmoid(
+                    p[lo.b_r + k]
+                        + dot(&p[lo.w_r + k * gi..lo.w_r + (k + 1) * gi], gin)
+                        + dot(&p[lo.u_r + k * dm..lo.u_r + (k + 1) * dm], mem_i),
+                );
+                g_z[o + k] = sigmoid(
+                    p[lo.b_z + k]
+                        + dot(&p[lo.w_z + k * gi..lo.w_z + (k + 1) * gi], gin)
+                        + dot(&p[lo.u_z + k * dm..lo.u_z + (k + 1) * dm], mem_i),
+                );
+            }
+            let mut rh = [0.0f32; MAX_VEC];
+            for k in 0..dm {
+                rh[k] = g_r[o + k] * mem_i[k];
+            }
+            for k in 0..dm {
+                g_c[o + k] = (p[lo.b_n + k]
+                    + dot(&p[lo.w_n + k * gi..lo.w_n + (k + 1) * gi], gin)
+                    + dot(&p[lo.u_n + k * dm..lo.u_n + (k + 1) * dm], &rh[..dm]))
+                .tanh();
+            }
+            let mk = mail_mask[i];
+            for k in 0..dm {
+                let gru = (1.0 - g_z[o + k]) * g_c[o + k] + g_z[o + k] * mem_i[k];
+                mt[o + k] = mk * gru + (1.0 - mk) * mem_i[k];
+            }
+        }
+    } else {
+        mem = &[];
+        mem_dt = &[];
+        mail = &[];
+        mail_dt = &[];
+        mail_mask = &[];
+        mt = pool.take(0);
+        g_r = pool.take(0);
+        g_z = pool.take(0);
+        g_c = pool.take(0);
+    }
+
+    // ---- Input projection x = tanh(W_in u + b_in), u = [m̃, feat].
+    let mut x = pool.take(n * DH);
+    for i in 0..n {
+        let mut u = [0.0f32; MAX_VEC];
+        if net.use_memory {
+            u[..dm].copy_from_slice(&mt[i * dm..(i + 1) * dm]);
+            u[dm..dm + dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
+            time_enc(mem_dt[i], dt_scale, &mut u[dm + dv..ui]);
+        } else {
+            u[..dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
+        }
+        for k in 0..DH {
+            x[i * DH + k] = (p[lo.b_in + k]
+                + dot(&p[lo.w_in + k * ui..lo.w_in + (k + 1) * ui], &u[..ui]))
+            .tanh();
+        }
+    }
+
+    // ---- Temporal attention, deepest hop first. Leaf nodes pass their
+    // projection through unchanged; interior/root nodes attend over their
+    // sampled neighbors' h.
+    let slots_total = n - roots;
+    let inner = net.lvl_off[hops]; // rows that act as attention targets
+    let mut h = pool.take(n * DH);
+    let mut att_a = pool.take(slots_total);
+    let mut att_k = pool.take(slots_total * DH);
+    let mut att_v = pool.take(slots_total * DH);
+    let mut asum = pool.take(inner * DH);
+    h[inner * DH..n * DH].copy_from_slice(&x[inner * DH..n * DH]);
+    let scale_inv = 1.0 / (DH as f32).sqrt();
+    for lev in (0..hops).rev() {
+        let dt_in = inputs[net.i_hop_dt[lev]].as_f32()?;
+        let mask_in = inputs[net.i_hop_mask[lev]].as_f32()?;
+        let ef_in = inputs[net.i_hop_efeat[lev]].as_f32()?;
+        let child_base = net.lvl_off[lev + 1];
+        let gbase = child_base - roots;
+        let (h_tgt, h_child) = h.split_at_mut(child_base * DH);
+        for r0 in 0..net.lvl_size[lev] {
+            let root_row = net.lvl_off[lev] + r0;
+            let xr = &x[root_row * DH..(root_row + 1) * DH];
+            let mut qr = [0.0f32; DH];
+            matvec(&p[lo.w_q..lo.w_q + DH * DH], xr, &mut qr);
+            let mut e = [0.0f32; MAX_FANOUT];
+            let mut any = false;
+            let mut emax = f32::MIN;
+            for j in 0..fanout {
+                let slot = r0 * fanout + j;
+                if mask_in[slot] <= 0.5 {
+                    continue;
+                }
+                let mut kin = [0.0f32; MAX_VEC];
+                kin[..DH].copy_from_slice(&h_child[slot * DH..(slot + 1) * DH]);
+                time_enc(dt_in[slot], dt_scale, &mut kin[DH..DH + DTE]);
+                kin[DH + DTE..ki].copy_from_slice(&ef_in[slot * de..(slot + 1) * de]);
+                let ko = (gbase + slot) * DH;
+                matvec(&p[lo.w_k..lo.w_k + DH * ki], &kin[..ki], &mut att_k[ko..ko + DH]);
+                matvec(&p[lo.w_v..lo.w_v + DH * ki], &kin[..ki], &mut att_v[ko..ko + DH]);
+                e[j] = dot(&qr, &att_k[ko..ko + DH]) * scale_inv;
+                emax = emax.max(e[j]);
+                any = true;
+            }
+            let ao = root_row * DH;
+            if any {
+                let mut esum = 0.0f32;
+                for j in 0..fanout {
+                    let slot = r0 * fanout + j;
+                    if mask_in[slot] <= 0.5 {
+                        continue;
+                    }
+                    let a = (e[j] - emax).exp();
+                    att_a[gbase + slot] = a;
+                    esum += a;
+                }
+                for j in 0..fanout {
+                    let slot = r0 * fanout + j;
+                    if mask_in[slot] <= 0.5 {
+                        continue;
+                    }
+                    let a = att_a[gbase + slot] / esum;
+                    att_a[gbase + slot] = a;
+                    for k in 0..DH {
+                        asum[ao + k] += a * att_v[(gbase + slot) * DH + k];
+                    }
+                }
+            }
+            for k in 0..DH {
+                h_tgt[root_row * DH + k] = (p[lo.b_o + k]
+                    + dot(&p[lo.w_s + k * DH..lo.w_s + (k + 1) * DH], xr)
+                    + dot(&p[lo.w_a + k * DH..lo.w_a + (k + 1) * DH], &asum[ao..ao + DH]))
+                .tanh();
+            }
+        }
+    }
+
+    // ---- Link decoder: s = w2·relu(W1 [z_a, z_b] + b1) + b2, BCE with
+    // logits over (src, dst) positives and (src, neg) corruptions.
+    let mut s_p = pool.take(bs);
+    let mut s_n = pool.take(bs);
+    let mut hid_p = pool.take(bs * DD);
+    let mut hid_n = pool.take(bs * DD);
+    let wnorm = edge_mask.iter().sum::<f32>().max(1e-6);
+    let mut loss_acc = 0.0f64;
+    for i in 0..bs {
+        for pass in 0..2 {
+            let b_row = if pass == 0 { bs + i } else { 2 * bs + i };
+            let mut din = [0.0f32; 2 * DH];
+            din[..DH].copy_from_slice(&h[i * DH..(i + 1) * DH]);
+            din[DH..].copy_from_slice(&h[b_row * DH..(b_row + 1) * DH]);
+            let hid = if pass == 0 {
+                &mut hid_p[i * DD..(i + 1) * DD]
+            } else {
+                &mut hid_n[i * DD..(i + 1) * DD]
+            };
+            for k in 0..DD {
+                hid[k] = (p[lo.b1 + k]
+                    + dot(&p[lo.w1 + k * 2 * DH..lo.w1 + (k + 1) * 2 * DH], &din))
+                .max(0.0);
+            }
+            let s = p[lo.b2] + dot(&p[lo.w2..lo.w2 + DD], hid);
+            if pass == 0 {
+                s_p[i] = s;
+            } else {
+                s_n[i] = s;
+            }
+        }
+        loss_acc +=
+            (edge_mask[i] * (softplus(-s_p[i]) + softplus(s_n[i]))) as f64 / wnorm as f64;
+    }
+    let loss = loss_acc as f32;
+
+    // ---- Backward + Adam (train steps only).
+    let (mut new_p, mut new_m, mut new_v) = (None, None, None);
+    if train {
+        let mut g = pool.take(net.pc);
+        let mut dh_buf = pool.take(n * DH);
+        let mut dx_buf = pool.take(n * DH);
+
+        // Decoder backward → dW1/b1/w2/b2 and dz into dh_buf.
+        for i in 0..bs {
+            let wi = edge_mask[i];
+            if wi <= 0.0 {
+                continue;
+            }
+            for pass in 0..2 {
+                let (sg, hid, b_row) = if pass == 0 {
+                    (-sigmoid(-s_p[i]) * wi / wnorm, &hid_p[i * DD..(i + 1) * DD], bs + i)
+                } else {
+                    (sigmoid(s_n[i]) * wi / wnorm, &hid_n[i * DD..(i + 1) * DD], 2 * bs + i)
+                };
+                g[lo.b2] += sg;
+                let mut dhid = [0.0f32; DD];
+                for k in 0..DD {
+                    g[lo.w2 + k] += sg * hid[k];
+                    if hid[k] > 0.0 {
+                        dhid[k] = sg * p[lo.w2 + k];
+                    }
+                }
+                let mut din = [0.0f32; 2 * DH];
+                din[..DH].copy_from_slice(&h[i * DH..(i + 1) * DH]);
+                din[DH..].copy_from_slice(&h[b_row * DH..(b_row + 1) * DH]);
+                for k in 0..DD {
+                    g[lo.b1 + k] += dhid[k];
+                }
+                outer_acc(&mut g[lo.w1..lo.w1 + DD * 2 * DH], &dhid, &din);
+                for k in 0..DD {
+                    if dhid[k] == 0.0 {
+                        continue;
+                    }
+                    let row = &p[lo.w1 + k * 2 * DH..lo.w1 + (k + 1) * 2 * DH];
+                    for c in 0..DH {
+                        dh_buf[i * DH + c] += dhid[k] * row[c];
+                        dh_buf[b_row * DH + c] += dhid[k] * row[DH + c];
+                    }
+                }
+            }
+        }
+
+        // Attention backward, shallowest hop first (children receive their
+        // dh before their own block is processed).
+        for lev in 0..hops {
+            let dt_in = inputs[net.i_hop_dt[lev]].as_f32()?;
+            let mask_in = inputs[net.i_hop_mask[lev]].as_f32()?;
+            let ef_in = inputs[net.i_hop_efeat[lev]].as_f32()?;
+            let child_base = net.lvl_off[lev + 1];
+            let gbase = child_base - roots;
+            let (dh_tgt, dh_child) = dh_buf.split_at_mut(child_base * DH);
+            for r0 in 0..net.lvl_size[lev] {
+                let root_row = net.lvl_off[lev] + r0;
+                let hr = &h[root_row * DH..(root_row + 1) * DH];
+                let mut ds = [0.0f32; DH];
+                let mut nz = false;
+                for k in 0..DH {
+                    let d = dh_tgt[root_row * DH + k];
+                    if d != 0.0 {
+                        nz = true;
+                    }
+                    ds[k] = d * (1.0 - hr[k] * hr[k]);
+                }
+                if !nz {
+                    continue;
+                }
+                let xr = &x[root_row * DH..(root_row + 1) * DH];
+                let ao = root_row * DH;
+                for k in 0..DH {
+                    g[lo.b_o + k] += ds[k];
+                }
+                outer_acc(&mut g[lo.w_s..lo.w_s + DH * DH], &ds, xr);
+                matvec_t_acc(
+                    &p[lo.w_s..lo.w_s + DH * DH],
+                    &ds,
+                    &mut dx_buf[root_row * DH..(root_row + 1) * DH],
+                );
+                outer_acc(&mut g[lo.w_a..lo.w_a + DH * DH], &ds, &asum[ao..ao + DH]);
+                let mut da = [0.0f32; DH];
+                matvec_t_acc(&p[lo.w_a..lo.w_a + DH * DH], &ds, &mut da);
+                // Softmax backward over the valid slots.
+                let mut dalpha = [0.0f32; MAX_FANOUT];
+                let mut adot = 0.0f32;
+                for j in 0..fanout {
+                    let slot = r0 * fanout + j;
+                    if mask_in[slot] <= 0.5 {
+                        continue;
+                    }
+                    dalpha[j] = dot(&da, &att_v[(gbase + slot) * DH..(gbase + slot + 1) * DH]);
+                    adot += att_a[gbase + slot] * dalpha[j];
+                }
+                let mut qr = [0.0f32; DH];
+                matvec(&p[lo.w_q..lo.w_q + DH * DH], xr, &mut qr);
+                let mut dqr = [0.0f32; DH];
+                for j in 0..fanout {
+                    let slot = r0 * fanout + j;
+                    if mask_in[slot] <= 0.5 {
+                        continue;
+                    }
+                    let gs = gbase + slot;
+                    let a = att_a[gs];
+                    let de_j = a * (dalpha[j] - adot);
+                    let mut dk = [0.0f32; DH];
+                    let mut dv_ = [0.0f32; DH];
+                    for k in 0..DH {
+                        dqr[k] += de_j * att_k[gs * DH + k] * scale_inv;
+                        dk[k] = de_j * qr[k] * scale_inv;
+                        dv_[k] = a * da[k];
+                    }
+                    let crow = (child_base + slot) * DH;
+                    let mut kin = [0.0f32; MAX_VEC];
+                    kin[..DH].copy_from_slice(&h[crow..crow + DH]);
+                    time_enc(dt_in[slot], dt_scale, &mut kin[DH..DH + DTE]);
+                    kin[DH + DTE..ki].copy_from_slice(&ef_in[slot * de..(slot + 1) * de]);
+                    outer_acc(&mut g[lo.w_k..lo.w_k + DH * ki], &dk, &kin[..ki]);
+                    outer_acc(&mut g[lo.w_v..lo.w_v + DH * ki], &dv_, &kin[..ki]);
+                    let mut dkin = [0.0f32; MAX_VEC];
+                    matvec_t_acc(&p[lo.w_k..lo.w_k + DH * ki], &dk, &mut dkin[..ki]);
+                    matvec_t_acc(&p[lo.w_v..lo.w_v + DH * ki], &dv_, &mut dkin[..ki]);
+                    for k in 0..DH {
+                        dh_child[slot * DH + k] += dkin[k];
+                    }
+                }
+                outer_acc(&mut g[lo.w_q..lo.w_q + DH * DH], &dqr, xr);
+                matvec_t_acc(
+                    &p[lo.w_q..lo.w_q + DH * DH],
+                    &dqr,
+                    &mut dx_buf[root_row * DH..(root_row + 1) * DH],
+                );
+            }
+        }
+        // Leaf nodes: h = x, so their dh flows straight into dx.
+        for t in inner * DH..n * DH {
+            dx_buf[t] += dh_buf[t];
+        }
+
+        // Projection backward (and through it, the GRU).
+        for i in 0..n {
+            let xo = i * DH;
+            let mut dupre = [0.0f32; DH];
+            let mut nz = false;
+            for k in 0..DH {
+                let d = dx_buf[xo + k];
+                if d != 0.0 {
+                    nz = true;
+                }
+                dupre[k] = d * (1.0 - x[xo + k] * x[xo + k]);
+            }
+            if !nz {
+                continue;
+            }
+            let mut u = [0.0f32; MAX_VEC];
+            if net.use_memory {
+                u[..dm].copy_from_slice(&mt[i * dm..(i + 1) * dm]);
+                u[dm..dm + dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
+                time_enc(mem_dt[i], dt_scale, &mut u[dm + dv..ui]);
+            } else {
+                u[..dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
+            }
+            for k in 0..DH {
+                g[lo.b_in + k] += dupre[k];
+            }
+            outer_acc(&mut g[lo.w_in..lo.w_in + DH * ui], &dupre, &u[..ui]);
+            if !net.use_memory {
+                continue;
+            }
+            let mk = mail_mask[i];
+            if mk == 0.0 {
+                continue;
+            }
+            let mut dufull = [0.0f32; MAX_VEC];
+            matvec_t_acc(&p[lo.w_in..lo.w_in + DH * ui], &dupre, &mut dufull[..ui]);
+            // GRU backward with dgru = mk · dm̃ (dm̃ = dufull[..dm]).
+            let o = i * dm;
+            let mem_i = &mem[o..o + dm];
+            let mut g_in = [0.0f32; MAX_VEC];
+            g_in[..maild].copy_from_slice(&mail[i * maild..(i + 1) * maild]);
+            time_enc(mail_dt[i], dt_scale, &mut g_in[maild..gi]);
+            let mut dcpre = [0.0f32; MAX_VEC];
+            let mut dzpre = [0.0f32; MAX_VEC];
+            let mut rh = [0.0f32; MAX_VEC];
+            for k in 0..dm {
+                let dg = mk * dufull[k];
+                let (r, z, c) = (g_r[o + k], g_z[o + k], g_c[o + k]);
+                dcpre[k] = dg * (1.0 - z) * (1.0 - c * c);
+                dzpre[k] = dg * (mem_i[k] - c) * z * (1.0 - z);
+                rh[k] = r * mem_i[k];
+            }
+            for k in 0..dm {
+                g[lo.b_n + k] += dcpre[k];
+                g[lo.b_z + k] += dzpre[k];
+            }
+            outer_acc(&mut g[lo.w_n..lo.w_n + dm * gi], &dcpre[..dm], &g_in[..gi]);
+            outer_acc(&mut g[lo.u_n..lo.u_n + dm * dm], &dcpre[..dm], &rh[..dm]);
+            outer_acc(&mut g[lo.w_z..lo.w_z + dm * gi], &dzpre[..dm], &g_in[..gi]);
+            outer_acc(&mut g[lo.u_z..lo.u_z + dm * dm], &dzpre[..dm], mem_i);
+            let mut drh = [0.0f32; MAX_VEC];
+            matvec_t_acc(&p[lo.u_n..lo.u_n + dm * dm], &dcpre[..dm], &mut drh[..dm]);
+            let mut drpre = [0.0f32; MAX_VEC];
+            for k in 0..dm {
+                let r = g_r[o + k];
+                drpre[k] = drh[k] * mem_i[k] * r * (1.0 - r);
+            }
+            for k in 0..dm {
+                g[lo.b_r + k] += drpre[k];
+            }
+            outer_acc(&mut g[lo.w_r..lo.w_r + dm * gi], &drpre[..dm], &g_in[..gi]);
+            outer_acc(&mut g[lo.u_r..lo.u_r + dm * dm], &drpre[..dm], mem_i);
+        }
+
+        let mut np = pool.take(net.pc);
+        let mut nm = pool.take(net.pc);
+        let mut nv = pool.take(net.pc);
+        adam(p, adam_m, adam_v, &g, lr, step, &mut np, &mut nm, &mut nv);
+        new_p = Some(np);
+        new_m = Some(nm);
+        new_v = Some(nv);
+    }
+
+    // ---- Refreshed memory + partner messages for the batch roots.
+    let (mut nmem, mut nmail) = (None, None);
+    if net.use_memory {
+        let mut bmem = pool.take(2 * bs * dm);
+        bmem.copy_from_slice(&mt[..2 * bs * dm]);
+        let mut bmail = pool.take(2 * bs * maild);
+        for i in 0..bs {
+            for k in 0..maild {
+                let ef = if k < de { batch_efeat[i * de + k] } else { 0.0 };
+                let from_dst = if k < dm { mt[(bs + i) * dm + k] } else { 0.0 };
+                let from_src = if k < dm { mt[i * dm + k] } else { 0.0 };
+                bmail[i * maild + k] = from_dst + ef;
+                bmail[(bs + i) * maild + k] = from_src + ef;
+            }
+        }
+        nmem = Some(bmem);
+        nmail = Some(bmail);
+    }
+
+    // ---- Emit outputs in manifest order.
+    let (mut s_p, mut s_n) = (Some(s_p), Some(s_n));
+    let mut emb_done = false;
+    for os in &spec.outputs {
+        let buf = match os.name.as_str() {
+            "loss" => {
+                let mut b = pool.take(1);
+                b[0] = loss;
+                b
+            }
+            "new_params" => opt_buf(&mut new_p, "new_params")?,
+            "new_adam_m" => opt_buf(&mut new_m, "new_adam_m")?,
+            "new_adam_v" => opt_buf(&mut new_v, "new_adam_v")?,
+            "pos_score" => opt_buf(&mut s_p, "pos_score")?,
+            "neg_score" => opt_buf(&mut s_n, "neg_score")?,
+            "emb" => {
+                ensure!(!emb_done, "duplicate `emb` output");
+                emb_done = true;
+                let mut b = pool.take(bs * DH);
+                b.copy_from_slice(&h[..bs * DH]);
+                b
+            }
+            "new_mem" => opt_buf(&mut nmem, "new_mem")?,
+            "new_mail" => opt_buf(&mut nmail, "new_mail")?,
+            other => bail!("reference nn: unknown output `{other}`"),
+        };
+        out.push(Tensor::f32_pooled(&os.shape, buf)?);
+    }
+    Ok(())
+}
+
+fn opt_buf(slot: &mut Option<PoolBuf>, name: &str) -> Result<PoolBuf> {
+    slot.take().ok_or_else(|| {
+        anyhow::anyhow!("reference nn: output `{name}` not available for this step kind")
+    })
+}
+
+// ---------------------------------------------------------------------
+// Node-classification step
+// ---------------------------------------------------------------------
+
+/// Execute the `clf` step: softmax/cross-entropy MLP on harvested
+/// embeddings with a real Adam update. `lr == 0` runs inference only
+/// (`new_*` outputs pass the state through unchanged). Rows whose label
+/// is outside `0..classes` are treated as masked out.
+pub(crate) fn run_clf_step(
+    spec: &StepSpec,
+    inputs: &[Tensor],
+    out: &mut Vec<Tensor>,
+    pool: &TensorPool,
+) -> Result<()> {
+    let i_params = spec.input_index("params")?;
+    let i_m = spec.input_index("adam_m")?;
+    let i_v = spec.input_index("adam_v")?;
+    let i_step = spec.input_index("step")?;
+    let i_lr = spec.input_index("lr")?;
+    let i_emb = spec.input_index("emb")?;
+    let i_lab = spec.input_index("labels")?;
+    let i_mask = spec.input_index("label_mask")?;
+
+    let p = inputs[i_params].as_f32()?;
+    let adam_m = inputs[i_m].as_f32()?;
+    let adam_v = inputs[i_v].as_f32()?;
+    let step = inputs[i_step].scalar_f32()?;
+    let lr = inputs[i_lr].scalar_f32()?;
+    let emb = inputs[i_emb].as_f32()?;
+    let labels = inputs[i_lab].as_i32()?;
+    let label_mask = inputs[i_mask].as_f32()?;
+
+    let emb_spec = &spec.inputs[i_emb];
+    ensure!(emb_spec.shape.len() == 2, "clf emb must be rank 2");
+    let bs = emb_spec.shape[0];
+    let dh = emb_spec.shape[1];
+    let logits_spec = spec
+        .outputs
+        .iter()
+        .find(|o| o.name == "logits")
+        .ok_or_else(|| anyhow::anyhow!("clf step has no `logits` output"))?;
+    ensure!(logits_spec.shape.len() == 2, "clf logits must be rank 2");
+    let classes = logits_spec.shape[1];
+    ensure!(classes >= 2 && classes <= MAX_CLASSES, "clf classes {classes} unsupported");
+    ensure!(dh <= MAX_VEC, "clf embedding dim {dh} exceeds stack bound");
+    let pc = p.len();
+    ensure!(
+        pc == clf_param_count(dh, classes),
+        "clf params has {pc} floats, layout wants {}",
+        clf_param_count(dh, classes)
+    );
+    let mut o = Off(0);
+    let w1 = o.take(CH * dh);
+    let b1 = o.take(CH);
+    let w2 = o.take(classes * CH);
+    let b2 = o.take(classes);
+
+    // Forward: hid = relu(W1 e + b1); logits = W2 hid + b2.
+    let mut logits = pool.take(bs * classes);
+    let mut hid = pool.take(bs * CH);
+    for i in 0..bs {
+        let e = &emb[i * dh..(i + 1) * dh];
+        for k in 0..CH {
+            hid[i * CH + k] = (p[b1 + k] + dot(&p[w1 + k * dh..w1 + (k + 1) * dh], e)).max(0.0);
+        }
+        for c in 0..classes {
+            logits[i * classes + c] =
+                p[b2 + c] + dot(&p[w2 + c * CH..w2 + (c + 1) * CH], &hid[i * CH..(i + 1) * CH]);
+        }
+    }
+
+    // Mean masked cross-entropy (also emitted as `loss` when requested).
+    let valid = |i: usize| label_mask[i] > 0.0 && labels[i] >= 0 && (labels[i] as usize) < classes;
+    let mut wsum = 0.0f32;
+    for i in 0..bs {
+        if valid(i) {
+            wsum += label_mask[i];
+        }
+    }
+    let wnorm = wsum.max(1e-6);
+    let mut probs = pool.take(bs * classes);
+    let mut loss_acc = 0.0f64;
+    for i in 0..bs {
+        if !valid(i) {
+            continue;
+        }
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut mx = f32::MIN;
+        for c in 0..classes {
+            mx = mx.max(row[c]);
+        }
+        let mut esum = 0.0f32;
+        for c in 0..classes {
+            let ex = (row[c] - mx).exp();
+            probs[i * classes + c] = ex;
+            esum += ex;
+        }
+        for c in 0..classes {
+            probs[i * classes + c] /= esum;
+        }
+        let y = labels[i] as usize;
+        let py = probs[i * classes + y].max(1e-12);
+        loss_acc -= (label_mask[i] * py.ln()) as f64 / wnorm as f64;
+    }
+    let loss = loss_acc as f32;
+
+    // Backward + Adam (skipped for inference calls).
+    let (mut np, mut nm, mut nv) = (pool.take(pc), pool.take(pc), pool.take(pc));
+    if lr != 0.0 {
+        let mut g = pool.take(pc);
+        for i in 0..bs {
+            if !valid(i) {
+                continue;
+            }
+            let wi = label_mask[i] / wnorm;
+            let y = labels[i] as usize;
+            let mut dlg = [0.0f32; MAX_CLASSES];
+            for c in 0..classes {
+                let onehot = if c == y { 1.0 } else { 0.0 };
+                dlg[c] = (probs[i * classes + c] - onehot) * wi;
+            }
+            let hrow = &hid[i * CH..(i + 1) * CH];
+            let mut dhid = [0.0f32; CH];
+            for c in 0..classes {
+                g[b2 + c] += dlg[c];
+                for k in 0..CH {
+                    g[w2 + c * CH + k] += dlg[c] * hrow[k];
+                    dhid[k] += dlg[c] * p[w2 + c * CH + k];
+                }
+            }
+            for k in 0..CH {
+                if hrow[k] <= 0.0 {
+                    dhid[k] = 0.0;
+                }
+            }
+            let e = &emb[i * dh..(i + 1) * dh];
+            for k in 0..CH {
+                g[b1 + k] += dhid[k];
+            }
+            outer_acc(&mut g[w1..w1 + CH * dh], &dhid, e);
+        }
+        adam(p, adam_m, adam_v, &g, lr, step, &mut np, &mut nm, &mut nv);
+    } else {
+        np.copy_from_slice(p);
+        nm.copy_from_slice(adam_m);
+        nv.copy_from_slice(adam_v);
+    }
+
+    let (mut np, mut nm, mut nv, mut logits) = (Some(np), Some(nm), Some(nv), Some(logits));
+    for os in &spec.outputs {
+        let buf = match os.name.as_str() {
+            "loss" => {
+                let mut b = pool.take(1);
+                b[0] = loss;
+                b
+            }
+            "new_params" => opt_buf(&mut np, "new_params")?,
+            "new_adam_m" => opt_buf(&mut nm, "new_adam_m")?,
+            "new_adam_v" => opt_buf(&mut nv, "new_adam_v")?,
+            "logits" => opt_buf(&mut logits, "logits")?,
+            other => bail!("reference nn clf: unknown output `{other}`"),
+        };
+        out.push(Tensor::f32_pooled(&os.shape, buf)?);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synthetic;
+    use crate::runtime::StepSpec;
+
+    /// Deterministic per-input values exercising every code path: binary
+    /// masks, non-trivial dt, nonzero mail/memory/features.
+    fn fill_input(name: &str, k: usize) -> f32 {
+        let i = k as f32;
+        match name {
+            "params" => 0.0, // overridden by the caller
+            "adam_m" | "adam_v" => 0.0,
+            "step" => 0.0,
+            "lr" => 0.01,
+            "dt_scale" => 0.5,
+            "edge_mask" => {
+                if k < 12 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            n if n.starts_with("mask_") => {
+                if k % 3 == 2 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+            "mail_mask" => (k % 2) as f32,
+            "labels" => (k % 2) as f32,
+            n if n.starts_with("dt_") || n == "mail_dt" || n == "mem_dt" => {
+                3.0 * (i * 0.11).sin().abs()
+            }
+            _ => 0.2 * (i * 0.37 + 1.3).sin(),
+        }
+    }
+
+    fn build_inputs(spec: &StepSpec, params: &[f32]) -> Vec<Tensor> {
+        spec.inputs
+            .iter()
+            .map(|ts| {
+                let data: Vec<f32> = if ts.name == "params" {
+                    params.to_vec()
+                } else {
+                    (0..ts.numel()).map(|k| fill_input(&ts.name, k)).collect()
+                };
+                if ts.name == "labels" {
+                    Tensor::i32(&ts.shape, data.iter().map(|&x| x as i32).collect()).unwrap()
+                } else {
+                    Tensor::f32(&ts.shape, data).unwrap()
+                }
+            })
+            .collect()
+    }
+
+    /// Run a train step with zeroed Adam moments at step 0; with m=v=0,
+    /// `new_adam_m = (1-β1)·g`, so the analytic gradient is recoverable
+    /// from the outputs alone.
+    fn loss_and_grad(model: &crate::models::Model, params: &[f32]) -> (f64, Vec<f32>) {
+        let spec = model.mf.step("train").unwrap();
+        let inputs = build_inputs(spec, params);
+        let outs = model.train_exe.run(&inputs).unwrap();
+        let loss = outs[spec.output_index("loss").unwrap()].scalar_f32().unwrap() as f64;
+        let g: Vec<f32> = outs[spec.output_index("new_adam_m").unwrap()]
+            .as_f32()
+            .unwrap()
+            .iter()
+            .map(|&m| m / (1.0 - BETA1))
+            .collect();
+        (loss, g)
+    }
+
+    #[test]
+    fn analytic_gradients_match_finite_differences() {
+        for arch in ["tgn", "tgat"] {
+            let model = synthetic(arch).unwrap();
+            let base = model.init_params.clone();
+            let (_, g) = loss_and_grad(&model, &base);
+            assert_eq!(g.len(), base.len());
+            let eps = 5e-3f32;
+            let mut checked = 0usize;
+            for k in (0..base.len()).step_by(13) {
+                let mut pp = base.clone();
+                pp[k] += eps;
+                let (lp, _) = loss_and_grad(&model, &pp);
+                pp[k] = base[k] - eps;
+                let (lm, _) = loss_and_grad(&model, &pp);
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let diff = (fd - g[k]).abs();
+                let tol = 0.01 + 0.1 * fd.abs().max(g[k].abs());
+                assert!(
+                    diff <= tol,
+                    "{arch} param {k}: analytic {} vs finite-diff {fd} (|Δ|={diff})",
+                    g[k]
+                );
+                checked += 1;
+            }
+            assert!(checked >= 45, "{arch}: gradcheck covered too few params ({checked})");
+            let gnorm: f32 = g.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(gnorm > 1e-4, "{arch}: gradient must not vanish (|g|={gnorm})");
+        }
+    }
+
+    #[test]
+    fn repeated_steps_on_one_batch_reduce_loss() {
+        for arch in ["tgn", "tgat"] {
+            let model = synthetic(arch).unwrap();
+            let spec = model.mf.step("train").unwrap();
+            let i_p = spec.input_index("params").unwrap();
+            let i_m = spec.input_index("adam_m").unwrap();
+            let i_v = spec.input_index("adam_v").unwrap();
+            let i_s = spec.input_index("step").unwrap();
+            let o_l = spec.output_index("loss").unwrap();
+            let o_p = spec.output_index("new_params").unwrap();
+            let o_m = spec.output_index("new_adam_m").unwrap();
+            let o_v = spec.output_index("new_adam_v").unwrap();
+            let mut inputs = build_inputs(spec, &model.init_params);
+            let mut first = f32::NAN;
+            let mut last = f32::NAN;
+            for it in 0..40 {
+                let outs = model.train_exe.run(&inputs).unwrap();
+                let loss = outs[o_l].scalar_f32().unwrap();
+                assert!(loss.is_finite() && loss > 0.0, "{arch} iter {it}: loss {loss}");
+                if it == 0 {
+                    first = loss;
+                }
+                last = loss;
+                inputs[i_p] =
+                    Tensor::f32(&spec.inputs[i_p].shape, outs[o_p].as_f32().unwrap().to_vec())
+                        .unwrap();
+                inputs[i_m] =
+                    Tensor::f32(&spec.inputs[i_m].shape, outs[o_m].as_f32().unwrap().to_vec())
+                        .unwrap();
+                inputs[i_v] =
+                    Tensor::f32(&spec.inputs[i_v].shape, outs[o_v].as_f32().unwrap().to_vec())
+                        .unwrap();
+                inputs[i_s] = Tensor::scalar(it as f32 + 1.0);
+            }
+            assert!(
+                last < 0.6 * first,
+                "{arch}: 40 Adam steps on one batch must cut the loss (first {first}, last {last})"
+            );
+        }
+    }
+
+    #[test]
+    fn clf_gradients_match_finite_differences() {
+        let model = synthetic("tgn").unwrap();
+        let spec = model.mf.step("clf").unwrap();
+        let exe = model.clf_exe.as_ref().unwrap();
+        let o_l = spec.output_index("loss").unwrap();
+        let o_m = spec.output_index("new_adam_m").unwrap();
+
+        let run = |params: &[f32]| -> (f64, Vec<f32>) {
+            let inputs = build_inputs(spec, params);
+            let outs = exe.run(&inputs).unwrap();
+            let loss = outs[o_l].scalar_f32().unwrap() as f64;
+            let g = outs[o_m].as_f32().unwrap().iter().map(|&m| m / (1.0 - BETA1)).collect();
+            (loss, g)
+        };
+        let base = model.init_clf_params.clone();
+        let (l0, g) = run(&base);
+        assert!(l0.is_finite() && l0 > 0.0);
+        let eps = 5e-3f32;
+        for k in (0..base.len()).step_by(3) {
+            let mut pp = base.clone();
+            pp[k] += eps;
+            let (lp, _) = run(&pp);
+            pp[k] = base[k] - eps;
+            let (lm, _) = run(&pp);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let diff = (fd - g[k]).abs();
+            assert!(
+                diff <= 0.01 + 0.1 * fd.abs().max(g[k].abs()),
+                "clf param {k}: analytic {} vs finite-diff {fd}",
+                g[k]
+            );
+        }
+
+        // lr = 0 must be pure inference: state passes through unchanged.
+        let mut inputs = build_inputs(spec, &base);
+        let i_lr = spec.input_index("lr").unwrap();
+        inputs[i_lr] = Tensor::scalar(0.0);
+        let outs = exe.run(&inputs).unwrap();
+        assert_eq!(
+            outs[spec.output_index("new_params").unwrap()].as_f32().unwrap(),
+            base.as_slice(),
+            "lr=0 must not move the classifier parameters"
+        );
+    }
+}

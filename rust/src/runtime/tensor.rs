@@ -13,7 +13,7 @@
 //! (rank ≤ [`MAX_RANK`]) so constructing a tensor never allocates for the
 //! shape either.
 
-use crate::util::tensor_pool::PoolBuf;
+use crate::util::tensor_pool::{PoolBuf, PoolBufI32};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -179,6 +179,9 @@ enum Data {
     /// [`TensorPool`](crate::util::tensor_pool::TensorPool) when the
     /// tensor drops.
     F32Pooled(PoolBuf),
+    /// Pool-recycled `i32` storage (label/index buffers of the
+    /// node-classification head).
+    I32Pooled(PoolBufI32),
     /// Zero-copy alias of a [`SharedVec`] (params / Adam moments).
     F32Shared(Arc<Vec<f32>>),
 }
@@ -190,6 +193,7 @@ impl Clone for Data {
             Data::I32(v) => Data::I32(v.clone()),
             // A clone escapes the pool's custody: deep-copy to owned.
             Data::F32Pooled(b) => Data::F32(b.to_vec()),
+            Data::I32Pooled(b) => Data::I32(b.to_vec()),
             Data::F32Shared(a) => Data::F32Shared(Arc::clone(a)),
         }
     }
@@ -224,6 +228,16 @@ impl Tensor {
         Ok(Self { shape, data: Data::F32Pooled(buf) })
     }
 
+    /// Build an `i32` tensor over a pool-recycled buffer (allocation-free
+    /// at steady state) — the label-buffer path of the clf head.
+    pub fn i32_pooled(shape: &[usize], buf: PoolBufI32) -> Result<Self> {
+        let shape = Shape::new(shape)?;
+        if buf.len() != shape.numel() {
+            bail!("tensor shape {:?} wants {} elements, got {}", shape, shape.numel(), buf.len());
+        }
+        Ok(Self { shape, data: Data::I32Pooled(buf) })
+    }
+
     /// Build an `f32` tensor aliasing shared storage — no copy. The alias
     /// is read-only ([`Self::as_f32_mut`] refuses it).
     pub fn f32_shared(shape: &[usize], data: Arc<Vec<f32>>) -> Result<Self> {
@@ -249,7 +263,7 @@ impl Tensor {
     pub fn dtype(&self) -> DType {
         match &self.data {
             Data::F32(_) | Data::F32Pooled(_) | Data::F32Shared(_) => DType::F32,
-            Data::I32(_) => DType::I32,
+            Data::I32(_) | Data::I32Pooled(_) => DType::I32,
         }
     }
 
@@ -258,6 +272,7 @@ impl Tensor {
             Data::F32(v) => v.len(),
             Data::I32(v) => v.len(),
             Data::F32Pooled(b) => b.len(),
+            Data::I32Pooled(b) => b.len(),
             Data::F32Shared(a) => a.len(),
         }
     }
@@ -278,7 +293,7 @@ impl Tensor {
             Data::F32(v) => Ok(v),
             Data::F32Pooled(b) => Ok(b),
             Data::F32Shared(a) => Ok(a.as_slice()),
-            Data::I32(_) => bail!("tensor is i32, expected f32"),
+            Data::I32(_) | Data::I32Pooled(_) => bail!("tensor is i32, expected f32"),
         }
     }
 
@@ -289,7 +304,7 @@ impl Tensor {
             Data::F32(v) => Ok(v),
             Data::F32Pooled(b) => Ok(&mut b[..]),
             Data::F32Shared(_) => bail!("tensor aliases shared storage (read-only)"),
-            Data::I32(_) => bail!("tensor is i32, expected f32"),
+            Data::I32(_) | Data::I32Pooled(_) => bail!("tensor is i32, expected f32"),
         }
     }
 
@@ -297,6 +312,7 @@ impl Tensor {
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),
+            Data::I32Pooled(b) => Ok(b),
             _ => bail!("tensor is f32, expected i32"),
         }
     }
@@ -307,7 +323,7 @@ impl Tensor {
             Data::F32(v) => Ok(v),
             Data::F32Pooled(b) => Ok(b.detach()),
             Data::F32Shared(a) => Ok(Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone())),
-            Data::I32(_) => bail!("tensor is i32, expected f32"),
+            Data::I32(_) | Data::I32Pooled(_) => bail!("tensor is i32, expected f32"),
         }
     }
 
@@ -316,13 +332,15 @@ impl Tensor {
         fn f32_bytes(v: &[f32]) -> &[u8] {
             unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
         }
+        fn i32_bytes(v: &[i32]) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+        }
         match &self.data {
             Data::F32(v) => f32_bytes(v),
             Data::F32Pooled(b) => f32_bytes(b),
             Data::F32Shared(a) => f32_bytes(a.as_slice()),
-            Data::I32(v) => unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            },
+            Data::I32(v) => i32_bytes(v),
+            Data::I32Pooled(b) => i32_bytes(b),
         }
     }
 
@@ -392,6 +410,22 @@ mod tests {
         assert_eq!(t.as_f32().unwrap()[4], 5.0);
         drop(t);
         assert_eq!(pool.free_len(), 1, "dropping a pooled tensor returns the buffer");
+    }
+
+    #[test]
+    fn pooled_i32_tensor_recycles_and_reads() {
+        let pool = TensorPool::new();
+        let mut b = pool.take_i32(3);
+        b.copy_from_slice(&[7, -1, 3]);
+        let t = Tensor::i32_pooled(&[3], b).unwrap();
+        assert_eq!(t.dtype(), DType::I32);
+        assert_eq!(t.as_i32().unwrap(), &[7, -1, 3]);
+        assert!(t.as_f32().is_err());
+        let c = t.clone();
+        drop(t);
+        assert_eq!(pool.free_len_i32(), 1, "dropping a pooled i32 tensor returns the buffer");
+        assert_eq!(c.as_i32().unwrap(), &[7, -1, 3], "clone deep-copies to owned");
+        assert!(Tensor::i32_pooled(&[4], pool.take_i32(3)).is_err(), "shape product enforced");
     }
 
     #[test]

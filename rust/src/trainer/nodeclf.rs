@@ -8,6 +8,12 @@
 //! variant's `clf` step. For binary tasks the classifier sees each
 //! positive alongside a sampled negative (the paper's balanced scheme).
 //!
+//! The classifier head follows the trainer's zero-clone discipline: its
+//! parameters/Adam moments are [`SharedVec`] aliases written back in
+//! place, and the per-chunk embedding/label/mask tensors recycle through
+//! the trainer's [`TensorPool`](crate::util::tensor_pool::TensorPool)
+//! (labels via its `i32` free list).
+//!
 //! The replay itself is **pipelined** when `cfg.prefetch` is on: a
 //! producer thread runs the prefetchable stage (sampling + static
 //! gathers) for upcoming edge windows while this thread executes the eval
@@ -23,7 +29,7 @@ use super::single::{
 };
 use crate::graph::NodeLabel;
 use crate::metrics::{argmax_rows, average_precision, f1_micro};
-use crate::runtime::Tensor;
+use crate::runtime::{SharedVec, Tensor};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
 
@@ -141,80 +147,107 @@ pub fn node_classification(
             }
         }
     }
-    ensure!(!ys.is_empty(), "no labels harvested");
+    // A meaningful split needs at least one training and one held-out
+    // label; with fewer, `clamp(1, n - 1)` would panic (min > max), so
+    // reject degenerate datasets with a clear error instead.
+    ensure!(
+        ys.len() >= 2,
+        "need at least 2 harvested labels to split train/test (got {})",
+        ys.len()
+    );
 
-    // Chronological split.
+    // Chronological split (1 ≤ split ≤ n-1 by the guard above).
     let n = ys.len();
-    let split = ((n as f64) * label_split) as usize;
-    let split = split.clamp(1, n - 1);
+    let split = (((n as f64) * label_split) as usize).clamp(1, n - 1);
 
-    // Train the MLP head.
+    // Train the MLP head. Parameters and Adam moments live in
+    // [`SharedVec`]s and are aliased (zero-copy) into the step inputs —
+    // the same discipline as the trainer's JIT stage — and the per-chunk
+    // emb/label/mask buffers recycle through the trainer's tensor pool
+    // (labels through its `i32` list), so a steady-state mini-step clones
+    // nothing.
     let clf_exe = trainer.model.clf_exe.as_ref().context("variant has no clf step")?;
     let spec = trainer.model.mf.step("clf")?;
     let pc = trainer.model.mf.clf_param_count;
-    let mut params = trainer.model.init_clf_params.clone();
-    let mut m = vec![0.0f32; pc];
-    let mut v = vec![0.0f32; pc];
+    let pool = trainer.prep.pool();
+    let mut params = SharedVec::new(trainer.model.init_clf_params.clone());
+    let mut m = SharedVec::new(vec![0.0f32; pc]);
+    let mut v = SharedVec::new(vec![0.0f32; pc]);
     let mut step = 0.0f32;
-    let run_clf = |params: &[f32],
-                   m: &[f32],
-                   v: &[f32],
-                   step: f32,
-                   lr: f32,
-                   emb: &[f32],
-                   lab: &[i32],
-                   mask: &[f32]|
-     -> Result<Vec<Tensor>> {
-        clf_exe.run(&[
-            Tensor::f32(&[pc], params.to_vec())?,
-            Tensor::f32(&[pc], m.to_vec())?,
-            Tensor::f32(&[pc], v.to_vec())?,
-            Tensor::scalar(step),
-            Tensor::scalar(lr),
-            Tensor::f32(&[bs, dh], emb.to_vec())?,
-            Tensor::i32(&[bs], lab.to_vec())?,
-            Tensor::f32(&[bs], mask.to_vec())?,
-        ])
+    let idx_params = spec.output_index("new_params")?;
+    let idx_m = spec.output_index("new_adam_m")?;
+    let idx_v = spec.output_index("new_adam_v")?;
+    let logits_idx = spec.output_index("logits")?;
+    // Recycled input/output tensor lists (hoisted out of both loops;
+    // clearing them returns the pooled buffers).
+    let mut clf_in: Vec<Tensor> = Vec::with_capacity(spec.inputs.len());
+    let mut clf_out: Vec<Tensor> = Vec::with_capacity(spec.outputs.len());
+
+    // Assemble one mini-step's inputs (manifest order) for a chunk of
+    // label indices into the recycled `clf_in` list.
+    let fill_chunk = |clf_in: &mut Vec<Tensor>,
+                      params: &SharedVec,
+                      m: &SharedVec,
+                      v: &SharedVec,
+                      step: f32,
+                      lr: f32,
+                      idxs: &[usize]|
+     -> Result<()> {
+        let mut emb_b = pool.take(bs * dh);
+        let mut lab_b = pool.take_i32(bs);
+        let mut mask_b = pool.take(bs);
+        for (j, &i) in idxs.iter().enumerate() {
+            emb_b[j * dh..(j + 1) * dh].copy_from_slice(&embs[i * dh..(i + 1) * dh]);
+            lab_b[j] = ys[i] as i32;
+            mask_b[j] = 1.0;
+        }
+        let mut step_b = pool.take(1);
+        step_b[0] = step;
+        let mut lr_b = pool.take(1);
+        lr_b[0] = lr;
+        clf_in.clear();
+        clf_in.push(Tensor::f32_shared(&[pc], params.arc())?);
+        clf_in.push(Tensor::f32_shared(&[pc], m.arc())?);
+        clf_in.push(Tensor::f32_shared(&[pc], v.arc())?);
+        clf_in.push(Tensor::f32_pooled(&[], step_b)?);
+        clf_in.push(Tensor::f32_pooled(&[], lr_b)?);
+        clf_in.push(Tensor::f32_pooled(&[bs, dh], emb_b)?);
+        clf_in.push(Tensor::i32_pooled(&[bs], lab_b)?);
+        clf_in.push(Tensor::f32_pooled(&[bs], mask_b)?);
+        Ok(())
     };
 
     let mut order: Vec<usize> = (0..split).collect();
     for _ in 0..clf_epochs {
         rng.shuffle(&mut order);
         for chunk in order.chunks(bs) {
-            let mut emb = vec![0.0f32; bs * dh];
-            let mut lab = vec![0i32; bs];
-            let mut mask = vec![0.0f32; bs];
-            for (j, &i) in chunk.iter().enumerate() {
-                emb[j * dh..(j + 1) * dh].copy_from_slice(&embs[i * dh..(i + 1) * dh]);
-                lab[j] = ys[i] as i32;
-                mask[j] = 1.0;
-            }
-            let out = run_clf(&params, &m, &v, step, clf_lr, &emb, &lab, &mask)?;
-            params = out[spec.output_index("new_params")?].as_f32()?.to_vec();
-            m = out[spec.output_index("new_adam_m")?].as_f32()?.to_vec();
-            v = out[spec.output_index("new_adam_v")?].as_f32()?.to_vec();
+            fill_chunk(&mut clf_in, &params, &m, &v, step, clf_lr, chunk)?;
+            clf_exe.run_into(&clf_in, &mut clf_out).context("clf train step")?;
+            // Drop the aliases before the write-back so `copy_from`
+            // updates in place (no copy, no allocation).
+            clf_in.clear();
+            params.copy_from(clf_out[idx_params].as_f32()?);
+            m.copy_from(clf_out[idx_m].as_f32()?);
+            v.copy_from(clf_out[idx_v].as_f32()?);
+            clf_out.clear();
             step += 1.0;
         }
     }
 
-    // Evaluate on the held-out tail.
+    // Evaluate on the held-out tail (lr = 0: inference only).
     let mut preds = Vec::new();
     let mut truths = Vec::new();
     let mut pos_scores = Vec::new();
     let mut neg_scores = Vec::new();
-    let logits_idx = spec.output_index("logits")?;
+    let mut chunk_idx: Vec<usize> = Vec::with_capacity(bs);
     for chunk_start in (split..n).step_by(bs) {
         let chunk_end = (chunk_start + bs).min(n);
-        let mut emb = vec![0.0f32; bs * dh];
-        let mut lab = vec![0i32; bs];
-        let mut mask = vec![0.0f32; bs];
-        for (j, i) in (chunk_start..chunk_end).enumerate() {
-            emb[j * dh..(j + 1) * dh].copy_from_slice(&embs[i * dh..(i + 1) * dh]);
-            lab[j] = ys[i] as i32;
-            mask[j] = 1.0;
-        }
-        let out = run_clf(&params, &m, &v, step, 0.0, &emb, &lab, &mask)?;
-        let logits = out[logits_idx].as_f32()?;
+        chunk_idx.clear();
+        chunk_idx.extend(chunk_start..chunk_end);
+        fill_chunk(&mut clf_in, &params, &m, &v, step, 0.0, &chunk_idx)?;
+        clf_exe.run_into(&clf_in, &mut clf_out).context("clf eval step")?;
+        clf_in.clear();
+        let logits = clf_out[logits_idx].as_f32()?;
         let c = logits.len() / bs;
         let pred = argmax_rows(logits, c);
         for (j, i) in (chunk_start..chunk_end).enumerate() {
@@ -231,6 +264,7 @@ pub fn node_classification(
                 }
             }
         }
+        clf_out.clear();
     }
 
     // Balanced AP for binary tasks (equal positives and negatives).
@@ -247,4 +281,61 @@ pub fn node_classification(
         train_labels: split,
         test_labels: n - split,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{TCsr, TemporalGraph};
+    use crate::models::synthetic;
+    use crate::trainer::{Trainer, TrainerCfg};
+
+    fn tiny_graph(labels: Vec<NodeLabel>) -> TemporalGraph {
+        let n_edges = 200usize;
+        let src: Vec<u32> = (0..n_edges).map(|e| (e % 10) as u32).collect();
+        let dst: Vec<u32> = (0..n_edges).map(|e| 10 + (e % 8) as u32).collect();
+        let time: Vec<f64> = (0..n_edges).map(|e| e as f64 * 5.0).collect();
+        TemporalGraph::new(20, src, dst, time).unwrap().with_labels(labels, 2)
+    }
+
+    fn trainer_for<'a>(
+        model: &'a crate::models::Model,
+        g: &'a TemporalGraph,
+        csr: &'a TCsr,
+    ) -> Trainer<'a> {
+        let cfg = TrainerCfg::for_model(model, g, 1e-3, 1);
+        Trainer::new(model, g, csr, cfg).unwrap()
+    }
+
+    /// Regression: exactly one harvested label used to panic in
+    /// `split.clamp(1, n - 1)` (min > max); it must be a clear error.
+    #[test]
+    fn single_label_errors_instead_of_panicking() {
+        let g = tiny_graph(vec![NodeLabel { node: 0, time: 100.0, label: 1 }]);
+        let csr = TCsr::build(&g, true);
+        let model = synthetic("tgn").unwrap();
+        let mut t = trainer_for(&model, &g, &csr);
+        let err = node_classification(&mut t, 0.7, 2, 0.01, 7).unwrap_err();
+        assert!(
+            err.to_string().contains("at least 2"),
+            "expected the degenerate-split error, got: {err}"
+        );
+    }
+
+    /// Two labels is the smallest legal dataset: the clamp degenerates to
+    /// a 1/1 split and the pipeline must run end to end.
+    #[test]
+    fn two_labels_degenerate_split_works() {
+        let g = tiny_graph(vec![
+            NodeLabel { node: 0, time: 100.0, label: 1 },
+            NodeLabel { node: 1, time: 500.0, label: 0 },
+        ]);
+        let csr = TCsr::build(&g, true);
+        let model = synthetic("tgn").unwrap();
+        let mut t = trainer_for(&model, &g, &csr);
+        let res = node_classification(&mut t, 0.7, 2, 0.01, 7).unwrap();
+        assert_eq!(res.train_labels, 1);
+        assert_eq!(res.test_labels, 1);
+        assert!(res.f1_micro.is_finite() && res.ap.is_finite());
+    }
 }

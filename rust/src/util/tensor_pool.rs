@@ -56,10 +56,17 @@ use std::sync::{Arc, Mutex};
 /// pool converges on the per-batch working set after warm-up.
 type FreeList = Arc<Mutex<Vec<Vec<f32>>>>;
 
-/// A recycling pool of `f32` buffers (see module docs).
+/// `i32` twin of [`FreeList`] — label/index buffers (the
+/// node-classification head) recycle through their own list so the two
+/// element types never fight over capacities.
+type FreeListI32 = Arc<Mutex<Vec<Vec<i32>>>>;
+
+/// A recycling pool of `f32` (and `i32` label/index) buffers (see module
+/// docs).
 #[derive(Debug, Clone)]
 pub struct TensorPool {
     free: Option<FreeList>,
+    free_i32: Option<FreeListI32>,
 }
 
 impl Default for TensorPool {
@@ -71,13 +78,16 @@ impl Default for TensorPool {
 impl TensorPool {
     /// An enabled pool with an empty free list.
     pub fn new() -> TensorPool {
-        TensorPool { free: Some(Arc::new(Mutex::new(Vec::with_capacity(64)))) }
+        TensorPool {
+            free: Some(Arc::new(Mutex::new(Vec::with_capacity(64)))),
+            free_i32: Some(Arc::new(Mutex::new(Vec::with_capacity(8)))),
+        }
     }
 
     /// A pass-through pool: `take` allocates fresh zeroed buffers and drop
     /// frees them (the no-recycling baseline).
     pub fn disabled() -> TensorPool {
-        TensorPool { free: None }
+        TensorPool { free: None, free_i32: None }
     }
 
     pub fn is_enabled(&self) -> bool {
@@ -93,6 +103,11 @@ impl TensorPool {
     /// best-fitting free buffer (no allocation once capacities are warm);
     /// disabled pools allocate fresh.
     pub fn take(&self, n: usize) -> PoolBuf {
+        if n == 0 {
+            // `Vec::new` does not allocate; a zero-length request must not
+            // steal a parked buffer.
+            return PoolBuf { data: Vec::new(), home: None };
+        }
         let Some(free) = &self.free else {
             return PoolBuf { data: vec![0.0; n], home: None };
         };
@@ -118,6 +133,43 @@ impl TensorPool {
         data.clear();
         data.resize(n, 0.0);
         PoolBuf { data, home: Some(Arc::clone(free)) }
+    }
+
+    /// Number of `i32` buffers currently parked in the free list.
+    pub fn free_len_i32(&self) -> usize {
+        self.free_i32.as_ref().map_or(0, |f| f.lock().unwrap().len())
+    }
+
+    /// [`Self::take`] for `i32` buffers (labels, index lists): a zeroed
+    /// length-`n` buffer, recycled best-fit from the `i32` free list.
+    pub fn take_i32(&self, n: usize) -> PoolBufI32 {
+        if n == 0 {
+            return PoolBufI32 { data: Vec::new(), home: None };
+        }
+        let Some(free) = &self.free_i32 else {
+            return PoolBufI32 { data: vec![0; n], home: None };
+        };
+        let mut data = {
+            let mut list = free.lock().unwrap();
+            let mut best: Option<(usize, usize)> = None;
+            for (i, b) in list.iter().enumerate() {
+                let cap = b.capacity();
+                if cap < n {
+                    continue;
+                }
+                match best {
+                    Some((_, c)) if cap >= c => {}
+                    _ => best = Some((i, cap)),
+                }
+            }
+            match best {
+                Some((i, _)) => list.swap_remove(i),
+                None => Vec::with_capacity(n),
+            }
+        };
+        data.clear();
+        data.resize(n, 0);
+        PoolBufI32 { data, home: Some(Arc::clone(free)) }
     }
 }
 
@@ -161,6 +213,57 @@ impl std::ops::DerefMut for PoolBuf {
 }
 
 impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            let data = std::mem::take(&mut self.data);
+            if data.capacity() > 0 {
+                home.lock().unwrap().push(data);
+            }
+        }
+    }
+}
+
+/// A zeroed `i32` buffer on loan from a [`TensorPool`]; the `i32` twin of
+/// [`PoolBuf`], with the same drop-returns-home / [`Self::detach`]
+/// contract.
+#[derive(Debug)]
+pub struct PoolBufI32 {
+    data: Vec<i32>,
+    home: Option<FreeListI32>,
+}
+
+impl PoolBufI32 {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Take the storage out of the pool's custody (it will not be
+    /// recycled).
+    pub fn detach(mut self) -> Vec<i32> {
+        self.home = None;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl std::ops::Deref for PoolBufI32 {
+    type Target = [i32];
+
+    fn deref(&self) -> &[i32] {
+        &self.data
+    }
+}
+
+impl std::ops::DerefMut for PoolBufI32 {
+    fn deref_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+impl Drop for PoolBufI32 {
     fn drop(&mut self) {
         if let Some(home) = self.home.take() {
             let data = std::mem::take(&mut self.data);
@@ -231,6 +334,31 @@ mod tests {
         assert_eq!(b.len(), 16);
         drop(b);
         assert_eq!(pool.free_len(), 0);
+    }
+
+    #[test]
+    fn i32_buffers_recycle_and_zero() {
+        let pool = TensorPool::new();
+        let mut b = pool.take_i32(6);
+        assert_eq!(b.len(), 6);
+        b[3] = 42;
+        let ptr = b.as_ptr();
+        drop(b);
+        assert_eq!(pool.free_len_i32(), 1);
+        assert_eq!(pool.free_len(), 0, "i32 buffers must not land in the f32 list");
+        let b2 = pool.take_i32(4);
+        assert_eq!(b2.as_ptr(), ptr, "best-fit must reuse the parked i32 buffer");
+        assert!(b2.iter().all(|&x| x == 0), "recycled i32 buffer is re-zeroed");
+        assert_eq!(b2.detach().len(), 4);
+        assert_eq!(pool.free_len_i32(), 0, "detach removes custody");
+    }
+
+    #[test]
+    fn disabled_pool_never_recycles_i32() {
+        let pool = TensorPool::disabled();
+        let b = pool.take_i32(8);
+        drop(b);
+        assert_eq!(pool.free_len_i32(), 0);
     }
 
     #[test]

@@ -25,6 +25,12 @@ fi
 echo "== tier1: cargo build --release =="
 cargo build --release
 
+# Learning-dynamics gate first: a regression in the reference backend's
+# training math (loss no longer decreasing, AP at chance) fails fast and
+# visibly here, before the full suite buries it.
+echo "== tier1: cargo test -q --test convergence =="
+cargo test -q --test convergence
+
 echo "== tier1: cargo test -q =="
 cargo test -q
 
