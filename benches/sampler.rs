@@ -11,9 +11,13 @@
 //! the dataset; default runs the full 157k-edge Wikipedia workload).
 
 use tgl::bench::{bench_scale, Table};
-use tgl::coordinator::{run_epoch_baseline, run_epoch_parallel, run_epoch_parallel_reuse};
-use tgl::graph::TCsr;
-use tgl::sampler::{BaselineSampler, PointerMode, SamplerConfig, Strategy, TemporalSampler};
+use tgl::coordinator::{
+    run_epoch_baseline, run_epoch_parallel, run_epoch_parallel_reuse, run_epoch_sharded,
+};
+use tgl::graph::{ShardedTCsr, TCsr};
+use tgl::sampler::{
+    BaselineSampler, PointerMode, SamplerConfig, ShardedSampler, Strategy, TemporalSampler,
+};
 use tgl::util::stats::Stopwatch;
 
 fn main() -> anyhow::Result<()> {
@@ -141,5 +145,34 @@ fn main() -> anyhow::Result<()> {
     }
     ar.print();
     ar.write_csv("results/arena_reuse.csv")?;
+
+    // ---- Sharded producers: one sampling epoch on the node-sharded
+    // sampler (per-shard producers + deterministic merge, `sample_into`
+    // arenas) across shard counts, vs the flat arena epoch. With one
+    // shard the sharded engine is a single sequential producer, so the
+    // shards column doubles as its own scaling baseline.
+    let mut sh = Table::new(
+        "Sharded sampling: ShardedSampler epoch (s) vs flat arena epoch (8 threads)",
+        &["algorithm", "flat (s)", "1 shard", "2 shards", "4 shards", "8 shards"],
+    );
+    for (name, mk) in algos {
+        let flat_sampler = TemporalSampler::new(&csr, mk(8, &graph));
+        run_epoch_parallel_reuse(&graph, &flat_sampler, bs); // warm-up
+        let sw = Stopwatch::start();
+        run_epoch_parallel_reuse(&graph, &flat_sampler, bs);
+        let flat_s = sw.secs();
+        let mut cols = vec![name.to_string(), format!("{flat_s:.4}")];
+        for shards in [1usize, 2, 4, 8] {
+            let sampler =
+                ShardedSampler::new(ShardedTCsr::build(&graph, true, shards), mk(8, &graph));
+            run_epoch_sharded(&graph, &sampler, bs); // warm-up
+            let sw = Stopwatch::start();
+            run_epoch_sharded(&graph, &sampler, bs);
+            cols.push(format!("{:.4}", sw.secs()));
+        }
+        sh.row(cols);
+    }
+    sh.print();
+    sh.write_csv("results/sharded_sampling.csv")?;
     Ok(())
 }

@@ -225,6 +225,34 @@ fn main() -> anyhow::Result<()> {
             ("speedup", Json::Num(m_off / m_on.max(1e-12))),
         ]));
 
+        // ---- Sharded producers: the multi-trainer fed by N shard
+        // producers (node-sharded sampler + merged-by-batch-index
+        // prefetch) vs the single shared producer. Bitwise-identical
+        // losses; the row tracks whether fanning the sampling stage out
+        // keeps paying as the code evolves.
+        let sharded_secs = |shards: usize| -> anyhow::Result<f64> {
+            let mut cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+            cfg.shards = shards;
+            let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+            let mut multi = MultiTrainer::new(4);
+            multi.producers = shards;
+            multi.train_epoch(&mut t, &ep)?; // warm-up epoch
+            Ok(multi.train_epoch(&mut t, &ep)?.seconds)
+        };
+        let p1 = sharded_secs(1)?;
+        let p4 = sharded_secs(4)?;
+        println!(
+            "syn_tgn multi(4) shard producers: 1 shard {p1:.4}s vs 4 shards {p4:.4}s ({:.2}x)",
+            p1 / p4.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str("syn_tgn-multi4-epoch".into())),
+            ("mode", Json::Str("sharded-producer".into())),
+            ("shards1_s", Json::Num(p1)),
+            ("shards4_s", Json::Num(p4)),
+            ("speedup", Json::Num(p1 / p4.max(1e-12))),
+        ]));
+
         // ---- Convergence row: the neural reference backend is a real
         // learner (runtime/nn.rs); record the epoch-1 smoothed loss curve
         // (Figure-6-style CSV) and the held-out AP so learning-dynamics
@@ -263,7 +291,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- Sampler-level arena rows (always available, artifacts or not):
-    // fresh `sample` vs `sample_into` over one Wikipedia sampling epoch.
+    // fresh `sample` vs `sample_into` over one Wikipedia sampling epoch,
+    // plus the sharded-producer sampling row (1 shard vs 4 shards on the
+    // node-sharded engine).
     let graph = tgl::datasets::by_name("wikipedia", scale, 42)?;
     let csr = TCsr::build(&graph, true);
     let bs = 600;
@@ -271,7 +301,7 @@ fn main() -> anyhow::Result<()> {
         ("tgn-1layer-sampling", SamplerConfig::uniform_hops(1, 10, Strategy::MostRecent, 8)),
         ("tgat-2layer-sampling", SamplerConfig::uniform_hops(2, 10, Strategy::Uniform, 8)),
     ] {
-        let sampler = TemporalSampler::new(&csr, cfg);
+        let sampler = TemporalSampler::new(&csr, cfg.clone());
         run_epoch_parallel(&graph, &sampler, bs); // warm-up
         let sw = Stopwatch::start();
         run_epoch_parallel(&graph, &sampler, bs);
@@ -290,6 +320,30 @@ fn main() -> anyhow::Result<()> {
             ("fresh_s", Json::Num(fresh_s)),
             ("arena_s", Json::Num(arena_s)),
             ("speedup", Json::Num(fresh_s / arena_s.max(1e-12))),
+        ]));
+
+        let sharded_epoch = |shards: usize| {
+            let s = tgl::sampler::ShardedSampler::new(
+                tgl::graph::ShardedTCsr::build(&graph, true, shards),
+                cfg.clone(),
+            );
+            tgl::coordinator::run_epoch_sharded(&graph, &s, bs); // warm-up
+            let sw = Stopwatch::start();
+            tgl::coordinator::run_epoch_sharded(&graph, &s, bs);
+            sw.secs()
+        };
+        let s1 = sharded_epoch(1);
+        let s4 = sharded_epoch(4);
+        println!(
+            "{name}: 1 shard {s1:.4}s vs 4 shards {s4:.4}s ({:.2}x)",
+            s1 / s4.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str(name.into())),
+            ("mode", Json::Str("sharded-sampling".into())),
+            ("shards1_s", Json::Num(s1)),
+            ("shards4_s", Json::Num(s4)),
+            ("speedup", Json::Num(s1 / s4.max(1e-12))),
         ]));
     }
 

@@ -7,7 +7,8 @@
 mod run;
 
 pub use run::{
-    run_epoch_baseline, run_epoch_parallel, run_epoch_parallel_reuse, LinkPredReport, RunPlan,
+    run_epoch_baseline, run_epoch_parallel, run_epoch_parallel_reuse, run_epoch_sharded,
+    LinkPredReport, RunPlan,
 };
 
 use anyhow::{bail, Result};

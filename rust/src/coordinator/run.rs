@@ -32,6 +32,10 @@ pub struct RunPlan {
     /// Recycle input-tensor buffers through the tensor pool (the
     /// zero-allocation gather path). Deterministic either way.
     pub tensor_arenas: bool,
+    /// Node-shard count (`--shards`): node-sharded sampling, N prefetch
+    /// producers merged by batch index, and single-owner state gathers.
+    /// Deterministic: any value ≥ 1 is bitwise-identical to 1.
+    pub shards: usize,
 }
 
 /// Per-epoch row + final metrics of a link-prediction run.
@@ -82,6 +86,7 @@ impl RunPlan {
             prefetch: true,
             prefetch_depth: 2,
             tensor_arenas: true,
+            shards: 1,
         })
     }
 
@@ -94,15 +99,17 @@ impl RunPlan {
         cfg.prefetch = self.prefetch;
         cfg.prefetch_depth = self.prefetch_depth;
         cfg.tensor_arenas = self.tensor_arenas;
+        cfg.shards = self.shards.max(1);
         Trainer::new(&self.model, &self.graph, &self.csr, cfg)
     }
 
-    /// A [`MultiTrainer`] honoring this plan's prefetch knobs (shared
-    /// producer on/off, queue depth).
+    /// A [`MultiTrainer`] honoring this plan's prefetch knobs (shard
+    /// producers on/off, producer count, queue depth).
     pub fn multi_trainer(&self, workers: usize) -> MultiTrainer {
         let mut multi = MultiTrainer::new(workers);
         multi.prefetch = self.prefetch;
         multi.prefetch_depth = self.prefetch_depth;
+        multi.producers = self.shards.max(1);
         multi
     }
 
@@ -189,6 +196,7 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         .opt("prefetch", "on", "pipelined epoch execution: on|off (deterministic either way)")
         .opt("prefetch-depth", "2", "prepared-batch queue depth for the pipeline")
         .opt("arena", "on", "tensor-buffer arenas on the gather path: on|off (deterministic)")
+        .opt("shards", "1", "node shards = prefetch producers (deterministic for any count)")
         .opt("seed", "42", "RNG seed")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("configs", "configs", "model config directory")
@@ -205,6 +213,7 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
     plan.prefetch = parse_switch(&a.get("prefetch"), "--prefetch")?;
     plan.prefetch_depth = a.get_usize("prefetch-depth")?;
     plan.tensor_arenas = parse_switch(&a.get("arena"), "--arena")?;
+    plan.shards = a.get_usize_min("shards", 1)?;
     crate::info!(
         "dataset `{}`: |V|={} |E|={} max(t)={:.3e}",
         a.get("data"),
@@ -266,8 +275,8 @@ pub(super) fn cli_nodeclf(args: &[String]) -> Result<()> {
     )?;
     println!("\n== node classification: {} on {} ==", a.get("variant"), a.get("data"));
     println!(
-        "AP {:.4}  F1-micro {:.4}  (train/test labels {}/{})",
-        clf.ap, clf.f1_micro, clf.train_labels, clf.test_labels
+        "AP {:.4}  F1-micro {:.4}  F1-macro {:.4}  (train/test labels {}/{})",
+        clf.ap, clf.f1_micro, clf.f1_macro, clf.train_labels, clf.test_labels
     );
     Ok(())
 }
@@ -358,6 +367,27 @@ pub fn run_epoch_parallel(g: &TemporalGraph, s: &TemporalSampler<'_>, bs: usize)
 /// root buffers (`sample_into`): the zero-allocation steady state the
 /// pipelined trainer runs in. Row source for the arena-reuse bench.
 pub fn run_epoch_parallel_reuse(g: &TemporalGraph, s: &TemporalSampler<'_>, bs: usize) {
+    s.reset();
+    let mut rng = crate::util::rng::Rng::new(7);
+    let mut mfg = crate::sampler::Mfg::new();
+    let mut roots = Vec::new();
+    let mut ts = Vec::new();
+    let mut start = 0usize;
+    let mut bi = 0u64;
+    while start + bs <= g.num_edges() {
+        bench_roots_into(g, start, bs, &mut rng, &mut roots, &mut ts);
+        s.sample_into(&mut mfg, &roots, &ts, bi);
+        std::hint::black_box(&mfg);
+        start += bs;
+        bi += 1;
+    }
+}
+
+/// One sampling epoch on the node-sharded sampler, reusing one arena
+/// (`sample_into`) — the sharded counterpart of
+/// [`run_epoch_parallel_reuse`]; row source for the sharded-sampling
+/// bench.
+pub fn run_epoch_sharded(g: &TemporalGraph, s: &crate::sampler::ShardedSampler, bs: usize) {
     s.reset();
     let mut rng = crate::util::rng::Rng::new(7);
     let mut mfg = crate::sampler::Mfg::new();

@@ -116,10 +116,45 @@ pub fn interactions(spec: &InteractionSpec, seed: u64) -> Result<TemporalGraph> 
     Ok(g)
 }
 
+/// Tiny planted-signal dataset for the convergence gate
+/// (`rust/tests/convergence.rs`): a bipartite interaction stream with a
+/// near-deterministic revisit structure (tiny per-user preference sets,
+/// 95% revisit probability) over a small node vocabulary, so a memory
+/// model separates true destinations from uniform negatives within a
+/// fraction of an epoch. Much smaller and much sharper than the
+/// scale-0.02 wikipedia generator the gate previously trained on (~1.6k
+/// edges vs ~3.1k, and a stronger loss drop / higher held-out AP), which
+/// is what lets the learning thresholds be tight without flaking.
+pub fn planted_signal(seed: u64) -> Result<TemporalGraph> {
+    interactions(
+        &InteractionSpec {
+            users: 80,
+            items: 16,
+            edges: 1600,
+            max_time: 1.0e4,
+            dv: 0,
+            de: 8,
+            affinity: 2,
+            revisit: 0.95,
+            labels: 0,
+            num_classes: 0,
+            user_zipf: 0.9,
+        },
+        seed,
+    )
+}
+
 /// GDELT-like temporal knowledge graph: few nodes (actors), *dense*
 /// repeated interactions over a long horizon, heavy node/edge multi-hot
 /// features, 81-class dynamic labels — the "long duration, mutable node
 /// information" axis of the paper's large-scale evaluation.
+///
+/// Community signal is planted twice: one-hot at the community index
+/// (visible to full-width models) **and** as a ±code over the first six
+/// feature dims of both node and edge features, so low-width consumers —
+/// the `dv = de = 4` synthetic reference variants — still observe it
+/// (the artifact-free multi-class node-classification gate rests on
+/// this).
 pub fn gdelt_like(scale: f64, seed: u64) -> Result<TemporalGraph> {
     let mut rng = Rng::new(seed ^ 0x6DE1_7000);
     let actors = ((16_682.0 * scale.max(0.05)) as usize).max(500);
@@ -164,6 +199,11 @@ pub fn gdelt_like(scale: f64, seed: u64) -> Result<TemporalGraph> {
             row[rng.below(de)] = 1.0;
         }
         row[(comm[a as usize] as usize) % de] += 1.0;
+        // Low-dim ± community code (see the doc comment).
+        let c = comm[a as usize];
+        for b in 0..6.min(de) {
+            row[b] += if (c >> b) & 1 == 1 { 0.8 } else { -0.8 };
+        }
     }
 
     // Multi-hot actor features encode community noisily.
@@ -174,6 +214,9 @@ pub fn gdelt_like(scale: f64, seed: u64) -> Result<TemporalGraph> {
             row[rng.below(dv)] = 1.0;
         }
         row[(comm[a] as usize) % dv] += 2.0;
+        for b in 0..6.min(dv) {
+            row[b] += if (comm[a] >> b) & 1 == 1 { 1.2 } else { -1.2 };
+        }
     }
 
     // Dynamic labels: the actor's community drifts occasionally — label =
@@ -319,6 +362,31 @@ mod tests {
         assert_eq!(g.num_classes, 81);
         assert!(g.node_feat.is_some() && g.edge_feat.is_some());
         assert!(!g.labels.is_empty());
+        // The low-dim community code must be present: first feature dims
+        // are strongly signed, away from the 0-or-1 multi-hot baseline.
+        let nf = g.node_feat.as_ref().unwrap();
+        let signed = (0..g.num_nodes)
+            .filter(|&a| nf.row(a)[0].abs() > 1.0)
+            .count();
+        assert!(signed * 2 > g.num_nodes, "community code missing: {signed}/{}", g.num_nodes);
+    }
+
+    #[test]
+    fn planted_signal_is_small_bipartite_and_highly_recurrent() {
+        let g = planted_signal(7).unwrap();
+        assert_eq!(g.num_nodes, 96); // 80 users + 16 items
+        assert_eq!(g.num_edges(), 1600);
+        assert!(g.src.iter().all(|&u| u < 80));
+        assert!(g.dst.iter().all(|&v| (80..96).contains(&(v as usize))));
+        assert!(g.time.windows(2).all(|w| w[0] <= w[1]), "chronological");
+        // The overwhelming majority of edges must revisit an existing
+        // (user, item) pair — the planted recurrence the convergence
+        // thresholds lean on. (Distinct pairs ≈ preference sets + the 5%
+        // random tail, well under 20% of the stream.)
+        let mut seen = std::collections::HashSet::new();
+        let repeats =
+            (0..g.num_edges()).filter(|&e| !seen.insert((g.src[e], g.dst[e]))).count();
+        assert!(repeats as f64 > 0.8 * g.num_edges() as f64, "repeats={repeats}");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 mod generators;
 
-pub use generators::{gdelt_like, interactions, mag_like, InteractionSpec};
+pub use generators::{gdelt_like, interactions, mag_like, planted_signal, InteractionSpec};
 
 use crate::graph::TemporalGraph;
 use anyhow::{bail, Result};
@@ -95,8 +95,12 @@ pub fn by_name(name: &str, scale: f64, seed: u64) -> Result<TemporalGraph> {
         ),
         "gdelt" => gdelt_like(scale, seed),
         "mag" => mag_like(scale, seed),
+        // The tiny planted-signal convergence dataset (fixed size; scale
+        // is ignored — it exists to make the learning gate fast + sharp).
+        "planted" => planted_signal(seed),
         other => bail!(
-            "unknown dataset `{other}` (have wikipedia, reddit, mooc, lastfm, gdelt, mag)"
+            "unknown dataset `{other}` (have wikipedia, reddit, mooc, lastfm, gdelt, mag, \
+             planted)"
         ),
     }
 }

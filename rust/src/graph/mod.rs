@@ -1,9 +1,12 @@
 //! Temporal graph storage: the edge-timestamped dynamic graph model the
-//! paper targets, plus the T-CSR structure (paper §3.1) that the parallel
-//! temporal sampler reads.
+//! paper targets, the T-CSR structure (paper §3.1) that the parallel
+//! temporal sampler reads, and the node-sharded T-CSR partition
+//! ([`ShardedTCsr`]) behind the sharded sampling pipeline.
 
+mod shard;
 mod tcsr;
 mod temporal;
 
+pub use shard::{ShardSpec, ShardedTCsr};
 pub use tcsr::TCsr;
 pub use temporal::{FeatureTable, NodeLabel, TemporalGraph};

@@ -1,0 +1,231 @@
+//! Node-sharded T-CSR: the partition layer behind the sharded sampling
+//! pipeline (DistTGL-style graph partitioning, FAST-style co-design of
+//! sampling and memory-I/O ownership).
+//!
+//! The node id space is cut into `num_shards` contiguous, (near-)equal
+//! ranges by [`ShardSpec`] — the **single source of the partition rule**,
+//! shared by the sharded T-CSR, the sharded sampler, and the shard-aware
+//! node-memory/mailbox paths (`state::NodeMemory::gather_shard_into`,
+//! `state::Mailbox::gather_shard_into`), so every layer agrees on which
+//! shard owns a node. [`ShardedTCsr`] holds one local-indexed [`TCsr`]
+//! per range, built in **one pass over the edge stream** (the same
+//! `build_shards` pass `TCsr::build` uses for the unsharded case), with
+//! global neighbor ids in `indices`: a shard can answer any window query
+//! about its own nodes and emits globally meaningful samples, which is
+//! what lets the per-shard producers of
+//! [`crate::sampler::ShardedSampler`] be merged back into one MFG in
+//! global-id order, bitwise-identical to the unsharded sampler.
+//!
+//! Per-shard slices are byte-identical to the corresponding unsharded
+//! slices (`rust/tests/properties.rs` checks this slice-for-slice on
+//! random graphs and shard counts).
+
+use super::tcsr::{build_shards, TCsr};
+use super::TemporalGraph;
+
+/// The contiguous-range node partition rule: `num_shards` ranges of
+/// `ceil(num_nodes / num_shards)` nodes (the last range may be shorter).
+/// O(1) `shard_of` / `range` — the "global → (shard, local)" index map is
+/// a division, not a table.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSpec {
+    num_nodes: usize,
+    shards: usize,
+    size: usize,
+}
+
+impl ShardSpec {
+    pub fn new(num_nodes: usize, shards: usize) -> ShardSpec {
+        let shards = shards.max(1);
+        let size = num_nodes.div_ceil(shards).max(1);
+        ShardSpec { num_nodes, shards, size }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Owning shard of node `v` (v < num_nodes).
+    #[inline]
+    pub fn shard_of(&self, v: u32) -> usize {
+        ((v as usize) / self.size).min(self.shards - 1)
+    }
+
+    /// Node range owned by shard `s` (empty for trailing shards when
+    /// `num_shards` exceeds `num_nodes`).
+    #[inline]
+    pub fn range(&self, s: usize) -> std::ops::Range<u32> {
+        let lo = (s * self.size).min(self.num_nodes);
+        let hi = ((s + 1) * self.size).min(self.num_nodes);
+        lo as u32..hi as u32
+    }
+
+    /// `(shard, local id)` of node `v`.
+    #[inline]
+    pub fn locate(&self, v: u32) -> (usize, u32) {
+        let s = self.shard_of(v);
+        (s, v - self.range(s).start)
+    }
+}
+
+/// Node-partitioned T-CSR: one local-indexed [`TCsr`] per [`ShardSpec`]
+/// range. See the module docs for the ownership contract.
+#[derive(Debug, Clone)]
+pub struct ShardedTCsr {
+    spec: ShardSpec,
+    /// `shards[s]` covers nodes `spec.range(s)`; node v's slice lives at
+    /// local id `v - spec.range(s).start`. Neighbor ids stay global.
+    pub shards: Vec<TCsr>,
+}
+
+impl ShardedTCsr {
+    /// Partition the graph's T-CSR into `num_shards` node-range shards in
+    /// one pass over the (chronological) edge stream. `add_reverse` as in
+    /// [`TCsr::build`].
+    pub fn build(g: &TemporalGraph, add_reverse: bool, num_shards: usize) -> ShardedTCsr {
+        let spec = ShardSpec::new(g.num_nodes, num_shards);
+        let starts: Vec<usize> =
+            (0..=spec.shards()).map(|s| (s * spec.size).min(g.num_nodes)).collect();
+        ShardedTCsr { spec, shards: build_shards(g, add_reverse, &starts) }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.spec.num_nodes
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    pub fn shard(&self, s: usize) -> &TCsr {
+        &self.shards[s]
+    }
+
+    /// Owning shard of node `v`.
+    #[inline]
+    pub fn shard_of(&self, v: u32) -> usize {
+        self.spec.shard_of(v)
+    }
+
+    /// First global node id of shard `s` (local id = global − start).
+    #[inline]
+    pub fn start(&self, s: usize) -> u32 {
+        self.spec.range(s).start
+    }
+
+    /// Total slot count across every shard (equals the unsharded
+    /// `TCsr::num_slots`).
+    pub fn num_slots(&self) -> usize {
+        self.shards.iter().map(|sh| sh.num_slots()).sum()
+    }
+
+    /// Node v's slice within its owning shard: `(shard csr, lo, hi)`.
+    #[inline]
+    pub fn slice_of(&self, v: u32) -> (&TCsr, usize, usize) {
+        let (s, local) = self.spec.locate(v);
+        let sh = &self.shards[s];
+        let (lo, hi) = sh.slice(local);
+        (sh, lo, hi)
+    }
+
+    /// Per-shard [`TCsr::check_invariants`] plus partition coverage.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.shards.is_empty(), "sharded T-CSR needs at least one shard");
+        let mut covered = 0usize;
+        for (s, sh) in self.shards.iter().enumerate() {
+            sh.check_invariants()?;
+            let r = self.spec.range(s);
+            anyhow::ensure!(
+                sh.num_nodes == (r.end - r.start) as usize,
+                "shard {s} holds {} nodes, range {r:?} wants {}",
+                sh.num_nodes,
+                r.end - r.start
+            );
+            covered += sh.num_nodes;
+        }
+        anyhow::ensure!(
+            covered == self.spec.num_nodes,
+            "shards cover {covered} nodes, graph has {}",
+            self.spec.num_nodes
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> TemporalGraph {
+        TemporalGraph::new(
+            5,
+            vec![1, 1, 1, 1, 2],
+            vec![2, 3, 4, 0, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 2.5],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spec_partitions_contiguously() {
+        let spec = ShardSpec::new(10, 3);
+        // ceil(10/3) = 4: ranges 0..4, 4..8, 8..10.
+        assert_eq!(spec.range(0), 0..4);
+        assert_eq!(spec.range(1), 4..8);
+        assert_eq!(spec.range(2), 8..10);
+        for v in 0..10u32 {
+            let (s, local) = spec.locate(v);
+            assert!(spec.range(s).contains(&v));
+            assert_eq!(spec.range(s).start + local, v);
+        }
+    }
+
+    #[test]
+    fn spec_more_shards_than_nodes_yields_empty_tails() {
+        let spec = ShardSpec::new(2, 4);
+        assert_eq!(spec.range(0), 0..1);
+        assert_eq!(spec.range(1), 1..2);
+        assert_eq!(spec.range(2), 2..2);
+        assert_eq!(spec.range(3), 2..2);
+        assert_eq!(spec.shard_of(1), 1);
+    }
+
+    #[test]
+    fn sharded_build_matches_flat_slices() {
+        let g = toy();
+        let flat = TCsr::build(&g, true);
+        for shards in [1usize, 2, 3, 5, 7] {
+            let sharded = ShardedTCsr::build(&g, true, shards);
+            sharded.check_invariants().unwrap();
+            assert_eq!(sharded.num_slots(), flat.num_slots(), "{shards} shards");
+            for v in 0..g.num_nodes as u32 {
+                let (sh, lo, hi) = sharded.slice_of(v);
+                let (flo, fhi) = flat.slice(v);
+                assert_eq!(&sh.indices[lo..hi], &flat.indices[flo..fhi], "node {v}");
+                assert_eq!(&sh.times[lo..hi], &flat.times[flo..fhi], "node {v}");
+                assert_eq!(&sh.eids[lo..hi], &flat.eids[flo..fhi], "node {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_shard_is_the_flat_tcsr() {
+        let g = toy();
+        let flat = TCsr::build(&g, false);
+        let sharded = ShardedTCsr::build(&g, false, 1);
+        assert_eq!(sharded.num_shards(), 1);
+        let sh = sharded.shard(0);
+        assert_eq!(sh.indptr, flat.indptr);
+        assert_eq!(sh.indices, flat.indices);
+        assert_eq!(sh.times, flat.times);
+        assert_eq!(sh.eids, flat.eids);
+    }
+}

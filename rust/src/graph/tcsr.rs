@@ -37,46 +37,9 @@ impl TCsr {
     /// chronological edge id — exactly how TGL duplicates edges so mails
     /// reach both endpoints.
     pub fn build(g: &TemporalGraph, add_reverse: bool) -> TCsr {
-        let slots = if add_reverse { 2 * g.num_edges() } else { g.num_edges() };
-        let mut degree = vec![0usize; g.num_nodes];
-        for e in 0..g.num_edges() {
-            degree[g.src[e] as usize] += 1;
-            if add_reverse {
-                degree[g.dst[e] as usize] += 1;
-            }
-        }
-        let mut indptr = Vec::with_capacity(g.num_nodes + 1);
-        let mut acc = 0usize;
-        indptr.push(0);
-        for d in &degree {
-            acc += d;
-            indptr.push(acc);
-        }
-        debug_assert_eq!(acc, slots);
-
-        let mut indices = vec![0u32; slots];
-        let mut times = vec![0f64; slots];
-        let mut eids = vec![0u32; slots];
-        // The edge list is already chronological, so appending in edge
-        // order leaves every node slice time-sorted — no per-node sort
-        // needed (single O(|E|) pass).
-        let mut cursor = indptr.clone();
-        for e in 0..g.num_edges() {
-            let (u, v, t) = (g.src[e] as usize, g.dst[e] as usize, g.time[e]);
-            let cu = cursor[u];
-            indices[cu] = g.dst[e];
-            times[cu] = t;
-            eids[cu] = e as u32;
-            cursor[u] += 1;
-            if add_reverse {
-                let cv = cursor[v];
-                indices[cv] = g.src[e];
-                times[cv] = t;
-                eids[cv] = e as u32;
-                cursor[v] += 1;
-            }
-        }
-        TCsr { num_nodes: g.num_nodes, indptr, indices, times, eids }
+        build_shards(g, add_reverse, &[0, g.num_nodes])
+            .pop()
+            .expect("build_shards returns one TCsr per shard")
     }
 
     pub fn num_slots(&self) -> usize {
@@ -138,6 +101,87 @@ impl TCsr {
     }
 }
 
+/// Build one local-indexed [`TCsr`] per node range in **one pass over the
+/// edge stream**, shared by [`TCsr::build`] (one shard covering every
+/// node) and [`crate::graph::ShardedTCsr::build`] (the node-partitioned
+/// variant).
+///
+/// `starts` holds the shard boundaries (`starts[s]..starts[s+1]` is shard
+/// s's node range; `starts[0] == 0`, `starts.last() == g.num_nodes`).
+/// Shard s's `TCsr` indexes its own nodes locally (`indptr[v - starts[s]]`)
+/// but keeps **global** neighbor ids in `indices` and chronological edge
+/// ids in `eids`, so per-node slices are byte-identical to the unsharded
+/// build's (`rust/tests/properties.rs` asserts this slice-for-slice).
+/// Because the edge list is chronological, appending in edge order leaves
+/// every slice time-sorted — no per-node sort, O(|E| + |V|) total.
+pub(crate) fn build_shards(g: &TemporalGraph, add_reverse: bool, starts: &[usize]) -> Vec<TCsr> {
+    debug_assert!(starts.len() >= 2);
+    debug_assert_eq!(starts[0], 0);
+    debug_assert_eq!(*starts.last().unwrap(), g.num_nodes);
+    let k = starts.len() - 1;
+    let slots = if add_reverse { 2 * g.num_edges() } else { g.num_edges() };
+
+    // Pass 1: global per-node degree.
+    let mut degree = vec![0usize; g.num_nodes];
+    for e in 0..g.num_edges() {
+        degree[g.src[e] as usize] += 1;
+        if add_reverse {
+            degree[g.dst[e] as usize] += 1;
+        }
+    }
+
+    // Per-shard indptr over the local node range, plus a global cursor
+    // (absolute write position within the owning shard's arrays) and the
+    // node → shard map used by the fill pass.
+    let mut shards = Vec::with_capacity(k);
+    let mut node_shard = vec![0u32; g.num_nodes];
+    let mut cursor = vec![0usize; g.num_nodes];
+    let mut total = 0usize;
+    for s in 0..k {
+        let (lo, hi) = (starts[s], starts[s + 1]);
+        debug_assert!(lo <= hi);
+        let mut indptr = Vec::with_capacity(hi - lo + 1);
+        let mut acc = 0usize;
+        indptr.push(0);
+        for v in lo..hi {
+            node_shard[v] = s as u32;
+            cursor[v] = acc;
+            acc += degree[v];
+            indptr.push(acc);
+        }
+        total += acc;
+        shards.push(TCsr {
+            num_nodes: hi - lo,
+            indptr,
+            indices: vec![0u32; acc],
+            times: vec![0f64; acc],
+            eids: vec![0u32; acc],
+        });
+    }
+    debug_assert_eq!(total, slots);
+
+    // Pass 2: one chronological sweep appends every slot into its owning
+    // shard (slices come out time-sorted because the edge list is).
+    for e in 0..g.num_edges() {
+        let (u, v, t) = (g.src[e] as usize, g.dst[e] as usize, g.time[e]);
+        let sh = &mut shards[node_shard[u] as usize];
+        let cu = cursor[u];
+        sh.indices[cu] = g.dst[e];
+        sh.times[cu] = t;
+        sh.eids[cu] = e as u32;
+        cursor[u] += 1;
+        if add_reverse {
+            let sh = &mut shards[node_shard[v] as usize];
+            let cv = cursor[v];
+            sh.indices[cv] = g.src[e];
+            sh.times[cv] = t;
+            sh.eids[cv] = e as u32;
+            cursor[v] += 1;
+        }
+    }
+    shards
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,6 +238,24 @@ mod tests {
         assert_eq!(csr.lower_bound(1, 100.0), lo + 4);
         // t=0.5: none.
         assert_eq!(csr.lower_bound(1, 0.5), lo);
+    }
+
+    #[test]
+    fn build_shards_partition_matches_full_build() {
+        let g = toy();
+        let full = TCsr::build(&g, true);
+        let shards = build_shards(&g, true, &[0, 2, 5]);
+        assert_eq!(shards.len(), 2);
+        for v in 0..5u32 {
+            let (s, local) = if v < 2 { (0usize, v) } else { (1usize, v - 2) };
+            let sh = &shards[s];
+            sh.check_invariants().unwrap();
+            let (lo, hi) = sh.slice(local);
+            let (flo, fhi) = full.slice(v);
+            assert_eq!(&sh.indices[lo..hi], &full.indices[flo..fhi], "node {v}");
+            assert_eq!(&sh.times[lo..hi], &full.times[flo..fhi], "node {v}");
+            assert_eq!(&sh.eids[lo..hi], &full.eids[flo..fhi], "node {v}");
+        }
     }
 
     #[test]

@@ -82,6 +82,51 @@ pub fn f1_micro(pred: &[u32], truth: &[u32]) -> f64 {
     correct as f64 / pred.len() as f64
 }
 
+/// Macro-averaged F1 for single-label multi-class prediction: the
+/// unweighted mean of per-class F1 over the classes **present in
+/// `truth`** (classes with no test support contribute no term — the
+/// sparse-label regime of the GDELT/MAG-style tasks, where most of the
+/// nominal label space never appears in a scaled test split). Unlike
+/// [`f1_micro`], a majority-class predictor scores near zero here, which
+/// is what makes it the above-chance gate for skewed many-class data.
+pub fn f1_macro(pred: &[u32], truth: &[u32], classes: usize) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut tp = vec![0usize; classes];
+    let mut fp = vec![0usize; classes];
+    let mut fn_ = vec![0usize; classes];
+    for (&p, &t) in pred.iter().zip(truth) {
+        let (p, t) = (p as usize, t as usize);
+        if t >= classes {
+            continue; // out-of-range truth labels carry no class term
+        }
+        if p == t {
+            tp[t] += 1;
+        } else {
+            fn_[t] += 1;
+            if p < classes {
+                fp[p] += 1;
+            }
+        }
+    }
+    let mut sum = 0.0f64;
+    let mut present = 0usize;
+    for c in 0..classes {
+        if tp[c] + fn_[c] == 0 {
+            continue;
+        }
+        present += 1;
+        let denom = 2 * tp[c] + fp[c] + fn_[c];
+        if denom > 0 {
+            sum += 2.0 * tp[c] as f64 / denom as f64;
+        }
+    }
+    if present == 0 {
+        0.0
+    } else {
+        sum / present as f64
+    }
+}
+
 /// Argmax over each row of a logits matrix.
 pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u32> {
     logits
@@ -197,6 +242,24 @@ mod tests {
         let pred = argmax_rows(&logits, 3);
         assert_eq!(pred, vec![1, 0, 2]);
         assert!((f1_micro(&pred, &[1, 0, 0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_macro_counts_classes_with_support() {
+        // truth: class 0 ×2, class 1 ×1, class 2 ×1; class 3 absent.
+        let truth = [0u32, 0, 1, 2];
+        // Perfect on 0, miss 1 (predicted 0), miss 2 (predicted 3).
+        let pred = [0u32, 0, 0, 3];
+        // F1(0): tp=2 fp=1 fn=0 -> 4/5; F1(1): 0; F1(2): 0.
+        let m = f1_macro(&pred, &truth, 4);
+        assert!((m - (0.8 + 0.0 + 0.0) / 3.0).abs() < 1e-12, "{m}");
+        // Perfect predictions -> 1.0 regardless of absent classes.
+        assert_eq!(f1_macro(&truth, &truth, 4), 1.0);
+        assert_eq!(f1_macro(&[], &[], 4), 0.0);
+        // Majority-class predictor scores far below micro on skew.
+        let truth = [0u32, 0, 0, 0, 1, 2, 3];
+        let pred = [0u32; 7];
+        assert!(f1_macro(&pred, &truth, 4) < f1_micro(&pred, &truth));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 mod synthetic;
 
-pub use synthetic::synthetic;
+pub use synthetic::{synthetic, synthetic_with_classes};
 
 use crate::runtime::{ArtifactManifest, Engine, Executable};
 use crate::sampler::Strategy;

@@ -34,6 +34,8 @@ const DM: usize = 8;
 const MAILD: usize = 8;
 /// Embedding width is fixed by the reference network.
 const DH: usize = nn::DH;
+/// Default `clf` class count ([`synthetic`]); [`synthetic_with_classes`]
+/// lifts it to the dataset's `num_classes`.
 const CLASSES: usize = 2;
 
 fn f(name: &str, shape: &[usize]) -> TensorSpec {
@@ -49,18 +51,34 @@ fn init_vec(n: usize, salt: f32) -> Vec<f32> {
     (0..n).map(|i| 0.1 * (i as f32 * 0.7 + salt).sin()).collect()
 }
 
-/// Build a synthetic variant (`"tgn"` or `"tgat"`, see module docs).
+/// Build a synthetic variant (`"tgn"` or `"tgat"`, see module docs) with
+/// the default binary `clf` head.
 pub fn synthetic(arch: &str) -> Result<Model> {
+    synthetic_with_classes(arch, CLASSES)
+}
+
+/// [`synthetic`] with a `clf` head sized to `classes` — pass the
+/// dataset's `num_classes` to open GDELT/MAG-style multi-class node
+/// classification artifact-free (the reference classifier
+/// (`runtime::nn::run_clf_step`) reads the class count from the step
+/// spec, so only the `clf` param layout changes; train/eval steps and
+/// their parameter vectors are identical to [`synthetic`]'s).
+pub fn synthetic_with_classes(arch: &str, classes: usize) -> Result<Model> {
     let (hops, use_memory) = match arch {
         "tgn" => (1usize, true),
         "tgat" => (2usize, false),
         other => bail!("no synthetic variant for arch `{other}` (have: tgn, tgat)"),
     };
+    anyhow::ensure!(
+        (2..=nn::MAX_CLASSES).contains(&classes),
+        "clf class count {classes} out of range [2, {}]",
+        nn::MAX_CLASSES
+    );
     // Real weight-matrix layouts: the reference network defines how many
     // floats the flat parameter vectors hold (GRU + projection +
     // attention + decoder; classifier MLP for `clf`).
     let pc = nn::tgnn_param_count(use_memory, DV, DE, DM, MAILD);
-    let clf_pc = nn::clf_param_count(DH, CLASSES);
+    let clf_pc = nn::clf_param_count(DH, classes);
     let roots = 3 * BS;
     // n_total = roots + Σ_l roots · fanout^l (each hop fans out the
     // previous hop's slots).
@@ -147,7 +165,7 @@ pub fn synthetic(arch: &str) -> Result<Model> {
             f("new_params", &[clf_pc]),
             f("new_adam_m", &[clf_pc]),
             f("new_adam_v", &[clf_pc]),
-            f("logits", &[BS, CLASSES]),
+            f("logits", &[BS, classes]),
         ],
     });
 
@@ -255,6 +273,23 @@ mod tests {
         // BCE with logits over pos+neg pairs: strictly positive, finite
         // (≈ 2·ln 2 at an uninformative decoder).
         assert!(loss.is_finite() && loss > 0.0, "loss = {loss}");
+    }
+
+    #[test]
+    fn multiclass_clf_head_sizes_to_request() {
+        let m = synthetic_with_classes("tgn", 81).unwrap();
+        assert_eq!(m.mf.clf_param_count, nn::clf_param_count(DH, 81));
+        assert_eq!(m.init_clf_params.len(), m.mf.clf_param_count);
+        let spec = m.mf.step("clf").unwrap();
+        let logits = spec.outputs.iter().find(|o| o.name == "logits").unwrap();
+        assert_eq!(logits.shape, vec![BS, 81]);
+        // Train/eval steps are untouched by the clf width.
+        let binary = synthetic("tgn").unwrap();
+        assert_eq!(m.mf.param_count, binary.mf.param_count);
+        assert_eq!(m.init_params, binary.init_params);
+        // Out-of-range class counts are rejected up front.
+        assert!(synthetic_with_classes("tgn", 1).is_err());
+        assert!(synthetic_with_classes("tgn", nn::MAX_CLASSES + 1).is_err());
     }
 
     #[test]

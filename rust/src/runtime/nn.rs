@@ -59,7 +59,12 @@ const ADAM_EPS: f32 = 1e-8;
 const MAX_HOPS: usize = 4;
 const MAX_VEC: usize = 64;
 const MAX_FANOUT: usize = 64;
-const MAX_CLASSES: usize = 64;
+/// Largest class count the `clf` step supports (its backward pass keeps a
+/// per-row logit-gradient in a fixed stack buffer — 768 bytes at this
+/// bound). Public so `models::synthetic` can validate a dataset's
+/// `num_classes` before building a variant; 192 covers the paper's
+/// multi-class tasks, GDELT (81) and MAG (152).
+pub const MAX_CLASSES: usize = 192;
 
 // ---------------------------------------------------------------------
 // Parameter layout

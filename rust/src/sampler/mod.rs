@@ -16,17 +16,25 @@
 //! `TrainerCfg::prefetch_depth`; both preserve bitwise determinism).
 //! Config limits ([`MAX_SNAPSHOTS`], [`MAX_FANOUT`]) are enforced at
 //! construction via [`SamplerConfig::validate`].
+//!
+//! Two engines share the per-root kernel: the flat [`TemporalSampler`]
+//! (roots chunked over a worker pool) and the node-sharded
+//! [`ShardedSampler`] (per-shard producers over a node-partitioned
+//! T-CSR, merged deterministically) — bitwise-identical outputs,
+//! selected via [`SamplerHandle`].
 
 mod baseline;
 mod mfg;
 mod parallel;
 mod pointer;
+mod sharded;
 
 pub use baseline::BaselineSampler;
 pub use mfg::{Mfg, MfgBlock};
 pub use parallel::{SampleStats, TemporalSampler};
 pub(crate) use parallel::{mix_seed as parallel_seed, sample_distinct_small};
 pub use pointer::{PointerMode, PointerState};
+pub use sharded::ShardedSampler;
 
 /// Largest supported snapshot count S. The hot sampling kernel keeps its
 /// S+2 window boundaries in a fixed stack buffer, so the bound is enforced
@@ -38,6 +46,57 @@ pub const MAX_SNAPSHOTS: usize = 16;
 /// Largest supported per-layer fanout: the uniform strategy draws into a
 /// fixed 64-slot stack buffer (see `sample_distinct_small`).
 pub const MAX_FANOUT: usize = 64;
+
+/// Either sampling engine behind one call surface: the flat
+/// [`TemporalSampler`] (borrowing a shared T-CSR) or the
+/// [`ShardedSampler`] (owning its node-partitioned T-CSR). The two are
+/// bitwise-interchangeable for identical inputs, so the trainer picks by
+/// `TrainerCfg::shards` without affecting results.
+pub enum SamplerHandle<'g> {
+    Flat(TemporalSampler<'g>),
+    Sharded(Box<ShardedSampler>),
+}
+
+impl<'g> SamplerHandle<'g> {
+    /// Sample into a reusable [`Mfg`] arena (zero steady-state allocation
+    /// on both engines).
+    pub fn sample_into(&self, mfg: &mut Mfg, roots: &[u32], root_ts: &[f64], batch_seed: u64) {
+        match self {
+            SamplerHandle::Flat(s) => s.sample_into(mfg, roots, root_ts, batch_seed),
+            SamplerHandle::Sharded(s) => s.sample_into(mfg, roots, root_ts, batch_seed),
+        }
+    }
+
+    /// Reset pointer state (epoch boundary: chronology restarts).
+    pub fn reset(&self) {
+        match self {
+            SamplerHandle::Flat(s) => s.reset(),
+            SamplerHandle::Sharded(s) => s.reset(),
+        }
+    }
+
+    pub fn config(&self) -> &SamplerConfig {
+        match self {
+            SamplerHandle::Flat(s) => s.config(),
+            SamplerHandle::Sharded(s) => s.config(),
+        }
+    }
+
+    pub fn stats(&self) -> &SampleStats {
+        match self {
+            SamplerHandle::Flat(s) => &s.stats,
+            SamplerHandle::Sharded(s) => &s.stats,
+        }
+    }
+
+    /// Shard count of the underlying engine (1 for the flat sampler).
+    pub fn num_shards(&self) -> usize {
+        match self {
+            SamplerHandle::Flat(_) => 1,
+            SamplerHandle::Sharded(s) => s.num_shards(),
+        }
+    }
+}
 
 /// Neighbor selection strategy within the candidate window (paper §2.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

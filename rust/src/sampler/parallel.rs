@@ -191,7 +191,9 @@ impl<'g> TemporalSampler<'g> {
         });
     }
 
-    /// Sequential kernel over a root range (one worker's chunk).
+    /// Sequential kernel over a root range (one worker's chunk); per-root
+    /// work lives in [`sample_root_into`], shared with the sharded
+    /// sampler so the two cannot drift.
     #[allow(clippy::too_many_arguments)]
     fn fill_range(
         &self,
@@ -208,102 +210,158 @@ impl<'g> TemporalSampler<'g> {
         hop: usize,
         batch_seed: u64,
     ) {
-        let csr = self.csr;
-        let cfg = &self.cfg;
         let fanout = layer.fanout;
-        let collect = cfg.collect_stats;
+        let collect = self.cfg.collect_stats;
         // S+2 boundaries; S ≤ MAX_SNAPSHOTS is enforced at construction.
         let mut windows = [0usize; MAX_SNAPSHOTS + 2];
-        let (mut ptr_ns, mut bs_ns, mut spl_ns) = (0u64, 0u64, 0u64);
-        let (mut scans, mut bss, mut slots) = (0u64, 0u64, 0u64);
+        let mut ctr = RootCounters::default();
         for i in range {
             if root_mask[i] == 0.0 {
                 continue; // padding root from the previous hop
             }
-            let (v, t) = (roots[i], root_ts[i]);
-            // Ptr. / BS: identify the candidate window.
-            let t0 = collect.then(Instant::now);
-            let (wlo, whi) = if hop == 0 {
-                let (s_, b_) = self.ptrs.advance(csr, v, t, &mut windows);
-                scans += s_;
-                bss += b_;
-                (windows[snapshot + 1], windows[snapshot])
-            } else {
-                // Deeper hops: timestamps not monotone; binary search
-                // directly (paper §3.1).
-                let (lo_s, hi_s) = csr.slice(v);
-                let hi_b = upper_boundary(t, snapshot, cfg.snapshot_len);
-                let lo_b = lower_boundary(t, snapshot, cfg.snapshot_len);
-                let whi = csr.lower_bound_in(lo_s, hi_s, hi_b);
-                let wlo = if lo_b == f64::NEG_INFINITY {
-                    lo_s
-                } else {
-                    bss += 1;
-                    csr.lower_bound_in(lo_s, whi, lo_b)
-                };
-                bss += 1;
-                (wlo, whi)
-            };
-            if let Some(t0) = t0 {
-                let d = t0.elapsed().as_nanos() as u64;
-                if hop == 0 {
-                    ptr_ns += d;
-                } else {
-                    bs_ns += d;
-                }
-            }
+            let base = i * fanout;
+            sample_root_into(
+                self.csr,
+                &self.cfg,
+                &self.ptrs,
+                layer,
+                snapshot,
+                hop,
+                batch_seed,
+                roots[i],
+                root_ts[i],
+                i,
+                &mut windows,
+                &mut nbr_c[base..base + fanout],
+                &mut dt_c[base..base + fanout],
+                &mut eid_c[base..base + fanout],
+                &mut mask_c[base..base + fanout],
+                collect,
+                &mut ctr,
+            );
+        }
+        ctr.flush(&self.stats, collect);
+    }
+}
 
-            // Spl.: draw neighbors within [wlo, whi).
-            let t1 = collect.then(Instant::now);
-            let count = whi - wlo;
-            if count > 0 {
-                let base = i * fanout;
-                let take = count.min(fanout);
-                match layer.strategy {
-                    Strategy::MostRecent => {
-                        for k in 0..take {
-                            write_slot(
-                                nbr_c,
-                                dt_c,
-                                eid_c,
-                                mask_c,
-                                base + k,
-                                csr,
-                                whi - take + k,
-                                t,
-                            );
-                        }
+/// Per-chunk phase counters, flushed into the shared [`SampleStats`]
+/// atomics once per worker chunk (not per root).
+#[derive(Default)]
+pub(crate) struct RootCounters {
+    pub ptr_ns: u64,
+    pub bs_ns: u64,
+    pub spl_ns: u64,
+    pub scans: u64,
+    pub bss: u64,
+    pub slots: u64,
+}
+
+impl RootCounters {
+    pub(crate) fn flush(&self, stats: &SampleStats, collect: bool) {
+        if collect || self.scans + self.bss + self.slots > 0 {
+            stats.ptr_ns.fetch_add(self.ptr_ns, Ordering::Relaxed);
+            stats.bs_ns.fetch_add(self.bs_ns, Ordering::Relaxed);
+            stats.spl_ns.fetch_add(self.spl_ns, Ordering::Relaxed);
+            stats.ptr_scan_steps.fetch_add(self.scans, Ordering::Relaxed);
+            stats.bs_calls.fetch_add(self.bss, Ordering::Relaxed);
+            stats.sampled_slots.fetch_add(self.slots, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Sample one root's neighbors for one (snapshot, hop) into fanout-sized
+/// row slices — the Algorithm-1 per-root core shared by
+/// [`TemporalSampler`] and [`super::ShardedSampler`].
+///
+/// `v` indexes `csr` (shard-**local** id on a shard T-CSR); `seed_idx` is
+/// the root's **global** position in the block, which drives the RNG mix
+/// — keeping the two separate is exactly what makes sharded draws
+/// bitwise-identical to unsharded ones.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn sample_root_into(
+    csr: &TCsr,
+    cfg: &SamplerConfig,
+    ptrs: &PointerState,
+    layer: LayerCfg,
+    snapshot: usize,
+    hop: usize,
+    batch_seed: u64,
+    v: u32,
+    t: f64,
+    seed_idx: usize,
+    windows: &mut [usize; MAX_SNAPSHOTS + 2],
+    nbr: &mut [u32],
+    dt: &mut [f32],
+    eid: &mut [u32],
+    mask: &mut [f32],
+    collect: bool,
+    ctr: &mut RootCounters,
+) {
+    let fanout = layer.fanout;
+    // Ptr. / BS: identify the candidate window.
+    let t0 = collect.then(Instant::now);
+    let (wlo, whi) = if hop == 0 {
+        let (s_, b_) = ptrs.advance(csr, v, t, windows);
+        ctr.scans += s_;
+        ctr.bss += b_;
+        (windows[snapshot + 1], windows[snapshot])
+    } else {
+        // Deeper hops: timestamps not monotone; binary search directly
+        // (paper §3.1).
+        let (lo_s, hi_s) = csr.slice(v);
+        let hi_b = upper_boundary(t, snapshot, cfg.snapshot_len);
+        let lo_b = lower_boundary(t, snapshot, cfg.snapshot_len);
+        let whi = csr.lower_bound_in(lo_s, hi_s, hi_b);
+        let wlo = if lo_b == f64::NEG_INFINITY {
+            lo_s
+        } else {
+            ctr.bss += 1;
+            csr.lower_bound_in(lo_s, whi, lo_b)
+        };
+        ctr.bss += 1;
+        (wlo, whi)
+    };
+    if let Some(t0) = t0 {
+        let d = t0.elapsed().as_nanos() as u64;
+        if hop == 0 {
+            ctr.ptr_ns += d;
+        } else {
+            ctr.bs_ns += d;
+        }
+    }
+
+    // Spl.: draw neighbors within [wlo, whi).
+    let t1 = collect.then(Instant::now);
+    let count = whi - wlo;
+    if count > 0 {
+        let take = count.min(fanout);
+        match layer.strategy {
+            Strategy::MostRecent => {
+                for k in 0..take {
+                    write_slot(nbr, dt, eid, mask, k, csr, whi - take + k, t);
+                }
+            }
+            Strategy::Uniform => {
+                if count <= fanout {
+                    for k in 0..take {
+                        write_slot(nbr, dt, eid, mask, k, csr, wlo + k, t);
                     }
-                    Strategy::Uniform => {
-                        if count <= fanout {
-                            for k in 0..take {
-                                write_slot(nbr_c, dt_c, eid_c, mask_c, base + k, csr, wlo + k, t);
-                            }
-                        } else {
-                            let mut rng =
-                                Rng::new(mix_seed(cfg.seed, batch_seed, snapshot, hop, i));
-                            let mut picks = [0usize; 64];
-                            sample_distinct_small(&mut rng, count, fanout, &mut picks);
-                            for (k, &p) in picks[..fanout].iter().enumerate() {
-                                write_slot(nbr_c, dt_c, eid_c, mask_c, base + k, csr, wlo + p, t);
-                            }
-                        }
+                } else {
+                    let mut rng =
+                        Rng::new(mix_seed(cfg.seed, batch_seed, snapshot, hop, seed_idx));
+                    let mut picks = [0usize; 64];
+                    sample_distinct_small(&mut rng, count, fanout, &mut picks);
+                    for (k, &p) in picks[..fanout].iter().enumerate() {
+                        write_slot(nbr, dt, eid, mask, k, csr, wlo + p, t);
                     }
                 }
-                slots += take as u64;
-            }
-            if let Some(t1) = t1 {
-                spl_ns += t1.elapsed().as_nanos() as u64;
             }
         }
-        if collect || scans + bss + slots > 0 {
-            self.stats.ptr_ns.fetch_add(ptr_ns, Ordering::Relaxed);
-            self.stats.bs_ns.fetch_add(bs_ns, Ordering::Relaxed);
-            self.stats.spl_ns.fetch_add(spl_ns, Ordering::Relaxed);
-            self.stats.ptr_scan_steps.fetch_add(scans, Ordering::Relaxed);
-            self.stats.bs_calls.fetch_add(bss, Ordering::Relaxed);
-            self.stats.sampled_slots.fetch_add(slots, Ordering::Relaxed);
-        }
+        ctr.slots += take as u64;
+    }
+    if let Some(t1) = t1 {
+        ctr.spl_ns += t1.elapsed().as_nanos() as u64;
     }
 }
 

@@ -1,0 +1,417 @@
+//! Node-sharded temporal sampling: per-shard producers + deterministic
+//! merge.
+//!
+//! [`ShardedSampler`] owns a [`ShardedTCsr`] and runs Algorithm 1 with an
+//! explicit shard dimension: for every (snapshot, hop) block, root slots
+//! are partitioned by the **owning shard of the root node** (the
+//! [`crate::graph::ShardSpec`] contiguous-range rule), each shard's
+//! producer fills a compact per-shard arena sequentially — pointer state,
+//! T-CSR slices, and candidate windows all live on that shard — and a
+//! merge step scatters the rows back into the caller's [`Mfg`] arena at
+//! their global positions. Shards run in parallel on a persistent
+//! [`WorkerPool`] (one unit per shard), which is the NUMA-shaped
+//! parallelism DistTGL/FAST argue for: each producer touches only its
+//! shard's graph slices and pointer table.
+//!
+//! **Bitwise identity.** The per-root kernel is literally the same
+//! function the flat [`TemporalSampler`] runs
+//! (`parallel::sample_root_into`), looked up on a shard T-CSR whose
+//! per-node slices are byte-identical to the flat T-CSR's, seeded by the
+//! root's *global* block position, and merged in global-id order — so for
+//! any shard count ≥ 1 the output [`Mfg`] equals the flat sampler's bit
+//! for bit (unit tests below; random graphs in
+//! `rust/tests/properties.rs`; whole-pipeline sweeps in
+//! `rust/tests/pipeline_identity.rs`).
+//!
+//! **Allocation.** Selection lists and per-shard arenas live in scratch
+//! sets recycled through an internal pool (concurrent `sample_into`
+//! callers — the multi-trainer's shard producers — each take their own
+//! set), so steady-state sharded sampling performs zero heap allocation
+//! (`rust/tests/alloc_train.rs` runs its sharded phase on this path).
+
+use super::parallel::{sample_root_into, RootCounters};
+use super::{Mfg, MfgBlock, PointerState, SampleStats, SamplerConfig, MAX_SNAPSHOTS};
+use crate::graph::ShardedTCsr;
+use crate::util::pool::WorkerPool;
+use std::sync::Mutex;
+
+/// One shard's recycled working set for one `sample_into` call.
+#[derive(Default)]
+struct ShardScratch {
+    /// Global block positions of the roots this shard owns (selection).
+    sel: Vec<u32>,
+    /// Compact per-shard output arenas, `sel.len() * fanout` slots each.
+    nbr: Vec<u32>,
+    dt: Vec<f32>,
+    eid: Vec<u32>,
+    mask: Vec<f32>,
+}
+
+/// A full per-call scratch set (one [`ShardScratch`] per shard).
+struct ScratchSet {
+    per_shard: Vec<ShardScratch>,
+}
+
+impl ScratchSet {
+    fn new(shards: usize) -> ScratchSet {
+        ScratchSet { per_shard: (0..shards).map(|_| ShardScratch::default()).collect() }
+    }
+}
+
+/// Raw-pointer view of the per-shard scratch list; workers touch disjoint
+/// shard indices (same contract as the flat sampler's `OutPtr`).
+struct ScratchPtr(*mut ShardScratch);
+unsafe impl Send for ScratchPtr {}
+unsafe impl Sync for ScratchPtr {}
+
+/// The sharded parallel temporal sampler (see module docs). Shareable
+/// across producer threads (`&self` sampling; scratch is pooled, pointer
+/// state is monotone + self-correcting like the flat sampler's).
+pub struct ShardedSampler {
+    csr: ShardedTCsr,
+    cfg: SamplerConfig,
+    /// One pointer table per shard, sized to the shard's local node count.
+    ptrs: Vec<PointerState>,
+    pool: WorkerPool,
+    /// Recycled [`ScratchSet`]s; grows to the number of concurrent
+    /// callers, then steady-state calls allocate nothing.
+    scratch: Mutex<Vec<ScratchSet>>,
+    pub stats: SampleStats,
+}
+
+impl ShardedSampler {
+    /// Build a sharded sampler over an owned [`ShardedTCsr`]. Panics on a
+    /// config the fixed-size kernels cannot hold (see
+    /// [`SamplerConfig::validate`]), like [`TemporalSampler::new`].
+    ///
+    /// [`TemporalSampler::new`]: super::TemporalSampler::new
+    pub fn new(csr: ShardedTCsr, cfg: SamplerConfig) -> ShardedSampler {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid SamplerConfig: {e}");
+        }
+        let ptrs = csr
+            .shards
+            .iter()
+            .map(|sh| {
+                PointerState::new(
+                    sh.num_nodes,
+                    cfg.num_snapshots,
+                    cfg.snapshot_len,
+                    cfg.pointer_mode,
+                )
+            })
+            .collect();
+        // One worker per shard at most: the shard is the unit of
+        // parallelism here (intra-shard roots stay sequential).
+        let pool = WorkerPool::new(cfg.threads.clamp(1, csr.num_shards().max(1)));
+        ShardedSampler {
+            csr,
+            cfg,
+            ptrs,
+            pool,
+            scratch: Mutex::new(Vec::new()),
+            stats: SampleStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &SamplerConfig {
+        &self.cfg
+    }
+
+    pub fn csr(&self) -> &ShardedTCsr {
+        &self.csr
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.csr.num_shards()
+    }
+
+    /// Reset every shard's pointer state (epoch boundary).
+    pub fn reset(&self) {
+        for p in &self.ptrs {
+            p.reset();
+        }
+    }
+
+    /// Allocating wrapper around [`Self::sample_into`].
+    pub fn sample(&self, roots: &[u32], root_ts: &[f64], batch_seed: u64) -> Mfg {
+        let mut mfg = Mfg::new();
+        self.sample_into(&mut mfg, roots, root_ts, batch_seed);
+        mfg
+    }
+
+    /// Sample the multi-hop, multi-snapshot MFG for a batch of roots into
+    /// a reusable arena — bitwise-identical to
+    /// [`TemporalSampler::sample_into`] for the same inputs, any shard
+    /// count.
+    ///
+    /// [`TemporalSampler::sample_into`]: super::TemporalSampler::sample_into
+    pub fn sample_into(&self, mfg: &mut Mfg, roots: &[u32], root_ts: &[f64], batch_seed: u64) {
+        assert_eq!(roots.len(), root_ts.len());
+        let num_snapshots = self.cfg.num_snapshots;
+        let hops = self.cfg.layers.len();
+        mfg.snapshots.resize_with(num_snapshots, Vec::new);
+        for hop_blocks in &mut mfg.snapshots {
+            hop_blocks.resize_with(hops, MfgBlock::new);
+        }
+        let mut set = self
+            .scratch
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| ScratchSet::new(self.csr.num_shards()));
+        for s in 0..num_snapshots {
+            for (l, layer) in self.cfg.layers.iter().enumerate() {
+                let hop_blocks = &mut mfg.snapshots[s];
+                if l == 0 {
+                    hop_blocks[0].reset_for(roots, root_ts, layer.fanout);
+                } else {
+                    let (prev, cur) = hop_blocks.split_at_mut(l);
+                    cur[0].reset_from_prev(&prev[l - 1], layer.fanout);
+                }
+                self.fill_block(&mut hop_blocks[l], *layer, s, l, batch_seed, &mut set);
+            }
+        }
+        self.scratch.lock().unwrap().push(set);
+    }
+
+    /// Fill one (snapshot, hop) block: select roots by owning shard, fill
+    /// per-shard arenas in parallel, merge back in global order.
+    fn fill_block(
+        &self,
+        block: &mut MfgBlock,
+        layer: super::LayerCfg,
+        snapshot: usize,
+        hop: usize,
+        batch_seed: u64,
+        set: &mut ScratchSet,
+    ) {
+        let n = block.num_roots();
+        if n == 0 {
+            return;
+        }
+        let fanout = layer.fanout;
+        let spec = self.csr.spec();
+
+        // Selection: global root position → owning shard (masked padding
+        // roots are skipped; their slots stay zeroed by the block reset).
+        // Capacities go to the block's worst case (all roots on one
+        // shard) up front: per-batch shard mixes vary, and a late batch
+        // must not grow a warm arena (the zero-allocation guarantee).
+        for sc in set.per_shard.iter_mut() {
+            sc.sel.clear();
+            sc.sel.reserve(n);
+        }
+        for i in 0..n {
+            if block.root_mask[i] == 0.0 {
+                continue;
+            }
+            set.per_shard[spec.shard_of(block.roots[i])].sel.push(i as u32);
+        }
+        for sc in set.per_shard.iter_mut() {
+            let m = sc.sel.len() * fanout;
+            sc.nbr.clear();
+            sc.nbr.reserve(n * fanout);
+            sc.nbr.resize(m, 0);
+            sc.dt.clear();
+            sc.dt.reserve(n * fanout);
+            sc.dt.resize(m, 0.0);
+            sc.eid.clear();
+            sc.eid.reserve(n * fanout);
+            sc.eid.resize(m, 0);
+            sc.mask.clear();
+            sc.mask.reserve(n * fanout);
+            sc.mask.resize(m, 0.0);
+        }
+
+        // Per-shard producers (parallel; each touches only its shard's
+        // T-CSR, pointer table, and scratch).
+        let roots: &[u32] = &block.roots;
+        let root_ts: &[f64] = &block.root_ts;
+        let scratch_p = ScratchPtr(set.per_shard.as_mut_ptr());
+        let num_shards = self.csr.num_shards();
+        self.pool.run_chunks(num_shards, 1, |_, range| {
+            let sp = &scratch_p;
+            for s in range {
+                // SAFETY: shard indices across chunks are disjoint, so
+                // each worker holds the only &mut to its ShardScratch.
+                let sc = unsafe { &mut *sp.0.add(s) };
+                self.fill_shard(s, sc, roots, root_ts, layer, snapshot, hop, batch_seed);
+            }
+        });
+
+        // Deterministic merge: scatter each shard's compact rows back to
+        // their global positions (disjoint per root, so the result is
+        // independent of shard iteration order).
+        let MfgBlock { nbr, dt, eid, mask, .. } = block;
+        for sc in &set.per_shard {
+            for (j, &gi) in sc.sel.iter().enumerate() {
+                let g0 = gi as usize * fanout;
+                let l0 = j * fanout;
+                nbr[g0..g0 + fanout].copy_from_slice(&sc.nbr[l0..l0 + fanout]);
+                dt[g0..g0 + fanout].copy_from_slice(&sc.dt[l0..l0 + fanout]);
+                eid[g0..g0 + fanout].copy_from_slice(&sc.eid[l0..l0 + fanout]);
+                mask[g0..g0 + fanout].copy_from_slice(&sc.mask[l0..l0 + fanout]);
+            }
+        }
+    }
+
+    /// One shard producer: run the shared per-root kernel over the
+    /// shard's selected roots, localizing node ids but seeding with the
+    /// global block position.
+    #[allow(clippy::too_many_arguments)]
+    fn fill_shard(
+        &self,
+        s: usize,
+        sc: &mut ShardScratch,
+        roots: &[u32],
+        root_ts: &[f64],
+        layer: super::LayerCfg,
+        snapshot: usize,
+        hop: usize,
+        batch_seed: u64,
+    ) {
+        let csr = self.csr.shard(s);
+        let start = self.csr.start(s);
+        let ptrs = &self.ptrs[s];
+        let fanout = layer.fanout;
+        let collect = self.cfg.collect_stats;
+        let mut windows = [0usize; MAX_SNAPSHOTS + 2];
+        let mut ctr = RootCounters::default();
+        for (j, &gi) in sc.sel.iter().enumerate() {
+            let i = gi as usize;
+            let row = j * fanout;
+            sample_root_into(
+                csr,
+                &self.cfg,
+                ptrs,
+                layer,
+                snapshot,
+                hop,
+                batch_seed,
+                roots[i] - start,
+                root_ts[i],
+                i,
+                &mut windows,
+                &mut sc.nbr[row..row + fanout],
+                &mut sc.dt[row..row + fanout],
+                &mut sc.eid[row..row + fanout],
+                &mut sc.mask[row..row + fanout],
+                collect,
+                &mut ctr,
+            );
+        }
+        ctr.flush(&self.stats, collect);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{TCsr, TemporalGraph};
+    use crate::sampler::{Strategy, TemporalSampler};
+
+    /// Chain graph: node 0 interacts with nodes 1..=N at t=1..=N.
+    fn chain(n: usize) -> TemporalGraph {
+        TemporalGraph::new(
+            n + 1,
+            vec![0; n],
+            (1..=n as u32).collect(),
+            (1..=n).map(|t| t as f64).collect(),
+        )
+        .unwrap()
+    }
+
+    fn assert_mfg_eq(a: &Mfg, b: &Mfg, tag: &str) {
+        assert_eq!(a.snapshots.len(), b.snapshots.len(), "{tag}");
+        for (ha, hb) in a.snapshots.iter().zip(&b.snapshots) {
+            for (ba, bb) in ha.iter().zip(hb) {
+                assert_eq!(ba.roots, bb.roots, "{tag}");
+                assert_eq!(ba.root_ts, bb.root_ts, "{tag}");
+                assert_eq!(ba.root_mask, bb.root_mask, "{tag}");
+                assert_eq!(ba.nbr, bb.nbr, "{tag}");
+                assert_eq!(ba.dt, bb.dt, "{tag}");
+                assert_eq!(ba.eid, bb.eid, "{tag}");
+                assert_eq!(ba.mask, bb.mask, "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_equals_flat_across_shard_counts() {
+        let g = chain(200);
+        let flat_csr = TCsr::build(&g, true);
+        for (cfg_name, mk) in [
+            ("uniform2", SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, 4)),
+            ("recent1", SamplerConfig::uniform_hops(1, 3, Strategy::MostRecent, 4)),
+            ("snapshots", SamplerConfig::snapshots(1, 5, 3, 40.0, 4)),
+        ] {
+            let flat = TemporalSampler::new(&flat_csr, mk.clone());
+            for shards in [1usize, 2, 4, 7] {
+                let sharded =
+                    ShardedSampler::new(ShardedTCsr::build(&g, true, shards), mk.clone());
+                for bi in 0..3u64 {
+                    let roots: Vec<u32> = (0..32).map(|i| (i * 13 % 201) as u32).collect();
+                    let ts: Vec<f64> =
+                        (0..32).map(|i| 60.0 + bi as f64 * 40.0 + i as f64).collect();
+                    let a = flat.sample(&roots, &ts, bi);
+                    let b = sharded.sample(&roots, &ts, bi);
+                    assert_mfg_eq(&a, &b, &format!("{cfg_name} shards={shards} batch={bi}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_arena_reuses_buffers_and_matches_fresh() {
+        let g = chain(120);
+        let cfg = SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, 2);
+        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 3), cfg);
+        let mut arena = Mfg::new();
+        let mut slot_ptr = std::ptr::null();
+        for bi in 0..4u64 {
+            let roots: Vec<u32> = (0..24).map(|i| (i % 17) as u32).collect();
+            let ts: Vec<f64> = (0..24).map(|i| 50.0 + bi as f64 * 24.0 + i as f64).collect();
+            let fresh = s.sample(&roots, &ts, bi);
+            s.sample_into(&mut arena, &roots, &ts, bi);
+            assert_mfg_eq(&fresh, &arena, &format!("batch {bi}"));
+            let p = arena.snapshots[0][1].nbr.as_ptr();
+            if bi == 1 {
+                slot_ptr = p;
+            } else if bi > 1 {
+                assert_eq!(p, slot_ptr, "same-shape batches must not reallocate the arena");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_rewinds_every_shard() {
+        let g = chain(60);
+        let cfg = SamplerConfig::uniform_hops(1, 3, Strategy::MostRecent, 2);
+        let flat_csr = TCsr::build(&g, true);
+        let flat = TemporalSampler::new(&flat_csr, cfg.clone());
+        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 4), cfg);
+        let roots = vec![0u32, 10, 30];
+        let ts = vec![50.0, 51.0, 52.0];
+        let first = s.sample(&roots, &ts, 1);
+        s.sample(&roots, &ts, 2);
+        s.reset();
+        flat.sample(&roots, &ts, 1); // advance flat pointers equivalently
+        flat.reset();
+        let again = s.sample(&roots, &ts, 1);
+        assert_mfg_eq(&first, &again, "post-reset replay");
+        assert_mfg_eq(&again, &flat.sample(&roots, &ts, 1), "vs flat post-reset");
+    }
+
+    #[test]
+    fn more_shards_than_nodes_is_fine() {
+        let g = chain(3);
+        let cfg = SamplerConfig::uniform_hops(1, 2, Strategy::MostRecent, 8);
+        let flat_csr = TCsr::build(&g, true);
+        let flat = TemporalSampler::new(&flat_csr, cfg.clone());
+        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 16), cfg);
+        let a = flat.sample(&[0, 2], &[2.5, 3.5], 0);
+        let b = s.sample(&[0, 2], &[2.5, 3.5], 0);
+        assert_mfg_eq(&a, &b, "tiny graph, 16 shards");
+    }
+}

@@ -141,6 +141,87 @@ impl Mailbox {
         }
     }
 
+    /// Shard-owner variant of [`Self::write`]: append only if `v` falls
+    /// in `shard` (a [`crate::graph::ShardSpec`] range). Returns whether
+    /// the mail was written. Routing every write through each shard's
+    /// owner (any shard order; per-node write order preserved within the
+    /// owner) reproduces plain [`Self::write`] exactly — mailbox updates
+    /// stay single-owner per shard.
+    pub fn write_shard(
+        &mut self,
+        shard: std::ops::Range<u32>,
+        v: u32,
+        t: f64,
+        mail: &[f32],
+    ) -> bool {
+        if !shard.contains(&v) {
+            return false;
+        }
+        self.write(v, t, mail);
+        true
+    }
+
+    /// Shard-owner variant of [`Self::gather_into`]: fills only the rows
+    /// whose node falls in `shard`, leaving other rows untouched, so one
+    /// pass per disjoint shard range composes to exactly
+    /// [`Self::gather_into`] (single owner per output row; see the
+    /// composition tests). Kept structurally parallel to `gather_into`,
+    /// including the slots == 1 fast path.
+    pub fn gather_shard_into(
+        &self,
+        nodes: &[(u32, f64, bool)],
+        shard: std::ops::Range<u32>,
+        out_mail: &mut [f32],
+        out_dt: &mut [f32],
+        out_mask: &mut [f32],
+    ) {
+        debug_assert_eq!(out_mail.len(), nodes.len() * self.slots * self.dim);
+        debug_assert_eq!(out_dt.len(), nodes.len() * self.slots);
+        debug_assert_eq!(out_mask.len(), nodes.len() * self.slots);
+        if self.slots == 1 {
+            for (i, &(v, t, node_valid)) in nodes.iter().enumerate() {
+                if !shard.contains(&v) {
+                    continue;
+                }
+                let vi = v as usize;
+                let row = &mut out_mail[i * self.dim..(i + 1) * self.dim];
+                if node_valid && self.count[vi] > 0 {
+                    let base = vi * self.dim;
+                    row.copy_from_slice(&self.mail[base..base + self.dim]);
+                    out_dt[i] = (t - self.mail_ts[vi]).max(0.0) as f32;
+                    out_mask[i] = 1.0;
+                } else {
+                    row.fill(0.0);
+                    out_dt[i] = 0.0;
+                    out_mask[i] = 0.0;
+                }
+            }
+            return;
+        }
+        for (i, &(v, t, node_valid)) in nodes.iter().enumerate() {
+            if !shard.contains(&v) {
+                continue;
+            }
+            let vi = v as usize;
+            let have = if node_valid { self.valid(v) } else { 0 };
+            for k in 0..self.slots {
+                let slot = i * self.slots + k;
+                let row = &mut out_mail[slot * self.dim..(slot + 1) * self.dim];
+                if k < have {
+                    let pos = (self.count[vi] as usize + self.slots - 1 - k) % self.slots;
+                    let base = (vi * self.slots + pos) * self.dim;
+                    row.copy_from_slice(&self.mail[base..base + self.dim]);
+                    out_dt[slot] = (t - self.mail_ts[vi * self.slots + pos]).max(0.0) as f32;
+                    out_mask[slot] = 1.0;
+                } else {
+                    row.fill(0.0);
+                    out_dt[slot] = 0.0;
+                    out_mask[slot] = 0.0;
+                }
+            }
+        }
+    }
+
     /// Approximate resident bytes (capacity planning; the paper's MAG/APAN
     /// OOM discussion).
     pub fn bytes(&self) -> usize {
@@ -222,6 +303,53 @@ mod tests {
         assert_eq!(mail, vec![7.0, 8.0, 0.0, 0.0]);
         assert_eq!(dt, vec![1.0, 0.0]);
         assert_eq!(mask, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn shard_gather_composes_to_full_gather() {
+        for slots in [1usize, 3] {
+            let mut mb = Mailbox::new(6, slots, 2);
+            for v in 0..6u32 {
+                for w in 0..(v as usize % 4) {
+                    mb.write(v, w as f64 + 1.0, &[v as f32, w as f32]);
+                }
+            }
+            let nodes: Vec<(u32, f64, bool)> =
+                vec![(5, 10.0, true), (0, 9.0, true), (3, 8.0, false), (2, 7.0, true)];
+            let n = nodes.len();
+            let (mut fm, mut fd, mut fk) =
+                (vec![0.0; n * slots * 2], vec![0.0; n * slots], vec![0.0; n * slots]);
+            mb.gather_into(&nodes, &mut fm, &mut fd, &mut fk);
+            // Poisoned buffers catch rows no shard pass owns.
+            let (mut sm, mut sd, mut sk) =
+                (vec![7.7; n * slots * 2], vec![7.7; n * slots], vec![7.7; n * slots]);
+            for shard in [0u32..2, 2..4, 4..6] {
+                mb.gather_shard_into(&nodes, shard, &mut sm, &mut sd, &mut sk);
+            }
+            assert_eq!(sm, fm, "slots={slots}");
+            assert_eq!(sd, fd, "slots={slots}");
+            assert_eq!(sk, fk, "slots={slots}");
+        }
+    }
+
+    #[test]
+    fn shard_write_composes_to_full_write() {
+        let writes = [(1u32, 1.0, 10.0f32), (3, 2.0, 20.0), (1, 3.0, 30.0), (2, 4.0, 40.0)];
+        let mut full = Mailbox::new(4, 2, 1);
+        for &(v, t, x) in &writes {
+            full.write(v, t, &[x]);
+        }
+        let mut sharded = Mailbox::new(4, 2, 1);
+        let mut owned = 0usize;
+        for shard in [2u32..4, 0..2] {
+            for &(v, t, x) in &writes {
+                owned += usize::from(sharded.write_shard(shard.clone(), v, t, &[x]));
+            }
+        }
+        assert_eq!(owned, writes.len(), "each write has exactly one owner");
+        assert_eq!(sharded.raw_parts().0, full.raw_parts().0);
+        assert_eq!(sharded.raw_parts().1, full.raw_parts().1);
+        assert_eq!(sharded.raw_parts().2, full.raw_parts().2);
     }
 
     #[test]

@@ -78,6 +78,38 @@ impl NodeMemory {
         }
     }
 
+    /// Shard-owner variant of [`Self::gather_into`]: fills only the rows
+    /// whose node falls in `shard` (a [`crate::graph::ShardSpec`] range),
+    /// leaving every other row untouched. Running it once per shard over
+    /// disjoint ranges covering the id space composes to exactly
+    /// [`Self::gather_into`] — each output row has a single owner, which
+    /// is what lets per-shard workers gather concurrently without
+    /// coordination (the FAST memory-I/O sharding point). Kept in sync
+    /// with `gather_into` by the composition tests below.
+    pub fn gather_shard_into(
+        &self,
+        nodes: &[(u32, f64, bool)],
+        shard: std::ops::Range<u32>,
+        out_mem: &mut [f32],
+        out_dt: &mut [f32],
+    ) {
+        debug_assert_eq!(out_mem.len(), nodes.len() * self.dim);
+        debug_assert_eq!(out_dt.len(), nodes.len());
+        for (i, &(v, t, valid)) in nodes.iter().enumerate() {
+            if !shard.contains(&v) {
+                continue;
+            }
+            let row = &mut out_mem[i * self.dim..(i + 1) * self.dim];
+            if valid {
+                row.copy_from_slice(self.row(v));
+                out_dt[i] = (t - self.last_update[v as usize]).max(0.0) as f32;
+            } else {
+                row.fill(0.0);
+                out_dt[i] = 0.0;
+            }
+        }
+    }
+
     /// Scatter updated memory rows back (step ⑥). `rows` is `[n, dim]`
     /// flat; later entries win on duplicate nodes, so callers pass nodes
     /// in chronological order (the batch is chronological by construction).
@@ -85,6 +117,31 @@ impl NodeMemory {
         debug_assert_eq!(nodes.len(), ts.len());
         debug_assert_eq!(rows.len(), nodes.len() * self.dim);
         for (i, &v) in nodes.iter().enumerate() {
+            let dst = v as usize * self.dim;
+            self.mem[dst..dst + self.dim]
+                .copy_from_slice(&rows[i * self.dim..(i + 1) * self.dim]);
+            self.last_update[v as usize] = ts[i];
+        }
+    }
+
+    /// Shard-owner variant of [`Self::scatter`]: applies only the updates
+    /// whose node falls in `shard`. A node's updates all route to its one
+    /// owning shard, so applying every shard (any order) reproduces
+    /// [`Self::scatter`] exactly — per-node update order is preserved
+    /// within the owner.
+    pub fn scatter_shard(
+        &mut self,
+        shard: std::ops::Range<u32>,
+        nodes: &[u32],
+        ts: &[f64],
+        rows: &[f32],
+    ) {
+        debug_assert_eq!(nodes.len(), ts.len());
+        debug_assert_eq!(rows.len(), nodes.len() * self.dim);
+        for (i, &v) in nodes.iter().enumerate() {
+            if !shard.contains(&v) {
+                continue;
+            }
             let dst = v as usize * self.dim;
             self.mem[dst..dst + self.dim]
                 .copy_from_slice(&rows[i * self.dim..(i + 1) * self.dim]);
@@ -165,6 +222,48 @@ mod tests {
         m.scatter(&[0, 1], &[10.0, 30.0], &[0.0, 0.0]);
         let s = m.staleness(&[0, 1], 40.0);
         assert_eq!(s, (30.0 + 10.0) / 2.0);
+    }
+
+    #[test]
+    fn shard_gather_composes_to_full_gather() {
+        let mut m = NodeMemory::new(8, 2);
+        for v in 0..8u32 {
+            m.scatter(&[v], &[v as f64 + 1.0], &[v as f32, -(v as f32)]);
+        }
+        let nodes: Vec<(u32, f64, bool)> =
+            vec![(3, 10.0, true), (0, 5.0, true), (7, 9.0, false), (5, 8.0, true), (3, 12.0, true)];
+        let mut full_mem = vec![0.0; nodes.len() * 2];
+        let mut full_dt = vec![0.0; nodes.len()];
+        m.gather_into(&nodes, &mut full_mem, &mut full_dt);
+        // Compose over 3 disjoint shard ranges; poison the buffers first
+        // so untouched rows would be caught.
+        let mut sh_mem = vec![9.9f32; nodes.len() * 2];
+        let mut sh_dt = vec![9.9f32; nodes.len()];
+        for shard in [0u32..3, 3..6, 6..8] {
+            m.gather_shard_into(&nodes, shard, &mut sh_mem, &mut sh_dt);
+        }
+        assert_eq!(sh_mem, full_mem);
+        assert_eq!(sh_dt, full_dt);
+    }
+
+    #[test]
+    fn shard_scatter_composes_to_full_scatter() {
+        let nodes = [2u32, 6, 2, 1];
+        let ts = [1.0, 2.0, 3.0, 4.0];
+        let rows = [10.0f32, 20.0, 30.0, 40.0];
+        let mut full = NodeMemory::new(8, 1);
+        full.scatter(&nodes, &ts, &rows);
+        let mut sharded = NodeMemory::new(8, 1);
+        for shard in [4u32..8, 0..4] {
+            // any shard order
+            sharded.scatter_shard(shard, &nodes, &ts, &rows);
+        }
+        assert_eq!(sharded.raw(), full.raw());
+        for v in 0..8u32 {
+            assert_eq!(sharded.last_update(v), full.last_update(v), "node {v}");
+        }
+        // Duplicate node 2: later entry (t=3, row 30) must win in both.
+        assert_eq!(sharded.row(2), &[30.0]);
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //! producer thread ahead of the compute stream (see [`Preparer`] and the
 //! pipelined epoch in `single.rs`); the state-dependent part of ② and
 //! step ⑥ stay on the critical path. The same split pipelines the
-//! multi-worker trainer (one shared producer feeding all workers across
-//! group boundaries), evaluation replay, and the node-classification
-//! replay. Knobs: `TrainerCfg::prefetch` (default on;
-//! bitwise-identical to sequential), `TrainerCfg::prefetch_depth`
-//! (bounded queue depth, default 2), and `TrainerCfg::tensor_arenas`
-//! (pool-recycled input tensors; the zero-allocation gather path).
+//! multi-worker trainer (shard producers feeding all workers across
+//! group boundaries, merged by batch index), evaluation replay, and the
+//! node-classification replay. Knobs: `TrainerCfg::prefetch` (default
+//! on; bitwise-identical to sequential), `TrainerCfg::prefetch_depth`
+//! (bounded queue depth, default 2), `TrainerCfg::tensor_arenas`
+//! (pool-recycled input tensors; the zero-allocation gather path), and
+//! `TrainerCfg::shards` (node-sharded sampling + N prefetch producers +
+//! single-owner state gathers; bitwise-identical for any count).
 
 mod checkpoint;
 mod multi;

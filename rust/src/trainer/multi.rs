@@ -11,19 +11,23 @@
 //! (worker-id) order — the paper's synchronized scheme, including its
 //! intra-group dependency discard.
 //!
-//! With `prefetch` on (default), a **single shared producer** thread runs
-//! the prefetchable stage for *all* workers in chronological order — TGL's
-//! one-sampler-many-trainers design. Preparation overlaps both the
-//! current group's execution *and* the sync phase, and crosses group
-//! boundaries (while group g executes, batches of group g+1 are already
-//! being sampled). Off → each worker prepares its own batch inside the
-//! group, strictly synchronously. Both modes consume identical batches in
-//! identical group order, so they produce bitwise-identical losses
-//! (`rust/tests/pipeline_identity.rs`).
+//! With `prefetch` on (default), [`MultiTrainer::producers`] **shard
+//! producer** threads run the prefetchable stage for *all* workers,
+//! round-robin by batch index and merged back in chronological order —
+//! TGL's one-sampler-many-trainers design, generalized past the
+//! single-sampler wall: with one producer this is exactly the old shared
+//! producer; with N (the `--shards` knob) the sampling stage scales with
+//! cores instead of bottlenecking beyond ~8 workers. Preparation overlaps
+//! both the current group's execution *and* the sync phase, and crosses
+//! group boundaries (while group g executes, batches of group g+1 are
+//! already being sampled). Off → each worker prepares its own batch
+//! inside the group, strictly synchronously. All modes consume identical
+//! batches in identical group order, so they produce bitwise-identical
+//! losses for any producer count (`rust/tests/pipeline_identity.rs`).
 
 use super::single::{
-    apply_state_updates_impl, EpochStats, PreparedBatch, PrepArena, Preparer, spawn_producer,
-    Trainer, TrainIdx, TrainState,
+    apply_state_updates_impl, spawn_producers, EpochStats, PreparedBatch, Preparer, TrainIdx,
+    TrainState, Trainer,
 };
 use crate::models::Model;
 use crate::runtime::Tensor;
@@ -45,16 +49,20 @@ pub struct MultiEpochStats {
 /// Orchestrates data-parallel epochs over a shared [`Trainer`].
 pub struct MultiTrainer {
     pub workers: usize,
-    /// Shared producer prefetching every worker's static stage across
+    /// Shard producers prefetching every worker's static stage across
     /// group boundaries (bitwise-identical to off).
     pub prefetch: bool,
     /// Prepared batches in flight beyond the executing group.
     pub prefetch_depth: usize,
+    /// Prefetch producer threads (batch k is prepared by producer
+    /// `k % producers`, merged back by batch index). 1 reproduces the
+    /// single shared producer; any value is bitwise-identical.
+    pub producers: usize,
 }
 
 impl MultiTrainer {
     pub fn new(workers: usize) -> Self {
-        MultiTrainer { workers: workers.max(1), prefetch: true, prefetch_depth: 2 }
+        MultiTrainer { workers: workers.max(1), prefetch: true, prefetch_depth: 2, producers: 1 }
     }
 
     /// The strictly synchronous variant (workers prepare their own
@@ -82,23 +90,23 @@ impl MultiTrainer {
         let mut steps = 0usize;
 
         if self.prefetch && plan.num_batches() > workers {
-            // Shared-producer mode: one thread samples + gathers for all
-            // workers, queue bounded at (group in flight + depth).
+            // Shard-producer mode: `producers` threads sample + gather for
+            // all workers (round-robin by batch index, merged back in
+            // order), queue bounded at (group in flight + depth) total.
             let depth = workers + self.prefetch_depth.max(1);
             std::thread::scope(|scope| -> Result<()> {
-                // The channels are locals of this closure: every exit path
-                // (including `?`) drops `rx`, which unblocks a producer
-                // waiting on the full queue so the scope can join.
-                let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth);
-                let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
-                spawn_producer(scope, prep, true, plan.seeded(), tx, recycle_rx);
+                // `merged` is a local of this closure: every exit path
+                // (including `?`) drops the receivers, which unblocks a
+                // producer waiting on a full queue so the scope can join.
+                let mut merged =
+                    spawn_producers(scope, prep, true, plan.seeded(), self.producers, depth);
                 // Consumer (this thread).
                 loop {
                     let mut pbs = Vec::with_capacity(workers);
                     while pbs.len() < workers {
-                        match rx.recv() {
-                            Ok(p) => pbs.push(p?),
-                            Err(_) => break,
+                        match merged.recv() {
+                            Some(p) => pbs.push(p?),
+                            None => break,
                         }
                     }
                     if pbs.is_empty() {
@@ -112,7 +120,7 @@ impl MultiTrainer {
                     sync_group(model, deliver, &idx, state, &group, &mut losses)?;
                     steps += 1;
                     for (pb, _) in group {
-                        let _ = recycle_tx.send(pb.into_arena());
+                        merged.recycle(pb.into_arena());
                     }
                 }
             })?;
@@ -138,7 +146,11 @@ impl MultiTrainer {
                                 })
                             })
                             .collect();
-                        handles.into_iter().map(|h| h.join().unwrap()).collect()
+                        handles
+                            .into_iter()
+                            .enumerate()
+                            .map(|(w, h)| join_worker(w, h))
+                            .collect()
                     });
                 let mut group = Vec::with_capacity(results.len());
                 for r in results {
@@ -156,6 +168,23 @@ impl MultiTrainer {
             workers: self.workers,
             losses,
         })
+    }
+}
+
+/// Join a scoped trainer worker, converting a panic into a clear error
+/// naming the failed worker (instead of a bare `unwrap` panic that hides
+/// which replica died and from where).
+fn join_worker<T>(w: usize, h: std::thread::ScopedJoinHandle<'_, Result<T>>) -> Result<T> {
+    match h.join() {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(anyhow::anyhow!("trainer worker {w} panicked: {msg}"))
+        }
     }
 }
 
@@ -178,7 +207,7 @@ fn execute_group(
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        handles.into_iter().enumerate().map(|(w, h)| join_worker(w, h)).collect()
     })
 }
 
@@ -279,5 +308,25 @@ mod tests {
             *d = acc * inv;
         }
         assert_eq!(&state.params[..], &[4.0, 4.0, 0.0, 1.0]);
+    }
+
+    /// A panicking worker must surface as a clear error naming the
+    /// worker, not a bare unwrap panic on the leader thread.
+    #[test]
+    fn join_worker_surfaces_panics_with_worker_id() {
+        let ok: anyhow::Result<i32> = std::thread::scope(|s| {
+            let h = s.spawn(|| -> anyhow::Result<i32> { Ok(7) });
+            join_worker(0, h)
+        });
+        assert_eq!(ok.unwrap(), 7);
+
+        let err = std::thread::scope(|s| {
+            let h = s.spawn(|| -> anyhow::Result<i32> { panic!("kaboom {}", 40 + 2) });
+            join_worker(3, h)
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker 3"), "missing worker id: {msg}");
+        assert!(msg.contains("kaboom 42"), "missing panic payload: {msg}");
     }
 }

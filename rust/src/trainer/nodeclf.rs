@@ -28,7 +28,7 @@ use super::single::{
     Trainer, TrainState,
 };
 use crate::graph::NodeLabel;
-use crate::metrics::{argmax_rows, average_precision, f1_micro};
+use crate::metrics::{argmax_rows, average_precision, f1_macro, f1_micro};
 use crate::runtime::{SharedVec, Tensor};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
@@ -38,8 +38,11 @@ use anyhow::{ensure, Context, Result};
 pub struct NodeClfResult {
     /// Binary tasks: AP on positives + sampled negatives.
     pub ap: f64,
-    /// Multi-class tasks: F1-micro on the test split.
+    /// Multi-class tasks: F1-micro (= accuracy) on the test split.
     pub f1_micro: f64,
+    /// Macro-averaged F1 over the classes present in the test split —
+    /// the skew-robust metric for the GDELT/MAG-style many-class tasks.
+    pub f1_macro: f64,
     pub train_labels: usize,
     pub test_labels: usize,
 }
@@ -128,6 +131,7 @@ pub fn node_classification(
             run_pipelined(
                 prep,
                 prep.cfg.prefetch_depth,
+                prep.cfg.shards,
                 false,
                 eval_windows(0..n_edges, bs),
                 |mut pb| {
@@ -278,6 +282,7 @@ pub fn node_classification(
     Ok(NodeClfResult {
         ap,
         f1_micro: f1_micro(&preds, &truths),
+        f1_macro: f1_macro(&preds, &truths, classes),
         train_labels: split,
         test_labels: n - split,
     })

@@ -12,15 +12,17 @@
 //!   moments, step counter, node-memory and mailbox gathers — everything
 //!   that depends on batch i-1's updates.
 //!
-//! [`Trainer::train_epoch`] runs a two-stage pipeline over a bounded
-//! double-buffered queue: a producer thread prepares batches ahead
-//! (`TrainerCfg::prefetch_depth` in flight) while the consumer executes the
-//! AOT step and applies state updates. Consumed batches hand their buffers
-//! back to the producer ([`PrepArena`]). Per-root seeding makes all draws
-//! independent of execution mode: pipelined and sequential epochs produce
-//! bitwise-identical losses (enforced by `rust/tests/integration.rs` on
-//! artifacts and `rust/tests/pipeline_identity.rs` on the reference
-//! backend).
+//! [`Trainer::train_epoch`] runs a two-stage pipeline over bounded
+//! queues: `TrainerCfg::shards` producer threads prepare batches ahead
+//! (`TrainerCfg::prefetch_depth` in flight, round-robin by batch index,
+//! merged back in batch order by [`MergedBatches`]) while the consumer
+//! executes the AOT step and applies state updates. Consumed batches hand
+//! their buffers back to the owning producer ([`PrepArena`]). Per-root
+//! seeding and order-independent pointer reads make all draws independent
+//! of execution mode **and** producer count: pipelined and sequential
+//! epochs produce bitwise-identical losses for any shard count (enforced
+//! by `rust/tests/integration.rs` on artifacts and
+//! `rust/tests/pipeline_identity.rs` on the reference backend).
 //!
 //! Since the tensor-arena PR the *gather* half is allocation-free too, not
 //! just sampling: every input tensor fills a pool-recycled buffer
@@ -31,11 +33,11 @@
 //! step — including reference-backend execution — allocates nothing
 //! (`rust/tests/alloc_train.rs`).
 
-use crate::graph::{TCsr, TemporalGraph};
+use crate::graph::{ShardSpec, ShardedTCsr, TCsr, TemporalGraph};
 use crate::metrics::average_precision;
 use crate::models::Model;
 use crate::runtime::{SharedVec, Tensor, TensorSpec};
-use crate::sampler::{Mfg, SamplerConfig, Strategy, TemporalSampler};
+use crate::sampler::{Mfg, SamplerConfig, SamplerHandle, ShardedSampler, Strategy, TemporalSampler};
 use crate::sched::{make_batch_into, Batch, EpochPlan};
 use crate::state::{Mailbox, NodeMemory};
 use crate::util::rng::Rng;
@@ -65,6 +67,14 @@ pub struct TrainerCfg {
     /// zero-allocation gather path). Off → fresh buffers per batch, the
     /// baseline for the arena benches. Values are bitwise-identical.
     pub tensor_arenas: bool,
+    /// Node-shard count. > 1 switches sampling to the node-sharded
+    /// engine ([`ShardedSampler`] over a [`ShardedTCsr`], built at
+    /// [`Trainer::new`] — set it before construction), routes the JIT
+    /// memory/mailbox gathers through the per-shard owner paths, and
+    /// fans the pipelined epochs out to this many prefetch producers
+    /// (merged by batch index). Bitwise-identical to `shards == 1`
+    /// for any value (`rust/tests/pipeline_identity.rs`).
+    pub shards: usize,
 }
 
 impl TrainerCfg {
@@ -84,6 +94,7 @@ impl TrainerCfg {
             prefetch: true,
             prefetch_depth: 2,
             tensor_arenas: true,
+            shards: 1,
         }
     }
 }
@@ -127,7 +138,7 @@ pub struct EvalResult {
 pub struct Preparer<'g> {
     pub model: &'g Model,
     pub graph: &'g TemporalGraph,
-    sampler: Option<TemporalSampler<'g>>,
+    sampler: Option<SamplerHandle<'g>>,
     pool: TensorPool,
     pub cfg: TrainerCfg,
 }
@@ -192,8 +203,8 @@ fn is_state_input(name: &str) -> bool {
 }
 
 impl<'g> Preparer<'g> {
-    /// Shared sampler (for stats/reset); `None` for 0-hop models.
-    pub fn sampler(&self) -> Option<&TemporalSampler<'g>> {
+    /// Shared sampler handle (for stats/reset); `None` for 0-hop models.
+    pub fn sampler(&self) -> Option<&SamplerHandle<'g>> {
         self.sampler.as_ref()
     }
 
@@ -523,7 +534,16 @@ impl<'g> Preparer<'g> {
                     let memory = state.memory.as_ref().expect("memory state");
                     let mut mem = self.pool.take(nodes.len() * memory.dim());
                     let mut dt = self.pool.take(nodes.len());
-                    memory.gather_into(nodes, &mut mem, &mut dt);
+                    if self.cfg.shards > 1 {
+                        // Single-owner gathers: one pass per node shard,
+                        // composing to exactly `gather_into`.
+                        let shards = ShardSpec::new(memory.num_nodes(), self.cfg.shards);
+                        for s in 0..shards.shards() {
+                            memory.gather_shard_into(nodes, shards.range(s), &mut mem, &mut dt);
+                        }
+                    } else {
+                        memory.gather_into(nodes, &mut mem, &mut dt);
+                    }
                     *mem_bufs = (Some(mem), Some(dt));
                 }
                 let buf = if spec.name == "mem" { mem_bufs.0.take() } else { mem_bufs.1.take() };
@@ -539,7 +559,20 @@ impl<'g> Preparer<'g> {
                     let mut mail = self.pool.take(per * mailbox.dim());
                     let mut dt = self.pool.take(per);
                     let mut mask = self.pool.take(per);
-                    mailbox.gather_into(nodes, &mut mail, &mut dt, &mut mask);
+                    if self.cfg.shards > 1 {
+                        let shards = ShardSpec::new(mailbox.num_nodes(), self.cfg.shards);
+                        for s in 0..shards.shards() {
+                            mailbox.gather_shard_into(
+                                nodes,
+                                shards.range(s),
+                                &mut mail,
+                                &mut dt,
+                                &mut mask,
+                            );
+                        }
+                    } else {
+                        mailbox.gather_into(nodes, &mut mail, &mut dt, &mut mask);
+                    }
                     *mail_bufs = (Some(mail), Some(dt), Some(mask));
                 }
                 let buf = match spec.name.as_str() {
@@ -790,68 +823,127 @@ pub(crate) fn exec_eval_batch(
     Ok(loss)
 }
 
-/// Spawn the shared prefetch producer: runs the prefetchable stage over
-/// `jobs` in order, recycling consumed arenas from `recycle_rx`, sending
-/// prepared batches (or the first error) down `tx`. The consumer dropping
-/// its receiver unblocks a producer waiting on the full queue, so the
-/// enclosing [`std::thread::scope`] can always join. Shared by
-/// [`run_pipelined`] and the multi-trainer's grouped consumer — the
-/// producer protocol lives in exactly one place.
-pub(crate) fn spawn_producer<'scope, I>(
+/// The consumer end of the N-producer prefetch stage: one bounded channel
+/// per producer, popped **round-robin by batch index** (batch k was
+/// assigned to producer `k % N`), so the merged stream is in exact batch
+/// order — the single-producer stream, bit for bit, for any N ≥ 1.
+/// Consumed arenas are recycled back to the producer that owns the next
+/// batch slot. Dropping this (any exit path) closes every receiver, which
+/// unblocks producers waiting on a full queue so the enclosing
+/// [`std::thread::scope`] can always join.
+pub(crate) struct MergedBatches {
+    rxs: Vec<std::sync::mpsc::Receiver<Result<PreparedBatch>>>,
+    recycle_txs: Vec<std::sync::mpsc::Sender<PrepArena>>,
+    /// Next batch index to receive (routes to `rxs[next % N]`).
+    next: usize,
+    /// Next batch index to recycle (consumption happens in batch order,
+    /// so this routes each arena back to the producer of that batch).
+    recycle_next: usize,
+}
+
+impl MergedBatches {
+    /// Receive the next batch in chronological (batch-index) order;
+    /// `None` once every producer has drained.
+    pub(crate) fn recv(&mut self) -> Option<Result<PreparedBatch>> {
+        match self.rxs[self.next % self.rxs.len()].recv() {
+            Ok(r) => {
+                self.next += 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Hand a consumed batch's buffers back for reuse (best effort: the
+    /// owning producer may already be done). Must be called in
+    /// consumption order — the trainers consume strictly in batch order.
+    pub(crate) fn recycle(&mut self, arena: PrepArena) {
+        let n = self.recycle_txs.len();
+        let _ = self.recycle_txs[self.recycle_next % n].send(arena);
+        self.recycle_next += 1;
+    }
+}
+
+/// Spawn `producers` shard producers for the prefetchable stage: producer
+/// p runs jobs `p, p + N, p + 2N, …` in order into its own bounded queue
+/// (the total in-flight bound `depth` is split across producers), and the
+/// returned [`MergedBatches`] merges the queues back by batch index.
+/// Because `prepare_static_reuse` is a pure function of `(range, seed)`
+/// (negatives from a per-batch RNG; snapshot pointers monotone and
+/// self-correcting, hence batch-order-independent), the merged stream is
+/// bitwise-identical to the one-producer stream — N only changes how many
+/// cores feed the sampler. Shared by [`run_pipelined`] and the
+/// multi-trainer's grouped consumer, so the producer protocol lives in
+/// exactly one place.
+pub(crate) fn spawn_producers<'scope, I>(
     scope: &'scope std::thread::Scope<'scope, '_>,
     prep: &'scope Preparer<'_>,
     train: bool,
     jobs: I,
-    tx: std::sync::mpsc::SyncSender<Result<PreparedBatch>>,
-    recycle_rx: std::sync::mpsc::Receiver<PrepArena>,
-) where
-    I: Iterator<Item = (u64, std::ops::Range<usize>)> + Send + 'scope,
+    producers: usize,
+    depth: usize,
+) -> MergedBatches
+where
+    I: Iterator<Item = (u64, std::ops::Range<usize>)>,
 {
-    scope.spawn(move || {
-        for (seed, range) in jobs {
-            let arena = recycle_rx.try_recv().unwrap_or_default();
-            let prepared = prep.prepare_static_reuse(range, seed, train, arena);
-            let failed = prepared.is_err();
-            if tx.send(prepared).is_err() || failed {
-                break;
+    let producers = producers.max(1);
+    // Deterministic round-robin assignment (batch k → producer k % N).
+    let mut per: Vec<Vec<(u64, std::ops::Range<usize>)>> =
+        (0..producers).map(|_| Vec::new()).collect();
+    for (k, job) in jobs.enumerate() {
+        per[k % producers].push(job);
+    }
+    let depth_per = depth.div_ceil(producers).max(1);
+    let mut rxs = Vec::with_capacity(producers);
+    let mut recycle_txs = Vec::with_capacity(producers);
+    for my_jobs in per {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth_per);
+        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
+        rxs.push(rx);
+        recycle_txs.push(recycle_tx);
+        scope.spawn(move || {
+            for (seed, range) in my_jobs {
+                let arena = recycle_rx.try_recv().unwrap_or_default();
+                let prepared = prep.prepare_static_reuse(range, seed, train, arena);
+                let failed = prepared.is_err();
+                if tx.send(prepared).is_err() || failed {
+                    break;
+                }
             }
-        }
-    });
+        });
+    }
+    MergedBatches { rxs, recycle_txs, next: 0, recycle_next: 0 }
 }
 
 /// The two-stage pipeline shared by the trainer's epochs, `eval_range`,
-/// and the node-classification replay: a producer thread runs the
-/// prefetchable stage over `jobs` (up to `depth` batches in flight on a
-/// bounded queue) while `consume` runs on the calling thread. `consume`
-/// returns the batch's recycled arena to keep the steady state
-/// allocation-light, or `None` to stop early (remaining prepared batches
-/// are dropped; the producer unblocks on the closed channel).
+/// and the node-classification replay: `producers` shard-producer threads
+/// run the prefetchable stage over `jobs` (up to `depth` batches in
+/// flight across their bounded queues, merged by batch index) while
+/// `consume` runs on the calling thread. `consume` returns the batch's
+/// recycled arena to keep the steady state allocation-light, or `None`
+/// to stop early (remaining prepared batches are dropped; producers
+/// unblock on the closed channels).
 pub(crate) fn run_pipelined<I, F>(
     prep: &Preparer<'_>,
     depth: usize,
+    producers: usize,
     train: bool,
     jobs: I,
     mut consume: F,
 ) -> Result<()>
 where
-    I: Iterator<Item = (u64, std::ops::Range<usize>)> + Send,
+    I: Iterator<Item = (u64, std::ops::Range<usize>)>,
     F: FnMut(PreparedBatch) -> Result<Option<PrepArena>>,
 {
     let depth = depth.max(1);
     std::thread::scope(|scope| -> Result<()> {
-        // The channels are locals of this closure: every exit path
-        // (including `?`) drops `rx`, unblocking the producer.
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth);
-        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
-        spawn_producer(scope, prep, train, jobs, tx, recycle_rx);
-        while let Ok(prepared) = rx.recv() {
+        // `merged` is a local of this closure: every exit path (including
+        // `?`) drops the receivers, unblocking the producers.
+        let mut merged = spawn_producers(scope, prep, train, jobs, producers, depth);
+        while let Some(prepared) = merged.recv() {
             let pb = prepared?;
             match consume(pb)? {
-                // Hand the buffers back for reuse (best effort: the
-                // producer may already be done).
-                Some(arena) => {
-                    let _ = recycle_tx.send(arena);
-                }
+                Some(arena) => merged.recycle(arena),
                 None => break,
             }
         }
@@ -911,7 +1003,17 @@ impl<'g> Trainer<'g> {
             sc.snapshot_len = cfg.snapshot_len;
             sc.seed = cfg.seed;
             sc.validate().context("sampler config from model dims")?;
-            Some(TemporalSampler::new(csr, sc))
+            Some(if cfg.shards > 1 {
+                // Node-sharded engine: owns its partitioned T-CSR (built
+                // from the graph with the same reverse-edge convention as
+                // the shared flat `csr`). Bitwise-identical sampling.
+                SamplerHandle::Sharded(Box::new(ShardedSampler::new(
+                    ShardedTCsr::build(graph, true, cfg.shards),
+                    sc,
+                )))
+            } else {
+                SamplerHandle::Flat(TemporalSampler::new(csr, sc))
+            })
         } else {
             None
         };
@@ -1002,10 +1104,17 @@ impl<'g> Trainer<'g> {
         let timers = &mut self.timers;
         let io = &mut self.io;
         let mut losses = Vec::with_capacity(plan.num_batches());
-        run_pipelined(prep, prep.cfg.prefetch_depth, true, plan.seeded(), |mut pb| {
-            losses.push(exec_train_step(model, prep, state, timers, io, &idx, &mut pb)?);
-            Ok(Some(pb.into_arena()))
-        })?;
+        run_pipelined(
+            prep,
+            prep.cfg.prefetch_depth,
+            prep.cfg.shards,
+            true,
+            plan.seeded(),
+            |mut pb| {
+                losses.push(exec_train_step(model, prep, state, timers, io, &idx, &mut pb)?);
+                Ok(Some(pb.into_arena()))
+            },
+        )?;
         Ok(epoch_stats(losses, t0))
     }
 
@@ -1094,6 +1203,7 @@ impl<'g> Trainer<'g> {
         run_pipelined(
             prep,
             prep.cfg.prefetch_depth,
+            prep.cfg.shards,
             false,
             eval_windows(range.clone(), bs),
             |mut pb| {

@@ -141,6 +141,16 @@ impl Args {
         v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`"))
     }
 
+    /// [`Self::get_usize`] with a lower bound — for count options where 0
+    /// is a configuration error, not a value (`--shards`, `--workers`).
+    pub fn get_usize_min(&self, name: &str, min: usize) -> Result<usize> {
+        let v = self.get_usize(name)?;
+        if v < min {
+            bail!("--{name} must be at least {min}, got {v}");
+        }
+        Ok(v)
+    }
+
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         let v = self.get(name);
         v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`"))
@@ -182,6 +192,14 @@ mod tests {
         assert_eq!(a.get_f64("lr").unwrap(), 0.001); // default
         assert!(a.get_flag("chunks"));
         assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn usize_min_enforced() {
+        let a = spec().parse(&argv(&["--data", "d", "--epochs", "0"])).unwrap();
+        assert!(a.get_usize_min("epochs", 1).is_err());
+        let a = spec().parse(&argv(&["--data", "d", "--epochs", "3"])).unwrap();
+        assert_eq!(a.get_usize_min("epochs", 1).unwrap(), 3);
     }
 
     #[test]

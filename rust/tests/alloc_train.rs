@@ -7,9 +7,11 @@
 //! the parameter/memory/mailbox write-back. This binary registers the
 //! counting global allocator and asserts exactly zero heap allocations
 //! across 20 steady-state batches of `Trainer::train_batch_reuse` on the
-//! synthetic TGN variant (memory + mailbox: the heaviest JIT path). It
-//! contains a single test so no concurrent test thread can pollute the
-//! counter.
+//! synthetic TGN variant (memory + mailbox: the heaviest JIT path) — and
+//! then again with node sharding enabled (`cfg.shards = 2`: sharded
+//! sampler with its per-shard scratch pool, plus the single-owner
+//! memory/mailbox gathers). It contains a single test so no concurrent
+//! test thread can pollute the counter.
 
 use tgl::graph::TCsr;
 use tgl::models::synthetic;
@@ -60,6 +62,39 @@ fn steady_state_train_step_performs_zero_heap_allocation() {
          spanning prepare, finish_inputs, reference-engine execution, and state update)"
     );
     // Sanity: the loop really trained (params evolved, loss is a number).
+    assert!(last.is_finite());
+    assert!(t.state.step >= 26.0);
+
+    // ---- Phase 2: the same guarantee with node sharding enabled (the
+    // sharded sampler's scratch pool + the per-shard-owner state
+    // gathers must be allocation-free once warm too).
+    let mut cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 2);
+    cfg.prefetch = false;
+    cfg.shards = 2;
+    let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("sharded trainer");
+    let mut arena = PrepArena::default();
+    for bi in 0..6u64 {
+        let i = bi as usize;
+        let (loss, a) =
+            t.train_batch_reuse(i * bs..(i + 1) * bs, bi, arena).expect("sharded warmup");
+        assert!(loss.is_finite());
+        arena = a;
+    }
+    let before = CountingAlloc::allocations();
+    let mut last = 0.0f64;
+    for bi in 6..26u64 {
+        let i = bi as usize;
+        let (loss, a) =
+            t.train_batch_reuse(i * bs..(i + 1) * bs, bi, arena).expect("sharded steady");
+        last = loss;
+        arena = a;
+    }
+    let allocs = CountingAlloc::allocations() - before;
+    assert_eq!(
+        allocs, 0,
+        "sharded steady-state train step must not allocate (saw {allocs} allocations over 20 \
+         batches with shards = 2)"
+    );
     assert!(last.is_finite());
     assert!(t.state.step >= 26.0);
 }

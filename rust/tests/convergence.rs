@@ -1,7 +1,14 @@
 //! Artifact-free learning-dynamics assertions on the neural reference
 //! backend: the headline claims of the paper's training loop — a
-//! TGN-style memory + attention model *converging* on link prediction —
+//! TGN-style memory + attention model *converging* on link prediction,
+//! and a frozen TGNN's embeddings carrying multi-class node labels —
 //! verified in every CI environment, no `make artifacts` needed.
+//!
+//! The link-prediction gate trains on the dedicated planted-signal
+//! dataset (`datasets::planted_signal`): a tiny, highly recurrent
+//! bipartite stream built for this test, roughly half the size of the
+//! scale-0.02 wikipedia generator it replaced and with a much stronger
+//! planted signal, so the gate is faster and its thresholds sharper.
 //!
 //! The artifact-gated twins (real AOT variants) live in
 //! `integration.rs`; this file is the reason the reference backend runs
@@ -9,14 +16,14 @@
 
 use tgl::graph::TCsr;
 use tgl::metrics::Curve;
-use tgl::models::synthetic;
+use tgl::models::{synthetic, synthetic_with_classes};
 use tgl::sched::ChunkScheduler;
-use tgl::trainer::{Trainer, TrainerCfg};
+use tgl::trainer::{node_classification, Trainer, TrainerCfg};
 
 #[test]
 fn syn_tgn_loss_decreases_and_eval_ap_beats_chance() {
     let model = synthetic("tgn").expect("synthetic tgn");
-    let graph = tgl::datasets::by_name("wikipedia", 0.02, 7).expect("dataset");
+    let graph = tgl::datasets::planted_signal(7).expect("dataset");
     let csr = TCsr::build(&graph, true);
     let cfg = TrainerCfg::for_model(&model, &graph, 5e-3, 2);
     let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("trainer");
@@ -42,8 +49,9 @@ fn syn_tgn_loss_decreases_and_eval_ap_beats_chance() {
     let last = pts.last().unwrap().1;
     let drop = first - last;
     assert!(
-        drop > 0.05,
-        "smoothed loss must fall over epoch 1: {first:.4} -> {last:.4}"
+        drop > 0.08,
+        "smoothed loss must fall sharply over epoch 1 on the planted-signal dataset: \
+         {first:.4} -> {last:.4}"
     );
     let tol = 0.05 * drop;
     for (k, pair) in pts.windows(2).enumerate() {
@@ -81,12 +89,57 @@ fn syn_tgn_loss_decreases_and_eval_ap_beats_chance() {
         stats.mean_loss
     );
 
-    // ---- Held-out replay: AP must beat 0.5 chance by a margin.
+    // ---- Held-out replay: AP must clear a sharper-than-before margin
+    // over 0.5 chance (the planted recurrence makes this easy for a
+    // working memory model, and meaningless for a broken one).
     let val = t.eval_range(train_end..val_end).expect("eval");
     assert!(
-        val.ap > 0.6,
-        "eval AP {:.3} must clear 0.6 on the planted-recurrence dataset",
+        val.ap > 0.65,
+        "eval AP {:.3} must clear 0.65 on the planted-signal dataset",
         val.ap
     );
     assert!(val.mean_loss.is_finite());
+}
+
+/// Multi-class node classification, artifact-free: a `clf` head sized to
+/// the dataset's 81 classes (`synthetic_with_classes`) trained on frozen
+/// embeddings of a briefly pre-trained syn_tgn over the gdelt-like
+/// generator must beat chance on macro-F1. The generator plants the
+/// community signal in the low feature dims expressly so the dv=4
+/// reference encoder can see it; macro-F1 (not micro) is the gate
+/// because a bias-only classifier collapses to the majority class and
+/// scores near zero macro on ~40 supported classes.
+#[test]
+fn gdelt_like_multiclass_nodeclf_beats_chance_on_macro_f1() {
+    let graph = tgl::datasets::gdelt_like(1e-4, 7).expect("gdelt-like dataset");
+    assert!(graph.num_classes > 2, "gdelt-like must be multi-class");
+    assert!(graph.labels.len() >= 300, "need a meaningful label set");
+    let model =
+        synthetic_with_classes("tgn", graph.num_classes).expect("multi-class synthetic tgn");
+    let csr = TCsr::build(&graph, true);
+    let cfg = TrainerCfg::for_model(&model, &graph, 5e-3, 2);
+    let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("trainer");
+
+    // One link-prediction epoch shapes the encoder (features predict
+    // intra-community links), then the frozen-embedding protocol.
+    let bs = model.dim("bs");
+    let (train_end, _) = graph.chrono_split(0.70, 0.15);
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    t.train_epoch(&sched.epoch()).expect("pretrain epoch");
+
+    let clf = node_classification(&mut t, 0.7, 40, 0.03, 7).expect("node classification");
+    assert!(clf.test_labels >= 60, "need a meaningful test split, got {}", clf.test_labels);
+    // Uniform-chance macro-F1 over the supported classes is ≈ 1/40; a
+    // majority-class collapse scores even lower. 0.05 is double chance
+    // while staying far below what the planted low-dim community code
+    // supports.
+    assert!(
+        clf.f1_macro > 0.05,
+        "macro-F1 {:.4} must beat chance on the 81-class gdelt-like task (micro {:.4}, \
+         {} test labels)",
+        clf.f1_macro,
+        clf.f1_micro,
+        clf.test_labels
+    );
+    assert!(clf.f1_micro.is_finite());
 }

@@ -4,11 +4,12 @@
 //! `integration.rs`.
 //!
 //! Covered: single-trainer pipeline vs sequential (losses + downstream
-//! eval), tensor arenas on vs off, the multi-trainer shared producer vs
-//! synchronous workers (across worker counts and queue depths), pipelined
-//! eval replay, pipelined node-classification replay (harvested
-//! embeddings and classifier metrics), and checkpoint round-trips over
-//! the shared/aliased parameter storage.
+//! eval), tensor arenas on vs off, the multi-trainer shard producers vs
+//! synchronous workers (across worker counts, queue depths, and producer
+//! counts), the node-sharded sampling + state-gather path (shards ∈
+//! {1, 2, 4}), pipelined eval replay, pipelined node-classification
+//! replay (harvested embeddings and classifier metrics), and checkpoint
+//! round-trips over the shared/aliased parameter storage.
 
 use tgl::graph::{TCsr, TemporalGraph};
 use tgl::models::{synthetic, Model};
@@ -32,6 +33,23 @@ fn trainer<'a>(
     cfg.prefetch_depth = depth;
     cfg.tensor_arenas = arenas;
     Trainer::new(model, graph, csr, cfg).expect("trainer")
+}
+
+/// Trainer on the node-sharded path: sharded sampler + sharded JIT state
+/// gathers + `shards` prefetch producers when pipelined.
+fn sharded_trainer<'a>(
+    model: &'a Model,
+    graph: &'a TemporalGraph,
+    csr: &'a TCsr,
+    prefetch: bool,
+    depth: usize,
+    shards: usize,
+) -> Trainer<'a> {
+    let mut cfg = TrainerCfg::for_model(model, graph, 1e-3, 2);
+    cfg.prefetch = prefetch;
+    cfg.prefetch_depth = depth;
+    cfg.shards = shards;
+    Trainer::new(model, graph, csr, cfg).expect("sharded trainer")
 }
 
 #[test]
@@ -148,6 +166,115 @@ fn multi_trainer_shared_producer_matches_synchronous_workers() {
     let mut multi1 = trainer(&model, &g, &csr, true, 2, true);
     let m = MultiTrainer::new(1).train_epoch(&mut multi1, &ep).unwrap();
     assert_eq!(s.losses, m.losses, "1-worker multi must equal the sequential trainer");
+}
+
+/// The tentpole identity: the node-sharded pipeline — sharded sampler,
+/// sharded JIT state gathers, and N shard producers merged by batch index
+/// — is bitwise-identical to the flat sequential trainer for shards ∈
+/// {1, 2, 4}, across queue depths, on both trainer dataflows (tgn:
+/// memory + mailbox; tgat: 2-hop, stateless).
+#[test]
+fn sharded_single_trainer_identical_across_shard_counts() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    for arch in ["tgn", "tgat"] {
+        let model = synthetic(arch).unwrap();
+        let bs = model.dim("bs");
+        let (train_end, val_end) = g.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+
+        let mut flat = trainer(&model, &g, &csr, false, 2, true);
+        let s_flat = flat.train_epoch(&ep).unwrap();
+        let val_flat = flat.eval_range(train_end..val_end).unwrap();
+
+        for shards in [1usize, 2, 4] {
+            for depth in [1usize, 3] {
+                let mut t = sharded_trainer(&model, &g, &csr, true, depth, shards);
+                let s = t.train_epoch(&ep).unwrap();
+                assert_eq!(
+                    s_flat.losses, s.losses,
+                    "{arch}: shards {shards} depth {depth} losses must be bitwise-identical"
+                );
+                let val = t.eval_range(train_end..val_end).unwrap();
+                assert_eq!(val_flat.ap, val.ap, "{arch} shards {shards} depth {depth}: AP");
+                assert_eq!(
+                    val_flat.mean_loss, val.mean_loss,
+                    "{arch} shards {shards} depth {depth}: eval loss"
+                );
+                let nodes: Vec<u32> = (0..8u32).collect();
+                let ts: Vec<f64> = (0..8).map(|i| 1.0e5 + i as f64).collect();
+                assert_eq!(
+                    flat.embed_nodes(&nodes, &ts).unwrap(),
+                    t.embed_nodes(&nodes, &ts).unwrap(),
+                    "{arch} shards {shards} depth {depth}: embeddings"
+                );
+            }
+        }
+
+        // The strictly sequential sharded path (no producers at all) must
+        // match too — sharding is value-invisible without pipelining.
+        let mut seq = sharded_trainer(&model, &g, &csr, false, 2, 2);
+        let s_seq = seq.train_epoch(&ep).unwrap();
+        assert_eq!(s_flat.losses, s_seq.losses, "{arch}: sequential sharded");
+    }
+}
+
+/// Sharded producers through the multi-trainer: for shards ∈ {1, 2, 4},
+/// worker counts, and queue depths, the prefetched grouped epoch equals
+/// the synchronous-workers reference bit for bit.
+#[test]
+fn sharded_producers_multi_trainer_identical() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    let ep = sched.epoch();
+
+    for workers in [1usize, 3] {
+        let mut sync_t = trainer(&model, &g, &csr, true, 2, true);
+        let sync_stats =
+            MultiTrainer::sequential(workers).train_epoch(&mut sync_t, &ep).unwrap();
+        for shards in [1usize, 2, 4] {
+            for depth in [1usize, 3] {
+                let mut t = sharded_trainer(&model, &g, &csr, true, 2, shards);
+                let mut multi = MultiTrainer::new(workers);
+                multi.prefetch_depth = depth;
+                multi.producers = shards;
+                let stats = multi.train_epoch(&mut t, &ep).unwrap();
+                assert_eq!(
+                    sync_stats.losses, stats.losses,
+                    "workers {workers} shards {shards} depth {depth}: \
+                     shard producers must be bitwise-identical"
+                );
+                assert_eq!(sync_stats.global_steps, stats.global_steps);
+            }
+        }
+    }
+}
+
+/// The node-classification replay (eval replay + embedding harvest + MLP
+/// head) is bitwise-identical on the sharded path.
+#[test]
+fn sharded_nodeclf_matches_flat() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+
+    let mut flat_t = trainer(&model, &g, &csr, false, 2, true);
+    let flat = node_classification(&mut flat_t, 0.7, 3, 0.01, 7).unwrap();
+
+    for shards in [2usize, 4] {
+        let mut t = sharded_trainer(&model, &g, &csr, true, 2, shards);
+        let sharded = node_classification(&mut t, 0.7, 3, 0.01, 7).unwrap();
+        assert_eq!(flat.ap, sharded.ap, "shards {shards}: nodeclf AP");
+        assert_eq!(flat.f1_micro, sharded.f1_micro, "shards {shards}: nodeclf F1-micro");
+        assert_eq!(flat.f1_macro, sharded.f1_macro, "shards {shards}: nodeclf F1-macro");
+        assert_eq!(flat.train_labels, sharded.train_labels);
+        assert_eq!(flat.test_labels, sharded.test_labels);
+    }
 }
 
 #[test]

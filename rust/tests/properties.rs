@@ -2,8 +2,8 @@
 //! seeded RNG — every case prints its seed on failure so it replays
 //! deterministically.
 
-use tgl::graph::{TCsr, TemporalGraph};
-use tgl::sampler::{PointerMode, SamplerConfig, Strategy, TemporalSampler};
+use tgl::graph::{ShardedTCsr, TCsr, TemporalGraph};
+use tgl::sampler::{PointerMode, SamplerConfig, ShardedSampler, Strategy, TemporalSampler};
 use tgl::sched::ChunkScheduler;
 use tgl::state::Mailbox;
 use tgl::util::json::Json;
@@ -45,6 +45,77 @@ fn prop_tcsr_windows_match_bruteforce() {
             }
             assert_eq!(cut - lo, expect, "seed={seed} v={v} t={t}");
             assert!(cut <= hi);
+        }
+    }
+}
+
+/// The node-sharded T-CSR must satisfy every per-shard invariant
+/// (`check_invariants`, reused per shard plus partition coverage) and
+/// reproduce the unsharded T-CSR **slice for slice** — same neighbors,
+/// same times, same chronological edge ids per node — for random graphs,
+/// both reverse conventions, and shard counts from 1 to beyond |V|.
+#[test]
+fn prop_sharded_tcsr_invariants_and_slices_match_flat() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(900 + seed);
+        let g = random_graph(&mut rng, 40, 800);
+        for add_reverse in [false, true] {
+            let flat = TCsr::build(&g, add_reverse);
+            for shards in [1usize, 2, 3, 5, 64] {
+                let sharded = ShardedTCsr::build(&g, add_reverse, shards);
+                sharded.check_invariants().unwrap_or_else(|e| {
+                    panic!("seed={seed} shards={shards} rev={add_reverse}: {e}")
+                });
+                assert_eq!(sharded.num_slots(), flat.num_slots(), "seed={seed}");
+                for v in 0..g.num_nodes as u32 {
+                    let (sh, lo, hi) = sharded.slice_of(v);
+                    let (flo, fhi) = flat.slice(v);
+                    assert_eq!(
+                        &sh.indices[lo..hi],
+                        &flat.indices[flo..fhi],
+                        "seed={seed} shards={shards} rev={add_reverse} v={v}"
+                    );
+                    assert_eq!(&sh.times[lo..hi], &flat.times[flo..fhi], "seed={seed} v={v}");
+                    assert_eq!(&sh.eids[lo..hi], &flat.eids[flo..fhi], "seed={seed} v={v}");
+                }
+            }
+        }
+    }
+}
+
+/// The sharded sampler must equal the flat sampler bit for bit on random
+/// graphs, shard counts, strategies, and chronological batch sequences —
+/// the invariant the whole sharded pipeline rests on.
+#[test]
+fn prop_sharded_sampler_equals_flat() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let g = random_graph(&mut rng, 30, 700);
+        let flat_csr = TCsr::build(&g, true);
+        let hops = 1 + (seed as usize % 2);
+        let fanout = 3 + (seed as usize % 4);
+        let strategy = if seed % 2 == 0 { Strategy::Uniform } else { Strategy::MostRecent };
+        let cfg = SamplerConfig::uniform_hops(hops, fanout, strategy, 3);
+        let flat = TemporalSampler::new(&flat_csr, cfg.clone());
+        for shards in [2usize, 4] {
+            let sharded = ShardedSampler::new(ShardedTCsr::build(&g, true, shards), cfg.clone());
+            for (bi, t0) in [60.0f64, 250.0, 480.0].iter().enumerate() {
+                let n = 8 + rng.below(16);
+                let roots: Vec<u32> = (0..n).map(|_| rng.below(g.num_nodes) as u32).collect();
+                let ts: Vec<f64> = (0..n).map(|i| t0 + i as f64).collect();
+                let a = flat.sample(&roots, &ts, bi as u64);
+                let b = sharded.sample(&roots, &ts, bi as u64);
+                for (ha, hb) in a.snapshots.iter().zip(&b.snapshots) {
+                    for (ba, bb) in ha.iter().zip(hb) {
+                        assert_eq!(ba.roots, bb.roots, "seed={seed} shards={shards} b={bi}");
+                        assert_eq!(ba.root_ts, bb.root_ts, "seed={seed} shards={shards}");
+                        assert_eq!(ba.nbr, bb.nbr, "seed={seed} shards={shards} b={bi}");
+                        assert_eq!(ba.dt, bb.dt, "seed={seed} shards={shards} b={bi}");
+                        assert_eq!(ba.eid, bb.eid, "seed={seed} shards={shards} b={bi}");
+                        assert_eq!(ba.mask, bb.mask, "seed={seed} shards={shards} b={bi}");
+                    }
+                }
+            }
         }
     }
 }

@@ -71,7 +71,7 @@ fresh = {(r.get("workload"), r.get("mode")): r
 base = {(r.get("workload"), r.get("mode")): r
         for r in json.load(open(base_path)).get("rows", [])}
 
-failures, compared = [], 0
+failures, compared, new_rows = [], 0, 0
 for key, b in sorted(base.items()):
     if "speedup" not in b:
         continue
@@ -92,7 +92,16 @@ for key, b in sorted(base.items()):
             f"{key[0]}/{key[1]}: speedup {b_s:.3f}x -> {f_s:.3f}x ({drop:.1f}% drop)")
     print(f"  [{status}] {key[0]}/{key[1]}: baseline {b_s:.3f}x, fresh {f_s:.3f}x")
 
-print(f"bench_compare: {compared} rows compared, tolerance {tol_pct:.0f}%")
+# Newly-added bench rows with no committed baseline yet are informational,
+# not an error: they start being gated after the next `--update`.
+for key in sorted(fresh.keys()):
+    f = fresh[key]
+    if key not in base and "speedup" in f:
+        new_rows += 1
+        print(f"  [NEW] {key[0]}/{key[1]}: speedup {f['speedup']:.3f}x "
+              f"(absent from baseline; tracked after --update)")
+
+print(f"bench_compare: {compared} rows compared, {new_rows} new, tolerance {tol_pct:.0f}%")
 if failures:
     print("bench_compare: FAILED")
     for msg in failures:

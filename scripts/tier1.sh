@@ -31,6 +31,12 @@ cargo build --release
 echo "== tier1: cargo test -q --test convergence =="
 cargo test -q --test convergence
 
+# Sharded-pipeline identity sweep by name: shards ∈ {1,2,4} must be
+# bitwise-identical to the flat single-producer pipeline across worker
+# counts and queue depths (single trainer, multi trainer, nodeclf).
+echo "== tier1: cargo test -q --test pipeline_identity sharded =="
+cargo test -q --test pipeline_identity sharded
+
 echo "== tier1: cargo test -q =="
 cargo test -q
 
