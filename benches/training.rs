@@ -288,6 +288,48 @@ fn main() -> anyhow::Result<()> {
                 ("batches", Json::Num(stats.losses.len() as f64)),
             ]));
         }
+
+        // ---- Checkpoint save/restore throughput: the atomic checksummed
+        // container (params + Adam + memory + mailbox + pointer tables)
+        // round-tripped on trained state. Rows track the fault-tolerance
+        // runtime's overhead so `--checkpoint-every` stays cheap.
+        {
+            let cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+            let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+            t.train_epoch(&ep)?;
+            let dir = std::env::temp_dir().join(format!("tgl_bench_ckpt_{}", std::process::id()));
+            std::fs::create_dir_all(&dir)?;
+            let path = dir.join("bench.ckpt");
+            let reps = 10usize;
+            t.save_checkpoint(&path)?; // warm-up (creates the file + page cache)
+            let bytes = std::fs::metadata(&path)?.len() as f64;
+            let sw = Stopwatch::start();
+            for _ in 0..reps {
+                t.save_checkpoint(&path)?;
+            }
+            let save_s = sw.secs() / reps as f64;
+            let sw = Stopwatch::start();
+            for _ in 0..reps {
+                t.load_checkpoint(&path)?;
+            }
+            let load_s = sw.secs() / reps as f64;
+            std::fs::remove_dir_all(&dir).ok();
+            let mb = bytes / (1024.0 * 1024.0);
+            println!(
+                "syn_tgn checkpoint ({mb:.2} MiB): save {:.2} MiB/s, load {:.2} MiB/s",
+                mb / save_s.max(1e-12),
+                mb / load_s.max(1e-12)
+            );
+            pipeline_rows.push(obj(vec![
+                ("workload", Json::Str("syn_tgn-checkpoint".into())),
+                ("mode", Json::Str("checkpoint-roundtrip".into())),
+                ("bytes", Json::Num(bytes)),
+                ("save_s", Json::Num(save_s)),
+                ("load_s", Json::Num(load_s)),
+                ("save_mib_per_s", Json::Num(mb / save_s.max(1e-12))),
+                ("load_mib_per_s", Json::Num(mb / load_s.max(1e-12))),
+            ]));
+        }
     }
 
     // ---- Sampler-level arena rows (always available, artifacts or not):

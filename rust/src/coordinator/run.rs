@@ -7,10 +7,12 @@ use crate::models::{Model, RunOptions};
 use crate::runtime::{ArtifactManifest, Engine};
 use crate::sampler::{BaselineSampler, PointerMode, SamplerConfig, Strategy, TemporalSampler};
 use crate::sched::ChunkScheduler;
-use crate::trainer::{node_classification, MultiTrainer, Trainer, TrainerCfg};
+use crate::trainer::{
+    node_classification, CheckpointPolicy, MultiTrainer, RunCursor, Trainer, TrainerCfg,
+};
 use crate::util::cli::Args;
 use crate::util::stats::Stopwatch;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Everything needed to run one variant on one dataset.
@@ -36,6 +38,16 @@ pub struct RunPlan {
     /// producers merged by batch index, and single-owner state gathers.
     /// Deterministic: any value ≥ 1 is bitwise-identical to 1.
     pub shards: usize,
+    /// Run-checkpoint path (`--checkpoint`). Saves are atomic and
+    /// checksummed; each carries a full resume cursor.
+    pub checkpoint: Option<PathBuf>,
+    /// Checkpoint cadence in batches (`--checkpoint-every`); 0 = only at
+    /// epoch boundaries. Ignored without `checkpoint`.
+    pub checkpoint_every: usize,
+    /// Resume training from this run checkpoint (`--resume`): restores
+    /// state, scheduler RNG, and the mid-epoch cursor, then continues
+    /// bitwise-identically to the uninterrupted run.
+    pub resume: Option<PathBuf>,
 }
 
 /// Per-epoch row + final metrics of a link-prediction run.
@@ -87,6 +99,9 @@ impl RunPlan {
             prefetch_depth: 2,
             tensor_arenas: true,
             shards: 1,
+            checkpoint: None,
+            checkpoint_every: 0,
+            resume: None,
         })
     }
 
@@ -139,12 +154,90 @@ impl RunPlan {
             ChunkScheduler::plain(train_end, bs)
         };
         let multi = self.multi_trainer(workers);
-        for ep in 0..epochs {
-            let plan = sched.epoch();
+        let policy = self
+            .checkpoint
+            .as_ref()
+            .map(|p| CheckpointPolicy::new(p.clone(), self.checkpoint_every));
+
+        // Resume: restore state + cursor, re-seat the scheduler RNG, and
+        // pick up the checkpointed epoch mid-plan. A cursor at its plan's
+        // end means that epoch completed — continue with the next one
+        // (the restored RNG re-draws exactly what the uninterrupted run
+        // would have).
+        let mut start_epoch = 0usize;
+        let mut resume_cursor: Option<RunCursor> = None;
+        if let Some(rp) = &self.resume {
+            let cursor = trainer
+                .load_run_checkpoint(rp)
+                .with_context(|| format!("resuming from {}", rp.display()))?;
+            match cursor {
+                Some(c) => {
+                    if let Some(s) = c.sched_rng {
+                        sched.restore_rng(s);
+                    }
+                    let total = c.plan.as_ref().map_or(0, |p| p.num_batches());
+                    if c.next_batch >= total {
+                        start_epoch = c.epoch + 1;
+                        crate::info!(
+                            "resumed from {}: epoch {} complete, continuing at epoch {}",
+                            rp.display(),
+                            c.epoch,
+                            start_epoch
+                        );
+                    } else {
+                        start_epoch = c.epoch;
+                        crate::info!(
+                            "resumed from {}: continuing epoch {} at batch {}/{}",
+                            rp.display(),
+                            c.epoch,
+                            c.next_batch,
+                            total
+                        );
+                        resume_cursor = Some(c);
+                    }
+                }
+                None => crate::info!(
+                    "checkpoint {} carries no run cursor; training from epoch 0 \
+                     with the restored parameters",
+                    rp.display()
+                ),
+            }
+        }
+
+        for ep in start_epoch..epochs {
+            let (plan, start_batch, prior_losses) = match resume_cursor.take() {
+                Some(c) => {
+                    let plan = c
+                        .plan
+                        .ok_or_else(|| anyhow!("run checkpoint cursor lacks an epoch plan"))?;
+                    (plan, c.next_batch, c.losses)
+                }
+                None => (sched.epoch(), 0, Vec::new()),
+            };
+            // RNG stream *after* drawing this epoch: what a checkpoint of
+            // this epoch must restore so later epochs re-draw identically.
+            let rng_snap = Some(sched.rng_state());
             let stats = if workers > 1 {
-                multi.train_epoch(&mut trainer, &plan)?.into()
+                multi
+                    .train_epoch_resumable(
+                        &mut trainer,
+                        &plan,
+                        ep,
+                        start_batch,
+                        prior_losses,
+                        policy.as_ref(),
+                        rng_snap,
+                    )?
+                    .into()
             } else {
-                trainer.train_epoch(&plan)?
+                trainer.train_epoch_resumable(
+                    &plan,
+                    ep,
+                    start_batch,
+                    prior_losses,
+                    policy.as_ref(),
+                    rng_snap,
+                )?
             };
             // Validation continues chronologically from the training state.
             let val = trainer.eval_range(train_end..val_end)?;
@@ -198,6 +291,9 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         .opt("arena", "on", "tensor-buffer arenas on the gather path: on|off (deterministic)")
         .opt("shards", "1", "node shards = prefetch producers (deterministic for any count)")
         .opt("seed", "42", "RNG seed")
+        .opt("checkpoint", "", "checkpoint path (atomic, checksummed); empty = off")
+        .opt("checkpoint-every", "0", "save a run checkpoint every N batches (0 = epoch end only)")
+        .opt("resume", "", "resume training from a run checkpoint")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("configs", "configs", "model config directory")
         .parse(args)?;
@@ -214,6 +310,15 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
     plan.prefetch_depth = a.get_usize("prefetch-depth")?;
     plan.tensor_arenas = parse_switch(&a.get("arena"), "--arena")?;
     plan.shards = a.get_usize_min("shards", 1)?;
+    let ckpt = a.get("checkpoint");
+    if !ckpt.is_empty() {
+        plan.checkpoint = Some(PathBuf::from(ckpt));
+    }
+    plan.checkpoint_every = a.get_usize("checkpoint-every")?;
+    let resume = a.get("resume");
+    if !resume.is_empty() {
+        plan.resume = Some(PathBuf::from(resume));
+    }
     crate::info!(
         "dataset `{}`: |V|={} |E|={} max(t)={:.3e}",
         a.get("data"),
@@ -246,10 +351,13 @@ pub(super) fn cli_nodeclf(args: &[String]) -> Result<()> {
         .opt("clf-epochs", "50", "classifier epochs")
         .opt("threads", "8", "sampler threads")
         .opt("seed", "42", "RNG seed")
+        .opt("checkpoint", "", "checkpoint path for the pre-training phase; empty = off")
+        .opt("checkpoint-every", "0", "save a run checkpoint every N batches (0 = epoch end only)")
+        .opt("resume", "", "resume pre-training from a run checkpoint")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("configs", "configs", "model config directory")
         .parse(args)?;
-    let plan = RunPlan::new(
+    let mut plan = RunPlan::new(
         &PathBuf::from(a.get("artifacts")),
         &PathBuf::from(a.get("configs")),
         &a.get("variant"),
@@ -258,13 +366,17 @@ pub(super) fn cli_nodeclf(args: &[String]) -> Result<()> {
         a.get_usize("threads")?,
         a.get_usize("seed")? as u64,
     )?;
-    let (report, mut trainer) = plan.train_link_prediction(
-        a.get_usize("epochs")?,
-        1,
-        1,
-        &a.get("data"),
-        true,
-    )?;
+    let ckpt = a.get("checkpoint");
+    if !ckpt.is_empty() {
+        plan.checkpoint = Some(PathBuf::from(ckpt));
+    }
+    plan.checkpoint_every = a.get_usize("checkpoint-every")?;
+    let resume = a.get("resume");
+    if !resume.is_empty() {
+        plan.resume = Some(PathBuf::from(resume));
+    }
+    let (report, mut trainer) =
+        plan.train_link_prediction(a.get_usize("epochs")?, 1, 1, &a.get("data"), true)?;
     crate::info!("link-pred test AP {:.4}; harvesting label embeddings", report.test_ap);
     let clf = node_classification(
         &mut trainer,

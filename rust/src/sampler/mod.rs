@@ -96,6 +96,25 @@ impl<'g> SamplerHandle<'g> {
             SamplerHandle::Sharded(s) => s.num_shards(),
         }
     }
+
+    /// Snapshot the engine's pointer tables for checkpointing (sharded:
+    /// concatenated in shard order). Safe to call concurrently with
+    /// sampling — pointers are monotone hints that every read corrects,
+    /// so any interleaving yields a valid snapshot.
+    pub fn pointer_snapshot(&self) -> Vec<u32> {
+        match self {
+            SamplerHandle::Flat(s) => s.pointer_snapshot(),
+            SamplerHandle::Sharded(s) => s.pointer_snapshot(),
+        }
+    }
+
+    /// Restore a [`Self::pointer_snapshot`] (errors on size mismatch).
+    pub fn pointer_restore(&self, words: &[u32]) -> anyhow::Result<()> {
+        match self {
+            SamplerHandle::Flat(s) => s.pointer_restore(words),
+            SamplerHandle::Sharded(s) => s.pointer_restore(words),
+        }
+    }
 }
 
 /// Neighbor selection strategy within the candidate window (paper §2.3).

@@ -109,6 +109,18 @@ impl<'g> TemporalSampler<'g> {
         self.ptrs.reset();
     }
 
+    /// Snapshot the pointer table for checkpointing (see
+    /// [`PointerState::snapshot`] — a perf carry-over, not a correctness
+    /// input).
+    pub fn pointer_snapshot(&self) -> Vec<u32> {
+        self.ptrs.snapshot()
+    }
+
+    /// Restore a pointer-table snapshot (errors on size mismatch).
+    pub fn pointer_restore(&self, words: &[u32]) -> anyhow::Result<()> {
+        self.ptrs.restore(words)
+    }
+
     /// Sample the multi-hop, multi-snapshot MFG for a batch of roots.
     ///
     /// `batch_seed` + per-root indexes make the draw deterministic and

@@ -102,6 +102,37 @@ impl PointerState {
         }
     }
 
+    /// Snapshot the pointer table (checkpointing). Because every read
+    /// *corrects* the stored hint (overshoot → bounded binary search,
+    /// undershoot → forward scan), any snapshot taken at or before the
+    /// resume point yields bitwise-identical sampling — the snapshot is a
+    /// performance carry-over (skipping the O(|E|) re-scan after resume),
+    /// never a correctness input. Empty in [`PointerMode::BinarySearch`].
+    pub fn snapshot(&self) -> Vec<u32> {
+        self.ptrs.iter().map(|p| p.load(Ordering::Acquire)).collect()
+    }
+
+    /// Restore a [`Self::snapshot`]. Errors on a table-size mismatch (a
+    /// checkpoint from a different graph/mode) rather than restoring a
+    /// nonsensical table.
+    pub fn restore(&self, words: &[u32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            words.len() == self.ptrs.len(),
+            "pointer snapshot has {} entries, table holds {}",
+            words.len(),
+            self.ptrs.len()
+        );
+        for (p, &w) in self.ptrs.iter().zip(words) {
+            p.store(w, Ordering::Release);
+        }
+        Ok(())
+    }
+
+    /// Number of `u32` entries a snapshot of this table carries.
+    pub fn snapshot_len(&self) -> usize {
+        self.ptrs.len()
+    }
+
     /// Boundary timestamp of pointer `k` for root time `t`.
     #[inline]
     fn boundary(&self, t: f64, k: usize) -> f64 {
@@ -146,7 +177,15 @@ impl PointerState {
 
         let base = v as usize * width;
         let _guard = if self.mode == PointerMode::Locked {
-            Some(self.locks[v as usize & self.lock_mask].lock().unwrap())
+            // Recover a poisoned lock instead of cascading the panic: the
+            // guarded state is monotone u32 maxima, valid at any value, so
+            // a producer that panicked mid-advance (e.g. injected faults)
+            // must not take every later sampling call down with it.
+            Some(
+                self.locks[v as usize & self.lock_mask]
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner),
+            )
         } else {
             None
         };
@@ -285,6 +324,29 @@ mod tests {
                 }
             });
         }
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_preserves_reads() {
+        let csr = csr();
+        let ps = PointerState::new(csr.num_nodes, 1, f64::INFINITY, PointerMode::Atomic);
+        windows(&ps, &csr, 0, 6.0, 1);
+        let snap = ps.snapshot();
+        assert_eq!(snap.len(), ps.snapshot_len());
+
+        let restored = PointerState::new(csr.num_nodes, 1, f64::INFINITY, PointerMode::Atomic);
+        restored.restore(&snap).unwrap();
+        // Restored table reads exactly like the original, including the
+        // overshoot-correction path for an earlier root.
+        assert_eq!(windows(&restored, &csr, 0, 2.5, 1), windows(&ps, &csr, 0, 2.5, 1));
+        assert_eq!(windows(&restored, &csr, 0, 6.0, 1), vec![(0, 5)]);
+
+        // Size mismatch must error, not scribble.
+        assert!(restored.restore(&snap[..1]).is_err());
+        // BinarySearch mode has no table: empty snapshot round-trips.
+        let bs = PointerState::new(csr.num_nodes, 1, f64::INFINITY, PointerMode::BinarySearch);
+        assert_eq!(bs.snapshot().len(), 0);
+        bs.restore(&[]).unwrap();
     }
 
     #[test]

@@ -133,6 +133,35 @@ impl ShardedSampler {
         }
     }
 
+    /// Snapshot all shards' pointer tables, concatenated in shard order
+    /// (for checkpointing; shard table sizes are deterministic from the
+    /// graph + shard count, so the flat layout is self-describing).
+    pub fn pointer_snapshot(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.ptrs.iter().map(|p| p.snapshot_len()).sum());
+        for p in &self.ptrs {
+            out.extend(p.snapshot());
+        }
+        out
+    }
+
+    /// Restore a concatenated pointer snapshot (errors on size mismatch,
+    /// e.g. a checkpoint taken under a different shard count).
+    pub fn pointer_restore(&self, words: &[u32]) -> anyhow::Result<()> {
+        let total: usize = self.ptrs.iter().map(|p| p.snapshot_len()).sum();
+        anyhow::ensure!(
+            words.len() == total,
+            "sharded pointer snapshot has {} entries, tables hold {total}",
+            words.len()
+        );
+        let mut off = 0;
+        for p in &self.ptrs {
+            let n = p.snapshot_len();
+            p.restore(&words[off..off + n])?;
+            off += n;
+        }
+        Ok(())
+    }
+
     /// Allocating wrapper around [`Self::sample_into`].
     pub fn sample(&self, roots: &[u32], root_ts: &[f64], batch_seed: u64) -> Mfg {
         let mut mfg = Mfg::new();
@@ -154,10 +183,14 @@ impl ShardedSampler {
         for hop_blocks in &mut mfg.snapshots {
             hop_blocks.resize_with(hops, MfgBlock::new);
         }
+        // Recover a poisoned scratch pool instead of cascading: scratch
+        // sets are plain recycled buffers (resized before every use), so
+        // one producer panicking between lock points must not turn every
+        // other producer's sample call into a second panic.
         let mut set = self
             .scratch
             .lock()
-            .unwrap()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
             .pop()
             .unwrap_or_else(|| ScratchSet::new(self.csr.num_shards()));
         for s in 0..num_snapshots {
@@ -172,7 +205,7 @@ impl ShardedSampler {
                 self.fill_block(&mut hop_blocks[l], *layer, s, l, batch_seed, &mut set);
             }
         }
-        self.scratch.lock().unwrap().push(set);
+        self.scratch.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(set);
     }
 
     /// Fill one (snapshot, hop) block: select roots by owning shard, fill

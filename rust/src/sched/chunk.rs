@@ -45,6 +45,34 @@ impl EpochPlan {
     pub fn seeded(&self) -> impl Iterator<Item = (u64, std::ops::Range<usize>)> + '_ {
         self.batches.iter().enumerate().map(|(i, r)| (i as u64, r.clone()))
     }
+
+    /// Flatten to `[start_offset, b0.start, b0.end, b1.start, …]` for the
+    /// checkpoint cursor (resume must replay the *same* epoch plan — the
+    /// chunk offset was drawn before the interruption).
+    pub fn to_words(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(1 + 2 * self.batches.len());
+        out.push(self.start_offset as u32);
+        for b in &self.batches {
+            out.push(b.start as u32);
+            out.push(b.end as u32);
+        }
+        out
+    }
+
+    /// Inverse of [`Self::to_words`].
+    pub fn from_words(words: &[u32]) -> anyhow::Result<EpochPlan> {
+        anyhow::ensure!(
+            !words.is_empty() && words.len() % 2 == 1,
+            "malformed epoch-plan words (len {})",
+            words.len()
+        );
+        let start_offset = words[0] as usize;
+        let batches = words[1..]
+            .chunks_exact(2)
+            .map(|p| p[0] as usize..p[1] as usize)
+            .collect();
+        Ok(EpochPlan { start_offset, batches })
+    }
 }
 
 impl ChunkScheduler {
@@ -74,6 +102,18 @@ impl ChunkScheduler {
             chunk_size: 0, // sentinel: plain mode
             rng: Rng::new(0),
         }
+    }
+
+    /// Snapshot the offset-draw RNG stream (checkpoint resume: epochs
+    /// after the restored one must draw the same chunk offsets as the
+    /// uninterrupted run).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the offset-draw RNG stream from a checkpoint snapshot.
+    pub fn restore_rng(&mut self, state: [u64; 4]) {
+        self.rng = Rng::from_state(state);
     }
 
     pub fn chunks_per_batch(&self) -> usize {
@@ -175,6 +215,25 @@ mod tests {
             assert_eq!(*seed, i as u64);
             assert_eq!(range, &plan.batches[i]);
         }
+    }
+
+    #[test]
+    fn plan_words_roundtrip_and_rng_state_resumes() {
+        let mut s = ChunkScheduler::new(100_000, 4800, 300, 7).unwrap();
+        let plan = s.epoch();
+        let rt = EpochPlan::from_words(&plan.to_words()).unwrap();
+        assert_eq!(rt.start_offset, plan.start_offset);
+        assert_eq!(rt.batches, plan.batches);
+        assert!(EpochPlan::from_words(&[]).is_err());
+        assert!(EpochPlan::from_words(&[0, 1]).is_err(), "even length is malformed");
+
+        // RNG snapshot: a restored scheduler draws the same future offsets.
+        let snap = s.rng_state();
+        let future: Vec<usize> = (0..8).map(|_| s.epoch().start_offset).collect();
+        let mut s2 = ChunkScheduler::new(100_000, 4800, 300, 0).unwrap();
+        s2.restore_rng(snap);
+        let resumed: Vec<usize> = (0..8).map(|_| s2.epoch().start_offset).collect();
+        assert_eq!(future, resumed);
     }
 
     #[test]

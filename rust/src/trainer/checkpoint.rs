@@ -1,83 +1,302 @@
 //! Checkpointing: persist and restore full training state — parameters,
-//! Adam moments, step counter, node memory, and mailbox — so long
-//! (billion-edge) runs survive interruption and trained models can be
-//! shipped to the node-classification pipeline without retraining.
+//! Adam moments, step counter, node memory, and mailbox — plus everything
+//! mid-epoch resume needs: the epoch/batch cursor, the per-batch losses
+//! already produced, the chunk scheduler's RNG stream, the epoch plan in
+//! flight, and the sampler's snapshot-pointer tables. Long (billion-edge)
+//! runs survive interruption, and trained models ship to the
+//! node-classification pipeline without retraining.
 //!
-//! Format: the crate's binary container (`util::binfmt`), one section per
-//! state component, independent of the artifacts (a checkpoint is valid
-//! as long as the variant's dims match).
+//! ## Sections
+//!
+//! One [`crate::util::binfmt`] section per component (v2 container:
+//! per-section CRC32 + footer checksum, see the binfmt module docs):
+//!
+//! | section          | type  | contents                                     |
+//! |------------------|-------|----------------------------------------------|
+//! | `variant`        | bytes | model variant name (validated on load)        |
+//! | `meta`           | u32   | `[param_count, uses_memory, num_nodes]`       |
+//! | `seed`           | bytes | trainer seed, 8 LE bytes (warn on mismatch)   |
+//! | `params`/`adam_m`/`adam_v`/`step` | f32 | learnable state            |
+//! | `memory`,`memory_ts` | f32/f64 | node memory (memory models only)       |
+//! | `mail`,`mail_ts`,`mail_count` | f32/f64 | mailbox (memory models only) |
+//! | `sampler_ptrs`   | u32   | concatenated pointer tables (perf carry-over) |
+//! | `cursor_meta`    | u32   | `[epoch, next_batch]` (run checkpoints only)  |
+//! | `cursor_losses`  | f64   | losses of the current epoch's completed batches |
+//! | `sched_rng`      | bytes | chunk-scheduler RNG state, 32 LE bytes        |
+//! | `plan_words`     | u32   | the in-flight [`EpochPlan`], flattened        |
+//!
+//! ## Atomic-write protocol
+//!
+//! Saves go through [`crate::util::binfmt::Writer::write_atomic`]: temp
+//! sibling + fsync + rename + directory fsync. A crash mid-save leaves the
+//! previous checkpoint intact; a torn temp file is overwritten by the next
+//! save. Loads parse in memory with per-section CRC verification, so a
+//! truncated or bit-flipped file is a *named* error, never restored state.
+//!
+//! ## Resume semantics
+//!
+//! A *run checkpoint* ([`Trainer::save_run_checkpoint`]) carries a
+//! [`RunCursor`]. Resume restores the state, then continues the recorded
+//! epoch from `next_batch` **without** the epoch-boundary
+//! `reset_chronology` — memory/mailbox/pointers continue mid-stream
+//! exactly as the uninterrupted run's. Because every batch's negatives and
+//! samples come from a per-batch RNG (`cfg.seed ^ batch_index`), and
+//! snapshot pointers are self-correcting hints, the resumed run is
+//! bitwise-identical to the uninterrupted one — losses, params, memory,
+//! mailbox (proven in `rust/tests/fault_tolerance.rs` for shards ∈ {1,2}).
+//! The sampler pointer tables are restored when shapes match and silently
+//! rebuilt (with a warning) when not: they affect speed, never values.
 
-use super::single::Trainer;
-use crate::util::binfmt::{Reader, Writer};
+use super::single::{Preparer, TrainState, Trainer};
+use crate::models::Model;
+use crate::sched::EpochPlan;
+use crate::util::binfmt::{self, Reader, Writer};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// Mid-run position carried by a run checkpoint: where training stopped
+/// and everything needed to continue it deterministically.
+#[derive(Debug, Clone)]
+pub struct RunCursor {
+    /// Epoch index being trained when the checkpoint was taken.
+    pub epoch: usize,
+    /// First batch of that epoch still to train (its losses are absent
+    /// from `losses`). Equal to the plan's batch count at epoch end.
+    pub next_batch: usize,
+    /// Losses of the current epoch's completed batches, in order.
+    pub losses: Vec<f64>,
+    /// Chunk-scheduler RNG stream *after* drawing the current epoch's
+    /// offset (future epochs re-draw identically).
+    pub sched_rng: Option<[u64; 4]>,
+    /// The epoch plan in flight (resume must finish this exact plan).
+    pub plan: Option<EpochPlan>,
+}
+
+/// When and where the training loop checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    pub path: std::path::PathBuf,
+    /// Save a run checkpoint after every N completed batches (0 = only at
+    /// epoch end).
+    pub every: usize,
+}
+
+impl CheckpointPolicy {
+    pub fn new(path: impl Into<std::path::PathBuf>, every: usize) -> CheckpointPolicy {
+        CheckpointPolicy { path: path.into(), every }
+    }
+}
+
 impl Trainer<'_> {
-    /// Write the full training state to `path`.
+    /// Write the full training state to `path` (atomic + checksummed), no
+    /// run cursor — a terminal "model export" checkpoint.
     pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
-        let mut w = Writer::new();
-        w.put_bytes("variant", self.model.name.as_bytes().to_vec());
-        w.put_u32(
-            "meta",
-            vec![
-                self.model.mf.param_count as u32,
-                self.model.uses_memory() as u32,
-                self.graph.num_nodes as u32,
-            ],
-        );
-        w.put_f32("params", self.state.params.to_vec());
-        w.put_f32("adam_m", self.state.adam_m.to_vec());
-        w.put_f32("adam_v", self.state.adam_v.to_vec());
-        w.put_f32("step", vec![self.state.step]);
-        if let Some(mem) = &self.state.memory {
-            w.put_f32("memory", mem.raw().to_vec());
-            w.put_f64(
-                "memory_ts",
-                (0..self.graph.num_nodes as u32).map(|v| mem.last_update(v)).collect(),
-            );
-        }
-        if let Some(mb) = &self.state.mailbox {
-            let (mail, ts, count) = mb.raw_parts();
-            w.put_f32("mail", mail.to_vec());
-            w.put_f64("mail_ts", ts.to_vec());
-            w.put_f64("mail_count", count.iter().map(|&c| c as f64).collect());
-        }
-        w.write_to(path).with_context(|| format!("writing checkpoint {}", path.display()))
+        save_checkpoint_parts(self.model, self.graph, &self.prep, &self.state, None, path)
     }
 
-    /// Restore state from `path`; validates variant name and sizes.
+    /// Write a *run* checkpoint: full state plus the [`RunCursor`] a
+    /// deterministic mid-epoch resume needs.
+    pub fn save_run_checkpoint(&self, path: &Path, cursor: &RunCursor) -> Result<()> {
+        save_checkpoint_parts(self.model, self.graph, &self.prep, &self.state, Some(cursor), path)
+    }
+
+    /// Restore state from `path`; validates variant name and sizes. Any
+    /// run cursor in the file is ignored (state-only restore).
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
-        let mut r = Reader::open(path)?;
-        let variant = String::from_utf8(r.take_bytes("variant")?)?;
+        self.load_run_checkpoint(path).map(|_| ())
+    }
+
+    /// Restore state from `path` and return the run cursor, if the file
+    /// carries one (`None` for state-only checkpoints: resume from the
+    /// beginning with the restored parameters).
+    pub fn load_run_checkpoint(&mut self, path: &Path) -> Result<Option<RunCursor>> {
+        let mut bytes = std::fs::read(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        if let Some(off) = self.prep.cfg.faults.take_ckpt_read_flip() {
+            // Injected silent-corruption fault: flip one bit of the image
+            // before parsing (the CRC layer must catch it).
+            if !bytes.is_empty() {
+                let off = off % (bytes.len() * 8);
+                bytes[off / 8] ^= 1 << (off % 8);
+            }
+        }
+        let mut r = Reader::from_bytes(&bytes)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+
+        let variant = String::from_utf8(r.take_bytes("variant")?)
+            .context("checkpoint `variant` section is not UTF-8")?;
         if variant != self.model.name {
             bail!("checkpoint is for `{variant}`, trainer runs `{}`", self.model.name);
         }
         let meta = r.take_u32("meta")?;
-        if meta[0] as usize != self.model.mf.param_count {
-            bail!("checkpoint param_count {} != model {}", meta[0], self.model.mf.param_count);
-        }
-        if meta[2] as usize != self.graph.num_nodes {
+        let [param_count, _uses_memory, num_nodes] = meta[..] else {
             bail!(
-                "checkpoint was taken on a graph with {} nodes, have {}",
-                meta[2],
+                "checkpoint `meta` section has {} entries, expected 3 \
+                 ([param_count, uses_memory, num_nodes]) — file is from an \
+                 incompatible version or corrupt",
+                meta.len()
+            );
+        };
+        if param_count as usize != self.model.mf.param_count {
+            bail!("checkpoint param_count {param_count} != model {}", self.model.mf.param_count);
+        }
+        if num_nodes as usize != self.graph.num_nodes {
+            bail!(
+                "checkpoint was taken on a graph with {num_nodes} nodes, have {}",
                 self.graph.num_nodes
             );
         }
-        self.state.params.set(r.take_f32("params")?);
-        self.state.adam_m.set(r.take_f32("adam_m")?);
-        self.state.adam_v.set(r.take_f32("adam_v")?);
-        self.state.step = r.take_f32("step")?[0];
+        if let Some(seed_bytes) = r.opt_bytes("seed") {
+            if let Ok(b) = <[u8; 8]>::try_from(seed_bytes.as_slice()) {
+                let seed = u64::from_le_bytes(b);
+                if seed != self.prep.cfg.seed {
+                    crate::warn_!(
+                        "checkpoint was trained with seed {seed}, trainer uses {} — \
+                         resumed batches will not reproduce the original run",
+                        self.prep.cfg.seed
+                    );
+                }
+            }
+        }
+        self.state.params.set(r.take_f32("params").context("restoring params")?);
+        self.state.adam_m.set(r.take_f32("adam_m").context("restoring adam_m")?);
+        self.state.adam_v.set(r.take_f32("adam_v").context("restoring adam_v")?);
+        let step = r.take_f32("step").context("restoring step")?;
+        let [step] = step[..] else {
+            bail!("checkpoint `step` section has {} entries, expected 1", step.len());
+        };
+        self.state.step = step;
         if let Some(mem) = &mut self.state.memory {
-            let rows = r.take_f32("memory")?;
-            let ts = r.take_f64("memory_ts")?;
-            mem.restore(&rows, &ts)?;
+            let rows = r.take_f32("memory").context("restoring node memory")?;
+            let ts = r.take_f64("memory_ts").context("restoring node memory timestamps")?;
+            mem.restore(&rows, &ts).context("restoring node memory")?;
         }
         if let Some(mb) = &mut self.state.mailbox {
-            let mail = r.take_f32("mail")?;
-            let ts = r.take_f64("mail_ts")?;
-            let count: Vec<u64> = r.take_f64("mail_count")?.iter().map(|&c| c as u64).collect();
-            mb.restore(&mail, &ts, &count)?;
+            let mail = r.take_f32("mail").context("restoring mailbox")?;
+            let ts = r.take_f64("mail_ts").context("restoring mailbox timestamps")?;
+            let count: Vec<u64> = r
+                .take_f64("mail_count")
+                .context("restoring mailbox counts")?
+                .iter()
+                .map(|&c| c as u64)
+                .collect();
+            mb.restore(&mail, &ts, &count).context("restoring mailbox")?;
         }
-        Ok(())
+        // Pointer tables are hints: restore when shapes match, rebuild
+        // (reset + warn) when they don't — values are unaffected either
+        // way, only the post-resume re-scan cost.
+        if let Some(sampler) = self.prep.sampler() {
+            match r.opt_u32("sampler_ptrs") {
+                Some(words) => {
+                    if let Err(e) = sampler.pointer_restore(&words) {
+                        crate::warn_!(
+                            "checkpoint pointer tables do not fit this sampler \
+                             ({e:#}); resetting — resume is unaffected, the first \
+                             batches re-scan"
+                        );
+                        sampler.reset();
+                    }
+                }
+                None => sampler.reset(),
+            }
+        }
+
+        let Some(cmeta) = r.opt_u32("cursor_meta") else { return Ok(None) };
+        let [epoch, next_batch] = cmeta[..] else {
+            bail!("checkpoint `cursor_meta` has {} entries, expected 2", cmeta.len());
+        };
+        let losses = r.opt_f64("cursor_losses").unwrap_or_default();
+        let sched_rng = match r.opt_bytes("sched_rng") {
+            Some(b) => {
+                let b: [u8; 32] = b.as_slice().try_into().map_err(|_| {
+                    anyhow::anyhow!("checkpoint `sched_rng` section is not 32 bytes")
+                })?;
+                let mut s = [0u64; 4];
+                for (i, w) in s.iter_mut().enumerate() {
+                    *w = u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+                }
+                Some(s)
+            }
+            None => None,
+        };
+        let plan = match r.opt_u32("plan_words") {
+            Some(words) => Some(EpochPlan::from_words(&words).context("restoring epoch plan")?),
+            None => None,
+        };
+        Ok(Some(RunCursor {
+            epoch: epoch as usize,
+            next_batch: next_batch as usize,
+            losses,
+            sched_rng,
+            plan,
+        }))
     }
+}
+
+/// Save over split borrows, so the pipelined epoch's consumer (which holds
+/// `&mut state` while the producers borrow `prep`) can checkpoint
+/// mid-epoch. Snapshotting pointers concurrently with producer sampling is
+/// sound: pointers are monotone hints corrected on every read, so any
+/// interleaving is a valid snapshot.
+pub(crate) fn save_checkpoint_parts(
+    model: &Model,
+    graph: &crate::graph::TemporalGraph,
+    prep: &Preparer<'_>,
+    state: &TrainState,
+    cursor: Option<&RunCursor>,
+    path: &Path,
+) -> Result<()> {
+    if prep.cfg.faults.take_ckpt_write_error() {
+        // Injected I/O fault: emulate a crash mid-write — a torn temp
+        // file appears, the real checkpoint is never touched (that is the
+        // atomic protocol's whole point), and the caller gets an error.
+        let _ = std::fs::write(binfmt::tmp_sibling(path), b"torn half-written checkpoint");
+        bail!("checkpoint write failed (injected I/O error) for {}", path.display());
+    }
+    let mut w = Writer::new();
+    w.put_bytes("variant", model.name.as_bytes().to_vec());
+    w.put_u32(
+        "meta",
+        vec![
+            model.mf.param_count as u32,
+            model.uses_memory() as u32,
+            graph.num_nodes as u32,
+        ],
+    );
+    w.put_bytes("seed", prep.cfg.seed.to_le_bytes().to_vec());
+    w.put_f32("params", state.params.to_vec());
+    w.put_f32("adam_m", state.adam_m.to_vec());
+    w.put_f32("adam_v", state.adam_v.to_vec());
+    w.put_f32("step", vec![state.step]);
+    if let Some(mem) = &state.memory {
+        w.put_f32("memory", mem.raw().to_vec());
+        w.put_f64(
+            "memory_ts",
+            (0..graph.num_nodes as u32).map(|v| mem.last_update(v)).collect(),
+        );
+    }
+    if let Some(mb) = &state.mailbox {
+        let (mail, ts, count) = mb.raw_parts();
+        w.put_f32("mail", mail.to_vec());
+        w.put_f64("mail_ts", ts.to_vec());
+        w.put_f64("mail_count", count.iter().map(|&c| c as f64).collect());
+    }
+    if let Some(sampler) = prep.sampler() {
+        w.put_u32("sampler_ptrs", sampler.pointer_snapshot());
+    }
+    if let Some(c) = cursor {
+        w.put_u32("cursor_meta", vec![c.epoch as u32, c.next_batch as u32]);
+        w.put_f64("cursor_losses", c.losses.clone());
+        if let Some(s) = c.sched_rng {
+            let mut b = Vec::with_capacity(32);
+            for w64 in s {
+                b.extend_from_slice(&w64.to_le_bytes());
+            }
+            w.put_bytes("sched_rng", b);
+        }
+        if let Some(p) = &c.plan {
+            w.put_u32("plan_words", p.to_words());
+        }
+    }
+    w.write_atomic(path).with_context(|| format!("writing checkpoint {}", path.display()))
 }

@@ -15,14 +15,22 @@
 //! (pool-recycled input tensors; the zero-allocation gather path), and
 //! `TrainerCfg::shards` (node-sharded sampling + N prefetch producers +
 //! single-owner state gathers; bitwise-identical for any count).
+//!
+//! The loop is fault-tolerant: producer panics/errors are supervised and
+//! degrade to in-line preparation (`single.rs`), checkpoints are atomic
+//! and checksummed with full mid-epoch resume cursors (`checkpoint.rs`),
+//! and non-finite losses ([`Diverged`]) roll back to the last checkpoint
+//! instead of training on garbage.
 
 mod checkpoint;
 mod multi;
 mod nodeclf;
 mod single;
 
+pub use checkpoint::{CheckpointPolicy, RunCursor};
 pub use multi::{MultiEpochStats, MultiTrainer};
 pub use nodeclf::{node_classification, NodeClfResult};
 pub use single::{
-    EpochStats, EvalResult, PreparedBatch, PrepArena, Preparer, Trainer, TrainerCfg, TrainState,
+    Diverged, EpochStats, EvalResult, PreparedBatch, PrepArena, Preparer, Trainer, TrainerCfg,
+    TrainState,
 };

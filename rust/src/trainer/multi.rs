@@ -24,10 +24,22 @@
 //! inside the group, strictly synchronously. All modes consume identical
 //! batches in identical group order, so they produce bitwise-identical
 //! losses for any producer count (`rust/tests/pipeline_identity.rs`).
+//!
+//! **Fault tolerance.** The shard producers are supervised (see
+//! [`spawn_producers`]): a panicking or erroring producer retries its
+//! batch with bounded backoff, and if it stays unrecoverable the merged
+//! consumer degrades that producer's share to in-line sequential
+//! preparation with a structured warning — the epoch finishes either
+//! way, bitwise-identical, instead of aborting. Group-boundary run
+//! checkpoints ([`MultiTrainer::train_epoch_resumable`]) give the
+//! data-parallel path the same kill-and-resume guarantee as the single
+//! trainer, and a non-finite loss in the sync phase rolls back to the
+//! last checkpoint instead of averaging garbage into every replica.
 
+use super::checkpoint::{save_checkpoint_parts, CheckpointPolicy, RunCursor};
 use super::single::{
-    apply_state_updates_impl, spawn_producers, EpochStats, PreparedBatch, Preparer, TrainIdx,
-    TrainState, Trainer,
+    apply_state_updates_impl, panic_message, spawn_producers, Diverged, EpochStats, PreparedBatch,
+    Preparer, TrainIdx, TrainState, Trainer,
 };
 use crate::models::Model;
 use crate::runtime::Tensor;
@@ -78,18 +90,79 @@ impl MultiTrainer {
         trainer: &mut Trainer<'_>,
         plan: &EpochPlan,
     ) -> Result<MultiEpochStats> {
-        trainer.reset_chronology();
+        self.train_epoch_resumable(trainer, plan, 0, 0, Vec::new(), None, None)
+    }
+
+    /// [`Self::train_epoch`] with checkpointing and mid-epoch resume, the
+    /// data-parallel counterpart of [`Trainer::train_epoch_resumable`].
+    /// Checkpoints land on group boundaries (after the sync phase, when
+    /// state is settled), so `start_batch` must be group-aligned — which
+    /// every cursor this method writes is, by construction. A
+    /// [`Diverged`] sync phase rolls state back to the last checkpoint
+    /// before surfacing the error.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_epoch_resumable(
+        &self,
+        trainer: &mut Trainer<'_>,
+        plan: &EpochPlan,
+        epoch: usize,
+        start_batch: usize,
+        prior_losses: Vec<f64>,
+        policy: Option<&CheckpointPolicy>,
+        sched_rng: Option<[u64; 4]>,
+    ) -> Result<MultiEpochStats> {
+        let workers = self.workers;
+        let total = plan.num_batches();
+        ensure!(
+            start_batch <= total,
+            "resume cursor at batch {start_batch}, but the epoch plan has {total} batches"
+        );
+        ensure!(
+            start_batch % workers == 0 || start_batch == total,
+            "multi-trainer resume must start on a group boundary \
+             (cursor batch {start_batch}, group size {workers})"
+        );
+        if start_batch == 0 {
+            trainer.reset_chronology();
+        }
         let t0 = Instant::now();
         let model = trainer.model;
+        let graph = trainer.graph;
         let idx = TrainIdx::new(model)?;
         let deliver = trainer.prep.cfg.deliver_to_neighbors;
-        let workers = self.workers;
         let prep = &trainer.prep;
         let state = &mut trainer.state;
-        let mut losses = Vec::with_capacity(plan.batches.len());
+        let mut losses = prior_losses;
         let mut steps = 0usize;
+        let mut done = start_batch;
+        let mut last_ckpt = start_batch;
 
-        if self.prefetch && plan.num_batches() > workers {
+        // One post-sync bookkeeping step shared by both modes: count the
+        // group, write a run checkpoint when due (and always at epoch
+        // end, so multi-epoch resume works with `every == 0` too).
+        macro_rules! after_group {
+            ($group_len:expr) => {{
+                done += $group_len;
+                steps += 1;
+                if let Some(pol) = policy {
+                    let due = pol.every > 0 && done - last_ckpt >= pol.every;
+                    if due || done == total {
+                        let cursor = RunCursor {
+                            epoch,
+                            next_batch: done,
+                            losses: losses.clone(),
+                            sched_rng,
+                            plan: Some(plan.clone()),
+                        };
+                        let st: &TrainState = &*state;
+                        save_checkpoint_parts(model, graph, prep, st, Some(&cursor), &pol.path)?;
+                        last_ckpt = done;
+                    }
+                }
+            }};
+        }
+
+        let run = if self.prefetch && total - start_batch > workers {
             // Shard-producer mode: `producers` threads sample + gather for
             // all workers (round-robin by batch index, merged back in
             // order), queue bounded at (group in flight + depth) total.
@@ -98,8 +171,14 @@ impl MultiTrainer {
                 // `merged` is a local of this closure: every exit path
                 // (including `?`) drops the receivers, which unblocks a
                 // producer waiting on a full queue so the scope can join.
-                let mut merged =
-                    spawn_producers(scope, prep, true, plan.seeded(), self.producers, depth);
+                let mut merged = spawn_producers(
+                    scope,
+                    prep,
+                    true,
+                    plan.seeded().skip(start_batch),
+                    self.producers,
+                    depth,
+                );
                 // Consumer (this thread).
                 loop {
                     let mut pbs = Vec::with_capacity(workers);
@@ -118,56 +197,86 @@ impl MultiTrainer {
                         group.push(r?);
                     }
                     sync_group(model, deliver, &idx, state, &group, &mut losses)?;
-                    steps += 1;
+                    after_group!(group.len());
                     for (pb, _) in group {
                         merged.recycle(pb.into_arena());
                     }
                 }
-            })?;
+            })
         } else {
-            // Synchronous mode: workers prepare + execute their own batch
-            // per group (the pre-producer behavior; prefetch baseline).
-            for (gi, group_ranges) in plan.batches.chunks(workers).enumerate() {
-                let state_ref: &TrainState = &*state;
-                let results: Vec<Result<(PreparedBatch, Vec<Tensor>)>> =
-                    std::thread::scope(|scope| {
-                        let handles: Vec<_> = group_ranges
-                            .iter()
-                            .enumerate()
-                            .map(|(w, range)| {
-                                let range = range.clone();
-                                let seed = (gi * workers + w) as u64;
-                                scope.spawn(move || -> Result<(PreparedBatch, Vec<Tensor>)> {
-                                    let mut pb = prep.prepare_static(range, seed, true)?;
-                                    let inputs = prep.finish_inputs(state_ref, &mut pb)?;
-                                    let outputs =
-                                        model.train_exe.run(&inputs).context("worker train step")?;
-                                    Ok((pb, outputs))
+            (|| -> Result<()> {
+                // Synchronous mode: workers prepare + execute their own
+                // batch per group (the pre-producer behavior; prefetch
+                // baseline).
+                for (gi, group_ranges) in plan.batches[start_batch..].chunks(workers).enumerate() {
+                    let state_ref: &TrainState = &*state;
+                    let results: Vec<Result<(PreparedBatch, Vec<Tensor>)>> =
+                        std::thread::scope(|scope| {
+                            let handles: Vec<_> = group_ranges
+                                .iter()
+                                .enumerate()
+                                .map(|(w, range)| {
+                                    let range = range.clone();
+                                    let seed = (start_batch + gi * workers + w) as u64;
+                                    scope.spawn(move || -> Result<(PreparedBatch, Vec<Tensor>)> {
+                                        let mut pb = prep.prepare_static(range, seed, true)?;
+                                        let inputs = prep.finish_inputs(state_ref, &mut pb)?;
+                                        let outputs = model
+                                            .train_exe
+                                            .run(&inputs)
+                                            .context("worker train step")?;
+                                        Ok((pb, outputs))
+                                    })
                                 })
-                            })
-                            .collect();
-                        handles
-                            .into_iter()
-                            .enumerate()
-                            .map(|(w, h)| join_worker(w, h))
-                            .collect()
-                    });
-                let mut group = Vec::with_capacity(results.len());
-                for r in results {
-                    group.push(r?);
+                                .collect();
+                            handles
+                                .into_iter()
+                                .enumerate()
+                                .map(|(w, h)| join_worker(w, h))
+                                .collect()
+                        });
+                    let mut group = Vec::with_capacity(results.len());
+                    for r in results {
+                        group.push(r?);
+                    }
+                    sync_group(model, deliver, &idx, state, &group, &mut losses)?;
+                    after_group!(group.len());
                 }
-                sync_group(model, deliver, &idx, state, &group, &mut losses)?;
-                steps += 1;
+                Ok(())
+            })()
+        };
+
+        match run {
+            Ok(()) => Ok(MultiEpochStats {
+                mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+                global_steps: steps,
+                seconds: t0.elapsed().as_secs_f64(),
+                workers: self.workers,
+                losses,
+            }),
+            Err(e) => {
+                if e.downcast_ref::<Diverged>().is_some() {
+                    if let Some(pol) = policy.filter(|p| p.path.exists()) {
+                        return match trainer.load_run_checkpoint(&pol.path) {
+                            Ok(cursor) => {
+                                let at = cursor
+                                    .map(|c| format!("epoch {}, batch {}", c.epoch, c.next_batch))
+                                    .unwrap_or_else(|| "pre-training state".to_string());
+                                Err(e.context(format!(
+                                    "rolled training state back to checkpoint {} ({at})",
+                                    pol.path.display()
+                                )))
+                            }
+                            Err(load_err) => Err(e.context(format!(
+                                "rollback to checkpoint {} also failed: {load_err:#}",
+                                pol.path.display()
+                            ))),
+                        };
+                    }
+                }
+                Err(e)
             }
         }
-
-        Ok(MultiEpochStats {
-            mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
-            global_steps: steps,
-            seconds: t0.elapsed().as_secs_f64(),
-            workers: self.workers,
-            losses,
-        })
     }
 }
 
@@ -178,12 +287,7 @@ fn join_worker<T>(w: usize, h: std::thread::ScopedJoinHandle<'_, Result<T>>) -> 
     match h.join() {
         Ok(r) => r,
         Err(payload) => {
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".to_string());
-            Err(anyhow::anyhow!("trainer worker {w} panicked: {msg}"))
+            Err(anyhow::anyhow!("trainer worker {w} panicked: {}", panic_message(payload)))
         }
     }
 }
@@ -224,7 +328,11 @@ fn sync_group(
 ) -> Result<()> {
     for (_, outputs) in group {
         let l = outputs[idx.loss].scalar_f32()? as f64;
-        ensure!(l.is_finite(), "training diverged: loss = {l}");
+        if !l.is_finite() {
+            // Typed so the resumable epoch can roll back to the last
+            // checkpoint instead of averaging garbage into every replica.
+            return Err(anyhow::Error::new(Diverged { loss: l }));
+        }
         losses.push(l);
     }
     let inv = 1.0 / group.len() as f32;

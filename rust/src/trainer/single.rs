@@ -40,11 +40,16 @@ use crate::runtime::{SharedVec, Tensor, TensorSpec};
 use crate::sampler::{Mfg, SamplerConfig, SamplerHandle, ShardedSampler, Strategy, TemporalSampler};
 use crate::sched::{make_batch_into, Batch, EpochPlan};
 use crate::state::{Mailbox, NodeMemory};
+use crate::util::fault::FaultPlan;
 use crate::util::rng::Rng;
 use crate::util::stats::PhaseTimer;
 use crate::util::tensor_pool::{PoolBuf, TensorPool};
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use super::checkpoint::{save_checkpoint_parts, CheckpointPolicy, RunCursor};
 
 /// Trainer options (everything else comes from the manifest dims).
 #[derive(Debug, Clone)]
@@ -75,6 +80,10 @@ pub struct TrainerCfg {
     /// (merged by batch index). Bitwise-identical to `shards == 1`
     /// for any value (`rust/tests/pipeline_identity.rs`).
     pub shards: usize,
+    /// Fault-injection plan (inert by default; armed by tests or the
+    /// `TGL_FAULTS` env var — see [`FaultPlan`]). Shared by clone so the
+    /// producers and the consumer observe one budget.
+    pub faults: Arc<FaultPlan>,
 }
 
 impl TrainerCfg {
@@ -95,6 +104,7 @@ impl TrainerCfg {
             prefetch_depth: 2,
             tensor_arenas: true,
             shards: 1,
+            faults: Arc::new(FaultPlan::from_env()),
         }
     }
 }
@@ -129,6 +139,23 @@ pub struct EvalResult {
     pub mean_loss: f64,
     pub edges: usize,
 }
+
+/// Typed divergence error: a train step produced a non-finite loss. Kept
+/// downcastable (`err.downcast_ref::<Diverged>()`) through any context
+/// chain so the resumable epoch can distinguish "numerics blew up — roll
+/// back to the last checkpoint" from I/O or configuration failures.
+#[derive(Debug, Clone, Copy)]
+pub struct Diverged {
+    pub loss: f64,
+}
+
+impl std::fmt::Display for Diverged {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "training diverged: loss = {}", self.loss)
+    }
+}
+
+impl std::error::Error for Diverged {}
 
 /// The prefetchable half of the trainer: model/graph handles, the sampler,
 /// the tensor pool, and the config — everything [`Self::prepare_static`]
@@ -475,7 +502,11 @@ impl<'g> Preparer<'g> {
                 || name.starts_with("efeat_s") =>
             {
                 let (s, l) = parse_hop_name(name)?;
-                let mfg = mfg.expect("hop inputs require a sampler");
+                let mfg = mfg.ok_or_else(|| {
+                    anyhow!(
+                        "step input `{name}` needs sampled hops, but the model built no sampler"
+                    )
+                })?;
                 let block = &mfg.snapshots[s][l];
                 if name.starts_with("dt_") {
                     let mut out = self.pool.take(block.num_slots());
@@ -531,7 +562,12 @@ impl<'g> Preparer<'g> {
             "step" => self.pooled_scalar(shape, state.step),
             "mem" | "mem_dt" => {
                 if mem_bufs.0.is_none() && mem_bufs.1.is_none() {
-                    let memory = state.memory.as_ref().expect("memory state");
+                    let memory = state.memory.as_ref().ok_or_else(|| {
+                        anyhow!(
+                            "step input `{}` requires node memory, but none is allocated",
+                            spec.name
+                        )
+                    })?;
                     let mut mem = self.pool.take(nodes.len() * memory.dim());
                     let mut dt = self.pool.take(nodes.len());
                     if self.cfg.shards > 1 {
@@ -554,7 +590,12 @@ impl<'g> Preparer<'g> {
             }
             "mail" | "mail_dt" | "mail_mask" => {
                 if mail_bufs.0.is_none() && mail_bufs.1.is_none() && mail_bufs.2.is_none() {
-                    let mailbox = state.mailbox.as_ref().expect("mailbox state");
+                    let mailbox = state.mailbox.as_ref().ok_or_else(|| {
+                        anyhow!(
+                            "step input `{}` requires a mailbox, but none is allocated",
+                            spec.name
+                        )
+                    })?;
                     let per = nodes.len() * mailbox.slots();
                     let mut mail = self.pool.take(per * mailbox.dim());
                     let mut dt = self.pool.take(per);
@@ -628,8 +669,12 @@ pub(crate) fn apply_state_updates_impl(
     let n_valid = batch.len();
     let mem_rows = new_mem.as_f32()?;
     let mail_rows = new_mail.as_f32()?;
-    let memory = state.memory.as_mut().expect("memory");
-    let mailbox = state.mailbox.as_mut().expect("mailbox");
+    let memory = state.memory.as_mut().ok_or_else(|| {
+        anyhow!("model `{}` emits memory updates but none is allocated", model.name)
+    })?;
+    let mailbox = state.mailbox.as_mut().ok_or_else(|| {
+        anyhow!("model `{}` emits mail updates but no mailbox is allocated", model.name)
+    })?;
 
     // Memory rows: [roots] segment of new_mem holds the refreshed
     // memory in MFG order; persist src (rows 0..bs) and dst (bs..2bs).
@@ -761,7 +806,9 @@ pub(crate) fn exec_train_step(
     model.train_exe.run_into(&io.inputs, &mut io.outputs).context("train step")?;
     timers.add("4:compute", t.elapsed());
     let loss = io.outputs[idx.loss].scalar_f32()? as f64;
-    ensure!(loss.is_finite(), "training diverged: loss = {loss}");
+    if !loss.is_finite() {
+        return Err(anyhow::Error::new(Diverged { loss }));
+    }
     let t = Instant::now();
     // Drop the aliased params/adam tensors before writing the update:
     // `SharedVec::copy_from` then holds the only reference and updates in
@@ -823,6 +870,31 @@ pub(crate) fn exec_eval_batch(
     Ok(loss)
 }
 
+/// Producer retry budget: every batch gets `1 + PRODUCER_RETRIES`
+/// preparation attempts (with a short backoff between them) before its
+/// producer gives up and sends a [`FailedPrep`] marker instead.
+pub(crate) const PRODUCER_RETRIES: usize = 2;
+
+/// Marker a supervised producer sends when a batch exhausted its retry
+/// budget: the consumer re-prepares the batch in line. Carries the
+/// attempt count and the last failure text for the structured warning.
+pub(crate) struct FailedPrep {
+    pub(crate) attempts: usize,
+    pub(crate) error: String,
+}
+
+/// Best-effort text of a caught panic payload (`String` and `&str`
+/// payloads cover `panic!`/`assert!`; anything else gets a placeholder).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    match payload.downcast::<String>() {
+        Ok(s) => *s,
+        Err(p) => match p.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "non-string panic payload".to_string(),
+        },
+    }
+}
+
 /// The consumer end of the N-producer prefetch stage: one bounded channel
 /// per producer, popped **round-robin by batch index** (batch k was
 /// assigned to producer `k % N`), so the merged stream is in exact batch
@@ -831,9 +903,27 @@ pub(crate) fn exec_eval_batch(
 /// batch slot. Dropping this (any exit path) closes every receiver, which
 /// unblocks producers waiting on a full queue so the enclosing
 /// [`std::thread::scope`] can always join.
-pub(crate) struct MergedBatches {
-    rxs: Vec<std::sync::mpsc::Receiver<Result<PreparedBatch>>>,
+///
+/// **Supervision.** Producer failures never poison the merged stream:
+/// a batch a producer gave up on (after [`PRODUCER_RETRIES`] retries)
+/// arrives as a [`FailedPrep`] marker and is re-prepared here, in line;
+/// a producer whose thread died outright shows up as a disconnected
+/// channel, and every batch still owed by it (tracked in `pending`) is
+/// prepared in line as its turn comes up. Both degradations emit a
+/// structured warning and keep the epoch running — and because
+/// preparation is a pure function of `(range, seed)`, the fallback output
+/// is bitwise-identical to what the producer would have sent.
+pub(crate) struct MergedBatches<'a> {
+    prep: &'a Preparer<'a>,
+    train: bool,
+    rxs: Vec<std::sync::mpsc::Receiver<Result<PreparedBatch, FailedPrep>>>,
     recycle_txs: Vec<std::sync::mpsc::Sender<PrepArena>>,
+    /// Batches still owed by each producer, in that producer's order —
+    /// the front of `pending[p]` is always the job of the next batch
+    /// expected from p. Drives the in-line fallback.
+    pending: Vec<VecDeque<(u64, std::ops::Range<usize>)>>,
+    /// Producers whose channel disconnected before their jobs were done.
+    dead: Vec<bool>,
     /// Next batch index to receive (routes to `rxs[next % N]`).
     next: usize,
     /// Next batch index to recycle (consumption happens in batch order,
@@ -841,16 +931,57 @@ pub(crate) struct MergedBatches {
     recycle_next: usize,
 }
 
-impl MergedBatches {
+impl MergedBatches<'_> {
     /// Receive the next batch in chronological (batch-index) order;
-    /// `None` once every producer has drained.
+    /// `None` once every producer has drained. Failed batches are
+    /// re-prepared in line (see the type docs) — an `Err` here means the
+    /// batch itself cannot be prepared at all, not that a thread died.
     pub(crate) fn recv(&mut self) -> Option<Result<PreparedBatch>> {
-        match self.rxs[self.next % self.rxs.len()].recv() {
-            Ok(r) => {
+        let n = self.rxs.len();
+        loop {
+            let p = self.next % n;
+            if self.dead[p] {
+                // Producer p is gone; serve its next owed batch in line.
+                let (seed, range) = self.pending[p].pop_front()?;
                 self.next += 1;
-                Some(r)
+                return Some(self.prep.prepare_static(range, seed, self.train));
             }
-            Err(_) => None,
+            match self.rxs[p].recv() {
+                Ok(Ok(pb)) => {
+                    self.pending[p].pop_front();
+                    self.next += 1;
+                    return Some(Ok(pb));
+                }
+                Ok(Err(fail)) => {
+                    let Some((seed, range)) = self.pending[p].pop_front() else {
+                        return Some(Err(anyhow!(
+                            "producer {p} reported a failed batch it was never assigned"
+                        )));
+                    };
+                    self.next += 1;
+                    crate::warn_!(
+                        "producer {p} failed batch (seed {seed}) after {} attempts ({}); \
+                         preparing in line",
+                        fail.attempts,
+                        fail.error
+                    );
+                    return Some(self.prep.prepare_static(range, seed, self.train).with_context(
+                        || format!("in-line fallback for batch seed {seed} (producer {p})"),
+                    ));
+                }
+                Err(_) => {
+                    // Channel closed: clean drain if p owes nothing, else
+                    // the thread died — degrade p to in-line preparation.
+                    self.dead[p] = true;
+                    if !self.pending[p].is_empty() {
+                        crate::warn_!(
+                            "producer {p} died with {} batches outstanding; degrading to \
+                             in-line sequential preparation for its share",
+                            self.pending[p].len()
+                        );
+                    }
+                }
+            }
         }
     }
 
@@ -875,14 +1006,21 @@ impl MergedBatches {
 /// cores feed the sampler. Shared by [`run_pipelined`] and the
 /// multi-trainer's grouped consumer, so the producer protocol lives in
 /// exactly one place.
+///
+/// Each producer is supervised: a panic or error while preparing a batch
+/// is caught ([`std::panic::catch_unwind`]) and retried up to
+/// [`PRODUCER_RETRIES`] times with a short backoff (the `TGL_FAULTS`
+/// injection hook fires inside the guarded region). A batch that still
+/// fails is sent as a [`FailedPrep`] marker — the producer moves on to
+/// its next job, and the consumer re-prepares the failed one in line.
 pub(crate) fn spawn_producers<'scope, I>(
     scope: &'scope std::thread::Scope<'scope, '_>,
-    prep: &'scope Preparer<'_>,
+    prep: &'scope Preparer<'scope>,
     train: bool,
     jobs: I,
     producers: usize,
     depth: usize,
-) -> MergedBatches
+) -> MergedBatches<'scope>
 where
     I: Iterator<Item = (u64, std::ops::Range<usize>)>,
 {
@@ -893,26 +1031,67 @@ where
     for (k, job) in jobs.enumerate() {
         per[k % producers].push(job);
     }
+    let pending: Vec<VecDeque<(u64, std::ops::Range<usize>)>> =
+        per.iter().map(|jobs| jobs.iter().cloned().collect()).collect();
     let depth_per = depth.div_ceil(producers).max(1);
     let mut rxs = Vec::with_capacity(producers);
     let mut recycle_txs = Vec::with_capacity(producers);
-    for my_jobs in per {
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<PreparedBatch>>(depth_per);
+    for (p, my_jobs) in per.into_iter().enumerate() {
+        let (tx, rx) =
+            std::sync::mpsc::sync_channel::<Result<PreparedBatch, FailedPrep>>(depth_per);
         let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrepArena>();
         rxs.push(rx);
         recycle_txs.push(recycle_tx);
         scope.spawn(move || {
             for (seed, range) in my_jobs {
-                let arena = recycle_rx.try_recv().unwrap_or_default();
-                let prepared = prep.prepare_static_reuse(range, seed, train, arena);
-                let failed = prepared.is_err();
-                if tx.send(prepared).is_err() || failed {
-                    break;
+                let mut arena = recycle_rx.try_recv().unwrap_or_default();
+                let mut last_err = String::new();
+                let mut item: Result<PreparedBatch, FailedPrep> = Err(FailedPrep {
+                    attempts: PRODUCER_RETRIES + 1,
+                    error: String::new(),
+                });
+                for attempt in 0..=PRODUCER_RETRIES {
+                    if attempt > 0 {
+                        // Bounded backoff before the retry: transient
+                        // causes (allocator pressure, scheduler hiccups)
+                        // get a moment to clear.
+                        std::thread::sleep(Duration::from_millis(2 << attempt));
+                    }
+                    let a = std::mem::take(&mut arena);
+                    let guarded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if prep.cfg.faults.take_producer_panic(p, seed) {
+                            panic!("injected fault: producer {p} at batch seed {seed}");
+                        }
+                        prep.prepare_static_reuse(range.clone(), seed, train, a)
+                    }));
+                    match guarded {
+                        Ok(Ok(pb)) => {
+                            item = Ok(pb);
+                            break;
+                        }
+                        Ok(Err(e)) => last_err = format!("{e:#}"),
+                        Err(payload) => last_err = format!("panic: {}", panic_message(payload)),
+                    }
+                }
+                if let Err(fail) = &mut item {
+                    fail.error = last_err;
+                }
+                if tx.send(item).is_err() {
+                    break; // consumer is gone; nothing left to feed
                 }
             }
         });
     }
-    MergedBatches { rxs, recycle_txs, next: 0, recycle_next: 0 }
+    MergedBatches {
+        prep,
+        train,
+        rxs,
+        recycle_txs,
+        pending,
+        dead: vec![false; producers],
+        next: 0,
+        recycle_next: 0,
+    }
 }
 
 /// The two-stage pipeline shared by the trainer's epochs, `eval_range`,
@@ -1116,6 +1295,122 @@ impl<'g> Trainer<'g> {
             },
         )?;
         Ok(epoch_stats(losses, t0))
+    }
+
+    /// Train (the rest of) one epoch, checkpointing and resumable.
+    ///
+    /// - `start_batch == 0` is a fresh epoch (chronology resets as in
+    ///   [`Self::train_epoch`]); `start_batch > 0` continues a
+    ///   checkpointed epoch — memory/mailbox/pointers came from the
+    ///   checkpoint, so the reset is skipped and batches `start_batch..`
+    ///   replay exactly as the uninterrupted run's (per-batch seeding
+    ///   makes preparation stateless across batches).
+    /// - `prior_losses` are the checkpointed batches' losses; the
+    ///   returned [`EpochStats`] covers the whole epoch.
+    /// - With a [`CheckpointPolicy`], a run checkpoint is written after
+    ///   every `every` completed batches (0 = epoch end only) and always
+    ///   at epoch end; `epoch`/`sched_rng` are recorded in its cursor.
+    /// - A non-finite loss ([`Diverged`]) rolls the training state back
+    ///   to the last checkpoint (when one exists) before returning the
+    ///   error, so the caller never continues on garbage numerics.
+    ///
+    /// Dispatches between the pipelined and sequential bodies exactly
+    /// like [`Self::train_epoch`]; all paths are bitwise-identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_epoch_resumable(
+        &mut self,
+        plan: &EpochPlan,
+        epoch: usize,
+        start_batch: usize,
+        prior_losses: Vec<f64>,
+        policy: Option<&CheckpointPolicy>,
+        sched_rng: Option<[u64; 4]>,
+    ) -> Result<EpochStats> {
+        if start_batch == 0 {
+            self.reset_chronology();
+        }
+        let t0 = Instant::now();
+        let idx = TrainIdx::new(self.model)?;
+        let model = self.model;
+        let graph = self.graph;
+        let prep = &self.prep;
+        let state = &mut self.state;
+        let timers = &mut self.timers;
+        let io = &mut self.io;
+        let total = plan.num_batches();
+        ensure!(
+            start_batch <= total,
+            "resume cursor at batch {start_batch}, but the epoch plan has {total} batches"
+        );
+        let mut losses = prior_losses;
+        let mut done = start_batch;
+        let mut consume = |mut pb: PreparedBatch| -> Result<Option<PrepArena>> {
+            let loss = exec_train_step(model, prep, &mut *state, timers, io, &idx, &mut pb)?;
+            losses.push(loss);
+            done += 1;
+            if let Some(pol) = policy {
+                let due = pol.every > 0 && done % pol.every == 0;
+                if due || done == total {
+                    let cursor = RunCursor {
+                        epoch,
+                        next_batch: done,
+                        losses: losses.clone(),
+                        sched_rng,
+                        plan: Some(plan.clone()),
+                    };
+                    save_checkpoint_parts(model, graph, prep, &*state, Some(&cursor), &pol.path)?;
+                }
+            }
+            Ok(Some(pb.into_arena()))
+        };
+        let run = if prep.cfg.prefetch && total - start_batch > 1 {
+            run_pipelined(
+                prep,
+                prep.cfg.prefetch_depth,
+                prep.cfg.shards,
+                true,
+                plan.seeded().skip(start_batch),
+                &mut consume,
+            )
+        } else {
+            (|| -> Result<()> {
+                let mut arena = PrepArena::default();
+                for (seed, range) in plan.seeded().skip(start_batch) {
+                    let pb = prep.prepare_static_reuse(range, seed, true, arena)?;
+                    match consume(pb)? {
+                        Some(a) => arena = a,
+                        None => break,
+                    }
+                }
+                Ok(())
+            })()
+        };
+        drop(consume);
+        match run {
+            Ok(()) => Ok(epoch_stats(losses, t0)),
+            Err(e) => {
+                if e.downcast_ref::<Diverged>().is_some() {
+                    if let Some(pol) = policy.filter(|p| p.path.exists()) {
+                        return match self.load_run_checkpoint(&pol.path) {
+                            Ok(cursor) => {
+                                let at = cursor
+                                    .map(|c| format!("epoch {}, batch {}", c.epoch, c.next_batch))
+                                    .unwrap_or_else(|| "pre-training state".to_string());
+                                Err(e.context(format!(
+                                    "rolled training state back to checkpoint {} ({at})",
+                                    pol.path.display()
+                                )))
+                            }
+                            Err(load_err) => Err(e.context(format!(
+                                "rollback to checkpoint {} also failed: {load_err:#}",
+                                pol.path.display()
+                            ))),
+                        };
+                    }
+                }
+                Err(e)
+            }
+        }
     }
 
     /// One optimization step over an edge window (one-shot buffers).

@@ -1,21 +1,86 @@
-//! Binary on-disk format for temporal-graph datasets.
+//! Binary on-disk format for temporal-graph datasets and checkpoints.
 //!
 //! The generators in [`crate::datasets`] write datasets once; training runs
-//! load them with a single sequential read. Layout (little-endian):
+//! load them with a single sequential read. The trainer's checkpoints
+//! ([`crate::trainer`]) use the same container, which is why the format is
+//! checksummed and the writer supports atomic replacement: a checkpoint
+//! that a crash can truncate, or a disk can silently corrupt, must fail
+//! *loudly* at load time, never restore garbage state.
+//!
+//! ## Layout (version 2, little-endian)
 //!
 //! ```text
-//! magic "TGLBIN01" (8 bytes)
+//! magic "TGLBIN02" (8 bytes)
 //! u64 section_count
-//! per section: u64 name_len, name bytes, u64 tag, u64 elem_count, payload
-//!   tag 0 = u32 array, tag 1 = f32 array, tag 2 = f64 array, tag 3 = raw bytes
+//! per section:
+//!   u64 name_len, name bytes
+//!   u64 tag               tag 0 = u32 array, 1 = f32 array,
+//!   u64 elem_count              2 = f64 array, 3 = raw bytes
+//!   payload
+//!   u32 crc32             IEEE CRC-32 over (name ‖ tag ‖ count ‖ payload)
+//! footer:
+//!   u32 crc32             IEEE CRC-32 over (section_count ‖ all section crcs)
 //! ```
+//!
+//! Each section carries its own CRC so corruption is reported *by section
+//! name*; the footer CRC covers the section count and every section CRC,
+//! so truncation at a section boundary (which would leave every surviving
+//! section individually valid) is also detected. Version-1 files
+//! (`"TGLBIN01"`, no checksums) remain readable for old datasets.
+//!
+//! ## Atomic writes
+//!
+//! [`Writer::write_atomic`] never exposes a half-written file: it writes
+//! to a `.tmp` sibling, fsyncs it, renames it over the target, and fsyncs
+//! the parent directory. A crash at any point leaves either the old file
+//! or the new file, both complete. [`Writer::write_to`] is the plain
+//! (non-durable) variant for bulk dataset generation.
+//!
+//! ## Corruption handling
+//!
+//! [`Reader::open`] parses fully in memory ([`Reader::from_bytes`]) with
+//! explicit bounds checks: truncated headers, implausible element counts
+//! (larger than the remaining file), unknown tags, and CRC mismatches all
+//! return contextual `anyhow` errors naming the offending section — never
+//! a panic or an OOM abort from trusting an on-disk length.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::Write;
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"TGLBIN01";
+const MAGIC_V1: &[u8; 8] = b"TGLBIN01";
+const MAGIC_V2: &[u8; 8] = b"TGLBIN02";
+
+// ----------------------------------------------------------------- CRC32
+
+/// IEEE CRC-32 (the zlib/PNG polynomial), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Incremental form: feed `state` (start at `0xFFFF_FFFF`) through
+/// consecutive chunks, then XOR with `0xFFFF_FFFF` to finish.
+fn crc32_update(mut state: u32, bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    for &b in bytes {
+        state = table[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+// ---------------------------------------------------------------- Writer
 
 /// A named-section container, write side.
 #[derive(Default)]
@@ -55,28 +120,96 @@ impl Writer {
         self
     }
 
-    pub fn write_to(&self, path: &Path) -> Result<()> {
-        let f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        let mut w = BufWriter::new(f);
-        w.write_all(MAGIC)?;
-        w.write_all(&(self.sections.len() as u64).to_le_bytes())?;
+    /// Serialize to the version-2 checksummed byte stream.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload_len: usize = self
+            .sections
+            .iter()
+            .map(|(name, sec)| {
+                let bytes = match sec {
+                    Section::U32(v) => std::mem::size_of_val(v.as_slice()),
+                    Section::F32(v) => std::mem::size_of_val(v.as_slice()),
+                    Section::F64(v) => std::mem::size_of_val(v.as_slice()),
+                    Section::Bytes(v) => v.len(),
+                };
+                name.len() + 8 * 3 + bytes + 4
+            })
+            .sum();
+        let mut out = Vec::with_capacity(8 + 8 + payload_len + 4);
+        out.extend_from_slice(MAGIC_V2);
+        out.extend_from_slice(&(self.sections.len() as u64).to_le_bytes());
+        let mut footer = 0xFFFF_FFFFu32;
+        footer = crc32_update(footer, &(self.sections.len() as u64).to_le_bytes());
         for (name, sec) in &self.sections {
-            w.write_all(&(name.len() as u64).to_le_bytes())?;
-            w.write_all(name.as_bytes())?;
             let (tag, count, bytes): (u64, u64, &[u8]) = match sec {
                 Section::U32(v) => (0, v.len() as u64, bytemuck(v)),
                 Section::F32(v) => (1, v.len() as u64, bytemuck(v)),
                 Section::F64(v) => (2, v.len() as u64, bytemuck(v)),
                 Section::Bytes(v) => (3, v.len() as u64, v),
             };
-            w.write_all(&tag.to_le_bytes())?;
-            w.write_all(&count.to_le_bytes())?;
-            w.write_all(bytes)?;
+            out.extend_from_slice(&(name.len() as u64).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&tag.to_le_bytes());
+            out.extend_from_slice(&count.to_le_bytes());
+            out.extend_from_slice(bytes);
+            let mut crc = 0xFFFF_FFFFu32;
+            crc = crc32_update(crc, name.as_bytes());
+            crc = crc32_update(crc, &tag.to_le_bytes());
+            crc = crc32_update(crc, &count.to_le_bytes());
+            crc = crc32_update(crc, bytes);
+            let crc = crc ^ 0xFFFF_FFFF;
+            out.extend_from_slice(&crc.to_le_bytes());
+            footer = crc32_update(footer, &crc.to_le_bytes());
         }
-        w.flush()?;
+        out.extend_from_slice(&(footer ^ 0xFFFF_FFFF).to_le_bytes());
+        out
+    }
+
+    /// Plain write (no durability guarantees) — bulk dataset generation.
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))?;
         Ok(())
     }
+
+    /// Crash-safe replacement of `path`: write to a `.tmp` sibling, fsync,
+    /// rename over the target, fsync the parent directory. Readers never
+    /// observe a partial file; a crash leaves either the old or the new
+    /// version intact. The checkpoint path writes through this.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        let tmp = tmp_sibling(path);
+        let res = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&self.to_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+            std::fs::rename(&tmp, path).with_context(|| {
+                format!("renaming {} -> {}", tmp.display(), path.display())
+            })?;
+            // Persist the rename itself (POSIX: directory entry durability).
+            if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+            Ok(())
+        })();
+        if res.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        res
+    }
+}
+
+/// `<path>.tmp` sibling used by [`Writer::write_atomic`] (same directory,
+/// so the final rename is not a cross-filesystem move).
+pub fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
 }
 
 fn bytemuck<T>(v: &[T]) -> &[u8] {
@@ -84,6 +217,8 @@ fn bytemuck<T>(v: &[T]) -> &[u8] {
         std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
     }
 }
+
+// ---------------------------------------------------------------- Reader
 
 /// Read side: all sections loaded into memory keyed by name.
 pub struct Reader {
@@ -93,64 +228,147 @@ pub struct Reader {
     bytes: BTreeMap<String, Vec<u8>>,
 }
 
+/// Bounds-checked cursor over the in-memory file image.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining {
+            bail!(
+                "truncated file: {what} needs {n} bytes at offset {}, {remaining} remain",
+                self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
 impl Reader {
     pub fn open(path: &Path) -> Result<Reader> {
-        let f = std::fs::File::open(path)
+        let bytes = std::fs::read(path)
             .with_context(|| format!("opening {}", path.display()))?;
-        let mut r = BufReader::new(f);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{}: not a TGL binary dataset (bad magic)", path.display());
+        Reader::from_bytes(&bytes).with_context(|| format!("reading {}", path.display()))
+    }
+
+    /// Parse a container from an in-memory image. Every length is checked
+    /// against the remaining bytes before allocation, so corrupt headers
+    /// produce errors instead of OOM aborts; v2 images additionally verify
+    /// per-section and footer CRCs.
+    pub fn from_bytes(buf: &[u8]) -> Result<Reader> {
+        let mut c = Cursor { buf, pos: 0 };
+        let magic = c.take(8, "magic")?;
+        let checksummed = match magic {
+            m if m == MAGIC_V2 => true,
+            m if m == MAGIC_V1 => false,
+            _ => bail!("not a TGL binary container (bad magic)"),
+        };
+        let n = c.u64("section count")? as usize;
+        // A u64 section count from a corrupt header must not drive huge
+        // allocations: each section needs ≥ 24 header bytes.
+        if n > buf.len() / 24 + 1 {
+            bail!("implausible section count {n} for a {}-byte file", buf.len());
         }
-        let n = read_u64(&mut r)? as usize;
         let mut out = Reader {
             u32s: BTreeMap::new(),
             f32s: BTreeMap::new(),
             f64s: BTreeMap::new(),
             bytes: BTreeMap::new(),
         };
-        for _ in 0..n {
-            let name_len = read_u64(&mut r)? as usize;
-            let mut name_buf = vec![0u8; name_len];
-            r.read_exact(&mut name_buf)?;
-            let name = String::from_utf8(name_buf)?;
-            let tag = read_u64(&mut r)?;
-            let count = read_u64(&mut r)? as usize;
+        let mut footer = 0xFFFF_FFFFu32;
+        footer = crc32_update(footer, &(n as u64).to_le_bytes());
+        for i in 0..n {
+            let name_len = c.u64("section name length")? as usize;
+            if name_len > buf.len() - c.pos {
+                bail!("section {i}: implausible name length {name_len}");
+            }
+            let name_bytes = c.take(name_len, "section name")?;
+            let name = std::str::from_utf8(name_bytes)
+                .with_context(|| format!("section {i}: name is not UTF-8"))?
+                .to_string();
+            let tag = c.u64("section tag")?;
+            let count = c.u64("element count")? as usize;
+            let width = match tag {
+                0 | 1 => 4,
+                2 => 8,
+                3 => 1,
+                t => bail!("section `{name}`: unknown tag {t}"),
+            };
+            let payload_len = count
+                .checked_mul(width)
+                .filter(|&len| len <= buf.len() - c.pos)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "section `{name}`: truncated or implausible element count {count}"
+                    )
+                })?;
+            let payload = c.take(payload_len, "section payload")?;
+            if checksummed {
+                let stored = c.u32(&format!("section `{name}` crc"))?;
+                let mut crc = 0xFFFF_FFFFu32;
+                crc = crc32_update(crc, name.as_bytes());
+                crc = crc32_update(crc, &tag.to_le_bytes());
+                crc = crc32_update(crc, &(count as u64).to_le_bytes());
+                crc = crc32_update(crc, payload);
+                let crc = crc ^ 0xFFFF_FFFF;
+                if crc != stored {
+                    bail!(
+                        "section `{name}`: CRC mismatch (stored {stored:#010x}, \
+                         computed {crc:#010x}) — file is corrupt"
+                    );
+                }
+                footer = crc32_update(footer, &stored.to_le_bytes());
+            }
             match tag {
                 0 => {
-                    let mut buf = vec![0u8; count * 4];
-                    r.read_exact(&mut buf)?;
-                    let v = buf
+                    let v = payload
                         .chunks_exact(4)
                         .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
                         .collect();
                     out.u32s.insert(name, v);
                 }
                 1 => {
-                    let mut buf = vec![0u8; count * 4];
-                    r.read_exact(&mut buf)?;
-                    let v = buf
+                    let v = payload
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                         .collect();
                     out.f32s.insert(name, v);
                 }
                 2 => {
-                    let mut buf = vec![0u8; count * 8];
-                    r.read_exact(&mut buf)?;
-                    let v = buf
+                    let v = payload
                         .chunks_exact(8)
                         .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
                         .collect();
                     out.f64s.insert(name, v);
                 }
-                3 => {
-                    let mut buf = vec![0u8; count];
-                    r.read_exact(&mut buf)?;
-                    out.bytes.insert(name, buf);
+                _ => {
+                    out.bytes.insert(name, payload.to_vec());
                 }
-                t => bail!("{}: unknown section tag {t}", path.display()),
+            }
+        }
+        if checksummed {
+            let stored = c.u32("footer crc")?;
+            let footer = footer ^ 0xFFFF_FFFF;
+            if footer != stored {
+                bail!(
+                    "footer CRC mismatch (stored {stored:#010x}, computed {footer:#010x}) \
+                     — file is truncated or sections were dropped"
+                );
             }
         }
         Ok(out)
@@ -172,6 +390,18 @@ impl Reader {
         self.f32s.remove(name)
     }
 
+    pub fn opt_u32(&mut self, name: &str) -> Option<Vec<u32>> {
+        self.u32s.remove(name)
+    }
+
+    pub fn opt_f64(&mut self, name: &str) -> Option<Vec<f64>> {
+        self.f64s.remove(name)
+    }
+
+    pub fn opt_bytes(&mut self, name: &str) -> Option<Vec<u8>> {
+        self.bytes.remove(name)
+    }
+
     pub fn take_bytes(&mut self, name: &str) -> Result<Vec<u8>> {
         self.bytes.remove(name).ok_or_else(|| anyhow::anyhow!("missing bytes section `{name}`"))
     }
@@ -184,27 +414,30 @@ impl Reader {
     }
 }
 
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip_all_section_types() {
-        let dir = std::env::temp_dir().join(format!("tgl_binfmt_{}", std::process::id()));
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tgl_binfmt_{tag}_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t.bin");
+        dir
+    }
+
+    fn sample_writer() -> Writer {
         let mut w = Writer::new();
         w.put_u32("src", vec![1, 2, 3])
             .put_f32("feat", vec![0.5, -1.5])
             .put_f64("time", vec![1e9, 2e9])
             .put_bytes("meta", b"{\"a\":1}".to_vec());
-        w.write_to(&path).unwrap();
+        w
+    }
+
+    #[test]
+    fn roundtrip_all_section_types() {
+        let dir = tmp_dir("rt");
+        let path = dir.join("t.bin");
+        sample_writer().write_to(&path).unwrap();
 
         let mut r = Reader::open(&path).unwrap();
         assert!(r.has("src"));
@@ -217,12 +450,107 @@ mod tests {
     }
 
     #[test]
-    fn bad_magic_rejected() {
-        let dir = std::env::temp_dir().join(format!("tgl_binfmt_bad_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.bin");
-        std::fs::write(&path, b"NOTMAGIC????????").unwrap();
-        assert!(Reader::open(&path).is_err());
+    fn atomic_write_roundtrips_and_replaces() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("t.bin");
+        sample_writer().write_atomic(&path).unwrap();
+        assert!(!tmp_sibling(&path).exists(), "temp file must be gone after rename");
+        let mut r = Reader::open(&path).unwrap();
+        assert_eq!(r.take_u32("src").unwrap(), vec![1, 2, 3]);
+
+        // Replacing an existing file also works (rename over target).
+        let mut w2 = Writer::new();
+        w2.put_u32("src", vec![9]);
+        w2.write_atomic(&path).unwrap();
+        let mut r = Reader::open(&path).unwrap();
+        assert_eq!(r.take_u32("src").unwrap(), vec![9]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(Reader::from_bytes(b"NOTMAGIC????????").is_err());
+    }
+
+    #[test]
+    fn v1_files_still_readable() {
+        // Hand-build a v1 (unchecksummed) image: magic, count=1, one u32
+        // section "xs" = [7, 8].
+        let mut img = Vec::new();
+        img.extend_from_slice(MAGIC_V1);
+        img.extend_from_slice(&1u64.to_le_bytes());
+        img.extend_from_slice(&2u64.to_le_bytes());
+        img.extend_from_slice(b"xs");
+        img.extend_from_slice(&0u64.to_le_bytes());
+        img.extend_from_slice(&2u64.to_le_bytes());
+        img.extend_from_slice(&7u32.to_le_bytes());
+        img.extend_from_slice(&8u32.to_le_bytes());
+        let mut r = Reader::from_bytes(&img).unwrap();
+        assert_eq!(r.take_u32("xs").unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        let img = sample_writer().to_bytes();
+        for off in 0..img.len() {
+            let mut bad = img.clone();
+            bad[off] ^= 0x01;
+            assert!(
+                Reader::from_bytes(&bad).is_err(),
+                "flipping byte {off} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_is_detected_at_every_length() {
+        let img = sample_writer().to_bytes();
+        for len in 0..img.len() {
+            assert!(
+                Reader::from_bytes(&img[..len]).is_err(),
+                "truncation to {len} bytes went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn implausible_counts_error_instead_of_allocating() {
+        // v1 header claiming u64::MAX elements: must error, not OOM.
+        let mut img = Vec::new();
+        img.extend_from_slice(MAGIC_V1);
+        img.extend_from_slice(&1u64.to_le_bytes());
+        img.extend_from_slice(&1u64.to_le_bytes());
+        img.extend_from_slice(b"x");
+        img.extend_from_slice(&0u64.to_le_bytes());
+        img.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = Reader::from_bytes(&img).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("`x`"), "error should name the section: {msg}");
+
+        // Implausible section count.
+        let mut img = Vec::new();
+        img.extend_from_slice(MAGIC_V2);
+        img.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Reader::from_bytes(&img).is_err());
+    }
+
+    #[test]
+    fn crc_error_names_the_section() {
+        let mut w = Writer::new();
+        w.put_f32("params", vec![1.0, 2.0, 3.0, 4.0]);
+        let mut img = w.to_bytes();
+        // Flip a payload byte (after the 8+8+8+6("params")+8+8 header).
+        let payload_off = 8 + 8 + 8 + 6 + 8 + 8 + 2;
+        img[payload_off] ^= 0x40;
+        let err = Reader::from_bytes(&img).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("`params`") && msg.contains("CRC"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
     }
 }

@@ -1,0 +1,167 @@
+//! Fault injection for the fault-tolerance test harness.
+//!
+//! A [`FaultPlan`] is an inert-by-default, `Arc`-shared description of
+//! faults to inject into a training run:
+//!
+//! - **Producer panics** — producer `p` panics while preparing batch `k`,
+//!   a bounded number of times. One armed panic exercises the supervisor's
+//!   retry path; an unbounded count (`usize::MAX`) makes the producer
+//!   unrecoverable and exercises the in-line degradation path.
+//! - **Checkpoint write I/O errors** — the next N checkpoint saves fail
+//!   (leaving a torn `.tmp` file behind, like a full disk would), proving
+//!   the atomic-write protocol never damages the previous checkpoint.
+//! - **Checkpoint read bit-flips** — one bit of the next checkpoint image
+//!   read is flipped before parsing, proving the CRC layer catches silent
+//!   disk corruption.
+//!
+//! All counters are atomics so a single plan can be shared (via
+//! `TrainerCfg`) by producer threads and the consumer without locks.
+//! Driven programmatically by `rust/tests/fault_tolerance.rs`, or from
+//! the environment via [`FaultPlan::from_env`] (`TGL_FAULTS`) for ad-hoc
+//! CLI experiments.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Shared, inert-by-default fault-injection switchboard (see module docs).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// `(producer, batch_seed)` targeted by producer-panic injection.
+    producer_target: Option<(usize, u64)>,
+    /// Remaining injected producer panics for the target above.
+    producer_panics: AtomicUsize,
+    /// Remaining injected checkpoint-write failures.
+    ckpt_write_errors: AtomicUsize,
+    /// Byte offset + 1 for the next checkpoint-read bit flip (0 = unarmed);
+    /// consumed by the first load after arming.
+    ckpt_read_flip: AtomicUsize,
+}
+
+impl FaultPlan {
+    /// Arm `times` panics in producer `p` while preparing the batch with
+    /// seed `k` (the epoch-relative batch index). `usize::MAX` makes the
+    /// batch permanently unpreparable on that producer.
+    pub fn panic_in_producer(p: usize, batch_seed: u64, times: usize) -> FaultPlan {
+        FaultPlan {
+            producer_target: Some((p, batch_seed)),
+            producer_panics: AtomicUsize::new(times),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Arm `times` checkpoint-write I/O failures.
+    pub fn fail_ckpt_writes(times: usize) -> FaultPlan {
+        FaultPlan { ckpt_write_errors: AtomicUsize::new(times), ..FaultPlan::default() }
+    }
+
+    /// Arm a single bit flip at `byte_offset` (modulo the image length)
+    /// on the next checkpoint read.
+    pub fn flip_ckpt_read_bit(byte_offset: usize) -> FaultPlan {
+        FaultPlan {
+            ckpt_read_flip: AtomicUsize::new(byte_offset.saturating_add(1)),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Parse `TGL_FAULTS` (comma-separated):
+    /// `producer_panic=P@K[xTIMES]`, `ckpt_write_err=N`,
+    /// `ckpt_read_flip=OFFSET`. Unset/empty → inert plan.
+    pub fn from_env() -> FaultPlan {
+        let Ok(spec) = std::env::var("TGL_FAULTS") else { return FaultPlan::default() };
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((key, val)) = part.split_once('=') else {
+                crate::warn_!("TGL_FAULTS: ignoring malformed entry `{part}`");
+                continue;
+            };
+            let parsed = match key {
+                "producer_panic" => (|| {
+                    let (target, times) = match val.split_once('x') {
+                        Some((t, n)) => (t, n.parse().ok()?),
+                        None => (val, 1usize),
+                    };
+                    let (p, k) = target.split_once('@')?;
+                    plan.producer_target = Some((p.parse().ok()?, k.parse().ok()?));
+                    plan.producer_panics = AtomicUsize::new(times);
+                    Some(())
+                })(),
+                "ckpt_write_err" => val.parse().ok().map(|n: usize| {
+                    plan.ckpt_write_errors = AtomicUsize::new(n);
+                }),
+                "ckpt_read_flip" => val.parse().ok().map(|off: usize| {
+                    plan.ckpt_read_flip = AtomicUsize::new(off.saturating_add(1));
+                }),
+                _ => None,
+            };
+            if parsed.is_none() {
+                crate::warn_!("TGL_FAULTS: ignoring malformed entry `{part}`");
+            }
+        }
+        plan
+    }
+
+    /// Producer `p` asks whether to panic while preparing batch `seed`;
+    /// consumes one armed panic when it matches.
+    pub fn take_producer_panic(&self, p: usize, batch_seed: u64) -> bool {
+        if self.producer_target != Some((p, batch_seed)) {
+            return false;
+        }
+        self.producer_panics
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+    }
+
+    /// The checkpoint writer asks whether this save should fail; consumes
+    /// one armed failure.
+    pub fn take_ckpt_write_error(&self) -> bool {
+        self.ckpt_write_errors
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+    }
+
+    /// The checkpoint loader asks for the armed read bit-flip offset, if
+    /// any; consumes it.
+    pub fn take_ckpt_read_flip(&self) -> Option<usize> {
+        match self.ckpt_read_flip.swap(0, Ordering::Relaxed) {
+            0 => None,
+            off => Some(off - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let p = FaultPlan::default();
+        assert!(!p.take_producer_panic(0, 0));
+        assert!(!p.take_ckpt_write_error());
+        assert!(p.take_ckpt_read_flip().is_none());
+    }
+
+    #[test]
+    fn producer_panic_fires_exactly_n_times_on_target_only() {
+        let p = FaultPlan::panic_in_producer(1, 3, 2);
+        assert!(!p.take_producer_panic(0, 3), "wrong producer");
+        assert!(!p.take_producer_panic(1, 2), "wrong batch");
+        assert!(p.take_producer_panic(1, 3));
+        assert!(p.take_producer_panic(1, 3));
+        assert!(!p.take_producer_panic(1, 3), "armed count exhausted");
+    }
+
+    #[test]
+    fn write_errors_and_read_flips_are_consumed() {
+        let p = FaultPlan::fail_ckpt_writes(1);
+        assert!(p.take_ckpt_write_error());
+        assert!(!p.take_ckpt_write_error());
+
+        let p = FaultPlan::flip_ckpt_read_bit(64);
+        assert_eq!(p.take_ckpt_read_flip(), Some(64));
+        assert_eq!(p.take_ckpt_read_flip(), None);
+
+        // Offset 0 is a valid target.
+        let p = FaultPlan::flip_ckpt_read_bit(0);
+        assert_eq!(p.take_ckpt_read_flip(), Some(0));
+    }
+}

@@ -5,6 +5,7 @@
 pub mod alloc;
 pub mod binfmt;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod logger;
 pub mod pool;

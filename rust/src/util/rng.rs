@@ -40,6 +40,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9e3779b97f4a7c15))
     }
 
+    /// Snapshot the raw generator state (checkpointing long-lived streams
+    /// like the chunk scheduler's offset draws).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Self::state`] snapshot — continues the
+    /// stream exactly where the snapshot was taken.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -261,6 +273,19 @@ mod tests {
             assert_eq!(set.len(), 8);
             assert!(s.iter().all(|&x| x < 20));
         }
+    }
+
+    #[test]
+    fn state_snapshot_resumes_stream_exactly() {
+        let mut a = Rng::new(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let snap = a.state();
+        let tail: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let mut b = Rng::from_state(snap);
+        let resumed: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_eq!(tail, resumed);
     }
 
     #[test]

@@ -1,0 +1,593 @@
+//! The fault-tolerance acceptance suite, artifact-free (reference
+//! backend, `models::synthetic`) so it runs in every CI environment.
+//!
+//! Proven here:
+//! - **Kill-and-resume is bitwise-identical** to the uninterrupted run —
+//!   losses, params, Adam moments, memory, mailbox — for the single
+//!   trainer (tgn and tgat, shards ∈ {1, 2}) and the multi-trainer
+//!   (group-aligned cursors), mid-epoch and across epoch boundaries
+//!   (chunk-scheduler RNG restored from the checkpoint).
+//! - **Supervised producers**: an injected producer panic is retried and
+//!   recovered; an unrecoverable batch degrades to in-line preparation —
+//!   both with bitwise-identical losses and no process abort.
+//! - **Atomic checksummed checkpoints**: an injected write failure leaves
+//!   the previous checkpoint intact (torn bytes only ever land in the
+//!   temp sibling); a flipped bit on read is caught by the CRC layer;
+//!   truncated/corrupt/short-meta files surface as named errors.
+//! - **Divergence guard**: a non-finite loss rolls training state back to
+//!   the last checkpoint and surfaces a typed [`Diverged`] error.
+//! - **Round-trip property**: randomized TrainState/memory/mailbox
+//!   contents survive save→load bitwise, with and without memory state.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tgl::graph::{TCsr, TemporalGraph};
+use tgl::models::{synthetic, Model};
+use tgl::sched::{ChunkScheduler, EpochPlan};
+use tgl::trainer::{CheckpointPolicy, Diverged, MultiTrainer, RunCursor, Trainer, TrainerCfg};
+use tgl::util::binfmt;
+use tgl::util::fault::FaultPlan;
+use tgl::util::rng::Rng;
+
+fn graph() -> TemporalGraph {
+    tgl::datasets::by_name("wikipedia", 0.02, 7).expect("dataset")
+}
+
+/// Pipelined trainer with an explicit shard count and fault plan.
+fn trainer_with<'a>(
+    model: &'a Model,
+    graph: &'a TemporalGraph,
+    csr: &'a TCsr,
+    shards: usize,
+    faults: Arc<FaultPlan>,
+) -> Trainer<'a> {
+    let mut cfg = TrainerCfg::for_model(model, graph, 1e-3, 2);
+    cfg.prefetch = true;
+    cfg.prefetch_depth = 2;
+    cfg.shards = shards;
+    cfg.faults = faults;
+    Trainer::new(model, graph, csr, cfg).expect("trainer")
+}
+
+/// Fresh per-test scratch directory (removed by the test when it passes;
+/// left behind on failure for inspection).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tgl_ft_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Full training-state equality, bit for bit: params, Adam moments, step,
+/// node memory (rows + timestamps), mailbox (mail + timestamps + counts).
+fn assert_state_eq(a: &Trainer<'_>, b: &Trainer<'_>, what: &str) {
+    assert_eq!(a.state.params.to_vec(), b.state.params.to_vec(), "{what}: params");
+    assert_eq!(a.state.adam_m.to_vec(), b.state.adam_m.to_vec(), "{what}: adam_m");
+    assert_eq!(a.state.adam_v.to_vec(), b.state.adam_v.to_vec(), "{what}: adam_v");
+    assert_eq!(a.state.step, b.state.step, "{what}: step");
+    match (&a.state.memory, &b.state.memory) {
+        (Some(ma), Some(mb)) => {
+            assert_eq!(ma.raw(), mb.raw(), "{what}: memory rows");
+            for v in 0..ma.num_nodes() as u32 {
+                assert_eq!(ma.last_update(v), mb.last_update(v), "{what}: memory ts of node {v}");
+            }
+        }
+        (None, None) => {}
+        _ => panic!("{what}: memory presence mismatch"),
+    }
+    match (&a.state.mailbox, &b.state.mailbox) {
+        (Some(x), Some(y)) => {
+            let (xm, xt, xc) = x.raw_parts();
+            let (ym, yt, yc) = y.raw_parts();
+            assert_eq!(xm, ym, "{what}: mailbox mail");
+            assert_eq!(xt, yt, "{what}: mailbox ts");
+            assert_eq!(xc, yc, "{what}: mailbox counts");
+        }
+        (None, None) => {}
+        _ => panic!("{what}: mailbox presence mismatch"),
+    }
+}
+
+/// The kill-and-resume identity, single trainer: train the first k batches
+/// with an epoch-end checkpoint (exactly the state/cursor a crash at batch
+/// k leaves on disk), drop the trainer, resume in a fresh one, and demand
+/// bitwise equality with the uninterrupted run — losses, full state, and
+/// downstream validation — for both dataflows and shards ∈ {1, 2}.
+#[test]
+fn mid_epoch_kill_and_resume_is_bitwise_identical() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("kill_resume");
+    for arch in ["tgn", "tgat"] {
+        let model = synthetic(arch).unwrap();
+        let bs = model.dim("bs");
+        let (train_end, val_end) = g.chrono_split(0.70, 0.15);
+        let ep = ChunkScheduler::plain(train_end, bs).epoch();
+        let k = 5.min(ep.num_batches() - 1);
+        let mut prefix = ep.clone();
+        prefix.batches.truncate(k);
+
+        for shards in [1usize, 2] {
+            let mut reference = trainer_with(&model, &g, &csr, shards, Arc::default());
+            let s_ref = reference.train_epoch(&ep).unwrap();
+
+            let path = dir.join(format!("{arch}_s{shards}.ckpt"));
+            let policy = CheckpointPolicy::new(path.clone(), 0);
+            let mut killed = trainer_with(&model, &g, &csr, shards, Arc::default());
+            let s_part = killed
+                .train_epoch_resumable(&prefix, 0, 0, Vec::new(), Some(&policy), None)
+                .unwrap();
+            assert_eq!(s_part.losses[..], s_ref.losses[..k], "{arch} s{shards}: prefix losses");
+            drop(killed); // the "kill": only the checkpoint survives
+
+            let mut resumed = trainer_with(&model, &g, &csr, shards, Arc::default());
+            let cursor = resumed.load_run_checkpoint(&path).unwrap().expect("run cursor");
+            assert_eq!(cursor.epoch, 0, "{arch} s{shards}");
+            assert_eq!(cursor.next_batch, k, "{arch} s{shards}");
+            assert_eq!(cursor.losses[..], s_ref.losses[..k], "{arch} s{shards}: cursor losses");
+            let s_res = resumed
+                .train_epoch_resumable(&ep, 0, cursor.next_batch, cursor.losses, None, None)
+                .unwrap();
+            assert_eq!(
+                s_res.losses, s_ref.losses,
+                "{arch} s{shards}: resumed epoch must be bitwise-identical"
+            );
+            assert_state_eq(&reference, &resumed, &format!("{arch} s{shards} post-resume"));
+
+            let val_ref = reference.eval_range(train_end..val_end).unwrap();
+            let val_res = resumed.eval_range(train_end..val_end).unwrap();
+            assert_eq!(val_ref.ap, val_res.ap, "{arch} s{shards}: val AP");
+            assert_eq!(val_ref.mean_loss, val_res.mean_loss, "{arch} s{shards}: val loss");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resume across an epoch boundary with the chunked scheduler: the cursor
+/// carries the scheduler's RNG stream, so epochs after the restored one
+/// draw the same random chunk offsets as the uninterrupted run.
+#[test]
+fn epoch_boundary_resume_restores_scheduler_rng() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("epoch_boundary");
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let mk_sched = || ChunkScheduler::new(train_end, bs, bs / 4, 123).unwrap();
+
+    let mut reference = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let mut sched_ref = mk_sched();
+    let ref_losses: Vec<Vec<f64>> = (0..3)
+        .map(|_| reference.train_epoch(&sched_ref.epoch()).unwrap().losses)
+        .collect();
+
+    // Interrupted run: epoch 0 with an epoch-end checkpoint, then killed.
+    let path = dir.join("boundary.ckpt");
+    let policy = CheckpointPolicy::new(path.clone(), 0);
+    let mut killed = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let mut sched_killed = mk_sched();
+    let plan0 = sched_killed.epoch();
+    let rng0 = Some(sched_killed.rng_state());
+    let s0 = killed.train_epoch_resumable(&plan0, 0, 0, Vec::new(), Some(&policy), rng0).unwrap();
+    assert_eq!(s0.losses, ref_losses[0]);
+    drop((killed, sched_killed));
+
+    // Resume: cursor says epoch 0 is complete; re-seat a fresh scheduler
+    // from the checkpointed RNG and continue with epochs 1 and 2.
+    let mut resumed = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let mut sched_res = mk_sched();
+    let cursor = resumed.load_run_checkpoint(&path).unwrap().expect("run cursor");
+    assert_eq!(cursor.epoch, 0);
+    assert_eq!(cursor.next_batch, cursor.plan.as_ref().unwrap().num_batches(), "epoch complete");
+    sched_res.restore_rng(cursor.sched_rng.expect("scheduler rng in cursor"));
+    for ep in 1..3 {
+        let plan = sched_res.epoch();
+        let rng_snap = Some(sched_res.rng_state());
+        let s = resumed
+            .train_epoch_resumable(&plan, ep, 0, Vec::new(), Some(&policy), rng_snap)
+            .unwrap();
+        assert_eq!(s.losses, ref_losses[ep], "epoch {ep} after resume");
+    }
+    assert_state_eq(&reference, &resumed, "after 3 epochs");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Group-aligned kill-and-resume through the multi-trainer, and the
+/// misaligned-cursor guard.
+#[test]
+fn multi_trainer_kill_and_resume_on_group_boundary() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("multi_resume");
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let ep = ChunkScheduler::plain(train_end, bs).epoch();
+    let multi = MultiTrainer::new(2);
+
+    let mut reference = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let s_ref = multi.train_epoch(&mut reference, &ep).unwrap();
+
+    let k = 6; // 3 groups of 2: group-aligned
+    assert!(ep.num_batches() > k + 2, "dataset too small for the scenario");
+    let mut prefix = ep.clone();
+    prefix.batches.truncate(k);
+    let path = dir.join("multi.ckpt");
+    let policy = CheckpointPolicy::new(path.clone(), 0);
+    let mut killed = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let s_part = multi
+        .train_epoch_resumable(&mut killed, &prefix, 0, 0, Vec::new(), Some(&policy), None)
+        .unwrap();
+    assert_eq!(s_part.losses[..], s_ref.losses[..k]);
+    drop(killed);
+
+    let mut resumed = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let cursor = resumed.load_run_checkpoint(&path).unwrap().expect("run cursor");
+    assert_eq!(cursor.next_batch, k);
+    let s_res = multi
+        .train_epoch_resumable(&mut resumed, &ep, 0, k, cursor.losses, None, None)
+        .unwrap();
+    assert_eq!(s_res.losses, s_ref.losses, "multi resume must be bitwise-identical");
+    assert_state_eq(&reference, &resumed, "multi post-resume");
+
+    // A cursor off the group grid is rejected up front, before any state
+    // is touched.
+    let mut fresh = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let err = multi
+        .train_epoch_resumable(&mut fresh, &ep, 0, 3, Vec::new(), None, None)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("group boundary"),
+        "misaligned resume must name the constraint, got: {err:#}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// An injected panic in one producer is caught by the supervisor, retried,
+/// and recovered — same losses, same state, no abort.
+#[test]
+fn producer_panic_is_retried_and_recovered() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let ep = ChunkScheduler::plain(train_end, bs).epoch();
+
+    let mut reference = trainer_with(&model, &g, &csr, 2, Arc::default());
+    let s_ref = reference.train_epoch(&ep).unwrap();
+
+    // Batch 4 is prepared by producer 4 % 2 == 0; one armed panic there.
+    let faults = Arc::new(FaultPlan::panic_in_producer(0, 4, 1));
+    let mut t = trainer_with(&model, &g, &csr, 2, faults);
+    let s = t.train_epoch(&ep).unwrap();
+    assert_eq!(s_ref.losses, s.losses, "retried producer must be value-invisible");
+    assert_state_eq(&reference, &t, "after retried panic");
+}
+
+/// A batch that panics on every retry is handed back as a failure marker
+/// and prepared in line by the consumer: the epoch completes with
+/// bitwise-identical results (preparation is a pure function of the batch
+/// seed, so the fallback output matches the producer's).
+#[test]
+fn unrecoverable_batch_degrades_to_inline_preparation() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let ep = ChunkScheduler::plain(train_end, bs).epoch();
+
+    let mut reference = trainer_with(&model, &g, &csr, 2, Arc::default());
+    let s_ref = reference.train_epoch(&ep).unwrap();
+
+    // Batch 3 → producer 1; usize::MAX armed panics exhaust every retry.
+    let faults = Arc::new(FaultPlan::panic_in_producer(1, 3, usize::MAX));
+    let mut t = trainer_with(&model, &g, &csr, 2, faults);
+    let s = t.train_epoch(&ep).unwrap();
+    assert_eq!(s_ref.losses, s.losses, "in-line fallback must be value-invisible");
+    assert_state_eq(&reference, &t, "after in-line degradation");
+}
+
+/// The multi-trainer's shard producers are supervised by the same
+/// machinery: an injected panic there recovers too.
+#[test]
+fn multi_trainer_producer_panic_recovers() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let ep = ChunkScheduler::plain(train_end, bs).epoch();
+
+    let mut ref_t = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let mut multi = MultiTrainer::new(2);
+    multi.producers = 2;
+    let s_ref = multi.train_epoch(&mut ref_t, &ep).unwrap();
+
+    let faults = Arc::new(FaultPlan::panic_in_producer(0, 2, 1)); // batch 2 → producer 0
+    let mut t = trainer_with(&model, &g, &csr, 1, faults);
+    let s = multi.train_epoch(&mut t, &ep).unwrap();
+    assert_eq!(s_ref.losses, s.losses);
+    assert_state_eq(&ref_t, &t, "multi after retried panic");
+}
+
+/// An injected checkpoint-write failure surfaces as a structured error and
+/// never damages the previous checkpoint: torn bytes only ever land in the
+/// temp sibling, which the next successful save replaces.
+#[test]
+fn checkpoint_write_failure_preserves_previous_checkpoint() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("write_fail");
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let path = dir.join("wf.ckpt");
+
+    let mut good = trainer_with(&model, &g, &csr, 1, Arc::default());
+    for (seed, range) in (0..2).map(|i| (i as u64, (i * bs)..((i + 1) * bs))) {
+        good.train_batch(range, seed).unwrap();
+    }
+    good.save_checkpoint(&path).unwrap();
+    let before = std::fs::read(&path).unwrap();
+
+    let faults = Arc::new(FaultPlan::fail_ckpt_writes(1));
+    let mut t = trainer_with(&model, &g, &csr, 1, faults);
+    for (seed, range) in (0..3).map(|i| (i as u64, (i * bs)..((i + 1) * bs))) {
+        t.train_batch(range, seed).unwrap();
+    }
+    let err = t.save_checkpoint(&path).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("injected I/O error"),
+        "write failure must be a named error, got: {err:#}"
+    );
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        before,
+        "a failed save must leave the previous checkpoint byte-identical"
+    );
+    assert!(binfmt::tmp_sibling(&path).exists(), "the torn write lands in the temp sibling");
+
+    // The fault was consumed; the next save goes through atomically and
+    // cleans up the torn temp file.
+    t.save_checkpoint(&path).unwrap();
+    assert!(!binfmt::tmp_sibling(&path).exists(), "rename consumes the temp sibling");
+    assert_ne!(std::fs::read(&path).unwrap(), before);
+    let mut loaded = trainer_with(&model, &g, &csr, 1, Arc::default());
+    loaded.load_checkpoint(&path).unwrap();
+    assert_state_eq(&t, &loaded, "after recovered save");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A single flipped bit anywhere in the checkpoint image is caught at load
+/// time by the binfmt integrity layer — never silently restored.
+#[test]
+fn checkpoint_read_bit_flip_is_detected() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("bit_flip");
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let path = dir.join("flip.ckpt");
+
+    let mut t = trainer_with(&model, &g, &csr, 1, Arc::default());
+    t.train_batch(0..bs, 0).unwrap();
+    t.save_checkpoint(&path).unwrap();
+
+    for off in [0usize, 13, 2_000, 1 << 20] {
+        let faults = Arc::new(FaultPlan::flip_ckpt_read_bit(off));
+        let mut victim = trainer_with(&model, &g, &csr, 1, faults);
+        let err = victim.load_checkpoint(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("CRC") || msg.contains("corrupt") || msg.contains("truncated")
+                || msg.contains("magic") || msg.contains("implausible"),
+            "bit flip at offset {off} must fail integrity checks, got: {msg}"
+        );
+        assert!(msg.contains("checkpoint"), "error must name the file, got: {msg}");
+    }
+
+    // Unfaulted load of the same file still works — the image on disk was
+    // never damaged, only the injected in-memory copy.
+    let mut clean = trainer_with(&model, &g, &csr, 1, Arc::default());
+    clean.load_checkpoint(&path).unwrap();
+    assert_state_eq(&t, &clean, "clean load after flip tests");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Truncated, corrupt, wrong-variant, and short-`meta` checkpoints all
+/// surface as structured errors (regression for the unchecked `meta[..]`
+/// indexing), and a missing file names the path.
+#[test]
+fn malformed_checkpoints_are_named_errors() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("malformed");
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let path = dir.join("good.ckpt");
+
+    let mut t = trainer_with(&model, &g, &csr, 1, Arc::default());
+    t.train_batch(0..bs, 0).unwrap();
+    t.save_checkpoint(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // Truncations at every interesting length: must error, never panic or
+    // restore partial state.
+    let trunc = dir.join("trunc.ckpt");
+    for len in [0usize, 1, 4, 11, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&trunc, &bytes[..len]).unwrap();
+        let mut victim = trainer_with(&model, &g, &csr, 1, Arc::default());
+        victim
+            .load_checkpoint(&trunc)
+            .expect_err(&format!("truncation to {len} bytes must fail"));
+    }
+
+    // Garbage bytes.
+    std::fs::write(&trunc, b"not a checkpoint at all").unwrap();
+    let mut victim = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let err = victim.load_checkpoint(&trunc).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "got: {err:#}");
+
+    // Missing file names the path.
+    let missing = dir.join("nope.ckpt");
+    let err = victim.load_checkpoint(&missing).unwrap_err();
+    assert!(format!("{err:#}").contains("nope.ckpt"), "got: {err:#}");
+
+    // Wrong variant.
+    let tgat = synthetic("tgat").unwrap();
+    let mut other = trainer_with(&tgat, &g, &csr, 1, Arc::default());
+    let err = other.load_checkpoint(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("tgn") && msg.contains("tgat"), "got: {msg}");
+
+    // `meta` with too few entries (the historical crash): a clean error
+    // that says what was expected.
+    let short = dir.join("short_meta.ckpt");
+    let mut w = binfmt::Writer::new();
+    w.put_bytes("variant", model.name.as_bytes().to_vec());
+    w.put_u32("meta", vec![1, 2]);
+    w.write_atomic(&short).unwrap();
+    let err = victim.load_checkpoint(&short).unwrap_err();
+    assert!(format!("{err:#}").contains("expected 3"), "got: {err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A non-finite loss surfaces as a typed [`Diverged`] error and rolls the
+/// training state back to the last checkpoint instead of continuing on
+/// garbage numerics.
+#[test]
+fn nan_loss_rolls_back_to_last_checkpoint() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("diverged");
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let ep = ChunkScheduler::plain(train_end, bs).epoch();
+    let path = dir.join("roll.ckpt");
+    let policy = CheckpointPolicy::new(path.clone(), 0);
+
+    let mut t = trainer_with(&model, &g, &csr, 1, Arc::default());
+    t.train_epoch_resumable(&ep, 0, 0, Vec::new(), Some(&policy), None).unwrap();
+    let saved_params = t.state.params.to_vec();
+    let saved_step = t.state.step;
+
+    // Poison the parameters: the next step's loss is NaN.
+    for p in t.state.params.make_mut().iter_mut() {
+        *p = f32::NAN;
+    }
+    let err = t
+        .train_epoch_resumable(&ep, 1, 0, Vec::new(), Some(&policy), None)
+        .unwrap_err();
+    assert!(err.downcast_ref::<Diverged>().is_some(), "typed Diverged through the chain");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("training diverged"), "got: {msg}");
+    assert!(msg.contains("rolled training state back"), "got: {msg}");
+    assert_eq!(t.state.params.to_vec(), saved_params, "params restored from the checkpoint");
+    assert_eq!(t.state.step, saved_step, "step restored from the checkpoint");
+
+    // Without a checkpoint to fall back to, the typed error still
+    // surfaces (no rollback context).
+    let mut bare = trainer_with(&model, &g, &csr, 1, Arc::default());
+    for p in bare.state.params.make_mut().iter_mut() {
+        *p = f32::NAN;
+    }
+    let err = bare.train_epoch(&ep).unwrap_err();
+    assert!(err.downcast_ref::<Diverged>().is_some());
+    assert!(!format!("{err:#}").contains("rolled training state back"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: randomized training state — params, Adam moments, step, node
+/// memory, mailbox — survives save→load bitwise, for the stateful (tgn)
+/// and stateless (tgat: no memory, no mailbox) dataflows.
+#[test]
+fn randomized_state_roundtrips_bitwise() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("roundtrip");
+    let mut rng = Rng::new(0xF00D);
+    for arch in ["tgn", "tgat"] {
+        let model = synthetic(arch).unwrap();
+        for trial in 0..4 {
+            let path = dir.join(format!("{arch}_{trial}.ckpt"));
+            let mut t = trainer_with(&model, &g, &csr, 1, Arc::default());
+            for p in t.state.params.make_mut().iter_mut() {
+                *p = rng.f32() * 2.0 - 1.0;
+            }
+            for p in t.state.adam_m.make_mut().iter_mut() {
+                *p = rng.f32() - 0.5;
+            }
+            for p in t.state.adam_v.make_mut().iter_mut() {
+                *p = rng.f32();
+            }
+            t.state.step = rng.below(10_000) as f32;
+            if let Some(mem) = &mut t.state.memory {
+                let (n, d) = (mem.num_nodes(), mem.dim());
+                let rows: Vec<f32> = (0..n * d).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                let ts: Vec<f64> = (0..n).map(|_| rng.f64() * 1.0e6).collect();
+                mem.restore(&rows, &ts).unwrap();
+            }
+            if let Some(mb) = &mut t.state.mailbox {
+                let (ml, tl, cl) = {
+                    let (m, ts, c) = mb.raw_parts();
+                    (m.len(), ts.len(), c.len())
+                };
+                let slots = mb.slots();
+                let mail: Vec<f32> = (0..ml).map(|_| rng.f32() - 0.5).collect();
+                let ts: Vec<f64> = (0..tl).map(|_| rng.f64() * 1.0e6).collect();
+                let count: Vec<u64> = (0..cl).map(|_| rng.below(slots + 1) as u64).collect();
+                mb.restore(&mail, &ts, &count).unwrap();
+            } else {
+                assert_eq!(arch, "tgat", "only the stateless dataflow lacks a mailbox");
+            }
+
+            t.save_checkpoint(&path).unwrap();
+            let mut loaded = trainer_with(&model, &g, &csr, 1, Arc::default());
+            loaded.load_checkpoint(&path).unwrap();
+            assert_state_eq(&t, &loaded, &format!("{arch} trial {trial}"));
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The run cursor itself — epoch, batch, losses, scheduler RNG, epoch
+/// plan — survives the trip through the container byte-exactly.
+#[test]
+fn run_cursor_roundtrips_exactly() {
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = scratch("cursor");
+    let model = synthetic("tgn").unwrap();
+    let bs = model.dim("bs");
+    let (train_end, _) = g.chrono_split(0.70, 0.15);
+    let plan: EpochPlan = ChunkScheduler::new(train_end, bs, bs / 2, 9).unwrap().epoch();
+    let path = dir.join("cursor.ckpt");
+
+    let t = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let cursor = RunCursor {
+        epoch: 3,
+        next_batch: 7,
+        losses: vec![0.5, 0.25, std::f64::consts::PI / 3.0],
+        sched_rng: Some([1, u64::MAX, 0x0123_4567_89AB_CDEF, 42]),
+        plan: Some(plan.clone()),
+    };
+    t.save_run_checkpoint(&path, &cursor).unwrap();
+
+    let mut loaded = trainer_with(&model, &g, &csr, 1, Arc::default());
+    let got = loaded.load_run_checkpoint(&path).unwrap().expect("cursor present");
+    assert_eq!(got.epoch, 3);
+    assert_eq!(got.next_batch, 7);
+    assert_eq!(got.losses, cursor.losses);
+    assert_eq!(got.sched_rng, cursor.sched_rng);
+    let got_plan = got.plan.expect("plan present");
+    assert_eq!(got_plan.start_offset, plan.start_offset);
+    assert_eq!(got_plan.batches, plan.batches);
+
+    // A plain (cursor-less) checkpoint loads as `None`.
+    t.save_checkpoint(&path).unwrap();
+    assert!(loaded.load_run_checkpoint(&path).unwrap().is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}

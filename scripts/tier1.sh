@@ -37,6 +37,12 @@ cargo test -q --test convergence
 echo "== tier1: cargo test -q --test pipeline_identity sharded =="
 cargo test -q --test pipeline_identity sharded
 
+# Fault-tolerance acceptance by name: kill-and-resume bitwise identity,
+# supervised producers, checkpoint integrity under injected faults, and
+# the divergence rollback guard.
+echo "== tier1: cargo test -q --test fault_tolerance =="
+cargo test -q --test fault_tolerance
+
 echo "== tier1: cargo test -q =="
 cargo test -q
 

@@ -5,7 +5,11 @@
 //!
 //! - [`Error`] / [`Result`] with context chains (`{e}` shows the outermost
 //!   context, `{e:#}` the full chain, matching anyhow's formatting contract)
-//! - the [`Context`] extension trait on `Result` and `Option`
+//! - typed roots: [`Error::new`] keeps the concrete error value, and
+//!   [`Error::downcast_ref`] recovers it through any number of context
+//!   frames (the trainer's divergence-rollback relies on this)
+//! - the [`Context`] extension trait on `Result` and `Option`, plus the
+//!   [`Error::context`] method
 //! - the [`anyhow!`], [`bail!`] and [`ensure!`] macros
 //!
 //! Swapping back to the real crate is a one-line `Cargo.toml` change; no
@@ -14,16 +18,37 @@
 use std::fmt;
 
 /// Error type: a base message plus context frames (innermost message first,
-/// each `.context(..)` pushes an outer frame).
+/// each `.context(..)` pushes an outer frame). When built with
+/// [`Error::new`], the typed root error is kept for [`Error::downcast_ref`].
 pub struct Error {
     msg: String,
     context: Vec<String>,
+    /// The typed root cause ([`Error::new`]); `None` for message-only
+    /// errors ([`Error::msg`], the macros, `From` conversions).
+    root: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Build an error from any displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), context: Vec::new() }
+        Error { msg: message.to_string(), context: Vec::new(), root: None }
+    }
+
+    /// Build an error from a concrete error value, keeping it recoverable
+    /// via [`Error::downcast_ref`] (mirrors `anyhow::Error::new`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), context: Vec::new(), root: Some(Box::new(error)) }
+    }
+
+    /// Attach an outer context frame (mirrors `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        self.push_context(context.to_string())
+    }
+
+    /// A reference to the typed root cause, if this error was built from
+    /// one of type `E` — context frames don't hide it.
+    pub fn downcast_ref<E: std::error::Error + Send + Sync + 'static>(&self) -> Option<&E> {
+        self.root.as_deref().and_then(|r| r.downcast_ref::<E>())
     }
 
     fn push_context(mut self, outer: String) -> Error {
@@ -64,7 +89,8 @@ impl fmt::Debug for Error {
     }
 }
 
-/// Any std error converts into [`Error`], capturing its source chain.
+/// Any std error converts into [`Error`], capturing its source chain (and
+/// the typed value itself, for [`Error::downcast_ref`]).
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
         let mut msg = e.to_string();
@@ -74,7 +100,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             msg.push_str(&s.to_string());
             src = s.source();
         }
-        Error { msg, context: Vec::new() }
+        Error { msg, context: Vec::new(), root: Some(Box::new(e)) }
     }
 }
 
@@ -168,6 +194,34 @@ mod tests {
         let v: Option<u32> = None;
         let e = v.context("missing").unwrap_err();
         assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn downcast_survives_context_frames() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl std::fmt::Display for Typed {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "typed error {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        let e = Error::new(Typed(7)).context("outer").context("outermost");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert_eq!(format!("{e:#}"), "outermost: outer: typed error 7");
+
+        // `?`-converted std errors keep their type too.
+        let r: Result<()> = (|| {
+            Err(std::io::Error::other("disk on fire"))?;
+            Ok(())
+        })();
+        let e = r.context("saving").unwrap_err();
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.downcast_ref::<Typed>().is_none());
+
+        // Message-only errors have no typed root.
+        assert!(Error::msg("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]
