@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
             4,
             42,
         )?;
-        let bs = plan.model.dim("bs");
+        let bs = plan.model.dim("bs").unwrap();
         let (train_end, _) = plan.graph.chrono_split(0.70, 0.15);
         let mut times = Vec::new();
         let mut ap4 = 0.0;

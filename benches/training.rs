@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
                 plan.train_link_prediction(epochs, 1, 1, "wikipedia", false)?;
             let batches: usize = report.epochs.last().map(|_| {
                 let (tr, _) = plan.graph.chrono_split(0.70, 0.15);
-                tr / plan.model.dim("bs")
+                tr / plan.model.dim("bs").unwrap()
             }).unwrap_or(0);
             t5.row(vec![
                 variant.clone(),
@@ -113,7 +113,7 @@ fn main() -> anyhow::Result<()> {
                 8,
                 42,
             )?;
-            let bs = plan.model.dim("bs");
+            let bs = plan.model.dim("bs").unwrap();
             let (train_end, _) = plan.graph.chrono_split(0.70, 0.15);
             let mut sched = ChunkScheduler::plain(train_end, bs);
             let ep = sched.epoch();
@@ -160,7 +160,7 @@ fn main() -> anyhow::Result<()> {
         let model = synthetic("tgn")?;
         let graph = tgl::datasets::by_name("wikipedia", scale, 42)?;
         let csr = TCsr::build(&graph, true);
-        let bs = model.dim("bs");
+        let bs = model.dim("bs").unwrap();
         let (train_end, val_end) = graph.chrono_split(0.70, 0.15);
         let mut sched = ChunkScheduler::plain(train_end, bs);
         let ep = sched.epoch();
@@ -329,6 +329,80 @@ fn main() -> anyhow::Result<()> {
                 ("save_mib_per_s", Json::Num(mb / save_s.max(1e-12))),
                 ("load_mib_per_s", Json::Num(mb / load_s.max(1e-12))),
             ]));
+        }
+
+        // ---- Out-of-core epoch rows: the same synthetic TGN trained from
+        // the disk-backed shard container (bounded shard cache + hot state
+        // rows) vs the resident index. Losses must stay bitwise-identical
+        // (tests/pipeline_identity.rs enforces it; the row records the
+        // check); epoch time, peak RSS, and cache hit rates land in the
+        // perf trajectory so "billion-scale" stays a disk-size limit.
+        {
+            use tgl::graph::{
+                build_container, edge_file_from_graph, BuildCfg, CacheStats, GraphIndex,
+                ShardCache,
+            };
+            let dir =
+                std::env::temp_dir().join(format!("tgl_bench_ooc_{}", std::process::id()));
+            std::fs::create_dir_all(&dir)?;
+            let edges = dir.join("bench.edges");
+            edge_file_from_graph(&graph, &edges)?;
+            let disk = build_container(
+                &edges,
+                &dir.join("bench.edges.tcsr"),
+                &BuildCfg { shards: 4, ..BuildCfg::default() },
+            )?;
+            let index = GraphIndex::Disk(ShardCache::new(disk, 2));
+
+            let ooc_epoch = |hot_rows: usize| -> anyhow::Result<(
+                f64,
+                Vec<f64>,
+                Option<CacheStats>,
+            )> {
+                let mut cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+                cfg.hot_rows = hot_rows;
+                let mut t = Trainer::for_index(&model, &graph, &index, cfg)?;
+                t.train_epoch(&ep)?; // warm-up epoch
+                let stats = t.train_epoch(&ep)?;
+                Ok((stats.seconds, stats.losses, t.hot_cache_stats()))
+            };
+            let (cold_s, cold_losses, _) = ooc_epoch(0)?;
+            let (hot_s, hot_losses, hot_stats) = ooc_epoch(4096)?;
+            let resident_losses = {
+                let cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+                let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+                t.train_epoch(&ep)?; // warm-up epoch
+                t.train_epoch(&ep)?.losses
+            };
+            let identical = cold_losses == resident_losses && hot_losses == resident_losses;
+            let g = match &index {
+                GraphIndex::Disk(c) => c.stats(),
+                _ => CacheStats::default(),
+            };
+            let rss = tgl::util::stats::peak_rss_bytes().unwrap_or(0);
+            println!(
+                "syn_tgn out-of-core: resident {seq_s:.4}s vs disk {cold_s:.4}s (hot rows \
+                 {hot_s:.4}s), losses identical {identical}, graph cache {:.1}% hit, peak \
+                 RSS {:.1} MiB",
+                g.hit_rate() * 100.0,
+                rss as f64 / (1024.0 * 1024.0)
+            );
+            pipeline_rows.push(obj(vec![
+                ("workload", Json::Str("syn_tgn-train-epoch".into())),
+                ("mode", Json::Str("out-of-core".into())),
+                ("resident_s", Json::Num(seq_s)),
+                ("disk_cold_s", Json::Num(cold_s)),
+                ("disk_hot_s", Json::Num(hot_s)),
+                ("losses_identical", Json::Bool(identical)),
+                ("graph_cache_hit_rate", Json::Num(g.hit_rate())),
+                ("graph_cache_evictions", Json::Num(g.evictions as f64)),
+                (
+                    "hot_state_hit_rate",
+                    Json::Num(hot_stats.map(|s| s.hit_rate()).unwrap_or(0.0)),
+                ),
+                ("peak_rss_bytes", Json::Num(rss as f64)),
+            ]));
+            std::fs::remove_dir_all(&dir).ok();
         }
     }
 

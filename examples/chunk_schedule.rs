@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             42,
         )?;
         plan.options.lr *= lr_mult;
-        let bs = plan.model.dim("bs");
+        let bs = plan.model.dim("bs").unwrap();
         let (train_end, val_end) = plan.graph.chrono_split(0.70, 0.15);
         let mut trainer = plan.trainer()?;
         let mut sched = if chunks > 1 {

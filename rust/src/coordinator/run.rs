@@ -2,7 +2,10 @@
 //! benches drive, plus the CLI subcommand implementations.
 
 use crate::datasets;
-use crate::graph::{TCsr, TemporalGraph};
+use crate::graph::{
+    build_container, graph_from_edge_file, BuildCfg, DiskTCsr, GraphIndex, ShardCache, TCsr,
+    TemporalGraph,
+};
 use crate::models::{Model, RunOptions};
 use crate::runtime::{ArtifactManifest, Engine};
 use crate::sampler::{BaselineSampler, PointerMode, SamplerConfig, Strategy, TemporalSampler};
@@ -20,7 +23,13 @@ pub struct RunPlan {
     pub engine: Engine,
     pub model: Model,
     pub graph: TemporalGraph,
-    pub csr: TCsr,
+    /// The run's **single** graph index — flat, sharded, or disk-backed —
+    /// built lazily by [`Self::index`] after the knobs (`shards`,
+    /// `out_of_core`, …) are set. The plan used to build a flat T-CSR
+    /// eagerly here *and* let the trainer build a sharded one again when
+    /// `shards > 1`, holding two full copies of the largest structure;
+    /// `rust/tests/out_of_core.rs` pins the build count to one.
+    index: std::sync::OnceLock<GraphIndex>,
     pub options: RunOptions,
     pub threads: usize,
     pub seed: u64,
@@ -48,6 +57,20 @@ pub struct RunPlan {
     /// state, scheduler RNG, and the mid-epoch cursor, then continues
     /// bitwise-identically to the uninterrupted run.
     pub resume: Option<PathBuf>,
+    /// Keep the T-CSR on disk (`--out-of-core`): the index becomes a
+    /// [`GraphIndex::Disk`] over a `<graph-file>.tcsr` container (built
+    /// by external sort if missing) with a [`ShardCache`] holding at most
+    /// `cache_shards` shards resident. Requires `graph_file`. Losses stay
+    /// bitwise-identical to the in-RAM index.
+    pub out_of_core: bool,
+    /// Resident-shard budget of the out-of-core cache (`--cache-shards`).
+    pub cache_shards: usize,
+    /// Hot-row cache capacity for node memory + mailbox (`--hot-rows`;
+    /// 0 = off). Deterministic either way.
+    pub hot_rows: usize,
+    /// The on-disk edge stream this plan was loaded from
+    /// ([`Self::from_edge_file`]); anchors the container path.
+    pub graph_file: Option<PathBuf>,
 }
 
 /// Per-epoch row + final metrics of a link-prediction run.
@@ -86,12 +109,53 @@ impl RunPlan {
         } else {
             datasets::by_name(dataset, scale, seed)?
         };
-        let csr = TCsr::build(&graph, true);
-        Ok(RunPlan {
+        Ok(RunPlan::assemble(engine, model, graph, options, threads, seed, None))
+    }
+
+    /// Assemble a plan over a raw on-disk edge stream (the `--graph-file`
+    /// path): the interaction list loads featureless into RAM (feature
+    /// tensors gather zeros), and `out_of_core: true` keeps the T-CSR
+    /// itself on disk next to the file.
+    pub fn from_edge_file(
+        artifacts: &Path,
+        configs: &Path,
+        variant: &str,
+        edge_file: &Path,
+        threads: usize,
+        seed: u64,
+    ) -> Result<RunPlan> {
+        let engine = Engine::cpu()?;
+        let manifest = ArtifactManifest::load(artifacts)?;
+        let model = Model::load(&engine, &manifest, variant)
+            .with_context(|| format!("loading variant `{variant}`"))?;
+        let options = RunOptions::load(configs, variant)?;
+        let graph = graph_from_edge_file(edge_file)
+            .with_context(|| format!("loading edge stream {}", edge_file.display()))?;
+        Ok(RunPlan::assemble(
             engine,
             model,
             graph,
-            csr,
+            options,
+            threads,
+            seed,
+            Some(edge_file.to_path_buf()),
+        ))
+    }
+
+    fn assemble(
+        engine: Engine,
+        model: Model,
+        graph: TemporalGraph,
+        options: RunOptions,
+        threads: usize,
+        seed: u64,
+        graph_file: Option<PathBuf>,
+    ) -> RunPlan {
+        RunPlan {
+            engine,
+            model,
+            graph,
+            index: std::sync::OnceLock::new(),
             options,
             threads,
             seed,
@@ -102,7 +166,49 @@ impl RunPlan {
             checkpoint: None,
             checkpoint_every: 0,
             resume: None,
-        })
+            out_of_core: false,
+            cache_shards: 2,
+            hot_rows: 0,
+            graph_file,
+        }
+    }
+
+    /// The run's single [`GraphIndex`], built on first use from the
+    /// current knobs (set `shards` / `out_of_core` / `cache_shards`
+    /// **before** the first trainer). Subsequent calls return the same
+    /// index.
+    pub fn index(&self) -> Result<&GraphIndex> {
+        if self.index.get().is_none() {
+            let built = self.build_index()?;
+            // A racing builder losing `set` is fine: both built from the
+            // same immutable inputs.
+            let _ = self.index.set(built);
+        }
+        Ok(self.index.get().expect("index initialized above"))
+    }
+
+    fn build_index(&self) -> Result<GraphIndex> {
+        if !self.out_of_core {
+            return Ok(GraphIndex::build(&self.graph, self.shards.max(1)));
+        }
+        let edges = self.graph_file.as_ref().ok_or_else(|| {
+            anyhow!("out_of_core needs a graph file (use RunPlan::from_edge_file / --graph-file)")
+        })?;
+        let mut container = edges.as_os_str().to_os_string();
+        container.push(".tcsr");
+        let container = PathBuf::from(container);
+        let shards = self.shards.max(1);
+        let disk = match DiskTCsr::open(&container) {
+            Ok(d) if d.num_shards() == shards => d,
+            // Missing, stale shard count, or unreadable: (re)build by
+            // bounded-memory external sort.
+            _ => {
+                let cfg = BuildCfg { shards, ..BuildCfg::default() };
+                build_container(edges, &container, &cfg)
+                    .with_context(|| format!("building container {}", container.display()))?
+            }
+        };
+        Ok(GraphIndex::Disk(ShardCache::new(disk, self.cache_shards.max(1))))
     }
 
     pub fn trainer(&self) -> Result<Trainer<'_>> {
@@ -115,7 +221,9 @@ impl RunPlan {
         cfg.prefetch_depth = self.prefetch_depth;
         cfg.tensor_arenas = self.tensor_arenas;
         cfg.shards = self.shards.max(1);
-        Trainer::new(&self.model, &self.graph, &self.csr, cfg)
+        cfg.hot_rows = self.hot_rows;
+        cfg.cache_shards = self.cache_shards;
+        Trainer::for_index(&self.model, &self.graph, self.index()?, cfg)
     }
 
     /// A [`MultiTrainer`] honoring this plan's prefetch knobs (shard
@@ -140,7 +248,7 @@ impl RunPlan {
         dataset_label: &str,
         verbose: bool,
     ) -> Result<(LinkPredReport, Trainer<'_>)> {
-        let bs = self.model.dim("bs");
+        let bs = self.model.dim("bs")?;
         let (train_end, val_end) = self.graph.chrono_split(0.70, 0.15);
         let mut trainer = self.trainer()?;
         let mut report = LinkPredReport {
@@ -290,6 +398,10 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         .opt("prefetch-depth", "2", "prepared-batch queue depth for the pipeline")
         .opt("arena", "on", "tensor-buffer arenas on the gather path: on|off (deterministic)")
         .opt("shards", "1", "node shards = prefetch producers (deterministic for any count)")
+        .opt("graph-file", "", "train from a raw on-disk edge stream (TGLEDG01) instead of --data")
+        .flag("out-of-core", "keep the T-CSR on disk (<graph-file>.tcsr container + shard cache)")
+        .opt("cache-shards", "2", "resident-shard budget of the out-of-core cache")
+        .opt("hot-rows", "0", "hot-row cache capacity for node memory/mailbox (0 = off)")
         .opt("seed", "42", "RNG seed")
         .opt("checkpoint", "", "checkpoint path (atomic, checksummed); empty = off")
         .opt("checkpoint-every", "0", "save a run checkpoint every N batches (0 = epoch end only)")
@@ -297,19 +409,38 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("configs", "configs", "model config directory")
         .parse(args)?;
-    let mut plan = RunPlan::new(
-        &PathBuf::from(a.get("artifacts")),
-        &PathBuf::from(a.get("configs")),
-        &a.get("variant"),
-        &a.get("data"),
-        a.get_f64("scale")?,
-        a.get_usize("threads")?,
-        a.get_usize("seed")? as u64,
-    )?;
+    let graph_file = a.get("graph-file");
+    let mut plan = if graph_file.is_empty() {
+        RunPlan::new(
+            &PathBuf::from(a.get("artifacts")),
+            &PathBuf::from(a.get("configs")),
+            &a.get("variant"),
+            &a.get("data"),
+            a.get_f64("scale")?,
+            a.get_usize("threads")?,
+            a.get_usize("seed")? as u64,
+        )?
+    } else {
+        RunPlan::from_edge_file(
+            &PathBuf::from(a.get("artifacts")),
+            &PathBuf::from(a.get("configs")),
+            &a.get("variant"),
+            Path::new(&graph_file),
+            a.get_usize("threads")?,
+            a.get_usize("seed")? as u64,
+        )?
+    };
     plan.prefetch = parse_switch(&a.get("prefetch"), "--prefetch")?;
     plan.prefetch_depth = a.get_usize("prefetch-depth")?;
     plan.tensor_arenas = parse_switch(&a.get("arena"), "--arena")?;
     plan.shards = a.get_usize_min("shards", 1)?;
+    plan.out_of_core = a.get_flag("out-of-core");
+    plan.cache_shards = a.get_usize_min("cache-shards", 1)?;
+    plan.hot_rows = a.get_usize("hot-rows")?;
+    anyhow::ensure!(
+        !plan.out_of_core || !graph_file.is_empty(),
+        "--out-of-core needs --graph-file (the container is built next to it)"
+    );
     let ckpt = a.get("checkpoint");
     if !ckpt.is_empty() {
         plan.checkpoint = Some(PathBuf::from(ckpt));
@@ -319,9 +450,9 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
     if !resume.is_empty() {
         plan.resume = Some(PathBuf::from(resume));
     }
+    let label = if graph_file.is_empty() { a.get("data") } else { graph_file.clone() };
     crate::info!(
-        "dataset `{}`: |V|={} |E|={} max(t)={:.3e}",
-        a.get("data"),
+        "dataset `{label}`: |V|={} |E|={} max(t)={:.3e}",
         plan.graph.num_nodes,
         plan.graph.num_edges(),
         plan.graph.max_time()
@@ -330,7 +461,7 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         a.get_usize("epochs")?,
         a.get_usize("chunks")?,
         a.get_usize("workers")?,
-        &a.get("data"),
+        &label,
         true,
     )?;
     println!("\n== {} on {} ==", report.variant, report.dataset);

@@ -241,6 +241,56 @@ pub fn gdelt_like(scale: f64, seed: u64) -> Result<TemporalGraph> {
     Ok(g)
 }
 
+/// Stream a GDELT-shaped chronological event stream straight to a
+/// `TGLEDG01` edge file without ever materialising the edge list.
+///
+/// Same statistical recipe as [`gdelt_like`] — Zipf-skewed actors, 40
+/// communities with 0.7 intra-community probability, nondecreasing
+/// timestamps — but peak memory is O(actors) (the community table) plus
+/// one write buffer, independent of `edges`. That lets the billion-scale
+/// example emit graphs far larger than RAM; the out-of-core container
+/// build then hits its sorted-input fast path because the stream is
+/// chronological. Features and labels are deliberately omitted: the
+/// out-of-core path trains featureless (memory/mailbox state only).
+///
+/// Returns the number of edges written.
+pub fn stream_gdelt_like(
+    path: &std::path::Path,
+    actors: usize,
+    edges: u64,
+    seed: u64,
+) -> Result<u64> {
+    let mut rng = Rng::new(seed ^ 0x6DE1_7000);
+    let actors = actors.max(2);
+    let max_time = 1.8e5;
+
+    let communities = 40usize;
+    let comm: Vec<u32> = (0..actors).map(|_| rng.below(communities) as u32).collect();
+    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); communities];
+    for (a, &c) in comm.iter().enumerate() {
+        by_comm[c as usize].push(a as u32);
+    }
+    for c in by_comm.iter_mut() {
+        if c.is_empty() {
+            c.push(0);
+        }
+    }
+
+    let mut w = crate::graph::EdgeFileWriter::create(path, actors)?;
+    for e in 0..edges {
+        let a = rng.zipf(actors, 1.05) as u32;
+        let b = if rng.chance(0.7) {
+            let peers = &by_comm[comm[a as usize] as usize];
+            peers[rng.below(peers.len())]
+        } else {
+            rng.below(actors) as u32
+        };
+        let t = max_time * e as f64 / edges as f64;
+        w.push(a, b, t)?;
+    }
+    w.finish()
+}
+
 /// MAG-like citation network: a *growing* node set (papers) where each new
 /// paper cites earlier papers with preferential attachment; coarse yearly
 /// timestamps; rich node features; 152-class labels — the "huge |V|,

@@ -16,7 +16,9 @@
 
 mod generators;
 
-pub use generators::{gdelt_like, interactions, mag_like, planted_signal, InteractionSpec};
+pub use generators::{
+    gdelt_like, interactions, mag_like, planted_signal, stream_gdelt_like, InteractionSpec,
+};
 
 use crate::graph::TemporalGraph;
 use anyhow::{bail, Result};
@@ -131,6 +133,25 @@ mod tests {
     #[test]
     fn unknown_rejected() {
         assert!(by_name("nope", 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn streamed_gdelt_matches_shape_and_is_chronological() {
+        let dir = std::env::temp_dir().join(format!("tgl_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.edges");
+        let n = stream_gdelt_like(&path, 600, 5000, 11).unwrap();
+        assert_eq!(n, 5000);
+        let g = crate::graph::graph_from_edge_file(&path).unwrap();
+        assert_eq!(g.num_nodes(), 600);
+        assert_eq!(g.num_edges(), 5000);
+        assert!(g.time.windows(2).all(|w| w[0] <= w[1]), "chronological");
+        assert!(g.src.iter().chain(g.dst.iter()).all(|&v| (v as usize) < 600));
+        // Deterministic by seed: same file bytes on a second pass.
+        let path2 = dir.join("stream2.edges");
+        stream_gdelt_like(&path2, 600, 5000, 11).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

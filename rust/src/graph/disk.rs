@@ -1,0 +1,857 @@
+//! Out-of-core T-CSR: streamed edge files, bounded-memory external-sort
+//! container builds, and on-demand per-shard loading (ROADMAP item 2; the
+//! paper's billion-edge claim as a disk-size limit instead of a RAM
+//! limit).
+//!
+//! Three layers:
+//!
+//! 1. **Edge files** (`TGLEDG01`): a flat stream of `(src: u32, dst: u32,
+//!    time: f64)` records with a tiny header — the interchange format for
+//!    graphs too large to materialize. [`EdgeFileWriter`] appends in O(1)
+//!    memory; [`EdgeFileReader`] streams back.
+//! 2. **Container build** ([`build_container`]): external-sorts an edge
+//!    file chronologically in bounded memory (chunked stable runs + k-way
+//!    merge; an already-sorted input is detected and streamed straight
+//!    through), assigns chronological edge ids at merge time, routes each
+//!    directed slot to its owner shard's bucket file, and finally streams
+//!    every shard's `s{j}.indptr` / `s{j}.indices` / `s{j}.times` /
+//!    `s{j}.eids` sections into a checksummed `TGLBIN02` container via
+//!    [`StreamWriter`]. Peak memory is `O(|V|)` for the degree array plus
+//!    one shard's slot arrays — never the whole graph. The slot routing
+//!    replays [`build_shards`]' chronological sweep, so the result is
+//!    **byte-identical** to the in-RAM build (property-tested in
+//!    `rust/tests/out_of_core.rs`).
+//! 3. **Loaders**: [`DiskTCsr`] scans the container headers
+//!    ([`FileIndex`]) and loads single shards on demand, each read
+//!    CRC-verified; [`ShardCache`] keeps a capacity-bounded set of
+//!    recently used shards (MRU list) with hit/miss/eviction counters for
+//!    the bench rows.
+
+use super::shard::{ShardSpec, ShardedTCsr};
+use super::tcsr::TCsr;
+use super::TemporalGraph;
+use crate::util::binfmt::{FileIndex, StreamWriter};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+const EDGE_MAGIC: &[u8; 8] = b"TGLEDG01";
+/// Bytes per edge record: u32 src + u32 dst + f64 time.
+const EDGE_REC: usize = 16;
+/// Bytes per routed slot record: u32 owner + u32 nbr + f64 time + u32 eid.
+const SLOT_REC: usize = 20;
+
+// -------------------------------------------------------------- edge file
+
+/// One temporal edge as stored in a `TGLEDG01` stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeRec {
+    pub src: u32,
+    pub dst: u32,
+    pub time: f64,
+}
+
+/// Streaming writer for `TGLEDG01` edge files: header (magic, num_nodes,
+/// num_edges) + packed 16-byte records. `num_edges` is patched at
+/// [`Self::finish`], so the edge count need not be known up front; an
+/// unfinished file is invalid (count `u64::MAX`).
+pub struct EdgeFileWriter {
+    f: BufWriter<std::fs::File>,
+    num_nodes: u64,
+    written: u64,
+}
+
+impl EdgeFileWriter {
+    pub fn create(path: &Path, num_nodes: usize) -> Result<EdgeFileWriter> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut f = BufWriter::new(f);
+        f.write_all(EDGE_MAGIC).context("writing edge magic")?;
+        f.write_all(&(num_nodes as u64).to_le_bytes()).context("writing num_nodes")?;
+        f.write_all(&u64::MAX.to_le_bytes()).context("writing edge count placeholder")?;
+        Ok(EdgeFileWriter { f, num_nodes: num_nodes as u64, written: 0 })
+    }
+
+    pub fn push(&mut self, src: u32, dst: u32, time: f64) -> Result<()> {
+        if src as u64 >= self.num_nodes || dst as u64 >= self.num_nodes {
+            bail!("edge ({src}, {dst}) out of range for {} nodes", self.num_nodes);
+        }
+        let mut rec = [0u8; EDGE_REC];
+        rec[0..4].copy_from_slice(&src.to_le_bytes());
+        rec[4..8].copy_from_slice(&dst.to_le_bytes());
+        rec[8..16].copy_from_slice(&time.to_le_bytes());
+        self.f.write_all(&rec).context("writing edge record")?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Patch the edge count into the header and flush to disk.
+    pub fn finish(mut self) -> Result<u64> {
+        self.f.flush().context("flushing edge file")?;
+        let mut f =
+            self.f.into_inner().map_err(|e| anyhow::anyhow!("flushing edge file: {e}"))?;
+        f.seek(SeekFrom::Start(16)).context("seeking to edge count")?;
+        f.write_all(&self.written.to_le_bytes()).context("patching edge count")?;
+        f.sync_all().context("fsync edge file")?;
+        Ok(self.written)
+    }
+}
+
+/// Streaming reader over a `TGLEDG01` edge file.
+pub struct EdgeFileReader {
+    f: BufReader<std::fs::File>,
+    path: PathBuf,
+    num_nodes: usize,
+    num_edges: u64,
+    read: u64,
+}
+
+impl EdgeFileReader {
+    pub fn open(path: &Path) -> Result<EdgeFileReader> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let len = f.metadata()?.len();
+        let mut f = BufReader::new(f);
+        let mut hdr = [0u8; 24];
+        f.read_exact(&mut hdr)
+            .with_context(|| format!("{}: reading edge file header", path.display()))?;
+        if &hdr[0..8] != EDGE_MAGIC {
+            bail!("{}: not a TGL edge file (bad magic)", path.display());
+        }
+        let num_nodes = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let num_edges = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        if num_edges == u64::MAX {
+            bail!("{}: unfinished edge file (no edge count)", path.display());
+        }
+        if num_edges.checked_mul(EDGE_REC as u64).map_or(true, |b| b != len - 24) {
+            bail!(
+                "{}: header claims {num_edges} edges but file holds {} payload bytes",
+                path.display(),
+                len - 24
+            );
+        }
+        Ok(EdgeFileReader {
+            f,
+            path: path.to_path_buf(),
+            num_nodes: num_nodes as usize,
+            num_edges,
+            read: 0,
+        })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.num_edges
+    }
+
+    /// Next record, or `None` at end of stream.
+    pub fn next_edge(&mut self) -> Result<Option<EdgeRec>> {
+        if self.read == self.num_edges {
+            return Ok(None);
+        }
+        let mut rec = [0u8; EDGE_REC];
+        self.f.read_exact(&mut rec).context("reading edge record")?;
+        self.read += 1;
+        let src = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+        let dst = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+        let time = f64::from_le_bytes(rec[8..16].try_into().unwrap());
+        if src >= self.num_nodes as u32 || dst >= self.num_nodes as u32 {
+            bail!("edge ({src}, {dst}) out of range for {} nodes", self.num_nodes);
+        }
+        Ok(Some(EdgeRec { src, dst, time }))
+    }
+
+    /// Fill `buf` with up to `n` records; returns the count read (0 at
+    /// end of stream).
+    pub fn read_chunk(&mut self, buf: &mut Vec<EdgeRec>, n: usize) -> Result<usize> {
+        buf.clear();
+        while buf.len() < n {
+            match self.next_edge()? {
+                Some(e) => buf.push(e),
+                None => break,
+            }
+        }
+        Ok(buf.len())
+    }
+}
+
+/// Write a resident graph's edge stream out as a `TGLEDG01` file (test /
+/// migration helper; features and labels are not part of the edge file).
+pub fn edge_file_from_graph(g: &TemporalGraph, path: &Path) -> Result<()> {
+    let mut w = EdgeFileWriter::create(path, g.num_nodes)?;
+    for e in 0..g.num_edges() {
+        w.push(g.src[e], g.dst[e], g.time[e])?;
+    }
+    w.finish()?;
+    Ok(())
+}
+
+/// Load an edge file as a resident **featureless** [`TemporalGraph`]
+/// (synthetic variants read no features, so this is enough to train on) —
+/// the `--graph-file` CLI path for graphs that fit in RAM while the index
+/// stays on disk.
+pub fn graph_from_edge_file(path: &Path) -> Result<TemporalGraph> {
+    let mut r = EdgeFileReader::open(path)?;
+    let n = r.num_edges() as usize;
+    let (mut src, mut dst, mut time) =
+        (Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
+    while let Some(e) = r.next_edge()? {
+        src.push(e.src);
+        dst.push(e.dst);
+        time.push(e.time);
+    }
+    TemporalGraph::new(r.num_nodes(), src, dst, time)
+}
+
+// ------------------------------------------------------ container build
+
+/// Tuning knobs for [`build_container`].
+#[derive(Debug, Clone)]
+pub struct BuildCfg {
+    /// Reverse-slot convention, as in [`TCsr::build`].
+    pub add_reverse: bool,
+    /// Node-range shard count for the on-disk layout.
+    pub shards: usize,
+    /// Edges sorted per in-memory run during the external sort — the
+    /// memory bound of the sort phase (16 bytes per edge).
+    pub chunk_edges: usize,
+}
+
+impl Default for BuildCfg {
+    fn default() -> Self {
+        // 4M edges ≈ 64 MB per sort run.
+        BuildCfg { add_reverse: true, shards: 1, chunk_edges: 4 << 20 }
+    }
+}
+
+/// One source of chronologically sorted records during the merge phase:
+/// either a sorted run file or (already-sorted input) the edge file
+/// itself.
+struct RunReader {
+    f: BufReader<std::fs::File>,
+    remaining: u64,
+    head: Option<EdgeRec>,
+}
+
+impl RunReader {
+    fn advance(&mut self) -> Result<()> {
+        self.head = if self.remaining == 0 {
+            None
+        } else {
+            let mut rec = [0u8; EDGE_REC];
+            self.f.read_exact(&mut rec).context("reading sort run")?;
+            self.remaining -= 1;
+            Some(EdgeRec {
+                src: u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+                dst: u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+                time: f64::from_le_bytes(rec[8..16].try_into().unwrap()),
+            })
+        };
+        Ok(())
+    }
+}
+
+fn write_run(dir: &Path, idx: usize, chunk: &[EdgeRec]) -> Result<PathBuf> {
+    let path = dir.join(format!("run{idx}"));
+    let f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut f = BufWriter::new(f);
+    for e in chunk {
+        let mut rec = [0u8; EDGE_REC];
+        rec[0..4].copy_from_slice(&e.src.to_le_bytes());
+        rec[4..8].copy_from_slice(&e.dst.to_le_bytes());
+        rec[8..16].copy_from_slice(&e.time.to_le_bytes());
+        f.write_all(&rec).context("writing sort run")?;
+    }
+    f.flush().context("flushing sort run")?;
+    Ok(path)
+}
+
+/// External-sort `edge_path` chronologically and stream the node-sharded
+/// T-CSR container to `out_path` in bounded memory. Returns the
+/// [`DiskTCsr`] over the finished container.
+///
+/// The merge is **globally stable**: runs are consecutive input chunks,
+/// each stably sorted, and ties pop by run index — so equal timestamps
+/// keep input order exactly like the resident
+/// [`TemporalGraph::new`] stable sort, and the chronological edge ids
+/// assigned at merge position `e` match the in-RAM pipeline's bit for
+/// bit.
+pub fn build_container(edge_path: &Path, out_path: &Path, cfg: &BuildCfg) -> Result<DiskTCsr> {
+    anyhow::ensure!(cfg.shards >= 1, "shard count must be >= 1");
+    anyhow::ensure!(cfg.chunk_edges >= 1, "chunk_edges must be >= 1");
+    let input = EdgeFileReader::open(edge_path)?;
+    let spec = ShardSpec::new(input.num_nodes(), cfg.shards);
+    let num_edges = input.num_edges();
+
+    let work = PathBuf::from({
+        let mut os = out_path.as_os_str().to_os_string();
+        os.push(".build");
+        os
+    });
+    std::fs::create_dir_all(&work)
+        .with_context(|| format!("creating {}", work.display()))?;
+    let res = build_container_inner(&input, out_path, &work, cfg, spec, num_edges);
+    let _ = std::fs::remove_dir_all(&work);
+    res?;
+    DiskTCsr::open(out_path)
+        .with_context(|| format!("reopening freshly built {}", out_path.display()))
+}
+
+fn build_container_inner(
+    input: &EdgeFileReader,
+    out_path: &Path,
+    work: &Path,
+    cfg: &BuildCfg,
+    spec: ShardSpec,
+    num_edges: u64,
+) -> Result<()> {
+    let num_nodes = spec.num_nodes();
+    let shards = spec.shards();
+
+    // Phase A: chunked stable sort into run files. A fully sorted input
+    // (chronological event logs, our generators) produces zero runs and
+    // is merged straight from the source file.
+    let mut runs: Vec<PathBuf> = Vec::new();
+    let mut chunk: Vec<EdgeRec> = Vec::new();
+    let mut sorted_so_far = true;
+    let mut prev_t = f64::NEG_INFINITY;
+    {
+        let mut probe = EdgeFileReader::open_like(input)?;
+        loop {
+            let n = probe.read_chunk(&mut chunk, cfg.chunk_edges)?;
+            if n == 0 {
+                break;
+            }
+            for e in &chunk {
+                if e.time < prev_t {
+                    sorted_so_far = false;
+                }
+                prev_t = e.time;
+            }
+            if !sorted_so_far {
+                break;
+            }
+        }
+        if !sorted_so_far {
+            // Re-stream from the top, this time writing sorted runs.
+            let mut src = EdgeFileReader::open_like(input)?;
+            let mut idx = 0usize;
+            loop {
+                let n = src.read_chunk(&mut chunk, cfg.chunk_edges)?;
+                if n == 0 {
+                    break;
+                }
+                chunk.sort_by(|a, b| a.time.total_cmp(&b.time));
+                runs.push(write_run(work, idx, &chunk)?);
+                idx += 1;
+            }
+        }
+    }
+    drop(chunk);
+
+    // Phase B: k-way merge (or direct stream when sorted). Assign eids by
+    // merge position, accumulate per-node degrees, and route every
+    // directed slot to its owner shard's bucket file — the chronological
+    // sweep of `build_shards`, spilled to disk.
+    let mut sources: Vec<RunReader> = if runs.is_empty() {
+        let r = EdgeFileReader::open_like(input)?;
+        vec![RunReader { f: r.f, remaining: num_edges, head: None }]
+    } else {
+        runs.iter()
+            .map(|p| -> Result<RunReader> {
+                let f = std::fs::File::open(p)
+                    .with_context(|| format!("opening {}", p.display()))?;
+                let len = f.metadata()?.len();
+                Ok(RunReader {
+                    f: BufReader::new(f),
+                    remaining: len / EDGE_REC as u64,
+                    head: None,
+                })
+            })
+            .collect::<Result<_>>()?
+    };
+    for s in &mut sources {
+        s.advance()?;
+    }
+
+    let mut degree = vec![0u64; num_nodes];
+    let mut buckets: Vec<BufWriter<std::fs::File>> = (0..shards)
+        .map(|s| -> Result<_> {
+            let p = work.join(format!("bucket{s}"));
+            Ok(BufWriter::new(
+                std::fs::File::create(&p)
+                    .with_context(|| format!("creating {}", p.display()))?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let mut route = |buckets: &mut Vec<BufWriter<std::fs::File>>,
+                     owner: u32,
+                     nbr: u32,
+                     t: f64,
+                     eid: u32|
+     -> Result<()> {
+        let mut rec = [0u8; SLOT_REC];
+        rec[0..4].copy_from_slice(&owner.to_le_bytes());
+        rec[4..8].copy_from_slice(&nbr.to_le_bytes());
+        rec[8..16].copy_from_slice(&t.to_le_bytes());
+        rec[16..20].copy_from_slice(&eid.to_le_bytes());
+        buckets[spec.shard_of(owner)].write_all(&rec).context("writing shard bucket")
+    };
+    if num_edges > u32::MAX as u64 {
+        bail!("edge count {num_edges} exceeds the u32 chronological id space");
+    }
+    for e in 0..num_edges {
+        // Pop the (time, run index)-minimal head: global stability.
+        let mut best: Option<usize> = None;
+        for (i, s) in sources.iter().enumerate() {
+            if let Some(h) = &s.head {
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        sources[b].head.as_ref().unwrap().time.total_cmp(&h.time)
+                            == std::cmp::Ordering::Greater
+                    }
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        let i = best.expect("merge ran dry before num_edges records");
+        let rec = sources[i].head.unwrap();
+        sources[i].advance()?;
+        degree[rec.src as usize] += 1;
+        route(&mut buckets, rec.src, rec.dst, rec.time, e as u32)?;
+        if cfg.add_reverse {
+            degree[rec.dst as usize] += 1;
+            route(&mut buckets, rec.dst, rec.src, rec.time, e as u32)?;
+        }
+    }
+    for b in &mut buckets {
+        b.flush().context("flushing shard bucket")?;
+    }
+    drop(buckets);
+    drop(sources);
+
+    // Phase C: per shard, place its bucket's chronological records behind
+    // a local indptr (slices come out time-sorted, as in `build_shards`
+    // pass 2) and stream the sections out. Peak memory here is one
+    // shard's slot arrays (16 B/slot), not the graph's.
+    let mut w = StreamWriter::create(out_path)?;
+    let mut meta = Vec::with_capacity(32);
+    meta.extend_from_slice(&(num_nodes as u64).to_le_bytes());
+    meta.extend_from_slice(&num_edges.to_le_bytes());
+    meta.extend_from_slice(&(shards as u64).to_le_bytes());
+    meta.extend_from_slice(&(cfg.add_reverse as u64).to_le_bytes());
+    w.begin_section("meta", 3, meta.len() as u64)?;
+    w.write_bytes(&meta)?;
+    w.end_section()?;
+
+    for s in 0..shards {
+        let range = spec.range(s);
+        let lo = range.start as usize;
+        let n_local = range.len();
+        let mut indptr = Vec::with_capacity(n_local + 1);
+        let mut acc = 0u64;
+        indptr.push(0u64);
+        for v in lo..lo + n_local {
+            acc += degree[v];
+            indptr.push(acc);
+        }
+        let slots = acc as usize;
+        let mut cursor = vec![0u64; n_local];
+        let mut indices = vec![0u32; slots];
+        let mut times = vec![0f64; slots];
+        let mut eids = vec![0u32; slots];
+        let p = work.join(format!("bucket{s}"));
+        let f =
+            std::fs::File::open(&p).with_context(|| format!("opening {}", p.display()))?;
+        let n_recs = f.metadata()?.len() / SLOT_REC as u64;
+        anyhow::ensure!(
+            n_recs == acc,
+            "shard {s}: bucket holds {n_recs} slots, degrees say {acc}"
+        );
+        let mut f = BufReader::new(f);
+        let mut rec = [0u8; SLOT_REC];
+        for _ in 0..n_recs {
+            f.read_exact(&mut rec).context("reading shard bucket")?;
+            let owner = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+            let local = (owner as usize) - lo;
+            let at = (indptr[local] + cursor[local]) as usize;
+            cursor[local] += 1;
+            indices[at] = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+            times[at] = f64::from_le_bytes(rec[8..16].try_into().unwrap());
+            eids[at] = u32::from_le_bytes(rec[16..20].try_into().unwrap());
+        }
+        let indptr_bytes: Vec<u8> =
+            indptr.iter().flat_map(|x| x.to_le_bytes()).collect();
+        w.begin_section(&format!("s{s}.indptr"), 3, indptr_bytes.len() as u64)?;
+        w.write_bytes(&indptr_bytes)?;
+        w.end_section()?;
+        w.begin_section(&format!("s{s}.indices"), 0, indices.len() as u64)?;
+        w.write_u32s(&indices)?;
+        w.end_section()?;
+        w.begin_section(&format!("s{s}.times"), 2, times.len() as u64)?;
+        w.write_f64s(&times)?;
+        w.end_section()?;
+        w.begin_section(&format!("s{s}.eids"), 0, eids.len() as u64)?;
+        w.write_u32s(&eids)?;
+        w.end_section()?;
+    }
+    w.finish()
+}
+
+impl EdgeFileReader {
+    /// A fresh reader over the same file (the external sort streams the
+    /// input multiple times; cloned handles would share a seek offset).
+    fn open_like(other: &EdgeFileReader) -> Result<EdgeFileReader> {
+        EdgeFileReader::open(&other.path)
+    }
+}
+
+// ---------------------------------------------------------------- loader
+
+/// Header-level view of an on-disk T-CSR container: metadata plus a
+/// [`FileIndex`] for loading shards on demand. Cloning clones only the
+/// metadata (each load opens the file independently, so one `DiskTCsr`
+/// can serve many shard producers).
+#[derive(Debug, Clone)]
+pub struct DiskTCsr {
+    index: FileIndex,
+    num_nodes: usize,
+    num_edges: u64,
+    add_reverse: bool,
+    spec: ShardSpec,
+}
+
+impl DiskTCsr {
+    /// Scan a container built by [`build_container`]. Only section
+    /// headers are read (footer-CRC verified); payloads stay on disk.
+    pub fn open(path: &Path) -> Result<DiskTCsr> {
+        let index = FileIndex::scan(path)?;
+        let meta = index
+            .read_bytes("meta")
+            .with_context(|| format!("{}: graph container meta", path.display()))?;
+        anyhow::ensure!(meta.len() == 32, "graph container meta must be 32 bytes");
+        let num_nodes = u64::from_le_bytes(meta[0..8].try_into().unwrap()) as usize;
+        let num_edges = u64::from_le_bytes(meta[8..16].try_into().unwrap());
+        let shards = u64::from_le_bytes(meta[16..24].try_into().unwrap()) as usize;
+        let add_reverse = u64::from_le_bytes(meta[24..32].try_into().unwrap()) != 0;
+        anyhow::ensure!(shards >= 1, "graph container declares zero shards");
+        let spec = ShardSpec::new(num_nodes, shards);
+        anyhow::ensure!(
+            spec.shards() == shards,
+            "graph container shard count {shards} does not match the partition rule"
+        );
+        for s in 0..shards {
+            for part in ["indptr", "indices", "times", "eids"] {
+                let name = format!("s{s}.{part}");
+                anyhow::ensure!(index.has(&name), "graph container missing section `{name}`");
+            }
+        }
+        Ok(DiskTCsr { index, num_nodes, num_edges, add_reverse, spec })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.num_edges
+    }
+
+    pub fn add_reverse(&self) -> bool {
+        self.add_reverse
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.spec.shards()
+    }
+
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    pub fn path(&self) -> &Path {
+        self.index.path()
+    }
+
+    /// Total container bytes on disk (bench reporting).
+    pub fn file_bytes(&self) -> u64 {
+        std::fs::metadata(self.index.path()).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Load one shard's range into a local-indexed [`TCsr`] — the only
+    /// payload bytes touched are that shard's own sections, each verified
+    /// against its stored CRC.
+    pub fn load_shard(&self, s: usize) -> Result<TCsr> {
+        anyhow::ensure!(s < self.spec.shards(), "shard {s} out of range");
+        let n_local = self.spec.range(s).len();
+        let indptr_bytes = self.index.read_bytes(&format!("s{s}.indptr"))?;
+        anyhow::ensure!(
+            indptr_bytes.len() == (n_local + 1) * 8,
+            "shard {s}: indptr section holds {} bytes, want {}",
+            indptr_bytes.len(),
+            (n_local + 1) * 8
+        );
+        let indptr: Vec<usize> = indptr_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let slots = *indptr.last().unwrap();
+        let indices = self.index.read_u32s(&format!("s{s}.indices"))?;
+        let times = self.index.read_f64s(&format!("s{s}.times"))?;
+        let eids = self.index.read_u32s(&format!("s{s}.eids"))?;
+        anyhow::ensure!(
+            indices.len() == slots && times.len() == slots && eids.len() == slots,
+            "shard {s}: slot arrays disagree with indptr total {slots}"
+        );
+        Ok(TCsr { num_nodes: n_local, indptr, indices, times, eids })
+    }
+
+    /// Load every shard into a resident [`ShardedTCsr`] (tests; graphs
+    /// that turn out to fit after all).
+    pub fn load_sharded(&self) -> Result<ShardedTCsr> {
+        let shards = (0..self.spec.shards())
+            .map(|s| self.load_shard(s))
+            .collect::<Result<Vec<_>>>()?;
+        let out = ShardedTCsr::from_parts(self.spec, shards);
+        out.check_invariants()?;
+        Ok(out)
+    }
+}
+
+// ----------------------------------------------------------- shard cache
+
+/// Running hit/miss/eviction counts of a [`ShardCache`] (bench rows).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Capacity-bounded pool of resident shards over a [`DiskTCsr`]: at most
+/// `cap` shard CSRs in memory, MRU-retained, loaded on demand. `Arc`
+/// handles keep an evicted shard alive for any producer still using it,
+/// so eviction is always safe. All methods take `&self` (internal lock) —
+/// one cache serves every shard producer of a
+/// [`crate::sampler::ShardedSampler`].
+#[derive(Debug)]
+pub struct ShardCache {
+    disk: DiskTCsr,
+    cap: usize,
+    /// MRU-first list of `(shard, csr)` — tiny (cap is single digits), so
+    /// a vector scan beats any map.
+    resident: Mutex<Vec<(usize, Arc<TCsr>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ShardCache {
+    pub fn new(disk: DiskTCsr, cap: usize) -> ShardCache {
+        ShardCache {
+            disk,
+            cap: cap.max(1),
+            resident: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn disk(&self) -> &DiskTCsr {
+        &self.disk
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Shard `s`, loading from disk on a miss and evicting the
+    /// least-recently-used resident shard past capacity.
+    pub fn get(&self, s: usize) -> Result<Arc<TCsr>> {
+        let mut resident = self.resident.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(at) = resident.iter().position(|(id, _)| *id == s) {
+            let entry = resident.remove(at);
+            let csr = entry.1.clone();
+            resident.insert(0, entry);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(csr);
+        }
+        // Miss: load outside nothing — the lock is held through the load
+        // so concurrent producers of the same shard load it once. Loads
+        // are rare by design (cap ≥ working set in the steady state).
+        let csr = Arc::new(self.disk.load_shard(s)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        resident.insert(0, (s, csr.clone()));
+        while resident.len() > self.cap {
+            resident.pop();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(csr)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("tgl_disk_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn toy() -> TemporalGraph {
+        TemporalGraph::new(
+            5,
+            vec![1, 1, 1, 1, 2],
+            vec![2, 3, 4, 0, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 2.5],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn edge_file_roundtrips() {
+        let dir = tmp_dir("edges");
+        let path = dir.join("g.edges");
+        let g = toy();
+        edge_file_from_graph(&g, &path).unwrap();
+        let mut r = EdgeFileReader::open(&path).unwrap();
+        assert_eq!(r.num_nodes(), 5);
+        assert_eq!(r.num_edges(), 5);
+        let mut n = 0;
+        while let Some(e) = r.next_edge().unwrap() {
+            assert_eq!((e.src, e.dst, e.time), (g.src[n], g.dst[n], g.time[n]));
+            n += 1;
+        }
+        assert_eq!(n, 5);
+        let g2 = graph_from_edge_file(&path).unwrap();
+        assert_eq!(g2.src, g.src);
+        assert_eq!(g2.dst, g.dst);
+        assert_eq!(g2.time, g.time);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unfinished_edge_file_rejected() {
+        let dir = tmp_dir("unfinished");
+        let path = dir.join("g.edges");
+        let w = EdgeFileWriter::create(&path, 5).unwrap();
+        drop(w); // no finish(): count placeholder remains
+        assert!(EdgeFileReader::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disk_build_matches_ram_build_toy() {
+        let dir = tmp_dir("build");
+        let g = toy();
+        let edges = dir.join("g.edges");
+        edge_file_from_graph(&g, &edges).unwrap();
+        for shards in [1usize, 2, 3, 7] {
+            for add_reverse in [false, true] {
+                let out = dir.join(format!("g_{shards}_{add_reverse}.tcsr"));
+                let cfg = BuildCfg { add_reverse, shards, chunk_edges: 2 };
+                let disk = build_container(&edges, &out, &cfg).unwrap();
+                assert_eq!(disk.num_nodes(), 5);
+                assert_eq!(disk.num_edges(), 5);
+                assert_eq!(disk.add_reverse(), add_reverse);
+                let loaded = disk.load_sharded().unwrap();
+                let want = ShardedTCsr::build(&g, add_reverse, shards);
+                assert_eq!(loaded.num_shards(), want.num_shards());
+                for s in 0..want.num_shards() {
+                    let (a, b) = (loaded.shard(s), want.shard(s));
+                    assert_eq!(a.indptr, b.indptr, "shard {s}");
+                    assert_eq!(a.indices, b.indices, "shard {s}");
+                    assert_eq!(a.times, b.times, "shard {s}");
+                    assert_eq!(a.eids, b.eids, "shard {s}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unsorted_input_is_externally_sorted_stably() {
+        // Shuffled input with duplicate timestamps: the container must
+        // equal the one built from the resident (stably sorted) graph.
+        let dir = tmp_dir("sort");
+        let src = vec![3u32, 0, 1, 2, 1, 0, 2, 1];
+        let dst = vec![0u32, 1, 2, 3, 0, 2, 1, 3];
+        let time = vec![5.0, 1.0, 3.0, 1.0, 3.0, 2.0, 0.5, 3.0];
+        let edges = dir.join("g.edges");
+        let mut w = EdgeFileWriter::create(&edges, 4).unwrap();
+        for i in 0..src.len() {
+            w.push(src[i], dst[i], time[i]).unwrap();
+        }
+        w.finish().unwrap();
+        let g = TemporalGraph::new(4, src, dst, time).unwrap();
+        let out = dir.join("g.tcsr");
+        let cfg = BuildCfg { add_reverse: true, shards: 2, chunk_edges: 3 };
+        let disk = build_container(&edges, &out, &cfg).unwrap();
+        let loaded = disk.load_sharded().unwrap();
+        let want = ShardedTCsr::build(&g, true, 2);
+        for s in 0..2 {
+            assert_eq!(loaded.shard(s).indices, want.shard(s).indices, "shard {s}");
+            assert_eq!(loaded.shard(s).times, want.shard(s).times, "shard {s}");
+            assert_eq!(loaded.shard(s).eids, want.shard(s).eids, "shard {s}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_cache_counts_and_evicts() {
+        let dir = tmp_dir("cache");
+        let g = toy();
+        let edges = dir.join("g.edges");
+        edge_file_from_graph(&g, &edges).unwrap();
+        let out = dir.join("g.tcsr");
+        let cfg = BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64 };
+        let disk = build_container(&edges, &out, &cfg).unwrap();
+        let cache = ShardCache::new(disk, 2);
+        let a = cache.get(0).unwrap();
+        let _b = cache.get(1).unwrap();
+        assert_eq!(cache.stats().misses, 2);
+        let a2 = cache.get(0).unwrap();
+        assert!(Arc::ptr_eq(&a, &a2), "hit returns the resident shard");
+        assert_eq!(cache.stats().hits, 1);
+        // Loading a third shard evicts the LRU (shard 1).
+        let _c = cache.get(2).unwrap();
+        assert_eq!(cache.stats().evictions, 1);
+        let st = cache.stats();
+        assert_eq!(cache.get(1).unwrap().num_nodes, 2);
+        assert_eq!(cache.stats().misses, st.misses + 1, "evicted shard reloads");
+        assert!(cache.stats().hit_rate() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,12 +1,66 @@
 //! Temporal graph storage: the edge-timestamped dynamic graph model the
 //! paper targets, the T-CSR structure (paper §3.1) that the parallel
-//! temporal sampler reads, and the node-sharded T-CSR partition
-//! ([`ShardedTCsr`]) behind the sharded sampling pipeline.
+//! temporal sampler reads, the node-sharded T-CSR partition
+//! ([`ShardedTCsr`]) behind the sharded sampling pipeline, and the
+//! out-of-core layer ([`DiskTCsr`] / [`ShardCache`]) that keeps the index
+//! on disk for graphs larger than RAM.
 
+mod disk;
 mod shard;
 mod tcsr;
 mod temporal;
 
+pub use disk::{
+    build_container, edge_file_from_graph, graph_from_edge_file, BuildCfg, CacheStats,
+    DiskTCsr, EdgeFileReader, EdgeFileWriter, EdgeRec, ShardCache,
+};
 pub use shard::{ShardSpec, ShardedTCsr};
-pub use tcsr::TCsr;
+pub use tcsr::{index_builds_on_this_thread, TCsr};
 pub use temporal::{FeatureTable, NodeLabel, TemporalGraph};
+
+/// Exactly **one** index for a run — flat, sharded, or disk-backed. The
+/// trainer used to receive a flat [`TCsr`] and then build a
+/// [`ShardedTCsr`] *again* when `shards > 1`, keeping two full copies of
+/// the largest structure in the process alive; routing every caller
+/// through this enum makes that state unrepresentable
+/// (`rust/tests/out_of_core.rs` pins the build count).
+#[derive(Debug)]
+pub enum GraphIndex {
+    /// Unsharded in-RAM T-CSR (`shards <= 1`).
+    Flat(TCsr),
+    /// Node-sharded in-RAM T-CSR (`shards > 1`).
+    Sharded(ShardedTCsr),
+    /// On-disk container with a capacity-bounded resident-shard cache.
+    Disk(ShardCache),
+}
+
+impl GraphIndex {
+    /// Build the single in-RAM index a run needs: flat for `shards <= 1`,
+    /// sharded otherwise. (Disk-backed indexes come from
+    /// [`DiskTCsr::open`] + [`ShardCache::new`] instead — nothing to
+    /// build.)
+    pub fn build(g: &TemporalGraph, shards: usize) -> GraphIndex {
+        if shards > 1 {
+            GraphIndex::Sharded(ShardedTCsr::build(g, true, shards))
+        } else {
+            GraphIndex::Flat(TCsr::build(g, true))
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        match self {
+            GraphIndex::Flat(c) => c.num_nodes,
+            GraphIndex::Sharded(c) => c.num_nodes(),
+            GraphIndex::Disk(c) => c.disk().num_nodes(),
+        }
+    }
+
+    /// Shard count as the sampler sees it (1 for the flat index).
+    pub fn num_shards(&self) -> usize {
+        match self {
+            GraphIndex::Flat(_) => 1,
+            GraphIndex::Sharded(c) => c.num_shards(),
+            GraphIndex::Disk(c) => c.disk().num_shards(),
+        }
+    }
+}

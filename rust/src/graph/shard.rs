@@ -93,6 +93,13 @@ impl ShardedTCsr {
         ShardedTCsr { spec, shards: build_shards(g, add_reverse, &starts) }
     }
 
+    /// Reassemble from pre-built shard CSRs (the [`crate::graph::DiskTCsr`]
+    /// load path). The shards must follow `spec`'s ranges — checked by
+    /// [`Self::check_invariants`] at the call sites that care.
+    pub(crate) fn from_parts(spec: ShardSpec, shards: Vec<TCsr>) -> ShardedTCsr {
+        ShardedTCsr { spec, shards }
+    }
+
     pub fn num_nodes(&self) -> usize {
         self.spec.num_nodes
     }

@@ -114,7 +114,21 @@ impl TCsr {
 /// build's (`rust/tests/properties.rs` asserts this slice-for-slice).
 /// Because the edge list is chronological, appending in edge order leaves
 /// every slice time-sorted — no per-node sort, O(|E| + |V|) total.
+thread_local! {
+    /// How many in-RAM index builds (`TCsr::build` / `ShardedTCsr::build`)
+    /// this thread has run. Thread-local so parallel tests don't observe
+    /// each other; exists for the double-index regression test
+    /// (`RunPlan`/`Trainer` must build exactly one index per run).
+    static INDEX_BUILDS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// This thread's running count of in-RAM index builds (test observability).
+pub fn index_builds_on_this_thread() -> usize {
+    INDEX_BUILDS.with(|c| c.get())
+}
+
 pub(crate) fn build_shards(g: &TemporalGraph, add_reverse: bool, starts: &[usize]) -> Vec<TCsr> {
+    INDEX_BUILDS.with(|c| c.set(c.get() + 1));
     debug_assert!(starts.len() >= 2);
     debug_assert_eq!(starts[0], 0);
     debug_assert_eq!(*starts.last().unwrap(), g.num_nodes);

@@ -89,12 +89,33 @@ impl Model {
         })
     }
 
-    pub fn dim(&self, key: &str) -> usize {
-        self.mf.dims.get(key).copied().unwrap_or_else(|| panic!("missing dim `{key}`"))
+    /// A named dim from the variant manifest. A missing key is a malformed
+    /// or mismatched artifact set, so it surfaces as a named error rather
+    /// than a panic deep inside the trainer.
+    pub fn dim(&self, key: &str) -> Result<usize> {
+        self.mf.dims.get(key).copied().ok_or_else(|| {
+            anyhow::anyhow!("variant `{}`: manifest has no dim `{key}`", self.name)
+        })
     }
 
     pub fn uses_memory(&self) -> bool {
-        self.dim("use_memory") == 1
+        self.mf.dims.get("use_memory").copied() == Some(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn missing_dim_is_a_named_error() {
+        let model = super::synthetic("tgn").unwrap();
+        assert!(model.dim("dm").is_ok());
+        assert!(model.uses_memory(), "tgn variant carries memory");
+        let err = model.dim("no_such_dim").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no_such_dim") && msg.contains(&model.name),
+            "error should name the dim and the variant: {msg}"
+        );
     }
 }
 

@@ -229,21 +229,21 @@ mod tests {
     fn synthetic_variants_are_consistent() {
         for arch in ["tgn", "tgat"] {
             let m = synthetic(arch).unwrap();
-            assert_eq!(m.dim("bs"), BS);
+            assert_eq!(m.dim("bs").unwrap(), BS);
             let spec = m.mf.step("train").unwrap();
             for ts in &spec.inputs {
                 assert!(ts.numel() > 0, "{arch}: input {} empty", ts.name);
             }
             // n_total must match the root + hop-slot count the sampler
             // will produce (3bs roots, fanout^l expansion per hop).
-            let hops = m.dim("hops");
+            let hops = m.dim("hops").unwrap();
             let mut expect = 3 * BS;
             let mut level = 3 * BS;
             for _ in 0..hops {
                 level *= FANOUT;
                 expect += level;
             }
-            assert_eq!(m.dim("n_total"), expect);
+            assert_eq!(m.dim("n_total").unwrap(), expect);
         }
         assert!(synthetic("nope").is_err());
     }

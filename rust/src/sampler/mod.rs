@@ -34,7 +34,7 @@ pub use mfg::{Mfg, MfgBlock};
 pub use parallel::{SampleStats, TemporalSampler};
 pub(crate) use parallel::{mix_seed as parallel_seed, sample_distinct_small};
 pub use pointer::{PointerMode, PointerState};
-pub use sharded::ShardedSampler;
+pub use sharded::{ShardStore, ShardedSampler};
 
 /// Largest supported snapshot count S. The hot sampling kernel keeps its
 /// S+2 window boundaries in a fixed stack buffer, so the bound is enforced
@@ -49,12 +49,13 @@ pub const MAX_FANOUT: usize = 64;
 
 /// Either sampling engine behind one call surface: the flat
 /// [`TemporalSampler`] (borrowing a shared T-CSR) or the
-/// [`ShardedSampler`] (owning its node-partitioned T-CSR). The two are
+/// [`ShardedSampler`] (over an owned, borrowed, or disk-backed
+/// node-partitioned T-CSR — see [`ShardStore`]). The engines are
 /// bitwise-interchangeable for identical inputs, so the trainer picks by
-/// `TrainerCfg::shards` without affecting results.
+/// `TrainerCfg::shards` / the index kind without affecting results.
 pub enum SamplerHandle<'g> {
     Flat(TemporalSampler<'g>),
-    Sharded(Box<ShardedSampler>),
+    Sharded(Box<ShardedSampler<'g>>),
 }
 
 impl<'g> SamplerHandle<'g> {

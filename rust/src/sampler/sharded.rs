@@ -1,8 +1,11 @@
 //! Node-sharded temporal sampling: per-shard producers + deterministic
 //! merge.
 //!
-//! [`ShardedSampler`] owns a [`ShardedTCsr`] and runs Algorithm 1 with an
-//! explicit shard dimension: for every (snapshot, hop) block, root slots
+//! [`ShardedSampler`] reads a sharded T-CSR through a [`ShardStore`] —
+//! owned, borrowed from the run's single [`crate::graph::GraphIndex`], or
+//! loaded on demand from an on-disk container through a [`ShardCache`] —
+//! and runs Algorithm 1 with an explicit shard dimension: for every
+//! (snapshot, hop) block, root slots
 //! are partitioned by the **owning shard of the root node** (the
 //! [`crate::graph::ShardSpec`] contiguous-range rule), each shard's
 //! producer fills a compact per-shard arena sequentially — pointer state,
@@ -31,7 +34,7 @@
 
 use super::parallel::{sample_root_into, RootCounters};
 use super::{Mfg, MfgBlock, PointerState, SampleStats, SamplerConfig, MAX_SNAPSHOTS};
-use crate::graph::ShardedTCsr;
+use crate::graph::{CacheStats, ShardCache, ShardSpec, ShardedTCsr, TCsr};
 use crate::util::pool::WorkerPool;
 use std::sync::Mutex;
 
@@ -64,11 +67,37 @@ struct ScratchPtr(*mut ShardScratch);
 unsafe impl Send for ScratchPtr {}
 unsafe impl Sync for ScratchPtr {}
 
+/// Where the sharded sampler's T-CSR lives: owned in RAM, borrowed from a
+/// longer-lived index (the [`crate::graph::GraphIndex`] path — no second
+/// copy), or on disk behind a capacity-bounded [`ShardCache`].
+pub enum ShardStore<'g> {
+    Owned(ShardedTCsr),
+    Borrowed(&'g ShardedTCsr),
+    Disk(ShardCache),
+    /// A [`ShardCache`] owned elsewhere (the run's [`crate::graph::GraphIndex::Disk`]),
+    /// so its hit/miss counters stay visible to the owner.
+    DiskShared(&'g ShardCache),
+}
+
+impl ShardStore<'_> {
+    fn spec(&self) -> ShardSpec {
+        match self {
+            ShardStore::Owned(c) => c.spec(),
+            ShardStore::Borrowed(c) => c.spec(),
+            ShardStore::Disk(c) => c.disk().spec(),
+            ShardStore::DiskShared(c) => c.disk().spec(),
+        }
+    }
+}
+
 /// The sharded parallel temporal sampler (see module docs). Shareable
 /// across producer threads (`&self` sampling; scratch is pooled, pointer
 /// state is monotone + self-correcting like the flat sampler's).
-pub struct ShardedSampler {
-    csr: ShardedTCsr,
+pub struct ShardedSampler<'g> {
+    store: ShardStore<'g>,
+    /// The partition rule, copied out of the store (O(1) shard lookups
+    /// without matching on the store variant).
+    spec: ShardSpec,
     cfg: SamplerConfig,
     /// One pointer table per shard, sized to the shard's local node count.
     ptrs: Vec<PointerState>,
@@ -79,22 +108,46 @@ pub struct ShardedSampler {
     pub stats: SampleStats,
 }
 
-impl ShardedSampler {
+impl<'g> ShardedSampler<'g> {
     /// Build a sharded sampler over an owned [`ShardedTCsr`]. Panics on a
     /// config the fixed-size kernels cannot hold (see
     /// [`SamplerConfig::validate`]), like [`TemporalSampler::new`].
     ///
     /// [`TemporalSampler::new`]: super::TemporalSampler::new
-    pub fn new(csr: ShardedTCsr, cfg: SamplerConfig) -> ShardedSampler {
+    pub fn new(csr: ShardedTCsr, cfg: SamplerConfig) -> ShardedSampler<'g> {
+        ShardedSampler::with_store(ShardStore::Owned(csr), cfg)
+    }
+
+    /// Sampler over a borrowed [`ShardedTCsr`] — the run's single index,
+    /// shared instead of rebuilt.
+    pub fn over(csr: &'g ShardedTCsr, cfg: SamplerConfig) -> ShardedSampler<'g> {
+        ShardedSampler::with_store(ShardStore::Borrowed(csr), cfg)
+    }
+
+    /// Out-of-core sampler: shards load from disk on demand through the
+    /// cache. A shard read failing mid-epoch (I/O error, corrupted
+    /// section) panics the producer — the supervised-producer runtime
+    /// catches and retries/abandons it like any other producer fault.
+    pub fn on_disk(cache: ShardCache, cfg: SamplerConfig) -> ShardedSampler<'g> {
+        ShardedSampler::with_store(ShardStore::Disk(cache), cfg)
+    }
+
+    /// [`Self::on_disk`] over a cache owned elsewhere (the run's single
+    /// [`crate::graph::GraphIndex::Disk`] index): the owner keeps reading
+    /// the shared hit/miss/eviction counters.
+    pub fn on_disk_shared(cache: &'g ShardCache, cfg: SamplerConfig) -> ShardedSampler<'g> {
+        ShardedSampler::with_store(ShardStore::DiskShared(cache), cfg)
+    }
+
+    pub fn with_store(store: ShardStore<'g>, cfg: SamplerConfig) -> ShardedSampler<'g> {
         if let Err(e) = cfg.validate() {
             panic!("invalid SamplerConfig: {e}");
         }
-        let ptrs = csr
-            .shards
-            .iter()
-            .map(|sh| {
+        let spec = store.spec();
+        let ptrs = (0..spec.shards())
+            .map(|s| {
                 PointerState::new(
-                    sh.num_nodes,
+                    spec.range(s).len(),
                     cfg.num_snapshots,
                     cfg.snapshot_len,
                     cfg.pointer_mode,
@@ -103,9 +156,10 @@ impl ShardedSampler {
             .collect();
         // One worker per shard at most: the shard is the unit of
         // parallelism here (intra-shard roots stay sequential).
-        let pool = WorkerPool::new(cfg.threads.clamp(1, csr.num_shards().max(1)));
+        let pool = WorkerPool::new(cfg.threads.clamp(1, spec.shards().max(1)));
         ShardedSampler {
-            csr,
+            store,
+            spec,
             cfg,
             ptrs,
             pool,
@@ -118,12 +172,17 @@ impl ShardedSampler {
         &self.cfg
     }
 
-    pub fn csr(&self) -> &ShardedTCsr {
-        &self.csr
+    pub fn num_shards(&self) -> usize {
+        self.spec.shards()
     }
 
-    pub fn num_shards(&self) -> usize {
-        self.csr.num_shards()
+    /// Shard-cache counters when the store is disk-backed.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        match &self.store {
+            ShardStore::Disk(c) => Some(c.stats()),
+            ShardStore::DiskShared(c) => Some(c.stats()),
+            _ => None,
+        }
     }
 
     /// Reset every shard's pointer state (epoch boundary).
@@ -192,7 +251,7 @@ impl ShardedSampler {
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner)
             .pop()
-            .unwrap_or_else(|| ScratchSet::new(self.csr.num_shards()));
+            .unwrap_or_else(|| ScratchSet::new(self.spec.shards()));
         for s in 0..num_snapshots {
             for (l, layer) in self.cfg.layers.iter().enumerate() {
                 let hop_blocks = &mut mfg.snapshots[s];
@@ -224,7 +283,7 @@ impl ShardedSampler {
             return;
         }
         let fanout = layer.fanout;
-        let spec = self.csr.spec();
+        let spec = self.spec;
 
         // Selection: global root position → owning shard (masked padding
         // roots are skipped; their slots stay zeroed by the block reset).
@@ -262,7 +321,7 @@ impl ShardedSampler {
         let roots: &[u32] = &block.roots;
         let root_ts: &[f64] = &block.root_ts;
         let scratch_p = ScratchPtr(set.per_shard.as_mut_ptr());
-        let num_shards = self.csr.num_shards();
+        let num_shards = self.spec.shards();
         self.pool.run_chunks(num_shards, 1, |_, range| {
             let sp = &scratch_p;
             for s in range {
@@ -304,8 +363,28 @@ impl ShardedSampler {
         hop: usize,
         batch_seed: u64,
     ) {
-        let csr = self.csr.shard(s);
-        let start = self.csr.start(s);
+        // Resolve the shard's T-CSR from whichever store backs us. The
+        // disk path holds the Arc for the duration of the fill, so an
+        // eviction by a sibling producer cannot free it under us; a load
+        // error panics this producer (see [`Self::on_disk`]).
+        let held: std::sync::Arc<TCsr>;
+        let csr: &TCsr = match &self.store {
+            ShardStore::Owned(c) => c.shard(s),
+            ShardStore::Borrowed(c) => c.shard(s),
+            ShardStore::Disk(cache) => {
+                held = cache
+                    .get(s)
+                    .unwrap_or_else(|e| panic!("loading shard {s} from disk: {e:#}"));
+                &held
+            }
+            ShardStore::DiskShared(cache) => {
+                held = cache
+                    .get(s)
+                    .unwrap_or_else(|e| panic!("loading shard {s} from disk: {e:#}"));
+                &held
+            }
+        };
+        let start = self.spec.range(s).start;
         let ptrs = &self.ptrs[s];
         let fanout = layer.fanout;
         let collect = self.cfg.collect_stats;
@@ -434,6 +513,41 @@ mod tests {
         let again = s.sample(&roots, &ts, 1);
         assert_mfg_eq(&first, &again, "post-reset replay");
         assert_mfg_eq(&again, &flat.sample(&roots, &ts, 1), "vs flat post-reset");
+    }
+
+    #[test]
+    fn borrowed_and_disk_stores_match_owned() {
+        let g = chain(150);
+        let cfg = SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, 4);
+        let sharded = ShardedTCsr::build(&g, true, 3);
+        let owned = ShardedSampler::new(sharded.clone(), cfg.clone());
+        let borrowed = ShardedSampler::over(&sharded, cfg.clone());
+
+        let dir = std::env::temp_dir()
+            .join(format!("tgl_sampler_disk_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let edges = dir.join("g.edges");
+        crate::graph::edge_file_from_graph(&g, &edges).unwrap();
+        let bcfg =
+            crate::graph::BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64 };
+        let disk = crate::graph::build_container(&edges, &dir.join("g.tcsr"), &bcfg).unwrap();
+        // cap 1 < 3 shards: every block churns through the cache, so this
+        // also exercises eviction + reload mid-epoch.
+        let on_disk = ShardedSampler::on_disk(ShardCache::new(disk, 1), cfg);
+
+        for bi in 0..3u64 {
+            let roots: Vec<u32> = (0..24).map(|i| (i * 11 % 151) as u32).collect();
+            let ts: Vec<f64> = (0..24).map(|i| 40.0 + bi as f64 * 30.0 + i as f64).collect();
+            let a = owned.sample(&roots, &ts, bi);
+            let b = borrowed.sample(&roots, &ts, bi);
+            let c = on_disk.sample(&roots, &ts, bi);
+            assert_mfg_eq(&a, &b, &format!("borrowed batch {bi}"));
+            assert_mfg_eq(&a, &c, &format!("disk batch {bi}"));
+        }
+        let stats = on_disk.cache_stats().unwrap();
+        assert!(stats.misses > 0 && stats.evictions > 0, "cap-1 cache must churn: {stats:?}");
+        assert!(owned.cache_stats().is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Capacity-bounded hot-row cache for node state (FAST-style memory-I/O
+//! co-design). Temporal batches touch a heavily skewed node set — a few
+//! hub nodes dominate every gather/scatter — so a small LRU over full
+//! state rows captures most of the traffic. The cache is **write-through
+//! over the authoritative arrays** ([`super::NodeMemory`] /
+//! [`super::Mailbox`]): a cached row is always bitwise-equal to its
+//! backing row, so serving a gather from the cache cannot change results
+//! (`pipeline_identity.rs` pins hot-on vs hot-off losses). What it buys
+//! today is dense, re-used rows for the hottest nodes plus hit/miss/
+//! eviction counters surfaced as bench rows; it is also the admission
+//! layer a future spill-to-disk node state would sit behind.
+//!
+//! One cache instance serves rows of a fixed shape: `f32w` f32 lanes,
+//! `f64w` f64 lanes, `u64w` u64 lanes per node (node memory: `dim`/1/0;
+//! mailbox: `slots·dim`/`slots`/1). Slot storage is allocated once at
+//! construction; eviction scans the `cap` stamps for the LRU victim —
+//! O(cap) per *miss*, which the skew keeps rare.
+
+use crate::graph::CacheStats;
+use std::collections::HashMap;
+
+/// Fixed-capacity LRU over fixed-shape state rows. See the module docs
+/// for the write-through contract.
+#[derive(Debug, Clone)]
+pub struct HotCache {
+    f32w: usize,
+    f64w: usize,
+    u64w: usize,
+    cap: usize,
+    /// node id -> occupied slot.
+    map: HashMap<u32, u32>,
+    /// slot -> node id; `node.len()` is the number of occupied slots.
+    node: Vec<u32>,
+    f32s: Vec<f32>,
+    f64s: Vec<f64>,
+    u64s: Vec<u64>,
+    /// Per-slot last-touch tick (LRU victim = min stamp).
+    stamp: Vec<u64>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl HotCache {
+    pub fn new(cap: usize, f32w: usize, f64w: usize, u64w: usize) -> HotCache {
+        let cap = cap.max(1);
+        HotCache {
+            f32w,
+            f64w,
+            u64w,
+            cap,
+            map: HashMap::with_capacity(cap),
+            node: Vec::with_capacity(cap),
+            f32s: vec![0.0; cap * f32w],
+            f64s: vec![0.0; cap * f64w],
+            u64s: vec![0; cap * u64w],
+            stamp: vec![0; cap],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Counted lookup on the gather path: `Some(slot)` bumps the LRU
+    /// stamp and the hit counter; `None` counts a miss (the caller is
+    /// expected to [`Self::admit`] the row it reads from backing store).
+    pub fn lookup(&mut self, v: u32) -> Option<usize> {
+        match self.map.get(&v) {
+            Some(&slot) => {
+                self.hits += 1;
+                self.clock += 1;
+                self.stamp[slot as usize] = self.clock;
+                Some(slot as usize)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Uncounted lookup for the write-through (scatter) path: scatters
+    /// are obligations, not cache traffic, so they don't move the
+    /// hit-rate; they *do* refresh the LRU stamp — a written row is hot.
+    pub fn peek(&mut self, v: u32) -> Option<usize> {
+        let &slot = self.map.get(&v)?;
+        self.clock += 1;
+        self.stamp[slot as usize] = self.clock;
+        Some(slot as usize)
+    }
+
+    /// Claim a slot for `v` (must not be resident), evicting the LRU
+    /// occupant when full. The caller fills the returned slot's rows
+    /// from backing store before anyone can look it up again — the
+    /// single-owner gather/scatter discipline guarantees that.
+    pub fn admit(&mut self, v: u32) -> usize {
+        debug_assert!(!self.map.contains_key(&v));
+        let slot = if self.node.len() < self.cap {
+            self.node.push(v);
+            self.node.len() - 1
+        } else {
+            let victim = (0..self.node.len()).min_by_key(|&s| self.stamp[s]).unwrap_or(0);
+            self.map.remove(&self.node[victim]);
+            self.evictions += 1;
+            self.node[victim] = v;
+            victim
+        };
+        self.map.insert(v, slot as u32);
+        self.clock += 1;
+        self.stamp[slot] = self.clock;
+        slot
+    }
+
+    /// Drop every resident row (backing store changed wholesale: reset /
+    /// checkpoint restore). Counters and storage survive.
+    pub fn invalidate_all(&mut self) {
+        self.map.clear();
+        self.node.clear();
+    }
+
+    pub fn f32_row(&self, slot: usize) -> &[f32] {
+        &self.f32s[slot * self.f32w..(slot + 1) * self.f32w]
+    }
+
+    pub fn f32_row_mut(&mut self, slot: usize) -> &mut [f32] {
+        &mut self.f32s[slot * self.f32w..(slot + 1) * self.f32w]
+    }
+
+    pub fn f64_row(&self, slot: usize) -> &[f64] {
+        &self.f64s[slot * self.f64w..(slot + 1) * self.f64w]
+    }
+
+    pub fn f64_row_mut(&mut self, slot: usize) -> &mut [f64] {
+        &mut self.f64s[slot * self.f64w..(slot + 1) * self.f64w]
+    }
+
+    pub fn u64_row(&self, slot: usize) -> &[u64] {
+        &self.u64s[slot * self.u64w..(slot + 1) * self.u64w]
+    }
+
+    pub fn u64_row_mut(&mut self, slot: usize) -> &mut [u64] {
+        &mut self.u64s[slot * self.u64w..(slot + 1) * self.u64w]
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits, misses: self.misses, evictions: self.evictions }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_lookup_roundtrip() {
+        let mut c = HotCache::new(2, 2, 1, 0);
+        assert!(c.lookup(7).is_none());
+        let s = c.admit(7);
+        c.f32_row_mut(s).copy_from_slice(&[1.0, 2.0]);
+        c.f64_row_mut(s)[0] = 9.5;
+        let s2 = c.lookup(7).expect("resident after admit");
+        assert_eq!(s2, s);
+        assert_eq!(c.f32_row(s2), &[1.0, 2.0]);
+        assert_eq!(c.f64_row(s2), &[9.5]);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 1, 0));
+    }
+
+    #[test]
+    fn lru_evicts_coldest() {
+        let mut c = HotCache::new(2, 1, 0, 0);
+        c.admit(1);
+        c.admit(2);
+        assert!(c.lookup(1).is_some()); // 1 is now hotter than 2
+        c.admit(3); // evicts 2
+        assert!(c.lookup(2).is_none());
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(3).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn peek_refreshes_without_counting() {
+        let mut c = HotCache::new(2, 1, 0, 0);
+        c.admit(1);
+        c.admit(2);
+        let before = c.stats();
+        assert!(c.peek(1).is_some());
+        assert!(c.peek(99).is_none());
+        let after = c.stats();
+        assert_eq!(after.hits, before.hits);
+        assert_eq!(after.misses, before.misses);
+        c.admit(3); // peek(1) refreshed node 1, so 2 is the victim
+        assert!(c.lookup(1).is_some());
+        assert!(c.lookup(2).is_none());
+    }
+
+    #[test]
+    fn invalidate_drops_rows_keeps_counters() {
+        let mut c = HotCache::new(2, 1, 0, 0);
+        c.admit(5);
+        assert!(c.lookup(5).is_some());
+        c.invalidate_all();
+        assert!(c.lookup(5).is_none());
+        assert_eq!(c.stats().hits, 1);
+        // Storage is reusable after invalidation.
+        let s = c.admit(5);
+        c.f32_row_mut(s)[0] = 3.0;
+        assert_eq!(c.f32_row(c.lookup(5).unwrap()), &[3.0]);
+    }
+}

@@ -6,9 +6,51 @@
 //!
 //! Each node's slots form a ring buffer: `write` overwrites the oldest
 //! slot. TGN-style models use 1 slot; APAN uses 10.
+//!
+//! Like [`super::NodeMemory`], the mailbox can put a write-through
+//! [`HotCache`] in front of its dense arrays ([`Mailbox::enable_hot_cache`]):
+//! a cached node row holds its full ring (`slots·dim` mails, `slots`
+//! timestamps, the write count), kept bitwise-equal to the backing arrays
+//! by write-through, so gathers served from it cannot change results.
+
+use super::hot::HotCache;
+use std::sync::{Mutex, PoisonError};
+
+/// Expand one node's ring (wherever it is stored — backing arrays or a
+/// cached row) into the newest-first gather layout. This is the one copy
+/// of the ring arithmetic the cached path uses for **every** slot count;
+/// for `slots == 1` it reduces to exactly the fast path's reads, so cached
+/// and uncached outputs are bitwise-identical.
+fn expand_node(
+    slots: usize,
+    dim: usize,
+    mail_row: &[f32],
+    ts_row: &[f64],
+    count: u64,
+    t: f64,
+    node_valid: bool,
+    out_mail: &mut [f32],
+    out_dt: &mut [f32],
+    out_mask: &mut [f32],
+) {
+    let have = if node_valid { (count as usize).min(slots) } else { 0 };
+    for k in 0..slots {
+        let row = &mut out_mail[k * dim..(k + 1) * dim];
+        if k < have {
+            let pos = (count as usize + slots - 1 - k) % slots;
+            row.copy_from_slice(&mail_row[pos * dim..(pos + 1) * dim]);
+            out_dt[k] = (t - ts_row[pos]).max(0.0) as f32;
+            out_mask[k] = 1.0;
+        } else {
+            row.fill(0.0);
+            out_dt[k] = 0.0;
+            out_mask[k] = 0.0;
+        }
+    }
+}
 
 /// Fixed-capacity per-node mail ring buffers.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Mailbox {
     slots: usize,
     dim: usize,
@@ -16,6 +58,23 @@ pub struct Mailbox {
     mail_ts: Vec<f64>,
     /// Number of mails ever written per node (ring position = count % slots).
     count: Vec<u64>,
+    /// Optional hot-row cache (row = the node's whole ring + count).
+    hot: Option<Mutex<HotCache>>,
+}
+
+impl Clone for Mailbox {
+    fn clone(&self) -> Mailbox {
+        Mailbox {
+            slots: self.slots,
+            dim: self.dim,
+            mail: self.mail.clone(),
+            mail_ts: self.mail_ts.clone(),
+            count: self.count.clone(),
+            hot: self.hot.as_ref().map(|m| {
+                Mutex::new(m.lock().unwrap_or_else(PoisonError::into_inner).clone())
+            }),
+        }
+    }
 }
 
 impl Mailbox {
@@ -27,6 +86,39 @@ impl Mailbox {
             mail: vec![0.0; num_nodes * slots * dim],
             mail_ts: vec![0.0; num_nodes * slots],
             count: vec![0; num_nodes],
+            hot: None,
+        }
+    }
+
+    /// Put a write-through [`HotCache`] of `rows` node rings in front of
+    /// the arrays (`rows == 0` disables). Bitwise-invisible to gathers.
+    pub fn enable_hot_cache(&mut self, rows: usize) {
+        self.hot = (rows > 0)
+            .then(|| Mutex::new(HotCache::new(rows, self.slots * self.dim, self.slots, 1)));
+    }
+
+    /// Hit/miss/eviction counts of the hot cache, if enabled.
+    pub fn hot_stats(&self) -> Option<crate::graph::CacheStats> {
+        let hot = self.hot.as_ref()?;
+        Some(hot.lock().unwrap_or_else(PoisonError::into_inner).stats())
+    }
+
+    /// Resolve `v`'s cached ring slot, admitting it from the backing
+    /// arrays on a miss.
+    fn hot_slot(&self, hot: &mut HotCache, v: u32) -> usize {
+        match hot.lookup(v) {
+            Some(s) => s,
+            None => {
+                let s = hot.admit(v);
+                let vi = v as usize;
+                hot.f32_row_mut(s).copy_from_slice(
+                    &self.mail[vi * self.slots * self.dim..(vi + 1) * self.slots * self.dim],
+                );
+                hot.f64_row_mut(s)
+                    .copy_from_slice(&self.mail_ts[vi * self.slots..(vi + 1) * self.slots]);
+                hot.u64_row_mut(s)[0] = self.count[vi];
+                s
+            }
         }
     }
 
@@ -46,6 +138,9 @@ impl Mailbox {
         self.mail.fill(0.0);
         self.mail_ts.fill(0.0);
         self.count.fill(0);
+        if let Some(hot) = &self.hot {
+            hot.lock().unwrap_or_else(PoisonError::into_inner).invalidate_all();
+        }
     }
 
     /// Number of valid mails currently held for `v`.
@@ -63,6 +158,16 @@ impl Mailbox {
         self.mail[base..base + self.dim].copy_from_slice(mail);
         self.mail_ts[vi * self.slots + pos] = t;
         self.count[vi] += 1;
+        if let Some(hot) = &self.hot {
+            // Write-through: refresh the cached ring so it never serves
+            // a stale slot.
+            let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(slot) = hot.peek(v) {
+                hot.f32_row_mut(slot)[pos * self.dim..(pos + 1) * self.dim].copy_from_slice(mail);
+                hot.f64_row_mut(slot)[pos] = t;
+                hot.u64_row_mut(slot)[0] = self.count[vi];
+            }
+        }
     }
 
     /// Gather, for each `(node, t, valid)`, the node's mails ordered
@@ -97,6 +202,26 @@ impl Mailbox {
         debug_assert_eq!(out_mail.len(), nodes.len() * self.slots * self.dim);
         debug_assert_eq!(out_dt.len(), nodes.len() * self.slots);
         debug_assert_eq!(out_mask.len(), nodes.len() * self.slots);
+        if let Some(hot) = &self.hot {
+            let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+            for (i, &(v, t, node_valid)) in nodes.iter().enumerate() {
+                let s = self.hot_slot(&mut hot, v);
+                let lo = i * self.slots;
+                expand_node(
+                    self.slots,
+                    self.dim,
+                    hot.f32_row(s),
+                    hot.f64_row(s),
+                    hot.u64_row(s)[0],
+                    t,
+                    node_valid,
+                    &mut out_mail[lo * self.dim..(lo + self.slots) * self.dim],
+                    &mut out_dt[lo..lo + self.slots],
+                    &mut out_mask[lo..lo + self.slots],
+                );
+            }
+            return;
+        }
         if self.slots == 1 {
             // TGN/JODIE fast path (the overwhelmingly common config): the
             // single slot needs no ring arithmetic, and this gather sits on
@@ -178,6 +303,29 @@ impl Mailbox {
         debug_assert_eq!(out_mail.len(), nodes.len() * self.slots * self.dim);
         debug_assert_eq!(out_dt.len(), nodes.len() * self.slots);
         debug_assert_eq!(out_mask.len(), nodes.len() * self.slots);
+        if let Some(hot) = &self.hot {
+            let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+            for (i, &(v, t, node_valid)) in nodes.iter().enumerate() {
+                if !shard.contains(&v) {
+                    continue;
+                }
+                let s = self.hot_slot(&mut hot, v);
+                let lo = i * self.slots;
+                expand_node(
+                    self.slots,
+                    self.dim,
+                    hot.f32_row(s),
+                    hot.f64_row(s),
+                    hot.u64_row(s)[0],
+                    t,
+                    node_valid,
+                    &mut out_mail[lo * self.dim..(lo + self.slots) * self.dim],
+                    &mut out_dt[lo..lo + self.slots],
+                    &mut out_mask[lo..lo + self.slots],
+                );
+            }
+            return;
+        }
         if self.slots == 1 {
             for (i, &(v, t, node_valid)) in nodes.iter().enumerate() {
                 if !shard.contains(&v) {
@@ -241,6 +389,9 @@ impl Mailbox {
         self.mail.copy_from_slice(mail);
         self.mail_ts.copy_from_slice(ts);
         self.count.copy_from_slice(count);
+        if let Some(hot) = &self.hot {
+            hot.lock().unwrap_or_else(PoisonError::into_inner).invalidate_all();
+        }
         Ok(())
     }
 }
@@ -350,6 +501,75 @@ mod tests {
         assert_eq!(sharded.raw_parts().0, full.raw_parts().0);
         assert_eq!(sharded.raw_parts().1, full.raw_parts().1);
         assert_eq!(sharded.raw_parts().2, full.raw_parts().2);
+    }
+
+    #[test]
+    fn hot_cache_is_bitwise_invisible() {
+        // Interleaved writes and gathers, cached vs uncached, across both
+        // the slots == 1 fast path and the generic ring path. A capacity
+        // of 2 over 7 nodes keeps the cache churning.
+        for slots in [1usize, 3] {
+            let mut plain = Mailbox::new(7, slots, 2);
+            let mut hot = Mailbox::new(7, slots, 2);
+            hot.enable_hot_cache(2);
+            let mut state = 3u64;
+            let mut next = || {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 33) as u32
+            };
+            for step in 0..60 {
+                let v = next() % 7;
+                let t = step as f64;
+                let mail = [next() as f32 / 1e6, next() as f32 / 1e6];
+                plain.write(v, t, &mail);
+                assert!(hot.write_shard(0..7, v, t, &mail), "write_shard owns all nodes");
+                let q: Vec<(u32, f64, bool)> =
+                    (0..3).map(|k| (next() % 7, t + 1.0, k != 2)).collect();
+                let n = q.len();
+                let (mut pm, mut pd, mut pk) =
+                    (vec![0.0; n * slots * 2], vec![0.0; n * slots], vec![0.0; n * slots]);
+                plain.gather_into(&q, &mut pm, &mut pd, &mut pk);
+                let (mut hm, mut hd, mut hk) =
+                    (vec![0.0; n * slots * 2], vec![0.0; n * slots], vec![0.0; n * slots]);
+                hot.gather_into(&q, &mut hm, &mut hd, &mut hk);
+                assert_eq!(pm, hm, "slots={slots} step={step}");
+                assert_eq!(pd, hd, "slots={slots} step={step}");
+                assert_eq!(pk, hk, "slots={slots} step={step}");
+                // Shard-owner gather through the cache too.
+                let (mut sm, mut sd, mut sk) =
+                    (vec![7.7; n * slots * 2], vec![7.7; n * slots], vec![7.7; n * slots]);
+                for shard in [0u32..3, 3..7] {
+                    hot.gather_shard_into(&q, shard, &mut sm, &mut sd, &mut sk);
+                }
+                assert_eq!(sm, pm, "slots={slots} step={step} sharded");
+                assert_eq!(sd, pd, "slots={slots} step={step} sharded");
+                assert_eq!(sk, pk, "slots={slots} step={step} sharded");
+            }
+            let st = hot.hot_stats().expect("cache enabled");
+            assert!(st.evictions > 0, "cap 2 over 7 nodes must evict");
+            assert!(plain.hot_stats().is_none());
+        }
+    }
+
+    #[test]
+    fn hot_cache_reset_and_restore_invalidate() {
+        let mut mb = Mailbox::new(2, 2, 1);
+        mb.enable_hot_cache(2);
+        mb.write(0, 1.0, &[5.0]);
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(0, 2.0, true)], &mut mail, &mut dt, &mut mask); // admit
+        assert_eq!(mail[0], 5.0);
+        mb.reset();
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(0, 2.0, true)], &mut mail, &mut dt, &mut mask);
+        assert_eq!(mask, vec![0.0, 0.0], "reset must invalidate cached rings");
+        mb.write(0, 3.0, &[9.0]);
+        let snap = (vec![0.0f32; 4], vec![0.0f64; 4], vec![0u64; 2]);
+        mb.restore(&snap.0, &snap.1, &snap.2).unwrap();
+        let (mut mail, mut dt, mut mask) = (Vec::new(), Vec::new(), Vec::new());
+        mb.gather(&[(0, 4.0, true)], &mut mail, &mut dt, &mut mask);
+        assert_eq!(mask, vec![0.0, 0.0], "restore must invalidate cached rings");
+        let _ = (dt, mb.clone());
     }
 
     #[test]

@@ -1,13 +1,38 @@
 //! Node memory `s_v` (paper §2.1): one `dim`-vector per node summarizing
 //! its history, plus `t_v^-`, the time of its last update — needed for the
 //! `Φ(t - t_v^-)` term in mail construction (Eq. 1–3).
+//!
+//! An optional [`HotCache`] (see [`super::hot`]) sits in front of the
+//! dense arrays: write-through, so gathers served from it are bitwise
+//! what the arrays would give, with hit/miss/eviction counters for the
+//! bench rows. Off by default; [`NodeMemory::enable_hot_cache`] opts in.
+
+use super::hot::HotCache;
+use std::sync::{Mutex, PoisonError};
 
 /// Dense node-memory table.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct NodeMemory {
     dim: usize,
     mem: Vec<f32>,
     last_update: Vec<f64>,
+    /// Optional hot-row cache (row = `dim` f32 + `t_v^-`). Behind a
+    /// `Mutex` because gathers take `&self` (the sharded trainer gathers
+    /// concurrently per shard); the uncached path never touches it.
+    hot: Option<Mutex<HotCache>>,
+}
+
+impl Clone for NodeMemory {
+    fn clone(&self) -> NodeMemory {
+        NodeMemory {
+            dim: self.dim,
+            mem: self.mem.clone(),
+            last_update: self.last_update.clone(),
+            hot: self.hot.as_ref().map(|m| {
+                Mutex::new(m.lock().unwrap_or_else(PoisonError::into_inner).clone())
+            }),
+        }
+    }
 }
 
 impl NodeMemory {
@@ -16,7 +41,40 @@ impl NodeMemory {
             dim,
             mem: vec![0.0; num_nodes * dim],
             last_update: vec![0.0; num_nodes],
+            hot: None,
         }
+    }
+
+    /// Put a write-through [`HotCache`] of `rows` rows in front of the
+    /// table (`rows == 0` disables). Gathers and scatters keep their
+    /// exact uncached results; only locality and the counters change.
+    pub fn enable_hot_cache(&mut self, rows: usize) {
+        self.hot = (rows > 0).then(|| Mutex::new(HotCache::new(rows, self.dim, 1, 0)));
+    }
+
+    /// Hit/miss/eviction counts of the hot cache, if enabled.
+    pub fn hot_stats(&self) -> Option<crate::graph::CacheStats> {
+        let hot = self.hot.as_ref()?;
+        Some(hot.lock().unwrap_or_else(PoisonError::into_inner).stats())
+    }
+
+    /// Serve one valid node's gather through the cache: hit reads the
+    /// cached row, miss admits it from the dense arrays. Write-through
+    /// keeps cached rows bitwise-equal to backing rows, so the output
+    /// matches the uncached path exactly.
+    fn gather_one_cached(&self, hot: &mut HotCache, v: u32, t: f64, row: &mut [f32]) -> f32 {
+        let slot = match hot.lookup(v) {
+            Some(s) => s,
+            None => {
+                let s = hot.admit(v);
+                let vi = v as usize;
+                hot.f32_row_mut(s).copy_from_slice(&self.mem[vi * self.dim..(vi + 1) * self.dim]);
+                hot.f64_row_mut(s)[0] = self.last_update[vi];
+                s
+            }
+        };
+        row.copy_from_slice(hot.f32_row(slot));
+        (t - hot.f64_row(slot)[0]).max(0.0) as f32
     }
 
     pub fn dim(&self) -> usize {
@@ -32,6 +90,9 @@ impl NodeMemory {
     pub fn reset(&mut self) {
         self.mem.fill(0.0);
         self.last_update.fill(0.0);
+        if let Some(hot) = &self.hot {
+            hot.lock().unwrap_or_else(PoisonError::into_inner).invalidate_all();
+        }
     }
 
     #[inline]
@@ -66,6 +127,19 @@ impl NodeMemory {
     pub fn gather_into(&self, nodes: &[(u32, f64, bool)], out_mem: &mut [f32], out_dt: &mut [f32]) {
         debug_assert_eq!(out_mem.len(), nodes.len() * self.dim);
         debug_assert_eq!(out_dt.len(), nodes.len());
+        if let Some(hot) = &self.hot {
+            let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+            for (i, &(v, t, valid)) in nodes.iter().enumerate() {
+                let row = &mut out_mem[i * self.dim..(i + 1) * self.dim];
+                if valid {
+                    out_dt[i] = self.gather_one_cached(&mut hot, v, t, row);
+                } else {
+                    row.fill(0.0);
+                    out_dt[i] = 0.0;
+                }
+            }
+            return;
+        }
         for (i, &(v, t, valid)) in nodes.iter().enumerate() {
             let row = &mut out_mem[i * self.dim..(i + 1) * self.dim];
             if valid {
@@ -95,6 +169,22 @@ impl NodeMemory {
     ) {
         debug_assert_eq!(out_mem.len(), nodes.len() * self.dim);
         debug_assert_eq!(out_dt.len(), nodes.len());
+        if let Some(hot) = &self.hot {
+            let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+            for (i, &(v, t, valid)) in nodes.iter().enumerate() {
+                if !shard.contains(&v) {
+                    continue;
+                }
+                let row = &mut out_mem[i * self.dim..(i + 1) * self.dim];
+                if valid {
+                    out_dt[i] = self.gather_one_cached(&mut hot, v, t, row);
+                } else {
+                    row.fill(0.0);
+                    out_dt[i] = 0.0;
+                }
+            }
+            return;
+        }
         for (i, &(v, t, valid)) in nodes.iter().enumerate() {
             if !shard.contains(&v) {
                 continue;
@@ -122,6 +212,30 @@ impl NodeMemory {
                 .copy_from_slice(&rows[i * self.dim..(i + 1) * self.dim]);
             self.last_update[v as usize] = ts[i];
         }
+        self.write_through(nodes, ts, rows, None);
+    }
+
+    /// Write-through: refresh any cached copy of the scattered rows so
+    /// the cache never serves a stale row. Same later-wins order as the
+    /// backing-store loop.
+    fn write_through(
+        &self,
+        nodes: &[u32],
+        ts: &[f64],
+        rows: &[f32],
+        shard: Option<&std::ops::Range<u32>>,
+    ) {
+        let Some(hot) = &self.hot else { return };
+        let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+        for (i, &v) in nodes.iter().enumerate() {
+            if shard.is_some_and(|s| !s.contains(&v)) {
+                continue;
+            }
+            if let Some(slot) = hot.peek(v) {
+                hot.f32_row_mut(slot).copy_from_slice(&rows[i * self.dim..(i + 1) * self.dim]);
+                hot.f64_row_mut(slot)[0] = ts[i];
+            }
+        }
     }
 
     /// Shard-owner variant of [`Self::scatter`]: applies only the updates
@@ -147,6 +261,7 @@ impl NodeMemory {
                 .copy_from_slice(&rows[i * self.dim..(i + 1) * self.dim]);
             self.last_update[v as usize] = ts[i];
         }
+        self.write_through(nodes, ts, rows, Some(&shard));
     }
 
     /// Mean absolute staleness (age of memory entries at time `t`) over
@@ -173,6 +288,9 @@ impl NodeMemory {
         anyhow::ensure!(ts.len() == self.last_update.len(), "timestamp size mismatch");
         self.mem.copy_from_slice(rows);
         self.last_update.copy_from_slice(ts);
+        if let Some(hot) = &self.hot {
+            hot.lock().unwrap_or_else(PoisonError::into_inner).invalidate_all();
+        }
         Ok(())
     }
 }
@@ -264,6 +382,81 @@ mod tests {
         }
         // Duplicate node 2: later entry (t=3, row 30) must win in both.
         assert_eq!(sharded.row(2), &[30.0]);
+    }
+
+    #[test]
+    fn hot_cache_is_bitwise_invisible() {
+        // Same scatter/gather schedule with and without the hot cache —
+        // outputs must be bitwise-identical (write-through contract),
+        // even with a tiny capacity that forces constant eviction.
+        let mut plain = NodeMemory::new(10, 3);
+        let mut hot = NodeMemory::new(10, 3);
+        hot.enable_hot_cache(2);
+        let mut state = 11u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        for step in 0..40 {
+            let nodes: Vec<u32> = (0..4).map(|_| next() % 10).collect();
+            let ts: Vec<f64> = (0..4).map(|k| step as f64 + k as f64 * 0.1).collect();
+            let rows: Vec<f32> = (0..12).map(|_| next() as f32 / 1e6).collect();
+            plain.scatter(&nodes, &ts, &rows);
+            hot.scatter(&nodes, &ts, &rows);
+            let q: Vec<(u32, f64, bool)> =
+                (0..5).map(|k| (next() % 10, step as f64 + 1.0, k != 3)).collect();
+            let (mut pm, mut pd) = (vec![0.0; 15], vec![0.0; 5]);
+            let (mut hm, mut hd) = (vec![0.0; 15], vec![0.0; 5]);
+            plain.gather_into(&q, &mut pm, &mut pd);
+            hot.gather_into(&q, &mut hm, &mut hd);
+            assert_eq!(pm, hm, "step {step}");
+            assert_eq!(pd, hd, "step {step}");
+            // Shard-owner paths too.
+            let (mut sm, mut sd) = (vec![7.7; 15], vec![7.7; 5]);
+            for shard in [0u32..4, 4..10] {
+                hot.gather_shard_into(&q, shard, &mut sm, &mut sd);
+            }
+            assert_eq!(sm, pm, "step {step} sharded");
+            assert_eq!(sd, pd, "step {step} sharded");
+        }
+        let st = hot.hot_stats().expect("cache enabled");
+        assert!(st.hits + st.misses > 0, "cache saw traffic");
+        assert!(st.evictions > 0, "cap 2 over 10 nodes must evict");
+        assert!(plain.hot_stats().is_none());
+    }
+
+    #[test]
+    fn hot_cache_write_through_and_invalidate() {
+        let mut m = NodeMemory::new(4, 1);
+        m.enable_hot_cache(4);
+        m.scatter(&[1], &[1.0], &[10.0]);
+        let (mut mem, mut dt) = (vec![0.0], vec![0.0]);
+        m.gather_into(&[(1, 2.0, true)], &mut mem, &mut dt); // admits node 1
+        assert_eq!((mem[0], dt[0]), (10.0, 1.0));
+        // Scatter again: the cached row must be refreshed, not stale.
+        m.scatter(&[1], &[5.0], &[20.0]);
+        m.gather_into(&[(1, 6.0, true)], &mut mem, &mut dt);
+        assert_eq!((mem[0], dt[0]), (20.0, 1.0));
+        // scatter_shard write-through only touches its own shard.
+        m.scatter_shard(0..2, &[1, 3], &[7.0, 7.0], &[30.0, 40.0]);
+        m.gather_into(&[(1, 8.0, true)], &mut mem, &mut dt);
+        assert_eq!((mem[0], dt[0]), (30.0, 1.0));
+        // reset invalidates: post-reset gather sees zeros, not cached rows.
+        m.reset();
+        m.gather_into(&[(1, 1.0, true)], &mut mem, &mut dt);
+        assert_eq!((mem[0], dt[0]), (0.0, 1.0));
+        // restore invalidates too.
+        m.scatter(&[1], &[1.0], &[50.0]);
+        m.gather_into(&[(1, 1.0, true)], &mut mem, &mut dt);
+        assert_eq!(mem[0], 50.0);
+        let snap_rows = vec![0.0f32; 4];
+        let snap_ts = vec![0.0f64; 4];
+        m.restore(&snap_rows, &snap_ts).unwrap();
+        m.gather_into(&[(1, 1.0, true)], &mut mem, &mut dt);
+        assert_eq!(mem[0], 0.0, "restore must invalidate cached rows");
+        // Clone carries an independent cache.
+        let c = m.clone();
+        assert!(c.hot_stats().is_some());
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! memory updates; this module owns the authoritative copies and performs
 //! the gather (step ②) / scatter (step ⑥) around each mini-batch.
 
+mod hot;
 mod mailbox;
 mod memory;
 
+pub use hot::HotCache;
 pub use mailbox::Mailbox;
 pub use memory::NodeMemory;

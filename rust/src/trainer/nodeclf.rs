@@ -60,8 +60,8 @@ pub fn node_classification(
     let labels: Vec<NodeLabel> = trainer.graph.labels.clone();
     ensure!(!labels.is_empty(), "dataset has no dynamic node labels");
     let classes = trainer.graph.num_classes.max(2);
-    let bs = trainer.model.dim("bs");
-    let dh = trainer.model.dim("dh");
+    let bs = trainer.model.dim("bs")?;
+    let dh = trainer.model.dim("dh")?;
     let mut rng = Rng::new(seed ^ 0xC1F);
 
     // Chronological replay with interleaved embedding harvests, pipelined

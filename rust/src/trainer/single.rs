@@ -33,7 +33,7 @@
 //! step — including reference-backend execution — allocates nothing
 //! (`rust/tests/alloc_train.rs`).
 
-use crate::graph::{ShardSpec, ShardedTCsr, TCsr, TemporalGraph};
+use crate::graph::{GraphIndex, ShardSpec, ShardedTCsr, TCsr, TemporalGraph};
 use crate::metrics::average_precision;
 use crate::models::Model;
 use crate::runtime::{SharedVec, Tensor, TensorSpec};
@@ -84,6 +84,14 @@ pub struct TrainerCfg {
     /// `TGL_FAULTS` env var — see [`FaultPlan`]). Shared by clone so the
     /// producers and the consumer observe one budget.
     pub faults: Arc<FaultPlan>,
+    /// Hot-row cache capacity for node memory + mailbox (rows per table;
+    /// 0 = off). Write-through, so losses are bitwise-identical either
+    /// way; counters surface via [`Trainer::hot_cache_stats`].
+    pub hot_rows: usize,
+    /// Resident-shard budget of the [`crate::graph::ShardCache`] when the
+    /// run's index is disk-backed ([`Trainer::for_index`] with
+    /// [`GraphIndex::Disk`] built by the coordinator). Unused otherwise.
+    pub cache_shards: usize,
 }
 
 impl TrainerCfg {
@@ -105,6 +113,8 @@ impl TrainerCfg {
             tensor_arenas: true,
             shards: 1,
             faults: Arc::new(FaultPlan::from_env()),
+            hot_rows: 0,
+            cache_shards: 2,
         }
     }
 }
@@ -264,7 +274,7 @@ impl<'g> Preparer<'g> {
         train: bool,
         arena: PrepArena,
     ) -> Result<PreparedBatch> {
-        let bs = self.model.dim("bs");
+        let bs = self.model.dim("bs")?;
         ensure!(range.len() <= bs, "batch {} exceeds compiled bs {bs}", range.len());
         let PrepArena { mfg, nodes, mut batch, mut padded, roots, root_ts, inputs } = arena;
         let mut rng = Rng::new(self.cfg.seed ^ batch_seed.wrapping_mul(0x9e37_79b9));
@@ -315,7 +325,7 @@ impl<'g> Preparer<'g> {
         mut root_ts: Vec<f64>,
         mut inputs: Vec<Option<Tensor>>,
     ) -> Result<PreparedBatch> {
-        let bs = self.model.dim("bs");
+        let bs = self.model.dim("bs")?;
         padded.roots_into(&mut roots, &mut root_ts);
 
         // ① sample (into the recycled arena when one is supplied).
@@ -334,7 +344,7 @@ impl<'g> Preparer<'g> {
         // deferred to `finish_inputs` — they depend on the previous batch's
         // updates and must stay on the critical path.
         let t = Instant::now();
-        let n_total = self.model.dim("n_total");
+        let n_total = self.model.dim("n_total")?;
         match &mfg {
             Some(m) => m.all_nodes_into(&mut nodes),
             None => {
@@ -425,8 +435,8 @@ impl<'g> Preparer<'g> {
     /// Lives on the `Preparer` so replay loops can call it under split
     /// borrows (shared `prep`, mutable `state`).
     pub fn embed_nodes(&self, state: &TrainState, nodes: &[u32], ts: &[f64]) -> Result<Vec<f32>> {
-        let bs = self.model.dim("bs");
-        let dh = self.model.dim("dh");
+        let bs = self.model.dim("bs")?;
+        let dh = self.model.dim("dh")?;
         ensure!(nodes.len() <= bs, "embed batch too large: {} > {bs}", nodes.len());
         // Pack the query nodes into the src slots of a synthetic batch.
         let n = nodes.len();
@@ -663,9 +673,9 @@ pub(crate) fn apply_state_updates_impl(
     new_mem: &Tensor,
     new_mail: &Tensor,
 ) -> Result<()> {
-    let bs = model.dim("bs");
-    let dm = model.dim("dm");
-    let maild = model.dim("maild");
+    let bs = model.dim("bs")?;
+    let dm = model.dim("dm")?;
+    let maild = model.dim("maild")?;
     let n_valid = batch.len();
     let mem_rows = new_mem.as_f32()?;
     let mail_rows = new_mail.as_f32()?;
@@ -1162,6 +1172,26 @@ pub struct Trainer<'g> {
     pub(crate) io: StepIo,
 }
 
+/// Derive the sampler configuration from the model's compiled dims (or
+/// `None` for 0-hop models that never sample).
+fn sampler_config(model: &Model, cfg: &TrainerCfg) -> Result<Option<SamplerConfig>> {
+    let hops = model.dim("hops")?;
+    let fanout = model.dim("fanout")?;
+    let snapshots = model.dim("snapshots")?;
+    // APAN computes with 0 hops but needs hop-1 samples for mail
+    // delivery; sample 1 hop in that case.
+    let sample_hops = if cfg.deliver_to_neighbors { hops.max(1) } else { hops };
+    if sample_hops == 0 {
+        return Ok(None);
+    }
+    let mut sc = SamplerConfig::uniform_hops(sample_hops, fanout, cfg.strategy, cfg.threads);
+    sc.num_snapshots = snapshots;
+    sc.snapshot_len = cfg.snapshot_len;
+    sc.seed = cfg.seed;
+    sc.validate().context("sampler config from model dims")?;
+    Ok(Some(sc))
+}
+
 impl<'g> Trainer<'g> {
     pub fn new(
         model: &'g Model,
@@ -1169,48 +1199,108 @@ impl<'g> Trainer<'g> {
         csr: &'g TCsr,
         cfg: TrainerCfg,
     ) -> Result<Trainer<'g>> {
-        let hops = model.dim("hops");
-        let fanout = model.dim("fanout");
-        let snapshots = model.dim("snapshots");
-        // APAN computes with 0 hops but needs hop-1 samples for mail
-        // delivery; sample 1 hop in that case.
-        let sample_hops = if cfg.deliver_to_neighbors { hops.max(1) } else { hops };
-        let sampler = if sample_hops > 0 {
-            let mut sc =
-                SamplerConfig::uniform_hops(sample_hops, fanout, cfg.strategy, cfg.threads);
-            sc.num_snapshots = snapshots;
-            sc.snapshot_len = cfg.snapshot_len;
-            sc.seed = cfg.seed;
-            sc.validate().context("sampler config from model dims")?;
-            Some(if cfg.shards > 1 {
+        let sampler = match sampler_config(model, &cfg)? {
+            Some(sc) => Some(if cfg.shards > 1 {
                 // Node-sharded engine: owns its partitioned T-CSR (built
                 // from the graph with the same reverse-edge convention as
                 // the shared flat `csr`). Bitwise-identical sampling.
+                // Callers that already hold the run's only index should
+                // use [`Self::for_index`], which shares it instead of
+                // building a second one here.
                 SamplerHandle::Sharded(Box::new(ShardedSampler::new(
                     ShardedTCsr::build(graph, true, cfg.shards),
                     sc,
                 )))
             } else {
                 SamplerHandle::Flat(TemporalSampler::new(csr, sc))
-            })
-        } else {
-            None
+            }),
+            None => None,
         };
+        Trainer::assemble(model, graph, sampler, cfg)
+    }
+
+    /// Build a trainer over the run's **single** [`GraphIndex`] — flat,
+    /// sharded, or disk-backed — borrowing it instead of constructing a
+    /// second index (the double-index fix;
+    /// `rust/tests/out_of_core.rs` pins the build count). `cfg.shards` is
+    /// forced to the index's shard count so the sampler engine and the
+    /// shard-owner state gathers always agree on the partition.
+    pub fn for_index(
+        model: &'g Model,
+        graph: &'g TemporalGraph,
+        index: &'g GraphIndex,
+        mut cfg: TrainerCfg,
+    ) -> Result<Trainer<'g>> {
+        cfg.shards = index.num_shards().max(1);
+        let sampler = match sampler_config(model, &cfg)? {
+            Some(sc) => Some(match index {
+                GraphIndex::Flat(csr) => SamplerHandle::Flat(TemporalSampler::new(csr, sc)),
+                GraphIndex::Sharded(st) => {
+                    SamplerHandle::Sharded(Box::new(ShardedSampler::over(st, sc)))
+                }
+                GraphIndex::Disk(cache) => {
+                    SamplerHandle::Sharded(Box::new(ShardedSampler::on_disk_shared(cache, sc)))
+                }
+            }),
+            None => None,
+        };
+        Trainer::assemble(model, graph, sampler, cfg)
+    }
+
+    /// Shared tail of the constructors: training state (with the optional
+    /// hot-row caches), tensor pool, preparer.
+    fn assemble(
+        model: &'g Model,
+        graph: &'g TemporalGraph,
+        sampler: Option<SamplerHandle<'g>>,
+        cfg: TrainerCfg,
+    ) -> Result<Trainer<'g>> {
         let state = TrainState {
             params: SharedVec::new(model.init_params.clone()),
             adam_m: SharedVec::new(vec![0.0; model.mf.param_count]),
             adam_v: SharedVec::new(vec![0.0; model.mf.param_count]),
             step: 0.0,
-            memory: model
-                .uses_memory()
-                .then(|| NodeMemory::new(graph.num_nodes, model.dim("dm"))),
-            mailbox: model.uses_memory().then(|| {
-                Mailbox::new(graph.num_nodes, model.dim("mail_slots"), model.dim("maild"))
-            }),
+            memory: if model.uses_memory() {
+                let mut m = NodeMemory::new(graph.num_nodes, model.dim("dm")?);
+                m.enable_hot_cache(cfg.hot_rows);
+                Some(m)
+            } else {
+                None
+            },
+            mailbox: if model.uses_memory() {
+                let mut mb = Mailbox::new(
+                    graph.num_nodes,
+                    model.dim("mail_slots")?,
+                    model.dim("maild")?,
+                );
+                mb.enable_hot_cache(cfg.hot_rows);
+                Some(mb)
+            } else {
+                None
+            },
         };
         let pool = if cfg.tensor_arenas { TensorPool::new() } else { TensorPool::disabled() };
         let prep = Preparer { model, graph, sampler, pool, cfg };
         Ok(Trainer { model, graph, prep, state, timers: PhaseTimer::new(), io: StepIo::default() })
+    }
+
+    /// Combined hot-row cache counters of node memory + mailbox (`None`
+    /// when `cfg.hot_rows == 0` or the model is memoryless).
+    pub fn hot_cache_stats(&self) -> Option<crate::graph::CacheStats> {
+        let mut acc: Option<crate::graph::CacheStats> = None;
+        for st in [
+            self.state.memory.as_ref().and_then(|m| m.hot_stats()),
+            self.state.mailbox.as_ref().and_then(|mb| mb.hot_stats()),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            let a = acc.get_or_insert_with(Default::default);
+            a.hits += st.hits;
+            a.misses += st.misses;
+            a.evictions += st.evictions;
+        }
+        acc
     }
 
     /// Trainer options (owned by the prefetchable half; mutate via
@@ -1445,7 +1535,7 @@ impl<'g> Trainer<'g> {
     /// Pipelines preparation against execution when `cfg.prefetch` is on;
     /// both modes are bitwise-identical.
     pub fn eval_range(&mut self, range: std::ops::Range<usize>) -> Result<EvalResult> {
-        let bs = self.model.dim("bs");
+        let bs = self.model.dim("bs")?;
         let n_batches = range.len().div_ceil(bs);
         if self.prep.cfg.prefetch && n_batches > 1 {
             self.eval_range_pipelined(range)
@@ -1457,7 +1547,7 @@ impl<'g> Trainer<'g> {
     /// Strictly serial evaluation replay (the pipelined path's
     /// determinism reference).
     pub fn eval_range_sequential(&mut self, range: std::ops::Range<usize>) -> Result<EvalResult> {
-        let bs = self.model.dim("bs");
+        let bs = self.model.dim("bs")?;
         let idx = EvalIdx::new(self.model)?;
         let model = self.model;
         let prep = &self.prep;
@@ -1485,7 +1575,7 @@ impl<'g> Trainer<'g> {
     /// training pipeline (eval state gathers are JIT, everything else
     /// prefetchable).
     pub fn eval_range_pipelined(&mut self, range: std::ops::Range<usize>) -> Result<EvalResult> {
-        let bs = self.model.dim("bs");
+        let bs = self.model.dim("bs")?;
         let idx = EvalIdx::new(self.model)?;
         let model = self.model;
         let prep = &self.prep;

@@ -43,6 +43,22 @@
 //! (larger than the remaining file), unknown tags, and CRC mismatches all
 //! return contextual `anyhow` errors naming the offending section — never
 //! a panic or an OOM abort from trusting an on-disk length.
+//!
+//! ## Out-of-core access (graph containers)
+//!
+//! The same container doubles as the **on-disk T-CSR graph** format
+//! (`crate::graph::DiskTCsr`): a `meta` section plus, per shard `j`,
+//! sections `s{j}.indptr` (raw-bytes u64-LE), `s{j}.indices` (u32),
+//! `s{j}.times` (f64) and `s{j}.eids` (u32) laid out contiguously, so one
+//! shard is one consecutive byte range. Containers too large to buffer are
+//! produced by [`StreamWriter`], which emits the exact byte stream
+//! [`Writer::to_bytes`] would (incremental CRCs, section count and footer
+//! patched at [`StreamWriter::finish`]) without ever holding more than one
+//! chunk in memory. On the read side [`FileIndex::scan`] walks only the
+//! section *headers* (seeking over payloads, verifying the footer CRC), and
+//! its `read_*` methods load single named sections on demand, re-verifying
+//! that section's CRC — which is how a shard producer maps just its own
+//! range of a multi-gigabyte graph.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -414,6 +430,418 @@ impl Reader {
     }
 }
 
+// ---------------------------------------------------------- StreamWriter
+
+/// Incremental v2 writer for containers too large to buffer: sections are
+/// written straight to disk chunk by chunk with incremental CRCs, and the
+/// section count + footer are patched in at [`StreamWriter::finish`]. The
+/// byte stream is identical to what [`Writer::to_bytes`] produces for the
+/// same sections, so [`Reader`] and [`FileIndex`] read both. Writes go to
+/// a `.tmp` sibling renamed into place on `finish` (crash-safe, like
+/// [`Writer::write_atomic`]); an unfinished writer removes its temp file
+/// on drop.
+pub struct StreamWriter {
+    f: Option<std::io::BufWriter<std::fs::File>>,
+    path: std::path::PathBuf,
+    tmp: std::path::PathBuf,
+    section_crcs: Vec<u32>,
+    cur: Option<OpenSection>,
+    finished: bool,
+}
+
+struct OpenSection {
+    name: String,
+    tag: u64,
+    declared: u64,
+    written: u64,
+    crc: u32,
+}
+
+impl StreamWriter {
+    pub fn create(path: &Path) -> Result<StreamWriter> {
+        let tmp = tmp_sibling(path);
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut f = std::io::BufWriter::new(f);
+        f.write_all(MAGIC_V2).context("writing magic")?;
+        // Section count placeholder, patched in `finish`.
+        f.write_all(&0u64.to_le_bytes()).context("writing count placeholder")?;
+        Ok(StreamWriter {
+            f: Some(f),
+            path: path.to_path_buf(),
+            tmp,
+            section_crcs: Vec::new(),
+            cur: None,
+            finished: false,
+        })
+    }
+
+    /// Open a section. `elem_count` is the total number of elements that
+    /// the following `write_*` calls must supply before [`Self::end_section`].
+    pub fn begin_section(&mut self, name: &str, tag: u64, elem_count: u64) -> Result<()> {
+        if self.cur.is_some() {
+            bail!("section `{name}`: previous section not ended");
+        }
+        if !matches!(tag, 0..=3) {
+            bail!("section `{name}`: unknown tag {tag}");
+        }
+        let f = self.f.as_mut().expect("writer already finished");
+        f.write_all(&(name.len() as u64).to_le_bytes()).context("writing name length")?;
+        f.write_all(name.as_bytes()).context("writing name")?;
+        f.write_all(&tag.to_le_bytes()).context("writing tag")?;
+        f.write_all(&elem_count.to_le_bytes()).context("writing element count")?;
+        let mut crc = 0xFFFF_FFFFu32;
+        crc = crc32_update(crc, name.as_bytes());
+        crc = crc32_update(crc, &tag.to_le_bytes());
+        crc = crc32_update(crc, &elem_count.to_le_bytes());
+        self.cur = Some(OpenSection {
+            name: name.to_string(),
+            tag,
+            declared: elem_count,
+            written: 0,
+            crc,
+        });
+        Ok(())
+    }
+
+    fn write_chunk(&mut self, tag: u64, elems: u64, bytes: &[u8]) -> Result<()> {
+        let cur = match self.cur.as_mut() {
+            Some(c) => c,
+            None => bail!("write outside of a section"),
+        };
+        if cur.tag != tag {
+            bail!("section `{}`: chunk tag {tag} does not match section tag {}", cur.name, cur.tag);
+        }
+        if cur.written + elems > cur.declared {
+            bail!(
+                "section `{}`: writing {elems} elements past the declared count {}",
+                cur.name,
+                cur.declared
+            );
+        }
+        let f = self.f.as_mut().expect("writer already finished");
+        f.write_all(bytes).with_context(|| format!("writing section `{}`", cur.name))?;
+        cur.crc = crc32_update(cur.crc, bytes);
+        cur.written += elems;
+        Ok(())
+    }
+
+    pub fn write_u32s(&mut self, data: &[u32]) -> Result<()> {
+        self.write_chunk(0, data.len() as u64, bytemuck(data))
+    }
+
+    pub fn write_f32s(&mut self, data: &[f32]) -> Result<()> {
+        self.write_chunk(1, data.len() as u64, bytemuck(data))
+    }
+
+    pub fn write_f64s(&mut self, data: &[f64]) -> Result<()> {
+        self.write_chunk(2, data.len() as u64, bytemuck(data))
+    }
+
+    pub fn write_bytes(&mut self, data: &[u8]) -> Result<()> {
+        self.write_chunk(3, data.len() as u64, data)
+    }
+
+    /// Close the open section, checking the written element total against
+    /// the declared count and appending the section CRC.
+    pub fn end_section(&mut self) -> Result<()> {
+        let cur = match self.cur.take() {
+            Some(c) => c,
+            None => bail!("end_section with no open section"),
+        };
+        if cur.written != cur.declared {
+            bail!(
+                "section `{}`: declared {} elements but wrote {}",
+                cur.name,
+                cur.declared,
+                cur.written
+            );
+        }
+        let crc = cur.crc ^ 0xFFFF_FFFF;
+        let f = self.f.as_mut().expect("writer already finished");
+        f.write_all(&crc.to_le_bytes())
+            .with_context(|| format!("writing section `{}` crc", cur.name))?;
+        self.section_crcs.push(crc);
+        Ok(())
+    }
+
+    /// Write the footer, patch the section count, fsync, and rename the
+    /// temp file over the target path.
+    pub fn finish(mut self) -> Result<()> {
+        use std::io::{Seek, SeekFrom};
+        if self.cur.is_some() {
+            bail!("finish with an unclosed section");
+        }
+        let n = self.section_crcs.len() as u64;
+        let mut footer = 0xFFFF_FFFFu32;
+        footer = crc32_update(footer, &n.to_le_bytes());
+        for crc in &self.section_crcs {
+            footer = crc32_update(footer, &crc.to_le_bytes());
+        }
+        let mut f = self.f.take().expect("writer already finished");
+        f.write_all(&(footer ^ 0xFFFF_FFFF).to_le_bytes()).context("writing footer crc")?;
+        f.flush().context("flushing stream writer")?;
+        let f = f.into_inner().map_err(|e| anyhow::anyhow!("flushing stream writer: {e}"))?;
+        let mut f = f;
+        f.seek(SeekFrom::Start(8)).context("seeking to section count")?;
+        f.write_all(&n.to_le_bytes()).context("patching section count")?;
+        f.sync_all().with_context(|| format!("fsync {}", self.tmp.display()))?;
+        drop(f);
+        std::fs::rename(&self.tmp, &self.path).with_context(|| {
+            format!("renaming {} -> {}", self.tmp.display(), self.path.display())
+        })?;
+        if let Some(dir) = self.path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl Drop for StreamWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            drop(self.f.take());
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+// ------------------------------------------------------------- FileIndex
+
+/// One section's location inside an on-disk v2 container.
+#[derive(Debug, Clone)]
+pub struct SectionEntry {
+    pub name: String,
+    pub tag: u64,
+    pub count: u64,
+    /// Absolute file offset of the first payload byte.
+    pub payload_offset: u64,
+    crc: u32,
+}
+
+impl SectionEntry {
+    pub fn elem_width(&self) -> u64 {
+        match self.tag {
+            2 => 8,
+            3 => 1,
+            _ => 4,
+        }
+    }
+
+    pub fn payload_len(&self) -> u64 {
+        self.count * self.elem_width()
+    }
+}
+
+/// Header-only view of a v2 container on disk: [`FileIndex::scan`] walks
+/// the section headers (seeking over payloads) and verifies the footer
+/// CRC, then individual sections are loaded on demand with their own CRC
+/// re-verified — without ever reading the whole file. This is the read
+/// side of the out-of-core graph path: a shard producer loads exactly its
+/// own `s{j}.*` sections.
+#[derive(Debug, Clone)]
+pub struct FileIndex {
+    path: std::path::PathBuf,
+    sections: Vec<SectionEntry>,
+}
+
+impl FileIndex {
+    pub fn scan(path: &Path) -> Result<FileIndex> {
+        use std::io::{Read as _, Seek, SeekFrom};
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = f
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        let mut f = std::io::BufReader::new(f);
+        let mut pos = 0u64;
+        let mut take = |f: &mut std::io::BufReader<std::fs::File>,
+                        pos: &mut u64,
+                        buf: &mut [u8],
+                        what: &str|
+         -> Result<()> {
+            if buf.len() as u64 > file_len - *pos {
+                bail!(
+                    "truncated file: {what} needs {} bytes at offset {pos}, {} remain",
+                    buf.len(),
+                    file_len - *pos
+                );
+            }
+            f.read_exact(buf).with_context(|| format!("reading {what}"))?;
+            *pos += buf.len() as u64;
+            Ok(())
+        };
+        let mut magic = [0u8; 8];
+        take(&mut f, &mut pos, &mut magic, "magic")
+            .with_context(|| format!("scanning {}", path.display()))?;
+        if magic != *MAGIC_V2 {
+            if magic == *MAGIC_V1 {
+                bail!(
+                    "{}: v1 containers have no CRCs and cannot be range-read; \
+                     use Reader::open",
+                    path.display()
+                );
+            }
+            bail!("{}: not a TGL binary container (bad magic)", path.display());
+        }
+        let mut b8 = [0u8; 8];
+        take(&mut f, &mut pos, &mut b8, "section count")?;
+        let n = u64::from_le_bytes(b8);
+        if n > file_len / 24 + 1 {
+            bail!("implausible section count {n} for a {file_len}-byte file");
+        }
+        let mut footer = 0xFFFF_FFFFu32;
+        footer = crc32_update(footer, &n.to_le_bytes());
+        let mut sections = Vec::with_capacity(n as usize);
+        for i in 0..n {
+            take(&mut f, &mut pos, &mut b8, "section name length")?;
+            let name_len = u64::from_le_bytes(b8);
+            if name_len > file_len - pos {
+                bail!("section {i}: implausible name length {name_len}");
+            }
+            let mut name_bytes = vec![0u8; name_len as usize];
+            take(&mut f, &mut pos, &mut name_bytes, "section name")?;
+            let name = String::from_utf8(name_bytes)
+                .map_err(|_| anyhow::anyhow!("section {i}: name is not UTF-8"))?;
+            take(&mut f, &mut pos, &mut b8, "section tag")?;
+            let tag = u64::from_le_bytes(b8);
+            if !matches!(tag, 0..=3) {
+                bail!("section `{name}`: unknown tag {tag}");
+            }
+            take(&mut f, &mut pos, &mut b8, "element count")?;
+            let count = u64::from_le_bytes(b8);
+            let entry = SectionEntry { name, tag, count, payload_offset: pos, crc: 0 };
+            let payload_len = entry
+                .count
+                .checked_mul(entry.elem_width())
+                .filter(|&len| len <= file_len - pos)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "section `{}`: truncated or implausible element count {count}",
+                        entry.name
+                    )
+                })?;
+            f.seek(SeekFrom::Current(payload_len as i64))
+                .with_context(|| format!("seeking over section `{}`", entry.name))?;
+            pos += payload_len;
+            let mut b4 = [0u8; 4];
+            take(&mut f, &mut pos, &mut b4, "section crc")?;
+            let stored = u32::from_le_bytes(b4);
+            footer = crc32_update(footer, &stored.to_le_bytes());
+            sections.push(SectionEntry { crc: stored, ..entry });
+        }
+        let mut b4 = [0u8; 4];
+        take(&mut f, &mut pos, &mut b4, "footer crc")?;
+        let stored = u32::from_le_bytes(b4);
+        let footer = footer ^ 0xFFFF_FFFF;
+        if footer != stored {
+            bail!(
+                "footer CRC mismatch (stored {stored:#010x}, computed {footer:#010x}) \
+                 — file is truncated or sections were dropped"
+            );
+        }
+        Ok(FileIndex { path: path.to_path_buf(), sections })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn sections(&self) -> &[SectionEntry] {
+        &self.sections
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.sections.iter().any(|s| s.name == name)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&SectionEntry> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("missing section `{name}`"))
+    }
+
+    /// Load one section's payload, streaming it through the CRC in chunks
+    /// and comparing against the stored section checksum.
+    fn read_verified(&self, e: &SectionEntry) -> Result<Vec<u8>> {
+        use std::io::{Read as _, Seek, SeekFrom};
+        let mut f = std::fs::File::open(&self.path)
+            .with_context(|| format!("opening {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(e.payload_offset))
+            .with_context(|| format!("seeking to section `{}`", e.name))?;
+        let len = e.payload_len() as usize;
+        let mut payload = vec![0u8; len];
+        f.read_exact(&mut payload)
+            .with_context(|| format!("reading section `{}` payload", e.name))?;
+        let mut crc = 0xFFFF_FFFFu32;
+        crc = crc32_update(crc, e.name.as_bytes());
+        crc = crc32_update(crc, &e.tag.to_le_bytes());
+        crc = crc32_update(crc, &e.count.to_le_bytes());
+        for chunk in payload.chunks(1 << 20) {
+            crc = crc32_update(crc, chunk);
+        }
+        let crc = crc ^ 0xFFFF_FFFF;
+        if crc != e.crc {
+            bail!(
+                "section `{}`: CRC mismatch (stored {:#010x}, computed {crc:#010x}) \
+                 — file is corrupt",
+                e.name,
+                e.crc
+            );
+        }
+        Ok(payload)
+    }
+
+    pub fn read_bytes(&self, name: &str) -> Result<Vec<u8>> {
+        let e = self.entry(name)?;
+        if e.tag != 3 {
+            bail!("section `{name}` is not a bytes section (tag {})", e.tag);
+        }
+        self.read_verified(e)
+    }
+
+    pub fn read_u32s(&self, name: &str) -> Result<Vec<u32>> {
+        let e = self.entry(name)?;
+        if e.tag != 0 {
+            bail!("section `{name}` is not a u32 section (tag {})", e.tag);
+        }
+        let payload = self.read_verified(e)?;
+        Ok(payload
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn read_f32s(&self, name: &str) -> Result<Vec<f32>> {
+        let e = self.entry(name)?;
+        if e.tag != 1 {
+            bail!("section `{name}` is not a f32 section (tag {})", e.tag);
+        }
+        let payload = self.read_verified(e)?;
+        Ok(payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn read_f64s(&self, name: &str) -> Result<Vec<f64>> {
+        let e = self.entry(name)?;
+        if e.tag != 2 {
+            bail!("section `{name}` is not a f64 section (tag {})", e.tag);
+        }
+        let payload = self.read_verified(e)?;
+        Ok(payload
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -552,5 +980,91 @@ mod tests {
         // IEEE CRC-32 of "123456789" is the classic check value.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn stream_writer_bytes_identical_to_writer() {
+        let dir = tmp_dir("stream");
+        let path = dir.join("s.bin");
+        let mut w = StreamWriter::create(&path).unwrap();
+        w.begin_section("src", 0, 3).unwrap();
+        w.write_u32s(&[1, 2]).unwrap();
+        w.write_u32s(&[3]).unwrap();
+        w.end_section().unwrap();
+        w.begin_section("feat", 1, 2).unwrap();
+        w.write_f32s(&[0.5, -1.5]).unwrap();
+        w.end_section().unwrap();
+        w.begin_section("time", 2, 2).unwrap();
+        w.write_f64s(&[1e9]).unwrap();
+        w.write_f64s(&[2e9]).unwrap();
+        w.end_section().unwrap();
+        w.begin_section("meta", 3, 7).unwrap();
+        w.write_bytes(b"{\"a\":1}").unwrap();
+        w.end_section().unwrap();
+        w.finish().unwrap();
+        assert!(!tmp_sibling(&path).exists(), "temp file must be gone after finish");
+
+        let streamed = std::fs::read(&path).unwrap();
+        assert_eq!(streamed, sample_writer().to_bytes(), "StreamWriter must be byte-identical");
+
+        let mut r = Reader::open(&path).unwrap();
+        assert_eq!(r.take_u32("src").unwrap(), vec![1, 2, 3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_writer_count_mismatch_errors() {
+        let dir = tmp_dir("stream_err");
+        let path = dir.join("s.bin");
+        let mut w = StreamWriter::create(&path).unwrap();
+        w.begin_section("xs", 0, 2).unwrap();
+        w.write_u32s(&[1]).unwrap();
+        let err = w.end_section().unwrap_err();
+        assert!(format!("{err:#}").contains("`xs`"), "error should name the section");
+        // Writing past the declared count is also an error.
+        let mut w = StreamWriter::create(&path).unwrap();
+        w.begin_section("xs", 0, 1).unwrap();
+        assert!(w.write_u32s(&[1, 2]).is_err());
+        // A tag mismatch is an error.
+        let mut w = StreamWriter::create(&path).unwrap();
+        w.begin_section("xs", 0, 2).unwrap();
+        assert!(w.write_f64s(&[1.0]).is_err());
+        drop(w);
+        assert!(!tmp_sibling(&path).exists(), "unfinished writer cleans its temp file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_index_range_reads_and_corruption() {
+        let dir = tmp_dir("fidx");
+        let path = dir.join("t.bin");
+        sample_writer().write_to(&path).unwrap();
+
+        let idx = FileIndex::scan(&path).unwrap();
+        assert_eq!(idx.sections().len(), 4);
+        assert!(idx.has("src") && !idx.has("nope"));
+        assert_eq!(idx.read_u32s("src").unwrap(), vec![1, 2, 3]);
+        assert_eq!(idx.read_f32s("feat").unwrap(), vec![0.5, -1.5]);
+        assert_eq!(idx.read_f64s("time").unwrap(), vec![1e9, 2e9]);
+        assert_eq!(idx.read_bytes("meta").unwrap(), b"{\"a\":1}");
+        assert!(idx.read_u32s("feat").is_err(), "tag mismatch must error");
+        assert!(idx.read_u32s("nope").is_err());
+
+        // Corrupt one payload byte of `feat`: scan still succeeds (headers
+        // intact), but reading that section fails its CRC by name.
+        let mut img = std::fs::read(&path).unwrap();
+        let off = idx.entry("feat").unwrap().payload_offset as usize;
+        img[off] ^= 0x40;
+        std::fs::write(&path, &img).unwrap();
+        let idx = FileIndex::scan(&path).unwrap();
+        assert_eq!(idx.read_u32s("src").unwrap(), vec![1, 2, 3], "other sections unaffected");
+        let err = idx.read_f32s("feat").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("`feat`") && msg.contains("CRC"), "unhelpful error: {msg}");
+
+        // Truncation is caught by the footer at scan time.
+        std::fs::write(&path, &img[..img.len() - 5]).unwrap();
+        assert!(FileIndex::scan(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

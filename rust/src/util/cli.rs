@@ -81,7 +81,24 @@ impl Args {
                             if i >= argv.len() {
                                 bail!("option --{key} expects a value");
                             }
-                            argv[i].clone()
+                            let next = argv[i].clone();
+                            // `--epochs --chunks` is a forgotten value, not
+                            // a value spelled `--chunks`: refuse to swallow
+                            // anything that names a declared option (or
+                            // --help). A literal leading-dash value can be
+                            // passed with `--key=--value`.
+                            let next_key = next
+                                .strip_prefix("--")
+                                .map(|s| s.split_once('=').map_or(s, |(k, _)| k));
+                            if let Some(nk) = next_key {
+                                if nk == "help" || self.opts.iter().any(|o| o.name == nk) {
+                                    bail!(
+                                        "option --{key} expects a value, found option --{nk} \
+                                         (use --{key}=<value> for values starting with --)"
+                                    );
+                                }
+                            }
+                            next
                         }
                     };
                     self.values.insert(opt.name, val);
@@ -215,6 +232,29 @@ mod tests {
     #[test]
     fn flag_with_value_fails() {
         assert!(spec().parse(&argv(&["--data", "d", "--chunks=1"])).is_err());
+    }
+
+    #[test]
+    fn option_does_not_swallow_following_option() {
+        // `--epochs --chunks` forgot the epochs value: named error, not a
+        // silent misparse that also loses the flag.
+        let err = spec().parse(&argv(&["--data", "d", "--epochs", "--chunks"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--epochs") && msg.contains("--chunks"), "unhelpful: {msg}");
+        // Same for `--key=...` spellings of the following option.
+        assert!(spec().parse(&argv(&["--data", "d", "--epochs", "--lr=0.1"])).is_err());
+        // And for --help.
+        assert!(spec().parse(&argv(&["--data", "d", "--epochs", "--help"])).is_err());
+    }
+
+    #[test]
+    fn dashed_values_still_expressible() {
+        // Values that merely look dashed but name no option still parse…
+        let a = spec().parse(&argv(&["--data", "--weird-path", "--epochs", "3"])).unwrap();
+        assert_eq!(a.get("data"), "--weird-path");
+        // …and the = spelling always works, even for declared option names.
+        let a = spec().parse(&argv(&["--data=--chunks"])).unwrap();
+        assert_eq!(a.get("data"), "--chunks");
     }
 
     #[test]

@@ -34,7 +34,7 @@ fn steady_state_train_step_performs_zero_heap_allocation() {
     assert!(cfg.tensor_arenas, "arenas must be the default");
     let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("trainer");
 
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     assert!(graph.num_edges() >= 26 * bs, "dataset too small for 26 batches");
 
     // Warm-up: grows every arena/pool capacity (batch vectors, MFG

@@ -27,7 +27,7 @@ fn syn_tgn_loss_decreases_and_eval_ap_beats_chance() {
     let csr = TCsr::build(&graph, true);
     let cfg = TrainerCfg::for_model(&model, &graph, 5e-3, 2);
     let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("trainer");
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, val_end) = graph.chrono_split(0.70, 0.15);
     let mut sched = ChunkScheduler::plain(train_end, bs);
     let ep = sched.epoch();
@@ -122,7 +122,7 @@ fn gdelt_like_multiclass_nodeclf_beats_chance_on_macro_f1() {
 
     // One link-prediction epoch shapes the encoder (features predict
     // intra-community links), then the frozen-embedding protocol.
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = graph.chrono_split(0.70, 0.15);
     let mut sched = ChunkScheduler::plain(train_end, bs);
     t.train_epoch(&sched.epoch()).expect("pretrain epoch");

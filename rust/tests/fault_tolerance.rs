@@ -100,7 +100,7 @@ fn mid_epoch_kill_and_resume_is_bitwise_identical() {
     let dir = scratch("kill_resume");
     for arch in ["tgn", "tgat"] {
         let model = synthetic(arch).unwrap();
-        let bs = model.dim("bs");
+        let bs = model.dim("bs").unwrap();
         let (train_end, val_end) = g.chrono_split(0.70, 0.15);
         let ep = ChunkScheduler::plain(train_end, bs).epoch();
         let k = 5.min(ep.num_batches() - 1);
@@ -152,7 +152,7 @@ fn epoch_boundary_resume_restores_scheduler_rng() {
     let csr = TCsr::build(&g, true);
     let dir = scratch("epoch_boundary");
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let mk_sched = || ChunkScheduler::new(train_end, bs, bs / 4, 123).unwrap();
 
@@ -201,7 +201,7 @@ fn multi_trainer_kill_and_resume_on_group_boundary() {
     let csr = TCsr::build(&g, true);
     let dir = scratch("multi_resume");
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let ep = ChunkScheduler::plain(train_end, bs).epoch();
     let multi = MultiTrainer::new(2);
@@ -251,7 +251,7 @@ fn producer_panic_is_retried_and_recovered() {
     let g = graph();
     let csr = TCsr::build(&g, true);
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let ep = ChunkScheduler::plain(train_end, bs).epoch();
 
@@ -275,7 +275,7 @@ fn unrecoverable_batch_degrades_to_inline_preparation() {
     let g = graph();
     let csr = TCsr::build(&g, true);
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let ep = ChunkScheduler::plain(train_end, bs).epoch();
 
@@ -297,7 +297,7 @@ fn multi_trainer_producer_panic_recovers() {
     let g = graph();
     let csr = TCsr::build(&g, true);
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let ep = ChunkScheduler::plain(train_end, bs).epoch();
 
@@ -322,7 +322,7 @@ fn checkpoint_write_failure_preserves_previous_checkpoint() {
     let csr = TCsr::build(&g, true);
     let dir = scratch("write_fail");
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let path = dir.join("wf.ckpt");
 
     let mut good = trainer_with(&model, &g, &csr, 1, Arc::default());
@@ -368,7 +368,7 @@ fn checkpoint_read_bit_flip_is_detected() {
     let csr = TCsr::build(&g, true);
     let dir = scratch("bit_flip");
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let path = dir.join("flip.ckpt");
 
     let mut t = trainer_with(&model, &g, &csr, 1, Arc::default());
@@ -405,7 +405,7 @@ fn malformed_checkpoints_are_named_errors() {
     let csr = TCsr::build(&g, true);
     let dir = scratch("malformed");
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let path = dir.join("good.ckpt");
 
     let mut t = trainer_with(&model, &g, &csr, 1, Arc::default());
@@ -463,7 +463,7 @@ fn nan_loss_rolls_back_to_last_checkpoint() {
     let csr = TCsr::build(&g, true);
     let dir = scratch("diverged");
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let ep = ChunkScheduler::plain(train_end, bs).epoch();
     let path = dir.join("roll.ckpt");
@@ -561,7 +561,7 @@ fn run_cursor_roundtrips_exactly() {
     let csr = TCsr::build(&g, true);
     let dir = scratch("cursor");
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let plan: EpochPlan = ChunkScheduler::new(train_end, bs, bs / 2, 9).unwrap().epoch();
     let path = dir.join("cursor.ckpt");

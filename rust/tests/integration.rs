@@ -80,7 +80,7 @@ fn multiworker_single_worker_equals_sequential() {
         return;
     }
     let p = plan("tgn_tiny", "wikipedia", 0.02);
-    let bs = p.model.dim("bs");
+    let bs = p.model.dim("bs").unwrap();
     let (train_end, _) = p.graph.chrono_split(0.70, 0.15);
 
     let mut t1 = p.trainer().unwrap();
@@ -139,7 +139,7 @@ fn checkpoint_roundtrip_resumes_identically() {
         return;
     }
     let p = plan("tgn_tiny", "wikipedia", 0.02);
-    let bs = p.model.dim("bs");
+    let bs = p.model.dim("bs").unwrap();
     let (train_end, val_end) = p.graph.chrono_split(0.70, 0.15);
     let mut t = p.trainer().unwrap();
     let mut sched = ChunkScheduler::plain(train_end, bs);
@@ -194,7 +194,7 @@ fn pipelined_epoch_bitwise_identical_to_sequential() {
     // per-batch losses AND the downstream eval AP — across queue depths.
     for variant in ["tgn_tiny", "tgat_tiny"] {
         let p = plan(variant, "wikipedia", 0.02);
-        let bs = p.model.dim("bs");
+        let bs = p.model.dim("bs").unwrap();
         let (train_end, val_end) = p.graph.chrono_split(0.70, 0.15);
         let mut sched = ChunkScheduler::plain(train_end, bs);
         let ep = sched.epoch();
@@ -239,7 +239,7 @@ fn pipelined_epoch_independent_of_sampler_thread_count() {
             7,
         )
         .expect("plan");
-        let bs = p.model.dim("bs");
+        let bs = p.model.dim("bs").unwrap();
         let (train_end, _) = p.graph.chrono_split(0.70, 0.15);
         let mut sched = ChunkScheduler::plain(train_end, bs);
         let ep = sched.epoch();

@@ -1,0 +1,230 @@
+//! Out-of-core graph path: property-level identity between the external-
+//! sorted disk container and the in-RAM shard builder, CRC corruption
+//! detection over every graph section, the double-index regression guard,
+//! and the streamed-build RSS/allocation bound (the `#[ignore]`d bound
+//! test is run by name — alone in its process — from `scripts/tier1.sh`,
+//! because `VmHWM` and the allocation counters are process-global).
+
+use tgl::graph::{
+    build_container, edge_file_from_graph, index_builds_on_this_thread, BuildCfg, DiskTCsr,
+    EdgeFileWriter, GraphIndex, ShardCache, ShardedTCsr, TCsr, TemporalGraph,
+};
+use tgl::models::synthetic;
+use tgl::trainer::{Trainer, TrainerCfg};
+use tgl::util::alloc::CountingAlloc;
+use tgl::util::binfmt::FileIndex;
+use tgl::util::rng::Rng;
+use tgl::util::stats::peak_rss_bytes;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tgl_ooc_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Random multigraph with heavy timestamp duplication (the stable-sort
+/// stress case) in *insertion* order — the edge file gets the unsorted
+/// stream, the resident graph sorts it internally, and the two index
+/// builds must still agree bit for bit.
+fn random_edges(rng: &mut Rng) -> (usize, Vec<u32>, Vec<u32>, Vec<f64>) {
+    let n = 3 + rng.below(40);
+    let m = 50 + rng.below(400);
+    let mut src = Vec::with_capacity(m);
+    let mut dst = Vec::with_capacity(m);
+    let mut time = Vec::with_capacity(m);
+    for _ in 0..m {
+        src.push(rng.below(n) as u32);
+        dst.push(rng.below(n) as u32);
+        time.push(rng.below(40) as f64 * 0.5);
+    }
+    (n, src, dst, time)
+}
+
+#[test]
+fn disk_build_bitwise_matches_ram_build_over_random_graphs() {
+    let dir = tmp_dir("prop");
+    let mut rng = Rng::new(0xD15C);
+    for case in 0..6u32 {
+        let (n, src, dst, time) = random_edges(&mut rng);
+        let edges = dir.join(format!("g{case}.edges"));
+        let mut w = EdgeFileWriter::create(&edges, n).unwrap();
+        for i in 0..src.len() {
+            w.push(src[i], dst[i], time[i]).unwrap();
+        }
+        w.finish().unwrap();
+        let g = TemporalGraph::new(n, src, dst, time).unwrap();
+
+        for shards in [1usize, 2, 3, 5] {
+            for add_reverse in [false, true] {
+                // Tiny chunks force many sort runs through the k-way merge.
+                let chunk_edges = if case % 2 == 0 { 17 } else { 64 };
+                let out = dir.join(format!("g{case}_{shards}_{add_reverse}.tcsr"));
+                let cfg = BuildCfg { add_reverse, shards, chunk_edges };
+                let disk = build_container(&edges, &out, &cfg).unwrap();
+                let got = disk.load_sharded().unwrap();
+                let want = ShardedTCsr::build(&g, add_reverse, shards);
+                let tag = format!("case {case} shards {shards} rev {add_reverse}");
+                assert_eq!(got.num_shards(), want.num_shards(), "{tag}");
+                for s in 0..want.num_shards() {
+                    let (a, b) = (got.shard(s), want.shard(s));
+                    assert_eq!(a.indptr, b.indptr, "{tag} shard {s}: indptr");
+                    assert_eq!(a.indices, b.indices, "{tag} shard {s}: indices");
+                    assert_eq!(a.times, b.times, "{tag} shard {s}: times");
+                    assert_eq!(a.eids, b.eids, "{tag} shard {s}: eids");
+                }
+                if shards == 1 && add_reverse {
+                    let flat = TCsr::build(&g, true);
+                    assert_eq!(got.shard(0).indices, flat.indices, "{tag}: flat");
+                    assert_eq!(got.shard(0).eids, flat.eids, "{tag}: flat eids");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupting_any_graph_section_is_detected() {
+    let dir = tmp_dir("crc");
+    let mut rng = Rng::new(0xC4C);
+    let (n, src, dst, time) = random_edges(&mut rng);
+    let g = TemporalGraph::new(n, src, dst, time).unwrap();
+    let edges = dir.join("g.edges");
+    edge_file_from_graph(&g, &edges).unwrap();
+    let out = dir.join("g.tcsr");
+    let cfg = BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64 };
+    build_container(&edges, &out, &cfg).unwrap();
+
+    let sections: Vec<(String, u64, u64)> = FileIndex::scan(&out)
+        .unwrap()
+        .sections()
+        .iter()
+        .map(|e| (e.name.clone(), e.payload_offset, e.payload_len()))
+        .collect();
+    assert!(sections.iter().any(|(name, _, _)| name == "meta"), "container has meta");
+    assert!(
+        sections.iter().filter(|(name, _, _)| name.starts_with("s")).count() >= 3 * 4,
+        "container has per-shard sections"
+    );
+
+    let pristine = std::fs::read(&out).unwrap();
+    let corrupt_path = dir.join("corrupt.tcsr");
+    for (name, offset, len) in &sections {
+        if *len == 0 {
+            continue;
+        }
+        let mut bytes = pristine.clone();
+        let target = (*offset + *len / 2) as usize;
+        bytes[target] ^= 0xA5;
+        std::fs::write(&corrupt_path, &bytes).unwrap();
+        let res = DiskTCsr::open(&corrupt_path).and_then(|d| d.load_sharded().map(|_| ()));
+        assert!(res.is_err(), "flipped byte in section `{name}` must fail CRC");
+    }
+
+    // Untouched copy still loads — the detector isn't trivially failing.
+    std::fs::write(&corrupt_path, &pristine).unwrap();
+    DiskTCsr::open(&corrupt_path).unwrap().load_sharded().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Regression for the double-index bug: `RunPlan` used to build the flat
+/// `TCsr` eagerly and then the trainer built a `ShardedTCsr` again, so a
+/// `shards > 1` run held two full copies of the largest structure in the
+/// process. Now one `GraphIndex` is built (lazily) and the trainer
+/// borrows it — exactly one in-RAM index build per run.
+#[test]
+fn sharded_run_builds_exactly_one_index() {
+    let g = tgl::datasets::by_name("wikipedia", 0.02, 7).unwrap();
+    let model = synthetic("tgn").unwrap();
+    for shards in [1usize, 4] {
+        let before = index_builds_on_this_thread();
+        let index = GraphIndex::build(&g, shards);
+        assert_eq!(
+            index_builds_on_this_thread() - before,
+            1,
+            "shards {shards}: building the index is one build pass"
+        );
+        let cfg = TrainerCfg::for_model(&model, &g, 1e-3, 2);
+        let t = Trainer::for_index(&model, &g, &index, cfg).unwrap();
+        assert_eq!(
+            index_builds_on_this_thread() - before,
+            1,
+            "shards {shards}: constructing the trainer must not build a second index"
+        );
+        drop(t);
+    }
+}
+
+/// Disk-backed runs build no in-RAM index at all on this thread.
+#[test]
+fn disk_backed_run_builds_no_ram_index() {
+    let dir = tmp_dir("noram");
+    let g = tgl::datasets::by_name("wikipedia", 0.02, 7).unwrap();
+    let model = synthetic("tgn").unwrap();
+    let edges = dir.join("g.edges");
+    edge_file_from_graph(&g, &edges).unwrap();
+    let disk =
+        build_container(&edges, &dir.join("g.tcsr"), &BuildCfg { shards: 2, ..BuildCfg::default() })
+            .unwrap();
+    let index = GraphIndex::Disk(ShardCache::new(disk, 1));
+    let before = index_builds_on_this_thread();
+    let t = Trainer::for_index(&model, &g, &index, TrainerCfg::for_model(&model, &g, 1e-3, 2))
+        .unwrap();
+    assert_eq!(
+        index_builds_on_this_thread() - before,
+        0,
+        "the disk index is loaded, never rebuilt in RAM"
+    );
+    drop(t);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The streamed generate → external-sort → container pipeline stays in
+/// bounded memory: peak RSS must come in far below what materialising the
+/// graph in RAM would need, and the generator itself allocates O(actors),
+/// not O(edges).
+///
+/// `#[ignore]`d because both `VmHWM` and the allocation counters are
+/// process-global: `scripts/tier1.sh` runs this test by name so it owns
+/// the whole process.
+#[test]
+#[ignore = "process-global measurement; run alone by name (see scripts/tier1.sh)"]
+fn streamed_build_stays_bounded() {
+    let dir = tmp_dir("bound");
+    let actors = 4_000usize;
+    let edges: u64 = 3_000_000;
+    let path = dir.join("big.edges");
+
+    let alloc_before = CountingAlloc::allocated_bytes();
+    tgl::datasets::stream_gdelt_like(&path, actors, edges, 5).unwrap();
+    let gen_alloc = CountingAlloc::allocated_bytes() - alloc_before;
+    // O(actors) setup + write buffers; the 48 MB edge stream never
+    // touches the heap as a whole.
+    assert!(
+        gen_alloc < 4 << 20,
+        "generator allocated {gen_alloc} bytes; must be O(actors), not O(edges)"
+    );
+
+    let cfg = BuildCfg { add_reverse: true, shards: 8, chunk_edges: 1 << 16 };
+    let disk = build_container(&path, &dir.join("big.tcsr"), &cfg).unwrap();
+    assert_eq!(disk.num_edges(), edges);
+    // Spot-check the product is usable before trusting the bound.
+    let cache = ShardCache::new(disk, 1);
+    assert_eq!(cache.get(0).unwrap().num_nodes + cache.get(7).unwrap().num_nodes, 1_000);
+
+    if let Some(rss) = peak_rss_bytes() {
+        // Resident equivalent: 16 B/edge source arrays + 32 B/edge of
+        // flat T-CSR slots with reverse edges ≈ 144 MB at 3M edges. The
+        // streamed build must stay well under it (degree counts + one
+        // 64 K-edge chunk + one shard's slot arrays ≈ tens of MB).
+        let bound = 100u64 << 20;
+        assert!(
+            rss < bound,
+            "peak RSS {rss} bytes exceeds the {bound}-byte out-of-core bound"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

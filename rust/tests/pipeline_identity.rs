@@ -58,7 +58,7 @@ fn pipelined_epoch_and_eval_bitwise_identical_to_sequential() {
     let csr = TCsr::build(&g, true);
     for arch in ["tgn", "tgat"] {
         let model = synthetic(arch).unwrap();
-        let bs = model.dim("bs");
+        let bs = model.dim("bs").unwrap();
         let (train_end, val_end) = g.chrono_split(0.70, 0.15);
         let mut sched = ChunkScheduler::plain(train_end, bs);
         let ep = sched.epoch();
@@ -96,7 +96,7 @@ fn tensor_arenas_do_not_change_results() {
     let csr = TCsr::build(&g, true);
     for arch in ["tgn", "tgat"] {
         let model = synthetic(arch).unwrap();
-        let bs = model.dim("bs");
+        let bs = model.dim("bs").unwrap();
         let (train_end, val_end) = g.chrono_split(0.70, 0.15);
         let mut sched = ChunkScheduler::plain(train_end, bs);
         let ep = sched.epoch();
@@ -118,7 +118,7 @@ fn params_are_aliased_not_cloned_in_finish_inputs() {
     let csr = TCsr::build(&g, true);
     let model = synthetic("tgn").unwrap();
     let t = trainer(&model, &g, &csr, false, 2, true);
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let mut pb = t.prep.prepare_static(0..bs, 0, true).unwrap();
     let inputs = t.prep.finish_inputs(&t.state, &mut pb).unwrap();
     let spec = model.mf.step("train").unwrap();
@@ -139,7 +139,7 @@ fn multi_trainer_shared_producer_matches_synchronous_workers() {
     let g = graph();
     let csr = TCsr::build(&g, true);
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let mut sched = ChunkScheduler::plain(train_end, bs);
     let ep = sched.epoch();
@@ -179,7 +179,7 @@ fn sharded_single_trainer_identical_across_shard_counts() {
     let csr = TCsr::build(&g, true);
     for arch in ["tgn", "tgat"] {
         let model = synthetic(arch).unwrap();
-        let bs = model.dim("bs");
+        let bs = model.dim("bs").unwrap();
         let (train_end, val_end) = g.chrono_split(0.70, 0.15);
         let mut sched = ChunkScheduler::plain(train_end, bs);
         let ep = sched.epoch();
@@ -228,7 +228,7 @@ fn sharded_producers_multi_trainer_identical() {
     let g = graph();
     let csr = TCsr::build(&g, true);
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, _) = g.chrono_split(0.70, 0.15);
     let mut sched = ChunkScheduler::plain(train_end, bs);
     let ep = sched.epoch();
@@ -297,12 +297,85 @@ fn nodeclf_pipelined_replay_matches_sequential() {
     }
 }
 
+/// The out-of-core identity (ISSUE 7 acceptance): a graph streamed to an
+/// edge file, external-sorted into the on-disk shard container, and
+/// trained through a capacity-bounded [`ShardCache`] produces bitwise-
+/// identical per-batch losses, eval metrics, and embeddings to the
+/// in-RAM flat sequential trainer — with the hot state-row cache off and
+/// on, sequential and pipelined. The cache capacity (1) is below the
+/// shard count (2), so the identity holds under real evictions.
+#[test]
+fn out_of_core_trainer_identical_to_in_ram() {
+    use tgl::graph::{
+        build_container, edge_file_from_graph, BuildCfg, GraphIndex, ShardCache,
+    };
+    let g = graph();
+    let csr = TCsr::build(&g, true);
+    let dir = std::env::temp_dir().join(format!("tgl_ooc_identity_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let edges = dir.join("wiki.edges");
+    edge_file_from_graph(&g, &edges).unwrap();
+    let disk = build_container(
+        &edges,
+        &dir.join("wiki.edges.tcsr"),
+        &BuildCfg { shards: 2, ..BuildCfg::default() },
+    )
+    .unwrap();
+    let index = GraphIndex::Disk(ShardCache::new(disk, 1));
+
+    for arch in ["tgn", "tgat"] {
+        let model = synthetic(arch).unwrap();
+        let bs = model.dim("bs").unwrap();
+        let (train_end, val_end) = g.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+
+        let mut flat = trainer(&model, &g, &csr, false, 2, true);
+        let s_flat = flat.train_epoch(&ep).unwrap();
+        let val_flat = flat.eval_range(train_end..val_end).unwrap();
+
+        for (hot_rows, prefetch) in [(0usize, false), (64, false), (64, true)] {
+            let mut cfg = TrainerCfg::for_model(&model, &g, 1e-3, 2);
+            cfg.prefetch = prefetch;
+            cfg.prefetch_depth = 2;
+            cfg.hot_rows = hot_rows;
+            let mut t = Trainer::for_index(&model, &g, &index, cfg).unwrap();
+            let s = t.train_epoch(&ep).unwrap();
+            assert_eq!(
+                s_flat.losses, s.losses,
+                "{arch} hot_rows {hot_rows} prefetch {prefetch}: out-of-core losses \
+                 must be bitwise-identical to in-RAM"
+            );
+            let val = t.eval_range(train_end..val_end).unwrap();
+            assert_eq!(val_flat.ap, val.ap, "{arch} hot {hot_rows} pre {prefetch}: AP");
+            assert_eq!(val_flat.mean_loss, val.mean_loss, "{arch}: eval loss");
+            let nodes: Vec<u32> = (0..8u32).collect();
+            let ts: Vec<f64> = (0..8).map(|i| 1.0e5 + i as f64).collect();
+            assert_eq!(
+                flat.embed_nodes(&nodes, &ts).unwrap(),
+                t.embed_nodes(&nodes, &ts).unwrap(),
+                "{arch} hot {hot_rows} pre {prefetch}: embeddings"
+            );
+            if hot_rows > 0 && arch == "tgn" {
+                let stats = t.hot_cache_stats().expect("tgn has memory state");
+                assert!(stats.hits + stats.misses > 0, "hot cache must be exercised");
+            }
+        }
+    }
+    let stats = match &index {
+        GraphIndex::Disk(c) => c.stats(),
+        _ => unreachable!("built as Disk above"),
+    };
+    assert!(stats.evictions > 0, "cap-1 cache over 2 shards must evict");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn checkpoint_roundtrip_with_shared_params() {
     let g = graph();
     let csr = TCsr::build(&g, true);
     let model = synthetic("tgn").unwrap();
-    let bs = model.dim("bs");
+    let bs = model.dim("bs").unwrap();
     let (train_end, val_end) = g.chrono_split(0.70, 0.15);
     let mut sched = ChunkScheduler::plain(train_end, bs);
     let mut t = trainer(&model, &g, &csr, true, 2, true);

@@ -43,6 +43,17 @@ cargo test -q --test pipeline_identity sharded
 echo "== tier1: cargo test -q --test fault_tolerance =="
 cargo test -q --test fault_tolerance
 
+# Out-of-core acceptance: disk-container identity + the in-RAM identity
+# of the disk-backed trainer, then the streamed-build memory bound run
+# alone by name (VmHWM and the allocation counters are process-global,
+# so the bound test must own its process — hence `#[ignore]` + `--exact`).
+echo "== tier1: cargo test -q --test out_of_core =="
+cargo test -q --test out_of_core
+echo "== tier1: cargo test -q --test pipeline_identity out_of_core =="
+cargo test -q --test pipeline_identity out_of_core
+echo "== tier1: streamed-build RSS/allocation bound =="
+cargo test -q --release --test out_of_core streamed_build_stays_bounded -- --ignored --exact
+
 echo "== tier1: cargo test -q =="
 cargo test -q
 
