@@ -406,6 +406,110 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- Width-100 end-to-end epoch: the paper's production module
+    // width on the planted-signal dataset (the width-8 rows above keep
+    // their history; this row tracks the configuration the SIMD kernels
+    // were built for).
+    {
+        let model = tgl::models::synthetic_with_width("tgn", 100)?;
+        let graph = tgl::datasets::planted_signal(42)?;
+        let csr = TCsr::build(&graph, true);
+        let bs = model.dim("bs").unwrap();
+        let (train_end, _) = graph.chrono_split(0.70, 0.15);
+        let mut sched = ChunkScheduler::plain(train_end, bs);
+        let ep = sched.epoch();
+        let epoch_secs = |prefetch: bool| -> anyhow::Result<f64> {
+            let mut cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+            cfg.prefetch = prefetch;
+            let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+            t.train_epoch(&ep)?; // warm-up epoch
+            Ok(t.train_epoch(&ep)?.seconds)
+        };
+        let w_off = epoch_secs(false)?;
+        let w_on = epoch_secs(true)?;
+        println!(
+            "syn_tgn_w100 prefetch: off {w_off:.4}s vs on {w_on:.4}s ({:.2}x)",
+            w_off / w_on.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str("syn_tgn_w100-train-epoch".into())),
+            ("mode", Json::Str("training-epoch".into())),
+            ("prefetch_off_s", Json::Num(w_off)),
+            ("prefetch_on_s", Json::Num(w_on)),
+            ("speedup", Json::Num(w_off / w_on.max(1e-12))),
+        ]));
+    }
+
+    // ---- Per-kernel SIMD rows: the hot reference-backend kernels,
+    // scalar vs explicit-lane, at the toy width (8) and the production
+    // width (100, with ki = 108 columns). `speedup` is scalar/lanes, so a
+    // lane-path regression shows up exactly like any other slowdown in
+    // `scripts/bench_compare.sh`.
+    {
+        use tgl::runtime::simd;
+        let mut rng = tgl::util::rng::Rng::new(0x51D);
+        for (mode, rows, cols) in [("width-8", 8usize, 16usize), ("width-100", 100usize, 108)] {
+            let w: Vec<f32> = (0..rows * cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let x: Vec<f32> = (0..cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let d: Vec<f32> = (0..rows).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let mut out = vec![0.0f32; rows];
+            let mut acc = vec![0.0f32; rows * cols];
+            let reps = (200_000_000 / (rows * cols)).max(1000);
+
+            let time = |f: &mut dyn FnMut()| {
+                f(); // warm-up
+                let sw = Stopwatch::start();
+                for _ in 0..reps {
+                    f();
+                }
+                sw.secs()
+            };
+            let mv_scalar = time(&mut || {
+                simd::matvec_scalar(&w, std::hint::black_box(&x), &mut out);
+                std::hint::black_box(&mut out);
+            });
+            let mv_lanes = time(&mut || {
+                simd::matvec(&w, std::hint::black_box(&x), &mut out);
+                std::hint::black_box(&mut out);
+            });
+            println!(
+                "kernel-matvec {mode} ({rows}x{cols}, {reps} reps): scalar {mv_scalar:.4}s vs \
+                 lanes {mv_lanes:.4}s ({:.2}x)",
+                mv_scalar / mv_lanes.max(1e-12)
+            );
+            pipeline_rows.push(obj(vec![
+                ("workload", Json::Str("kernel-matvec".into())),
+                ("mode", Json::Str(mode.into())),
+                ("reps", Json::Num(reps as f64)),
+                ("scalar_s", Json::Num(mv_scalar)),
+                ("lanes_s", Json::Num(mv_lanes)),
+                ("speedup", Json::Num(mv_scalar / mv_lanes.max(1e-12))),
+            ]));
+
+            let oa_scalar = time(&mut || {
+                simd::outer_acc_scalar(&mut acc, std::hint::black_box(&d), &x);
+                std::hint::black_box(&mut acc);
+            });
+            let oa_lanes = time(&mut || {
+                simd::outer_acc(&mut acc, std::hint::black_box(&d), &x);
+                std::hint::black_box(&mut acc);
+            });
+            println!(
+                "kernel-outer-acc {mode} ({rows}x{cols}, {reps} reps): scalar {oa_scalar:.4}s \
+                 vs lanes {oa_lanes:.4}s ({:.2}x)",
+                oa_scalar / oa_lanes.max(1e-12)
+            );
+            pipeline_rows.push(obj(vec![
+                ("workload", Json::Str("kernel-outer-acc".into())),
+                ("mode", Json::Str(mode.into())),
+                ("reps", Json::Num(reps as f64)),
+                ("scalar_s", Json::Num(oa_scalar)),
+                ("lanes_s", Json::Num(oa_lanes)),
+                ("speedup", Json::Num(oa_scalar / oa_lanes.max(1e-12))),
+            ]));
+        }
+    }
+
     // ---- Sampler-level arena rows (always available, artifacts or not):
     // fresh `sample` vs `sample_into` over one Wikipedia sampling epoch,
     // plus the sharded-producer sampling row (1 shard vs 4 shards on the

@@ -89,6 +89,12 @@ pub struct LinkPredReport {
 impl RunPlan {
     /// Assemble a plan: load + compile the variant, generate/load the
     /// dataset, build the T-CSR.
+    ///
+    /// `syn_<arch>` / `syn_<arch>_w<width>` variants (e.g. `syn_tgn`,
+    /// `syn_tgn_w100`) are built in-process over the reference backend —
+    /// no artifacts directory needed, and a width past the scratch cap
+    /// surfaces here as a typed [`crate::runtime::nn::DimCapError`]
+    /// naming the offending dim.
     pub fn new(
         artifacts: &Path,
         configs: &Path,
@@ -99,15 +105,32 @@ impl RunPlan {
         seed: u64,
     ) -> Result<RunPlan> {
         let engine = Engine::cpu()?;
-        let manifest = ArtifactManifest::load(artifacts)?;
-        let model = Model::load(&engine, &manifest, variant)
-            .with_context(|| format!("loading variant `{variant}`"))?;
-        // Config file name matches the variant; `_tiny` variants reuse it.
-        let options = RunOptions::load(configs, variant)?;
         let graph = if Path::new(dataset).exists() {
             TemporalGraph::load(Path::new(dataset))?
         } else {
             datasets::by_name(dataset, scale, seed)?
+        };
+        let model = if let Some(spec) = variant.strip_prefix("syn_") {
+            let (arch, width) = match spec.rsplit_once("_w") {
+                Some((a, w)) if w.parse::<usize>().is_ok() => (a, w.parse().unwrap()),
+                _ => (spec, crate::models::DEFAULT_WIDTH),
+            };
+            let classes = graph.num_classes.clamp(2, crate::runtime::nn::MAX_CLASSES);
+            crate::models::synthetic_model(arch, classes, width)
+                .with_context(|| format!("building synthetic variant `{variant}`"))?
+        } else {
+            let manifest = ArtifactManifest::load(artifacts)?;
+            Model::load(&engine, &manifest, variant)
+                .with_context(|| format!("loading variant `{variant}`"))?
+        };
+        // Config file name matches the variant; `_tiny` variants reuse
+        // it. Synthetic variants rarely ship one — fall back to defaults.
+        let options = match RunOptions::load(configs, variant) {
+            Ok(o) => o,
+            Err(_) if variant.starts_with("syn_") => {
+                RunOptions { strategy: Strategy::MostRecent, snapshot_len: f64::INFINITY, lr: 1e-3 }
+            }
+            Err(e) => return Err(e),
         };
         Ok(RunPlan::assemble(engine, model, graph, options, threads, seed, None))
     }

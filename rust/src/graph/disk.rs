@@ -10,7 +10,8 @@
 //!    graphs too large to materialize. [`EdgeFileWriter`] appends in O(1)
 //!    memory; [`EdgeFileReader`] streams back.
 //! 2. **Container build** ([`build_container`]): external-sorts an edge
-//!    file chronologically in bounded memory (chunked stable runs + k-way
+//!    file chronologically in bounded memory (chunked stable runs sorted
+//!    [`BuildCfg::sort_workers`] at a time on a worker pool + k-way
 //!    merge; an already-sorted input is detected and streamed straight
 //!    through), assigns chronological edge ids at merge time, routes each
 //!    directed slot to its owner shard's bucket file, and finally streams
@@ -218,14 +219,21 @@ pub struct BuildCfg {
     /// Node-range shard count for the on-disk layout.
     pub shards: usize,
     /// Edges sorted per in-memory run during the external sort — the
-    /// memory bound of the sort phase (16 bytes per edge).
+    /// memory bound of the sort phase is `sort_workers × chunk_edges ×
+    /// 16 B` (each resident chunk holds 16 bytes per edge).
     pub chunk_edges: usize,
+    /// Threads sorting runs concurrently during the external sort's run
+    /// phase. Chunks are independent, so any value produces the same run
+    /// files in the same order — the container stays byte-identical to
+    /// the serial build (property-tested in `rust/tests/out_of_core.rs`).
+    pub sort_workers: usize,
 }
 
 impl Default for BuildCfg {
     fn default() -> Self {
-        // 4M edges ≈ 64 MB per sort run.
-        BuildCfg { add_reverse: true, shards: 1, chunk_edges: 4 << 20 }
+        // 4M edges ≈ 64 MB per sort run; 2 workers keep the sort-phase
+        // memory bound at ~128 MB.
+        BuildCfg { add_reverse: true, shards: 1, chunk_edges: 4 << 20, sort_workers: 2 }
     }
 }
 
@@ -340,16 +348,49 @@ fn build_container_inner(
         }
         if !sorted_so_far {
             // Re-stream from the top, this time writing sorted runs.
+            // Chunks are sorted independently (global order is the merge
+            // phase's job), so up to `sort_workers` of them sort in
+            // parallel; run files are still written in input-chunk order,
+            // which is what keeps the stable merge — and therefore the
+            // container bytes — identical to the serial build.
+            let workers = cfg.sort_workers.max(1);
+            let pool =
+                (workers > 1).then(|| crate::util::pool::WorkerPool::new(workers));
+            let mut batch: Vec<Mutex<Vec<EdgeRec>>> =
+                (0..workers).map(|_| Mutex::new(Vec::new())).collect();
             let mut src = EdgeFileReader::open_like(input)?;
             let mut idx = 0usize;
             loop {
-                let n = src.read_chunk(&mut chunk, cfg.chunk_edges)?;
-                if n == 0 {
+                let mut filled = 0usize;
+                while filled < workers {
+                    let buf = batch[filled].get_mut().unwrap();
+                    if src.read_chunk(buf, cfg.chunk_edges)? == 0 {
+                        break;
+                    }
+                    filled += 1;
+                }
+                if filled == 0 {
                     break;
                 }
-                chunk.sort_by(|a, b| a.time.total_cmp(&b.time));
-                runs.push(write_run(work, idx, &chunk)?);
-                idx += 1;
+                match &pool {
+                    // Each chunk index is touched by exactly one worker,
+                    // so the locks never contend; they only satisfy the
+                    // `Fn + Sync` bound of the fork-join dispatch.
+                    Some(pool) => pool.run_chunks(filled, 1, |_, range| {
+                        for c in range {
+                            let mut buf = batch[c].lock().unwrap();
+                            buf.sort_by(|a, b| a.time.total_cmp(&b.time));
+                        }
+                    }),
+                    None => batch[0]
+                        .get_mut()
+                        .unwrap()
+                        .sort_by(|a, b| a.time.total_cmp(&b.time)),
+                }
+                for c in 0..filled {
+                    runs.push(write_run(work, idx, batch[c].get_mut().unwrap())?);
+                    idx += 1;
+                }
             }
         }
     }
@@ -781,7 +822,7 @@ mod tests {
         for shards in [1usize, 2, 3, 7] {
             for add_reverse in [false, true] {
                 let out = dir.join(format!("g_{shards}_{add_reverse}.tcsr"));
-                let cfg = BuildCfg { add_reverse, shards, chunk_edges: 2 };
+                let cfg = BuildCfg { add_reverse, shards, chunk_edges: 2, sort_workers: 2 };
                 let disk = build_container(&edges, &out, &cfg).unwrap();
                 assert_eq!(disk.num_nodes(), 5);
                 assert_eq!(disk.num_edges(), 5);
@@ -817,7 +858,7 @@ mod tests {
         w.finish().unwrap();
         let g = TemporalGraph::new(4, src, dst, time).unwrap();
         let out = dir.join("g.tcsr");
-        let cfg = BuildCfg { add_reverse: true, shards: 2, chunk_edges: 3 };
+        let cfg = BuildCfg { add_reverse: true, shards: 2, chunk_edges: 3, sort_workers: 3 };
         let disk = build_container(&edges, &out, &cfg).unwrap();
         let loaded = disk.load_sharded().unwrap();
         let want = ShardedTCsr::build(&g, true, 2);
@@ -836,7 +877,7 @@ mod tests {
         let edges = dir.join("g.edges");
         edge_file_from_graph(&g, &edges).unwrap();
         let out = dir.join("g.tcsr");
-        let cfg = BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64 };
+        let cfg = BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64, sort_workers: 1 };
         let disk = build_container(&edges, &out, &cfg).unwrap();
         let cache = ShardCache::new(disk, 2);
         let a = cache.get(0).unwrap();

@@ -5,7 +5,9 @@
 
 mod synthetic;
 
-pub use synthetic::{synthetic, synthetic_with_classes};
+pub use synthetic::{
+    synthetic, synthetic_model, synthetic_with_classes, synthetic_with_width, DEFAULT_WIDTH,
+};
 
 use crate::runtime::{ArtifactManifest, Engine, Executable};
 use crate::sampler::Strategy;

@@ -3,7 +3,7 @@
 //! [`synthetic`] assembles a [`Model`] entirely in-process — manifest,
 //! dims, init params, and [`Executable::reference`] step functions — so
 //! the full training loop (prepare → execute → state update) runs without
-//! AOT artifacts. The steps execute the real tiny TGNN in
+//! AOT artifacts. The steps execute the real TGNN in
 //! [`crate::runtime::nn`] (GRU memory, temporal attention, BCE decoder,
 //! analytic gradients, Adam), so these variants genuinely *learn*: tests
 //! use them for pipeline/multi-trainer bitwise identity, the
@@ -18,8 +18,17 @@
 //! - `syn_tgat`: 2 hops, no memory (the TGAT shape) — exercises deep
 //!   hop inputs with an empty JIT stage beyond params/step.
 //!
-//! Dims are deliberately tiny (bs = 16, fanout = 3) so identity tests can
-//! sweep queue depths and worker counts in well under a second each.
+//! # Width knob
+//!
+//! The module widths are selectable: [`synthetic_with_width`] sets the
+//! embedding/memory/mailbox/decoder widths (`dh = dm = maild = dd =
+//! width`) and threads them to the executor through the step `hlo`'s dim
+//! query (see [`nn::NnDims`]). Width [`DEFAULT_WIDTH`] (8) reproduces the
+//! legacy toy network bit for bit and keeps identity sweeps fast; width
+//! 100 is the paper's production configuration (`rust/tests/width100.rs`
+//! gates gradients, convergence, and the zero-allocation guarantee
+//! there). Widths past [`nn::MAX_DIM`] are rejected up front with a
+//! typed, named [`nn::DimCapError`].
 
 use super::Model;
 use crate::runtime::{nn, DType, Executable, StepSpec, TensorSpec, VariantManifest};
@@ -30,10 +39,12 @@ const BS: usize = 16;
 const FANOUT: usize = 3;
 const DV: usize = 4;
 const DE: usize = 4;
-const DM: usize = 8;
-const MAILD: usize = 8;
-/// Embedding width is fixed by the reference network.
-const DH: usize = nn::DH;
+/// Width of the fixed sinusoidal time encoding (not a capacity knob).
+const DTE: usize = 4;
+/// Hidden width of the node-classification MLP.
+const CH: usize = 8;
+/// Default module width (`dh = dm = maild = dd`): the legacy toy network.
+pub const DEFAULT_WIDTH: usize = 8;
 /// Default `clf` class count ([`synthetic`]); [`synthetic_with_classes`]
 /// lifts it to the dataset's `num_classes`.
 const CLASSES: usize = 2;
@@ -52,9 +63,9 @@ fn init_vec(n: usize, salt: f32) -> Vec<f32> {
 }
 
 /// Build a synthetic variant (`"tgn"` or `"tgat"`, see module docs) with
-/// the default binary `clf` head.
+/// the default binary `clf` head at the default width.
 pub fn synthetic(arch: &str) -> Result<Model> {
-    synthetic_with_classes(arch, CLASSES)
+    synthetic_model(arch, CLASSES, DEFAULT_WIDTH)
 }
 
 /// [`synthetic`] with a `clf` head sized to `classes` — pass the
@@ -64,6 +75,20 @@ pub fn synthetic(arch: &str) -> Result<Model> {
 /// spec, so only the `clf` param layout changes; train/eval steps and
 /// their parameter vectors are identical to [`synthetic`]'s).
 pub fn synthetic_with_classes(arch: &str, classes: usize) -> Result<Model> {
+    synthetic_model(arch, classes, DEFAULT_WIDTH)
+}
+
+/// [`synthetic`] at a chosen module width: `dh = dm = maild = dd =
+/// width`. Width 100 is the paper's production configuration. Variants
+/// built at a non-default width are named `syn_<arch>_w<width>` so runs,
+/// checkpoints, and bench rows stay distinguishable.
+pub fn synthetic_with_width(arch: &str, width: usize) -> Result<Model> {
+    synthetic_model(arch, CLASSES, width)
+}
+
+/// Full-knob synthetic builder: architecture, `clf` class count, and
+/// module width. All other entry points delegate here.
+pub fn synthetic_model(arch: &str, classes: usize, width: usize) -> Result<Model> {
     let (hops, use_memory) = match arch {
         "tgn" => (1usize, true),
         "tgat" => (2usize, false),
@@ -74,11 +99,18 @@ pub fn synthetic_with_classes(arch: &str, classes: usize) -> Result<Model> {
         "clf class count {classes} out of range [2, {}]",
         nn::MAX_CLASSES
     );
+    // Reject absurd widths up front with the offending dim named — this
+    // is the same typed error the executor would raise, surfaced at
+    // model-build time instead of inside a producer thread.
+    let d = nn::NnDims { dh: width, dte: DTE, dd: width, ch: CH };
+    d.validate()?;
+    let (dm, maild) = if use_memory { (width, width) } else { (0, 0) };
+    let dh = d.dh;
     // Real weight-matrix layouts: the reference network defines how many
     // floats the flat parameter vectors hold (GRU + projection +
     // attention + decoder; classifier MLP for `clf`).
-    let pc = nn::tgnn_param_count(use_memory, DV, DE, DM, MAILD);
-    let clf_pc = nn::clf_param_count(DH, classes);
+    let pc = nn::tgnn_param_count(&d, use_memory, DV, DE, dm, maild);
+    let clf_pc = nn::clf_param_count(&d, classes);
     let roots = 3 * BS;
     // n_total = roots + Σ_l roots · fanout^l (each hop fans out the
     // previous hop's slots).
@@ -111,9 +143,9 @@ pub fn synthetic_with_classes(arch: &str, classes: usize) -> Result<Model> {
         hop_roots *= FANOUT;
     }
     if use_memory {
-        inputs.push(f("mem", &[n_total, DM]));
+        inputs.push(f("mem", &[n_total, dm]));
         inputs.push(f("mem_dt", &[n_total]));
-        inputs.push(f("mail", &[n_total, MAILD]));
+        inputs.push(f("mail", &[n_total, maild]));
         inputs.push(f("mail_dt", &[n_total]));
         inputs.push(f("mail_mask", &[n_total]));
     }
@@ -128,35 +160,42 @@ pub fn synthetic_with_classes(arch: &str, classes: usize) -> Result<Model> {
         f("loss", &[]),
         f("pos_score", &[BS]),
         f("neg_score", &[BS]),
-        f("emb", &[BS, DH]),
+        f("emb", &[BS, dh]),
     ];
     if use_memory {
         for outs in [&mut train_outputs, &mut eval_outputs] {
-            outs.push(f("new_mem", &[2 * BS, DM]));
-            outs.push(f("new_mail", &[2 * BS, MAILD]));
+            outs.push(f("new_mem", &[2 * BS, dm]));
+            outs.push(f("new_mail", &[2 * BS, maild]));
         }
     }
 
-    let name = format!("syn_{arch}");
+    let name = if width == DEFAULT_WIDTH {
+        format!("syn_{arch}")
+    } else {
+        format!("syn_{arch}_w{width}")
+    };
+    // The dim query is the executor's width channel (`nn::NnDims::
+    // from_hlo`); the path before `?` still identifies the step kind.
+    let dim_query = format!("?dh={}&dte={}&dd={}&ch={}", d.dh, d.dte, d.dd, d.ch);
     let train = StepSpec {
-        hlo: format!("reference://{name}/train"),
+        hlo: format!("reference://{name}/train{dim_query}"),
         inputs: inputs.clone(),
         outputs: train_outputs,
     };
     let eval = StepSpec {
-        hlo: format!("reference://{name}/eval"),
+        hlo: format!("reference://{name}/eval{dim_query}"),
         inputs,
         outputs: eval_outputs,
     };
     let clf = use_memory.then(|| StepSpec {
-        hlo: format!("reference://{name}/clf"),
+        hlo: format!("reference://{name}/clf{dim_query}"),
         inputs: vec![
             f("params", &[clf_pc]),
             f("adam_m", &[clf_pc]),
             f("adam_v", &[clf_pc]),
             f("step", &[]),
             f("lr", &[]),
-            f("emb", &[BS, DH]),
+            f("emb", &[BS, dh]),
             i("labels", &[BS]),
             f("label_mask", &[BS]),
         ],
@@ -178,10 +217,13 @@ pub fn synthetic_with_classes(arch: &str, classes: usize) -> Result<Model> {
         ("n_total", n_total),
         ("dv", DV),
         ("de", DE),
-        ("dm", DM),
-        ("maild", MAILD),
+        ("dm", dm),
+        ("maild", maild),
         ("mail_slots", 1),
-        ("dh", DH),
+        ("dh", dh),
+        ("dte", d.dte),
+        ("dd", d.dd),
+        ("ch", d.ch),
         ("use_memory", use_memory as usize),
     ] {
         dims.insert(k.to_string(), v);
@@ -224,6 +266,10 @@ pub fn synthetic_with_classes(arch: &str, classes: usize) -> Result<Model> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn default_dims() -> nn::NnDims {
+        nn::NnDims { dh: DEFAULT_WIDTH, dte: DTE, dd: DEFAULT_WIDTH, ch: CH }
+    }
 
     #[test]
     fn synthetic_variants_are_consistent() {
@@ -278,7 +324,7 @@ mod tests {
     #[test]
     fn multiclass_clf_head_sizes_to_request() {
         let m = synthetic_with_classes("tgn", 81).unwrap();
-        assert_eq!(m.mf.clf_param_count, nn::clf_param_count(DH, 81));
+        assert_eq!(m.mf.clf_param_count, nn::clf_param_count(&default_dims(), 81));
         assert_eq!(m.init_clf_params.len(), m.mf.clf_param_count);
         let spec = m.mf.step("clf").unwrap();
         let logits = spec.outputs.iter().find(|o| o.name == "logits").unwrap();
@@ -294,19 +340,50 @@ mod tests {
 
     #[test]
     fn param_layouts_match_reference_network() {
+        let d = default_dims();
         let tgn = synthetic("tgn").unwrap();
         assert_eq!(
             tgn.mf.param_count,
-            crate::runtime::nn::tgnn_param_count(true, DV, DE, DM, MAILD)
+            nn::tgnn_param_count(&d, true, DV, DE, DEFAULT_WIDTH, DEFAULT_WIDTH)
         );
-        assert_eq!(tgn.mf.clf_param_count, crate::runtime::nn::clf_param_count(DH, CLASSES));
+        assert_eq!(tgn.mf.clf_param_count, nn::clf_param_count(&d, CLASSES));
         assert_eq!(tgn.init_params.len(), tgn.mf.param_count);
         assert_eq!(tgn.init_clf_params.len(), tgn.mf.clf_param_count);
         let tgat = synthetic("tgat").unwrap();
-        assert_eq!(
-            tgat.mf.param_count,
-            crate::runtime::nn::tgnn_param_count(false, DV, DE, DM, MAILD)
-        );
+        assert_eq!(tgat.mf.param_count, nn::tgnn_param_count(&d, false, DV, DE, 0, 0));
         assert_eq!(tgat.mf.clf_param_count, 0);
+    }
+
+    #[test]
+    fn width_knob_scales_dims_and_is_capped_with_a_named_error() {
+        let m = synthetic_with_width("tgn", 100).unwrap();
+        assert_eq!(m.name, "syn_tgn_w100");
+        for key in ["dh", "dm", "maild", "dd"] {
+            assert_eq!(m.dim(key).unwrap(), 100, "width must set `{key}`");
+        }
+        let d = nn::NnDims { dh: 100, dte: DTE, dd: 100, ch: CH };
+        assert_eq!(m.mf.param_count, nn::tgnn_param_count(&d, true, DV, DE, 100, 100));
+        // ki = dh + dte + de = 108 > the old 64-float stack ceiling: the
+        // point of the pooled scratch arena.
+        assert!(100 + DTE + DE > 64);
+        let spec = m.mf.step("train").unwrap();
+        assert!(spec.hlo.contains("?dh=100&"), "hlo must carry the dim query: {}", spec.hlo);
+        assert_eq!(
+            spec.outputs.iter().find(|o| o.name == "new_mem").unwrap().shape,
+            vec![2 * BS, 100]
+        );
+
+        // The default width is exactly the legacy builder.
+        let w8 = synthetic_with_width("tgn", DEFAULT_WIDTH).unwrap();
+        let legacy = synthetic("tgn").unwrap();
+        assert_eq!(w8.name, "syn_tgn");
+        assert_eq!(w8.init_params, legacy.init_params);
+        assert_eq!(w8.mf.param_count, legacy.mf.param_count);
+
+        // Over-cap widths fail up front with the dim named.
+        let err = synthetic_with_width("tgn", nn::MAX_DIM + 1).unwrap_err();
+        let cap = err.downcast_ref::<nn::DimCapError>().expect("typed DimCapError");
+        assert_eq!(cap.what, "dh");
+        assert_eq!(cap.cap, nn::MAX_DIM);
     }
 }

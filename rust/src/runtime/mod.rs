@@ -12,6 +12,7 @@ mod manifest;
 pub mod nn;
 mod pjrt_stub;
 mod reference;
+pub mod simd;
 mod tensor;
 
 pub use engine::{Engine, Executable};

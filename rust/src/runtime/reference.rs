@@ -31,9 +31,11 @@
 //!
 //! Execution is allocation-free at steady state: outputs *and* all
 //! forward/backward intermediates are written into buffers recycled
-//! through a private [`TensorPool`] (or fixed-size stack arrays), which
-//! is what lets `rust/tests/alloc_train.rs` assert zero heap allocations
-//! across whole train steps *including* engine execution.
+//! through a private [`TensorPool`] — the per-row scratch vectors come
+//! from the same pool (a pooled scratch arena, no fixed stack ceiling),
+//! which is what lets `rust/tests/alloc_train.rs` assert zero heap
+//! allocations across whole train steps *including* engine execution, at
+//! production widths (dim 100) as well as the toy default.
 
 use super::manifest::StepSpec;
 use super::nn;
@@ -57,14 +59,17 @@ impl RefExec {
     /// the caller), appending one pooled output tensor per output spec.
     /// The step kind comes from the identity the synthetic builder wrote
     /// into `spec.hlo` (`reference://<variant>/clf` runs the classifier
-    /// MLP; train/eval run the TGNN).
+    /// MLP; train/eval run the TGNN). The URI may carry a dim query
+    /// (`?dh=100&...` — see [`nn::NnDims`]), so the step kind is the path
+    /// component before any `?`.
     pub fn run_into(
         &self,
         spec: &StepSpec,
         inputs: &[Tensor],
         out: &mut Vec<Tensor>,
     ) -> Result<()> {
-        if spec.hlo.ends_with("/clf") {
+        let path = spec.hlo.split('?').next().unwrap_or(&spec.hlo);
+        if path.ends_with("/clf") {
             nn::run_clf_step(spec, inputs, out, &self.pool)
         } else {
             nn::run_tgnn_step(spec, inputs, out, &self.pool)

@@ -1,0 +1,410 @@
+//! Portable fixed-lane SIMD kernels for the reference TGNN backend.
+//!
+//! The hot kernels of `runtime/nn.rs` (`matvec`, `matvec_t_acc`,
+//! `outer_acc` and the GRU/softmax inner loops built on them) run over
+//! widths up to the paper's production dim 100, so the per-element scalar
+//! loops of the original backend leave most of the machine idle. This
+//! module provides a `wide`-style 8-lane f32 vector ([`F32x8`]) written in
+//! plain Rust — no new dependencies, no `unsafe` — with the kernel bodies
+//! structured as unrolled fixed-lane loops plus a scalar tail, exactly the
+//! shape LLVM's autovectorizer turns into packed SSE/AVX/NEON, and exactly
+//! the shape a future `std::simd` swap can take over lane by lane.
+//!
+//! Determinism contract (relied on by the pipeline-identity gates, which
+//! compare *the same code* across execution modes, and pinned by the unit
+//! tests below):
+//!
+//! - **Accumulate kernels** ([`matvec_t_acc`], [`outer_acc`], [`axpy`],
+//!   [`vadd`]) perform the identical per-element operation sequence as
+//!   their scalar twins — each output element sees the same multiplies and
+//!   adds in the same order — so they are **bitwise identical** to the
+//!   scalar reference.
+//! - **Reduction kernels** ([`dot`], and [`matvec`]/[`matvec_acc`] built
+//!   on it) reassociate the sum into 8 partial accumulators plus a scalar
+//!   tail; they agree with the scalar reference to a small ULP bound
+//!   (tested), not bitwise.
+//! - No `mul_add`/FMA anywhere: fused contraction is target-dependent, and
+//!   Rust guarantees it is never introduced implicitly, so plain mul+add
+//!   keeps every kernel bit-reproducible across x86/ARM.
+//!
+//! Each lanes kernel has a `_scalar` twin kept as the semantic reference;
+//! the unit tests sweep sizes around the lane boundary (0..=2·LANES, and
+//! the widths 8/100/108 the TGNN actually uses) and randomized inputs.
+
+/// Lane count of [`F32x8`]; kernels process `LANES` elements per step.
+pub const LANES: usize = 8;
+
+/// Portable 8-lane f32 vector: a fixed-size array with element-wise ops,
+/// written so the autovectorizer lowers each method to one packed
+/// instruction (or two on 128-bit ISAs).
+#[derive(Clone, Copy, Debug)]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Load the first `LANES` elements of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; LANES];
+        v.copy_from_slice(&s[..LANES]);
+        F32x8(v)
+    }
+
+    /// Store into the first `LANES` elements of `s`.
+    #[inline(always)]
+    pub fn store(self, s: &mut [f32]) {
+        s[..LANES].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for l in 0..LANES {
+            v[l] += o.0[l];
+        }
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for l in 0..LANES {
+            v[l] *= o.0[l];
+        }
+        F32x8(v)
+    }
+
+    /// `self * a + acc`, as an unfused multiply then add per lane (never
+    /// FMA — see the module-level determinism contract).
+    #[inline(always)]
+    pub fn mul_add(self, a: F32x8, acc: F32x8) -> F32x8 {
+        let mut v = acc.0;
+        for l in 0..LANES {
+            v[l] += self.0[l] * a.0[l];
+        }
+        F32x8(v)
+    }
+
+    /// Horizontal sum via a fixed pairwise reduction tree (deterministic
+    /// association, independent of how the lanes were filled).
+    #[inline(always)]
+    pub fn sum(self) -> f32 {
+        let v = self.0;
+        ((v[0] + v[4]) + (v[2] + v[6])) + ((v[1] + v[5]) + (v[3] + v[7]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reduction kernels (lane-reassociated; ULP-bounded vs scalar)
+// ---------------------------------------------------------------------
+
+/// Lane dot product: 8 partial accumulators + scalar tail.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = F32x8::splat(0.0);
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc = F32x8::load(xa).mul_add(F32x8::load(xb), acc);
+    }
+    let mut s = acc.sum();
+    for (xa, xb) in ca.remainder().iter().zip(cb.remainder()) {
+        s += xa * xb;
+    }
+    s
+}
+
+/// Scalar reference for [`dot`].
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `out[r] = W[r,:]·x` for row-major `W[rows=out.len(), cols=x.len()]`.
+#[inline]
+pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let cols = x.len();
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot(&w[r * cols..(r + 1) * cols], x);
+    }
+}
+
+/// Scalar reference for [`matvec`].
+#[inline]
+pub fn matvec_scalar(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let cols = x.len();
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot_scalar(&w[r * cols..(r + 1) * cols], x);
+    }
+}
+
+/// `out[r] += W[r,:]·x` (accumulating matvec; same reduction as [`dot`]).
+#[inline]
+pub fn matvec_acc(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let cols = x.len();
+    for (r, o) in out.iter_mut().enumerate() {
+        *o += dot(&w[r * cols..(r + 1) * cols], x);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Accumulate kernels (bitwise identical to scalar)
+// ---------------------------------------------------------------------
+
+/// `y[i] += a·x[i]`. Per-element op order matches the scalar loop exactly,
+/// so the lanes form is bitwise identical to [`axpy_scalar`].
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let av = F32x8::splat(a);
+    let mut cy = y.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (yy, xx) in (&mut cy).zip(&mut cx) {
+        F32x8::load(xx).mul_add(av, F32x8::load(yy)).store(yy);
+    }
+    for (yy, xx) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+        *yy += xx * a;
+    }
+}
+
+/// Scalar reference for [`axpy`].
+#[inline]
+pub fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yy, xx) in y.iter_mut().zip(x) {
+        *yy += xx * a;
+    }
+}
+
+/// `y[i] += x[i]` (bitwise identical to the scalar loop).
+#[inline]
+pub fn vadd(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let mut cy = y.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (yy, xx) in (&mut cy).zip(&mut cx) {
+        F32x8::load(yy).add(F32x8::load(xx)).store(yy);
+    }
+    for (yy, xx) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+        *yy += xx;
+    }
+}
+
+/// `out[c] += Σ_r W[r,c]·d[r]` (transpose apply, accumulating). A row-wise
+/// [`axpy`] sweep: bitwise identical to [`matvec_t_acc_scalar`]. Rows with
+/// `d[r] == 0` are skipped (sparse upstream gradients are common).
+#[inline]
+pub fn matvec_t_acc(w: &[f32], d: &[f32], out: &mut [f32]) {
+    let cols = out.len();
+    for (r, &dr) in d.iter().enumerate() {
+        if dr == 0.0 {
+            continue;
+        }
+        axpy(out, dr, &w[r * cols..(r + 1) * cols]);
+    }
+}
+
+/// Scalar reference for [`matvec_t_acc`].
+#[inline]
+pub fn matvec_t_acc_scalar(w: &[f32], d: &[f32], out: &mut [f32]) {
+    let cols = out.len();
+    for (r, &dr) in d.iter().enumerate() {
+        if dr == 0.0 {
+            continue;
+        }
+        let row = &w[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            out[c] += row[c] * dr;
+        }
+    }
+}
+
+/// `dW[r,c] += d[r]·x[c]` (outer-product accumulate): row-wise [`axpy`],
+/// bitwise identical to [`outer_acc_scalar`]; zero `d[r]` rows skipped.
+#[inline]
+pub fn outer_acc(dw: &mut [f32], d: &[f32], x: &[f32]) {
+    let cols = x.len();
+    for (r, &dr) in d.iter().enumerate() {
+        if dr == 0.0 {
+            continue;
+        }
+        axpy(&mut dw[r * cols..(r + 1) * cols], dr, x);
+    }
+}
+
+/// Scalar reference for [`outer_acc`].
+#[inline]
+pub fn outer_acc_scalar(dw: &mut [f32], d: &[f32], x: &[f32]) {
+    let cols = x.len();
+    for (r, &dr) in d.iter().enumerate() {
+        if dr == 0.0 {
+            continue;
+        }
+        let row = &mut dw[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            row[c] += x[c] * dr;
+        }
+    }
+}
+
+/// Distance in representable f32 values between `a` and `b` (0 iff
+/// bitwise-equal up to signed zero), for pinning reduction-kernel
+/// agreement without demanding bitwise identity.
+pub fn ulp_dist(a: f32, b: f32) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    // Map the float line onto a monotone integer line.
+    fn ordered(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7fff_ffff) as i64)
+        } else {
+            b as i64
+        }
+    }
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Sizes around the lane boundary plus the widths the TGNN uses:
+    /// dh=8, ki=16 (width 8), dh=100, ki=108 (width 100).
+    const SIZES: [usize; 12] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 100, 108];
+
+    fn rand_vec(rng: &mut Rng, n: usize, with_zeros: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if with_zeros && rng.below(4) == 0 {
+                    0.0
+                } else {
+                    (rng.below(2000) as f32 - 1000.0) / 512.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn accumulate_kernels_are_bitwise_identical_to_scalar() {
+        let mut rng = Rng::new(0x51D);
+        for &rows in &SIZES {
+            for &cols in &SIZES {
+                let w = rand_vec(&mut rng, rows * cols, false);
+                let d = rand_vec(&mut rng, rows, true);
+                let x = rand_vec(&mut rng, cols, false);
+                // Accumulate onto non-zero state so ordering bugs can't
+                // hide behind fresh zeros.
+                let seed_out = rand_vec(&mut rng, cols, false);
+                let (mut a, mut b) = (seed_out.clone(), seed_out);
+                matvec_t_acc(&w, &d, &mut a);
+                matvec_t_acc_scalar(&w, &d, &mut b);
+                assert_eq!(a, b, "matvec_t_acc {rows}x{cols} must be bitwise");
+
+                let seed_dw = rand_vec(&mut rng, rows * cols, false);
+                let (mut a, mut b) = (seed_dw.clone(), seed_dw);
+                outer_acc(&mut a, &d, &x);
+                outer_acc_scalar(&mut b, &d, &x);
+                assert_eq!(a, b, "outer_acc {rows}x{cols} must be bitwise");
+            }
+        }
+        for &n in &SIZES {
+            let x = rand_vec(&mut rng, n, false);
+            let seed = rand_vec(&mut rng, n, false);
+            let (mut a, mut b) = (seed.clone(), seed.clone());
+            axpy(&mut a, 0.73, &x);
+            axpy_scalar(&mut b, 0.73, &x);
+            assert_eq!(a, b, "axpy n={n} must be bitwise");
+            let (mut a, mut b) = (seed.clone(), seed);
+            vadd(&mut a, &x);
+            for (yy, xx) in b.iter_mut().zip(&x) {
+                *yy += xx;
+            }
+            assert_eq!(a, b, "vadd n={n} must be bitwise");
+        }
+    }
+
+    #[test]
+    fn reduction_kernels_agree_with_scalar_within_ulp_bound() {
+        let mut rng = Rng::new(0xD07);
+        for &n in &SIZES {
+            // Same-sign inputs: no cancellation, so the reassociated sum
+            // must land within a small ULP distance of the scalar sum.
+            let a: Vec<f32> = (0..n).map(|_| 0.01 + rng.below(1000) as f32 / 1000.0).collect();
+            let b: Vec<f32> = (0..n).map(|_| 0.01 + rng.below(1000) as f32 / 1000.0).collect();
+            let (dl, ds) = (dot(&a, &b), dot_scalar(&a, &b));
+            assert!(
+                ulp_dist(dl, ds) <= 64,
+                "dot n={n}: lanes {dl} vs scalar {ds} ({} ULP)",
+                ulp_dist(dl, ds)
+            );
+        }
+        // Mixed-sign inputs can cancel; bound the absolute error by the
+        // magnitude sum (the condition number of the dot product).
+        for &n in &SIZES {
+            let a = rand_vec(&mut rng, n, true);
+            let b = rand_vec(&mut rng, n, false);
+            let (dl, ds) = (dot(&a, &b), dot_scalar(&a, &b));
+            let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            let bound = 8.0 * f32::EPSILON * mag + 1e-30;
+            assert!(
+                (dl - ds).abs() <= bound,
+                "dot n={n}: lanes {dl} vs scalar {ds} exceeds {bound}"
+            );
+        }
+        for &(rows, cols) in &[(8usize, 16usize), (100, 108), (7, 9), (13, 100)] {
+            let w = rand_vec(&mut rng, rows * cols, false);
+            let x = rand_vec(&mut rng, cols, false);
+            let (mut ol, mut os) = (vec![0.0f32; rows], vec![0.0f32; rows]);
+            matvec(&w, &x, &mut ol);
+            matvec_scalar(&w, &x, &mut os);
+            for r in 0..rows {
+                let mag: f32 =
+                    w[r * cols..(r + 1) * cols].iter().zip(&x).map(|(a, b)| (a * b).abs()).sum();
+                assert!(
+                    (ol[r] - os[r]).abs() <= 8.0 * f32::EPSILON * mag + 1e-30,
+                    "matvec {rows}x{cols} row {r}: {} vs {}",
+                    ol[r],
+                    os[r]
+                );
+            }
+            // matvec_acc accumulates the same reduction onto prior state.
+            let seed = rand_vec(&mut rng, rows, false);
+            let mut acc = seed.clone();
+            matvec_acc(&w, &x, &mut acc);
+            for r in 0..rows {
+                let want = seed[r] + ol[r];
+                assert!(
+                    ulp_dist(acc[r], want) <= 4,
+                    "matvec_acc {rows}x{cols} row {r}: {} vs {want}",
+                    acc[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ulp_dist_basics() {
+        assert_eq!(ulp_dist(1.0, 1.0), 0);
+        assert_eq!(ulp_dist(0.0, -0.0), 0);
+        assert_eq!(ulp_dist(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_dist(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        assert!(ulp_dist(1.0, -1.0) > 1_000_000);
+        assert_eq!(ulp_dist(f32::NAN, 1.0), u64::MAX);
+    }
+}

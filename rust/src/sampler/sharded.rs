@@ -528,8 +528,12 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let edges = dir.join("g.edges");
         crate::graph::edge_file_from_graph(&g, &edges).unwrap();
-        let bcfg =
-            crate::graph::BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64 };
+        let bcfg = crate::graph::BuildCfg {
+            add_reverse: true,
+            shards: 3,
+            chunk_edges: 64,
+            sort_workers: 2,
+        };
         let disk = crate::graph::build_container(&edges, &dir.join("g.tcsr"), &bcfg).unwrap();
         // cap 1 < 3 shards: every block churns through the cache, so this
         // also exercises eviction + reload mid-epoch.

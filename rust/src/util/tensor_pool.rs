@@ -16,7 +16,10 @@
 //!   it automatically when the tensor is dropped. At steady state every
 //!   batch re-uses the previous batch's buffers, so preparing and
 //!   executing a training step performs **zero heap allocation**
-//!   (asserted by `rust/tests/alloc_train.rs`).
+//!   (asserted by `rust/tests/alloc_train.rs`). The reference backend's
+//!   per-step scratch (`runtime/nn.rs`) rides the same guarantee through
+//!   its own pooled arena — width-generic since the `NnDims` layout PR,
+//!   so the property holds at production dims (re-proven at width 100).
 //! - **Aliased** (`Data::F32Shared`, an `Arc<Vec<f32>>`): a zero-copy
 //!   view of a per-step-constant vector — `params`, `adam_m`, `adam_v`.
 //!   Cloning the `Arc` replaces the full `state.params.clone()` copies

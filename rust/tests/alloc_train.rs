@@ -7,11 +7,13 @@
 //! the parameter/memory/mailbox write-back. This binary registers the
 //! counting global allocator and asserts exactly zero heap allocations
 //! across 20 steady-state batches of `Trainer::train_batch_reuse` on the
-//! synthetic TGN variant (memory + mailbox: the heaviest JIT path) — and
-//! then again with node sharding enabled (`cfg.shards = 2`: sharded
-//! sampler with its per-shard scratch pool, plus the single-owner
-//! memory/mailbox gathers). It contains a single test so no concurrent
-//! test thread can pollute the counter.
+//! synthetic TGN variant (memory + mailbox: the heaviest JIT path) — then
+//! again with node sharding enabled (`cfg.shards = 2`: sharded sampler
+//! with its per-shard scratch pool, plus the single-owner memory/mailbox
+//! gathers), and finally at production width (`syn_tgn_w100`: the pooled
+//! scratch arena replacing the old fixed stack buffers must stay
+//! recycled at dims the stack path could never hold). It contains a
+//! single test so no concurrent test thread can pollute the counter.
 
 use tgl::graph::TCsr;
 use tgl::models::synthetic;
@@ -97,4 +99,40 @@ fn steady_state_train_step_performs_zero_heap_allocation() {
     );
     assert!(last.is_finite());
     assert!(t.state.step >= 26.0);
+
+    // ---- Phase 3: production width. The dim-100 network's scratch
+    // vectors (ki = 108 > the old 64-float stack ceiling) come from the
+    // pooled arena, so the guarantee must hold unchanged — this is the
+    // zero-allocation re-proof the width-generic layout PR promises.
+    // Fewer measured batches: a width-100 batch is ~90 Mflop and this
+    // suite runs in debug mode.
+    let model = tgl::models::synthetic_with_width("tgn", 100).expect("width-100 synthetic tgn");
+    let mut cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 2);
+    cfg.prefetch = false;
+    let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("width-100 trainer");
+    let mut arena = PrepArena::default();
+    for bi in 0..4u64 {
+        let i = bi as usize;
+        let (loss, a) =
+            t.train_batch_reuse(i * bs..(i + 1) * bs, bi, arena).expect("width-100 warmup");
+        assert!(loss.is_finite());
+        arena = a;
+    }
+    let before = CountingAlloc::allocations();
+    let mut last = 0.0f64;
+    for bi in 4..10u64 {
+        let i = bi as usize;
+        let (loss, a) =
+            t.train_batch_reuse(i * bs..(i + 1) * bs, bi, arena).expect("width-100 steady");
+        last = loss;
+        arena = a;
+    }
+    let allocs = CountingAlloc::allocations() - before;
+    assert_eq!(
+        allocs, 0,
+        "width-100 steady-state train step must not allocate (saw {allocs} allocations over 6 \
+         batches at dh = dm = maild = dd = 100)"
+    );
+    assert!(last.is_finite());
+    assert!(t.state.step >= 10.0);
 }

@@ -59,14 +59,19 @@ fn disk_build_bitwise_matches_ram_build_over_random_graphs() {
 
         for shards in [1usize, 2, 3, 5] {
             for add_reverse in [false, true] {
-                // Tiny chunks force many sort runs through the k-way merge.
+                // Tiny chunks force many sort runs through the k-way
+                // merge; sort_workers > 1 routes the run phase through
+                // the parallel sorter, which must stay byte-identical.
                 let chunk_edges = if case % 2 == 0 { 17 } else { 64 };
+                let sort_workers = 1 + (case as usize + shards) % 3;
                 let out = dir.join(format!("g{case}_{shards}_{add_reverse}.tcsr"));
-                let cfg = BuildCfg { add_reverse, shards, chunk_edges };
+                let cfg = BuildCfg { add_reverse, shards, chunk_edges, sort_workers };
                 let disk = build_container(&edges, &out, &cfg).unwrap();
                 let got = disk.load_sharded().unwrap();
                 let want = ShardedTCsr::build(&g, add_reverse, shards);
-                let tag = format!("case {case} shards {shards} rev {add_reverse}");
+                let tag = format!(
+                    "case {case} shards {shards} rev {add_reverse} sorters {sort_workers}"
+                );
                 assert_eq!(got.num_shards(), want.num_shards(), "{tag}");
                 for s in 0..want.num_shards() {
                     let (a, b) = (got.shard(s), want.shard(s));
@@ -79,6 +84,18 @@ fn disk_build_bitwise_matches_ram_build_over_random_graphs() {
                     let flat = TCsr::build(&g, true);
                     assert_eq!(got.shard(0).indices, flat.indices, "{tag}: flat");
                     assert_eq!(got.shard(0).eids, flat.eids, "{tag}: flat eids");
+                }
+                // The serial and parallel sort paths must produce the
+                // same container bytes.
+                if sort_workers > 1 {
+                    let out1 = dir.join(format!("g{case}_{shards}_{add_reverse}_1.tcsr"));
+                    let cfg1 = BuildCfg { sort_workers: 1, ..cfg.clone() };
+                    build_container(&edges, &out1, &cfg1).unwrap();
+                    assert_eq!(
+                        std::fs::read(&out).unwrap(),
+                        std::fs::read(&out1).unwrap(),
+                        "{tag}: parallel-sorted container bytes"
+                    );
                 }
             }
         }
@@ -95,7 +112,7 @@ fn corrupting_any_graph_section_is_detected() {
     let edges = dir.join("g.edges");
     edge_file_from_graph(&g, &edges).unwrap();
     let out = dir.join("g.tcsr");
-    let cfg = BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64 };
+    let cfg = BuildCfg { add_reverse: true, shards: 3, chunk_edges: 64, sort_workers: 2 };
     build_container(&edges, &out, &cfg).unwrap();
 
     let sections: Vec<(String, u64, u64)> = FileIndex::scan(&out)
@@ -208,7 +225,7 @@ fn streamed_build_stays_bounded() {
         "generator allocated {gen_alloc} bytes; must be O(actors), not O(edges)"
     );
 
-    let cfg = BuildCfg { add_reverse: true, shards: 8, chunk_edges: 1 << 16 };
+    let cfg = BuildCfg { add_reverse: true, shards: 8, chunk_edges: 1 << 16, sort_workers: 2 };
     let disk = build_container(&path, &dir.join("big.tcsr"), &cfg).unwrap();
     assert_eq!(disk.num_edges(), edges);
     // Spot-check the product is usable before trusting the bound.

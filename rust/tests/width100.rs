@@ -1,0 +1,198 @@
+//! Production-width (dim 100) gates for the reference backend.
+//!
+//! The paper's models run at ~100-dim memory/embedding widths; the
+//! reference TGNN was frozen at the toy width 8 until the width-generic
+//! layout landed (`runtime/nn.rs`). This file proves the production
+//! configuration actually works end to end:
+//!
+//! - the quick tests (always on) build `syn_tgn_w100`, train a real
+//!   batch, and pin the named-error path for widths past the scratch cap
+//!   (builder-level **and** through `RunPlan`);
+//! - the `#[ignore]`d gates — finite-difference gradcheck, convergence
+//!   (epoch-loss fall + eval AP) and a throughput smoke — are run by name
+//!   in release mode from `scripts/tier1.sh` (a width-100 train batch is
+//!   ~90 Mflop, far too slow for the debug-mode default suite).
+//!
+//! The width-100 **zero-allocation** twin lives in
+//! `rust/tests/alloc_train.rs` (it needs the counting global allocator).
+
+use std::path::Path;
+use tgl::coordinator::RunPlan;
+use tgl::graph::TCsr;
+use tgl::models::{synthetic_with_width, Model};
+use tgl::runtime::{nn, Tensor};
+use tgl::sched::ChunkScheduler;
+use tgl::trainer::{PrepArena, Trainer, TrainerCfg};
+
+const WIDTH: usize = 100;
+
+#[test]
+fn width100_model_builds_and_trains_one_batch() {
+    let model = synthetic_with_width("tgn", WIDTH).expect("width-100 synthetic tgn");
+    assert_eq!(model.name, "syn_tgn_w100");
+    assert_eq!(model.dim("dh").unwrap(), WIDTH);
+    assert_eq!(model.dim("dm").unwrap(), WIDTH);
+    let graph = tgl::datasets::planted_signal(7).expect("dataset");
+    let csr = TCsr::build(&graph, true);
+    let mut cfg = TrainerCfg::for_model(&model, &graph, 5e-3, 2);
+    cfg.prefetch = false;
+    let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("trainer");
+    let bs = model.dim("bs").unwrap();
+    let (loss, _) = t.train_batch_reuse(0..bs, 0, PrepArena::default()).expect("train batch");
+    assert!(loss.is_finite() && loss > 0.0, "width-100 batch loss {loss}");
+}
+
+#[test]
+fn dim_cap_overflow_is_a_named_error_through_runplan() {
+    // Builder-level: the typed error names the offending dim.
+    let err = synthetic_with_width("tgn", nn::MAX_DIM + 1).unwrap_err();
+    let cap = err.downcast_ref::<nn::DimCapError>().expect("typed DimCapError");
+    assert_eq!(cap.what, "dh");
+    assert_eq!(cap.dim, nn::MAX_DIM + 1);
+    assert_eq!(cap.cap, nn::MAX_DIM);
+
+    // RunPlan-level: `syn_tgn_w<huge>` fails the same way — with the dim
+    // named — instead of panicking inside a producer thread later.
+    let plan = |variant: &str| {
+        RunPlan::new(
+            Path::new("artifacts"),
+            Path::new("configs"),
+            variant,
+            "planted",
+            1.0,
+            2,
+            7,
+        )
+    };
+    let big = format!("syn_tgn_w{}", nn::MAX_DIM + 1);
+    let err = plan(&big).unwrap_err();
+    let cap = err.downcast_ref::<nn::DimCapError>().expect("DimCapError through RunPlan");
+    assert_eq!(cap.what, "dh");
+    assert!(format!("{err:#}").contains("`dh`"), "context names the dim: {err:#}");
+
+    // The good path parses the same grammar.
+    let p = plan("syn_tgn_w100").expect("width-100 plan");
+    assert_eq!(p.model.name, "syn_tgn_w100");
+    assert_eq!(p.model.dim("dh").unwrap(), WIDTH);
+}
+
+/// Gradient-recovery helper: with zeroed Adam moments at step 0,
+/// `new_adam_m = (1-β1)·g` (β1 = 0.9, the backend's fixed Adam default),
+/// so the analytic gradient is recoverable from the train outputs alone.
+fn loss_and_grad(model: &Model, params: &[f32]) -> (f64, Vec<f32>) {
+    const BETA1: f32 = 0.9;
+    let spec = model.mf.step("train").unwrap();
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|ts| {
+            let data: Vec<f32> = match ts.name.as_str() {
+                "params" => params.to_vec(),
+                "adam_m" | "adam_v" | "step" => vec![0.0; ts.numel()],
+                "lr" => vec![0.01],
+                "dt_scale" => vec![0.5],
+                "edge_mask" => (0..ts.numel()).map(|k| if k < 12 { 1.0 } else { 0.0 }).collect(),
+                n if n.starts_with("mask_") => {
+                    (0..ts.numel()).map(|k| if k % 3 == 2 { 0.0 } else { 1.0 }).collect()
+                }
+                "mail_mask" => (0..ts.numel()).map(|k| (k % 2) as f32).collect(),
+                n if n.starts_with("dt_") || n == "mail_dt" || n == "mem_dt" => {
+                    (0..ts.numel()).map(|k| 3.0 * (k as f32 * 0.11).sin().abs()).collect()
+                }
+                _ => (0..ts.numel()).map(|k| 0.2 * (k as f32 * 0.37 + 1.3).sin()).collect(),
+            };
+            Tensor::f32(&ts.shape, data).unwrap()
+        })
+        .collect();
+    let outs = model.train_exe.run(&inputs).unwrap();
+    let loss = outs[spec.output_index("loss").unwrap()].scalar_f32().unwrap() as f64;
+    let g = outs[spec.output_index("new_adam_m").unwrap()]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .map(|&m| m / (1.0 - BETA1))
+        .collect();
+    (loss, g)
+}
+
+#[test]
+#[ignore = "release-mode gate; run by name (see scripts/tier1.sh)"]
+fn width100_gradients_match_finite_differences() {
+    let model = synthetic_with_width("tgn", WIDTH).unwrap();
+    let base = model.init_params.clone();
+    let (l0, g) = loss_and_grad(&model, &base);
+    assert!(l0.is_finite() && l0 > 0.0);
+    assert_eq!(g.len(), base.len());
+    let eps = 5e-3f32;
+    let stride = (base.len() / 48).max(1);
+    let mut checked = 0usize;
+    for k in (0..base.len()).step_by(stride) {
+        let mut pp = base.clone();
+        pp[k] += eps;
+        let (lp, _) = loss_and_grad(&model, &pp);
+        pp[k] = base[k] - eps;
+        let (lm, _) = loss_and_grad(&model, &pp);
+        let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+        let diff = (fd - g[k]).abs();
+        let tol = 0.01 + 0.1 * fd.abs().max(g[k].abs());
+        assert!(diff <= tol, "param {k}: analytic {} vs finite-diff {fd} (|Δ|={diff})", g[k]);
+        checked += 1;
+    }
+    assert!(checked >= 45, "gradcheck covered too few params ({checked})");
+    let gnorm: f32 = g.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-4, "width-100 gradient must not vanish (|g|={gnorm})");
+}
+
+#[test]
+#[ignore = "release-mode gate; run by name (see scripts/tier1.sh)"]
+fn width100_convergence_clears_ap_gate() {
+    let model = synthetic_with_width("tgn", WIDTH).unwrap();
+    let graph = tgl::datasets::planted_signal(7).expect("dataset");
+    let csr = TCsr::build(&graph, true);
+    let cfg = TrainerCfg::for_model(&model, &graph, 5e-3, 2);
+    let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("trainer");
+    let bs = model.dim("bs").unwrap();
+    let (train_end, val_end) = graph.chrono_split(0.70, 0.15);
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    let ep = sched.epoch();
+
+    let mut means = Vec::new();
+    for e in 0..3 {
+        let stats = t.train_epoch(&ep).unwrap_or_else(|err| panic!("epoch {e}: {err:#}"));
+        assert!(stats.mean_loss.is_finite(), "epoch {e} loss {}", stats.mean_loss);
+        means.push(stats.mean_loss);
+    }
+    assert!(*means.last().unwrap() < means[0], "width-100 epoch loss must fall: {means:?}");
+    let val = t.eval_range(train_end..val_end).expect("eval");
+    assert!(
+        val.ap > 0.6,
+        "width-100 eval AP {:.3} must clear 0.6 on the planted-signal dataset",
+        val.ap
+    );
+}
+
+#[test]
+#[ignore = "timing smoke; run by name (tier1.sh / bench baseline capture)"]
+fn width100_throughput_smoke() {
+    // Not a pass/fail perf gate (machines differ) — prints the epoch
+    // batch rate so `scripts/bench_compare.sh` baselines and humans have
+    // a number to eyeball. The JSON bench row twin lives in
+    // `benches/training.rs` (`syn_tgn_w100-train-epoch`).
+    let model = synthetic_with_width("tgn", WIDTH).unwrap();
+    let graph = tgl::datasets::planted_signal(7).expect("dataset");
+    let csr = TCsr::build(&graph, true);
+    let mut cfg = TrainerCfg::for_model(&model, &graph, 5e-3, 2);
+    cfg.prefetch = false;
+    let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("trainer");
+    let bs = model.dim("bs").unwrap();
+    let (train_end, _) = graph.chrono_split(0.70, 0.15);
+    let mut sched = ChunkScheduler::plain(train_end, bs);
+    let ep = sched.epoch();
+    t.train_epoch(&ep).expect("warm epoch");
+    let sw = tgl::util::stats::Stopwatch::start();
+    let stats = t.train_epoch(&ep).expect("timed epoch");
+    let secs = sw.secs();
+    let nb = stats.losses.len();
+    assert!(nb >= 40 && stats.mean_loss.is_finite());
+    println!("width-100 epoch: {nb} batches in {secs:.3}s ({:.1} batches/s)", nb as f64 / secs);
+}

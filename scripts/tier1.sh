@@ -54,6 +54,28 @@ cargo test -q --test pipeline_identity out_of_core
 echo "== tier1: streamed-build RSS/allocation bound =="
 cargo test -q --release --test out_of_core streamed_build_stays_bounded -- --ignored --exact
 
+# SIMD kernel agreement by name: the explicit-lane kernels must stay
+# bitwise-identical (accumulate family) / ULP-bounded (reduction family)
+# against their scalar twins.
+echo "== tier1: simd kernel agreement =="
+cargo test -q --lib runtime::simd
+
+# Production-width gates: the quick width-100 tests run in the debug
+# suite below; the expensive ones (finite-difference gradcheck,
+# convergence AP, throughput smoke) run here in release mode by name.
+echo "== tier1: width-100 gradcheck =="
+cargo test -q --release --test width100 width100_gradients_match_finite_differences \
+  -- --ignored --exact
+echo "== tier1: width-100 convergence =="
+cargo test -q --release --test width100 width100_convergence_clears_ap_gate -- --ignored --exact
+echo "== tier1: width-100 throughput smoke =="
+cargo test -q --release --test width100 width100_throughput_smoke -- --ignored --exact
+
+# Zero-allocation guarantee (width 8, sharded, and width 100) — a single
+# test so the process-global counter stays honest.
+echo "== tier1: cargo test -q --test alloc_train =="
+cargo test -q --test alloc_train
+
 echo "== tier1: cargo test -q =="
 cargo test -q
 
