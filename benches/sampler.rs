@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     for (name, mk) in algos {
-        let base = BaselineSampler::new(&graph, true, mk(1, &graph));
+        let base = BaselineSampler::new(&graph, true, mk(1, &graph))?;
         let sw = Stopwatch::start();
         run_epoch_baseline(&graph, &base, bs);
         let base_s = sw.secs();
@@ -58,14 +58,14 @@ fn main() -> anyhow::Result<()> {
         for &threads in &[1usize, 2, 4, 8, 16, 32] {
             // Timed run: stats collection off (it perturbs the hot loop).
             let cfg = mk(threads, &graph);
-            let sampler = TemporalSampler::new(&csr, cfg.clone());
+            let sampler = TemporalSampler::new(&csr, cfg.clone())?;
             let sw = Stopwatch::start();
             run_epoch_parallel(&graph, &sampler, bs);
             let secs = sw.secs();
             // Breakdown run: stats on (Figure 4b shape, not absolute time).
             let mut cfg_bd = cfg;
             cfg_bd.collect_stats = true;
-            let sampler_bd = TemporalSampler::new(&csr, cfg_bd);
+            let sampler_bd = TemporalSampler::new(&csr, cfg_bd)?;
             run_epoch_parallel(&graph, &sampler_bd, bs);
             let bd = sampler_bd.stats.breakdown();
             f4.row(vec![
@@ -106,7 +106,7 @@ fn main() -> anyhow::Result<()> {
         for threads in [1usize, 8] {
             let mut cfg = SamplerConfig::uniform_hops(1, 10, Strategy::MostRecent, threads);
             cfg.pointer_mode = mode;
-            let sampler = TemporalSampler::new(&csr, cfg);
+            let sampler = TemporalSampler::new(&csr, cfg)?;
             let sw = Stopwatch::start();
             run_epoch_parallel(&graph, &sampler, bs);
             ab.row(vec![format!("{mode:?}"), threads.to_string(), format!("{:.4}", sw.secs())]);
@@ -123,7 +123,7 @@ fn main() -> anyhow::Result<()> {
         &["algorithm", "fresh (s)", "arena (s)", "speedup"],
     );
     for (name, mk) in algos {
-        let sampler = TemporalSampler::new(&csr, mk(8, &graph));
+        let sampler = TemporalSampler::new(&csr, mk(8, &graph))?;
         // Warm both paths once (first arena epoch grows capacities).
         run_epoch_parallel(&graph, &sampler, bs);
         run_epoch_parallel_reuse(&graph, &sampler, bs);
@@ -156,7 +156,7 @@ fn main() -> anyhow::Result<()> {
         &["algorithm", "flat (s)", "1 shard", "2 shards", "4 shards", "8 shards"],
     );
     for (name, mk) in algos {
-        let flat_sampler = TemporalSampler::new(&csr, mk(8, &graph));
+        let flat_sampler = TemporalSampler::new(&csr, mk(8, &graph))?;
         run_epoch_parallel_reuse(&graph, &flat_sampler, bs); // warm-up
         let sw = Stopwatch::start();
         run_epoch_parallel_reuse(&graph, &flat_sampler, bs);
@@ -164,7 +164,7 @@ fn main() -> anyhow::Result<()> {
         let mut cols = vec![name.to_string(), format!("{flat_s:.4}")];
         for shards in [1usize, 2, 4, 8] {
             let sampler =
-                ShardedSampler::new(ShardedTCsr::build(&graph, true, shards), mk(8, &graph));
+                ShardedSampler::new(ShardedTCsr::build(&graph, true, shards), mk(8, &graph))?;
             run_epoch_sharded(&graph, &sampler, bs); // warm-up
             let sw = Stopwatch::start();
             run_epoch_sharded(&graph, &sampler, bs);

@@ -521,7 +521,7 @@ fn main() -> anyhow::Result<()> {
         ("tgn-1layer-sampling", SamplerConfig::uniform_hops(1, 10, Strategy::MostRecent, 8)),
         ("tgat-2layer-sampling", SamplerConfig::uniform_hops(2, 10, Strategy::Uniform, 8)),
     ] {
-        let sampler = TemporalSampler::new(&csr, cfg.clone());
+        let sampler = TemporalSampler::new(&csr, cfg.clone())?;
         run_epoch_parallel(&graph, &sampler, bs); // warm-up
         let sw = Stopwatch::start();
         run_epoch_parallel(&graph, &sampler, bs);
@@ -546,7 +546,8 @@ fn main() -> anyhow::Result<()> {
             let s = tgl::sampler::ShardedSampler::new(
                 tgl::graph::ShardedTCsr::build(&graph, true, shards),
                 cfg.clone(),
-            );
+            )
+            .expect("valid sampler config");
             tgl::coordinator::run_epoch_sharded(&graph, &s, bs); // warm-up
             let sw = Stopwatch::start();
             tgl::coordinator::run_epoch_sharded(&graph, &s, bs);

@@ -136,7 +136,7 @@ fn main() -> anyhow::Result<()> {
     let sampler = ShardedSampler::on_disk_shared(
         &cache,
         SamplerConfig::uniform_hops(1, fanout, Strategy::MostRecent, threads),
-    );
+    )?;
     let mut memory = NodeMemory::new(actors, dim);
     memory.enable_hot_cache(hot_rows);
     let mut mailbox = Mailbox::new(actors, 1, dim);

@@ -3,6 +3,8 @@
 //! simple table rendering, and CSV emission so every paper table/figure
 //! regenerates from `cargo bench` output.
 
+// lint: allow-file(index, "table column widths are sized to the widest row before the loop")
+
 use crate::util::stats::{Samples, Welford};
 use std::io::Write as _;
 use std::time::Instant;

@@ -4,6 +4,8 @@
 //! config, and train — the TGL usage model ("compose TGNNs with simple
 //! configuration files").
 
+// lint: allow-file(index, "CLI plumbing over small fixed-shape smoke buffers")
+
 mod run;
 
 pub use run::{
@@ -77,6 +79,7 @@ fn smoke(args: &[String]) -> Result<()> {
     let y = out[0].as_f32()?;
     println!("smoke output: {y:?}");
     // matmul(w, x) + 2 with w=ones: [[6,8],[6,8]] row-major.
+    // lint: allow(float-eq, "smoke test: ones-matmul output is exactly representable")
     if y != [6.0, 8.0, 6.0, 8.0] {
         bail!("smoke output mismatch: {y:?}");
     }

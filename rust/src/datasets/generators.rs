@@ -1,5 +1,7 @@
 //! The actual workload generators.
 
+// lint: allow-file(index, "generators index buffers they allocated with matching sizes in the same function")
+
 use crate::graph::{FeatureTable, NodeLabel, TemporalGraph};
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -82,7 +84,7 @@ pub fn interactions(spec: &InteractionSpec, seed: u64) -> Result<TemporalGraph> 
         }
     }
     // Normalize to max_time exactly.
-    let tmax = *time.last().unwrap();
+    let tmax = *time.last().ok_or_else(|| anyhow::anyhow!("dataset spec has zero edges"))?;
     for x in time.iter_mut() {
         *x *= spec.max_time / tmax;
     }

@@ -28,15 +28,17 @@
 //!    recently used shards (MRU list) with hit/miss/eviction counters for
 //!    the bench rows.
 
+// lint: allow-file(index, "fixed-width record buffers and arrays sized to num_nodes / shard slot counts in the same function")
+
 use super::shard::{ShardSpec, ShardedTCsr};
 use super::tcsr::TCsr;
 use super::TemporalGraph;
-use crate::util::binfmt::{FileIndex, StreamWriter};
+use crate::util::binfmt::{le_f64, le_u32, le_u64, usize_from, FileIndex, StreamWriter};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 const EDGE_MAGIC: &[u8; 8] = b"TGLEDG01";
 /// Bytes per edge record: u32 src + u32 dst + f64 time.
@@ -121,8 +123,8 @@ impl EdgeFileReader {
         if &hdr[0..8] != EDGE_MAGIC {
             bail!("{}: not a TGL edge file (bad magic)", path.display());
         }
-        let num_nodes = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
-        let num_edges = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        let num_nodes = le_u64(&hdr, 8);
+        let num_edges = le_u64(&hdr, 16);
         if num_edges == u64::MAX {
             bail!("{}: unfinished edge file (no edge count)", path.display());
         }
@@ -136,7 +138,7 @@ impl EdgeFileReader {
         Ok(EdgeFileReader {
             f,
             path: path.to_path_buf(),
-            num_nodes: num_nodes as usize,
+            num_nodes: usize_from(num_nodes, "edge file node count")?,
             num_edges,
             read: 0,
         })
@@ -158,10 +160,10 @@ impl EdgeFileReader {
         let mut rec = [0u8; EDGE_REC];
         self.f.read_exact(&mut rec).context("reading edge record")?;
         self.read += 1;
-        let src = u32::from_le_bytes(rec[0..4].try_into().unwrap());
-        let dst = u32::from_le_bytes(rec[4..8].try_into().unwrap());
-        let time = f64::from_le_bytes(rec[8..16].try_into().unwrap());
-        if src >= self.num_nodes as u32 || dst >= self.num_nodes as u32 {
+        let src = le_u32(&rec, 0);
+        let dst = le_u32(&rec, 4);
+        let time = le_f64(&rec, 8);
+        if src as u64 >= self.num_nodes as u64 || dst as u64 >= self.num_nodes as u64 {
             bail!("edge ({src}, {dst}) out of range for {} nodes", self.num_nodes);
         }
         Ok(Some(EdgeRec { src, dst, time }))
@@ -198,7 +200,7 @@ pub fn edge_file_from_graph(g: &TemporalGraph, path: &Path) -> Result<()> {
 /// stays on disk.
 pub fn graph_from_edge_file(path: &Path) -> Result<TemporalGraph> {
     let mut r = EdgeFileReader::open(path)?;
-    let n = r.num_edges() as usize;
+    let n = usize_from(r.num_edges(), "edge count")?;
     let (mut src, mut dst, mut time) =
         (Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
     while let Some(e) = r.next_edge()? {
@@ -255,9 +257,9 @@ impl RunReader {
             self.f.read_exact(&mut rec).context("reading sort run")?;
             self.remaining -= 1;
             Some(EdgeRec {
-                src: u32::from_le_bytes(rec[0..4].try_into().unwrap()),
-                dst: u32::from_le_bytes(rec[4..8].try_into().unwrap()),
-                time: f64::from_le_bytes(rec[8..16].try_into().unwrap()),
+                src: le_u32(&rec, 0),
+                dst: le_u32(&rec, 4),
+                time: le_f64(&rec, 8),
             })
         };
         Ok(())
@@ -363,7 +365,7 @@ fn build_container_inner(
             loop {
                 let mut filled = 0usize;
                 while filled < workers {
-                    let buf = batch[filled].get_mut().unwrap();
+                    let buf = batch[filled].get_mut().unwrap_or_else(PoisonError::into_inner);
                     if src.read_chunk(buf, cfg.chunk_edges)? == 0 {
                         break;
                     }
@@ -378,17 +380,19 @@ fn build_container_inner(
                     // `Fn + Sync` bound of the fork-join dispatch.
                     Some(pool) => pool.run_chunks(filled, 1, |_, range| {
                         for c in range {
-                            let mut buf = batch[c].lock().unwrap();
+                            let mut buf =
+                                batch[c].lock().unwrap_or_else(PoisonError::into_inner);
                             buf.sort_by(|a, b| a.time.total_cmp(&b.time));
                         }
                     }),
                     None => batch[0]
                         .get_mut()
-                        .unwrap()
+                        .unwrap_or_else(PoisonError::into_inner)
                         .sort_by(|a, b| a.time.total_cmp(&b.time)),
                 }
                 for c in 0..filled {
-                    runs.push(write_run(work, idx, batch[c].get_mut().unwrap())?);
+                    let buf = batch[c].get_mut().unwrap_or_else(PoisonError::into_inner);
+                    runs.push(write_run(work, idx, buf)?);
                     idx += 1;
                 }
             }
@@ -455,6 +459,7 @@ fn build_container_inner(
                 let better = match best {
                     None => true,
                     Some(b) => {
+                        // lint: allow(panic, "best is only set for sources with a head")
                         sources[b].head.as_ref().unwrap().time.total_cmp(&h.time)
                             == std::cmp::Ordering::Greater
                     }
@@ -464,13 +469,19 @@ fn build_container_inner(
                 }
             }
         }
+        // lint: allow(panic, "run lengths sum to num_edges, checked against the header")
         let i = best.expect("merge ran dry before num_edges records");
+        // lint: allow(panic, "best is only set for sources with a head")
         let rec = sources[i].head.unwrap();
         sources[i].advance()?;
+        // lint: allow(cast, "widening u32 node id to usize")
         degree[rec.src as usize] += 1;
+        // lint: allow(cast, "eid fits: num_edges <= u32::MAX checked before the merge")
         route(&mut buckets, rec.src, rec.dst, rec.time, e as u32)?;
         if cfg.add_reverse {
+            // lint: allow(cast, "widening u32 node id to usize")
             degree[rec.dst as usize] += 1;
+            // lint: allow(cast, "eid fits: num_edges <= u32::MAX checked before the merge")
             route(&mut buckets, rec.dst, rec.src, rec.time, e as u32)?;
         }
     }
@@ -496,6 +507,7 @@ fn build_container_inner(
 
     for s in 0..shards {
         let range = spec.range(s);
+        // lint: allow(cast, "widening u32 shard-range start to usize")
         let lo = range.start as usize;
         let n_local = range.len();
         let mut indptr = Vec::with_capacity(n_local + 1);
@@ -505,7 +517,7 @@ fn build_container_inner(
             acc += degree[v];
             indptr.push(acc);
         }
-        let slots = acc as usize;
+        let slots = usize_from(acc, "shard slot count")?;
         let mut cursor = vec![0u64; n_local];
         let mut indices = vec![0u32; slots];
         let mut times = vec![0f64; slots];
@@ -522,13 +534,15 @@ fn build_container_inner(
         let mut rec = [0u8; SLOT_REC];
         for _ in 0..n_recs {
             f.read_exact(&mut rec).context("reading shard bucket")?;
-            let owner = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+            let owner = le_u32(&rec, 0);
+            // lint: allow(cast, "widening u32 node id to usize")
             let local = (owner as usize) - lo;
+            // lint: allow(cast, "bounded by `slots`, already checked via usize_from")
             let at = (indptr[local] + cursor[local]) as usize;
             cursor[local] += 1;
-            indices[at] = u32::from_le_bytes(rec[4..8].try_into().unwrap());
-            times[at] = f64::from_le_bytes(rec[8..16].try_into().unwrap());
-            eids[at] = u32::from_le_bytes(rec[16..20].try_into().unwrap());
+            indices[at] = le_u32(&rec, 4);
+            times[at] = le_f64(&rec, 8);
+            eids[at] = le_u32(&rec, 16);
         }
         let indptr_bytes: Vec<u8> =
             indptr.iter().flat_map(|x| x.to_le_bytes()).collect();
@@ -580,10 +594,10 @@ impl DiskTCsr {
             .read_bytes("meta")
             .with_context(|| format!("{}: graph container meta", path.display()))?;
         anyhow::ensure!(meta.len() == 32, "graph container meta must be 32 bytes");
-        let num_nodes = u64::from_le_bytes(meta[0..8].try_into().unwrap()) as usize;
-        let num_edges = u64::from_le_bytes(meta[8..16].try_into().unwrap());
-        let shards = u64::from_le_bytes(meta[16..24].try_into().unwrap()) as usize;
-        let add_reverse = u64::from_le_bytes(meta[24..32].try_into().unwrap()) != 0;
+        let num_nodes = usize_from(le_u64(&meta, 0), "graph container node count")?;
+        let num_edges = le_u64(&meta, 8);
+        let shards = usize_from(le_u64(&meta, 16), "graph container shard count")?;
+        let add_reverse = le_u64(&meta, 24) != 0;
         anyhow::ensure!(shards >= 1, "graph container declares zero shards");
         let spec = ShardSpec::new(num_nodes, shards);
         anyhow::ensure!(
@@ -643,8 +657,9 @@ impl DiskTCsr {
         );
         let indptr: Vec<usize> = indptr_bytes
             .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-            .collect();
+            .map(|chunk| usize_from(le_u64(chunk, 0), "shard indptr entry"))
+            .collect::<Result<_>>()?;
+        // lint: allow(panic, "indptr length checked to n_local + 1 >= 1 above")
         let slots = *indptr.last().unwrap();
         let indices = self.index.read_u32s(&format!("s{s}.indices"))?;
         let times = self.index.read_f64s(&format!("s{s}.times"))?;

@@ -20,6 +20,8 @@
 //! slices (`rust/tests/properties.rs` checks this slice-for-slice on
 //! random graphs and shard counts).
 
+// lint: allow-file(index, "shard vectors are sized spec.shards() at construction; ids validated by callers")
+
 use super::tcsr::{build_shards, TCsr};
 use super::TemporalGraph;
 

@@ -13,6 +13,8 @@
 //! Space: `O(2|E| + |V|)` here plus the sampler's `O((S+1)|V|)` pointers,
 //! matching the paper's `O(2|E| + (n+2)|V|)`.
 
+// lint: allow-file(index, "CSR arrays obey the indptr invariants established at build and pinned by check_invariants")
+
 use super::TemporalGraph;
 
 /// Immutable time-sorted CSR over the temporal graph.
@@ -39,6 +41,7 @@ impl TCsr {
     pub fn build(g: &TemporalGraph, add_reverse: bool) -> TCsr {
         build_shards(g, add_reverse, &[0, g.num_nodes])
             .pop()
+            // lint: allow(panic, "build_shards returns exactly starts.len()-1 = 1 shard")
             .expect("build_shards returns one TCsr per shard")
     }
 
@@ -84,6 +87,7 @@ impl TCsr {
     /// Sanity invariants (debug / property tests).
     pub fn check_invariants(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.indptr.len() == self.num_nodes + 1, "indptr length");
+        // lint: allow(panic, "indptr length == num_nodes + 1 >= 1 ensured on the previous line")
         anyhow::ensure!(*self.indptr.last().unwrap() == self.indices.len(), "indptr total");
         anyhow::ensure!(self.indices.len() == self.times.len(), "times length");
         anyhow::ensure!(self.indices.len() == self.eids.len(), "eids length");
@@ -131,6 +135,7 @@ pub(crate) fn build_shards(g: &TemporalGraph, add_reverse: bool, starts: &[usize
     INDEX_BUILDS.with(|c| c.set(c.get() + 1));
     debug_assert!(starts.len() >= 2);
     debug_assert_eq!(starts[0], 0);
+    // lint: allow(panic, "debug assertion; starts.len() >= 2 asserted above")
     debug_assert_eq!(*starts.last().unwrap(), g.num_nodes);
     let k = starts.len() - 1;
     let slots = if add_reverse { 2 * g.num_edges() } else { g.num_edges() };

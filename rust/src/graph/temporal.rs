@@ -5,6 +5,8 @@
 //! node / edge features and sparse dynamic node labels. DTDGs are treated
 //! as CTDGs with granulated timestamps (paper §1).
 
+// lint: allow-file(index, "edge arrays share one length, validated by the constructor")
+
 use crate::util::binfmt;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -106,9 +108,7 @@ impl TemporalGraph {
         };
         if !g.time.windows(2).all(|w| w[0] <= w[1]) {
             let mut order: Vec<u32> = (0..g.num_edges() as u32).collect();
-            order.sort_by(|&a, &b| {
-                g.time[a as usize].partial_cmp(&g.time[b as usize]).unwrap()
-            });
+            order.sort_by(|&a, &b| g.time[a as usize].total_cmp(&g.time[b as usize]));
             g.src = order.iter().map(|&i| g.src[i as usize]).collect();
             g.dst = order.iter().map(|&i| g.dst[i as usize]).collect();
             g.time = order.iter().map(|&i| g.time[i as usize]).collect();
@@ -144,7 +144,7 @@ impl TemporalGraph {
     }
 
     pub fn with_labels(mut self, mut labels: Vec<NodeLabel>, num_classes: usize) -> Self {
-        labels.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+        labels.sort_by(|a, b| a.time.total_cmp(&b.time));
         self.labels = labels;
         self.num_classes = num_classes;
         self

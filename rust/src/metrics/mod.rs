@@ -2,6 +2,8 @@
 //! Tables 5/7), F1-micro for multi-class dynamic node classification
 //! (Table 6), plus simple curve/CSV emitters for the figures.
 
+// lint: allow-file(index, "confusion counts and percentile buffers are sized before the indexing loops")
+
 use anyhow::Result;
 use std::io::Write;
 use std::path::Path;

@@ -129,6 +129,6 @@ fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
     }
     Ok(bytes
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(|chunk| crate::util::binfmt::le_f32(chunk, 0))
         .collect())
 }

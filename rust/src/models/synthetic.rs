@@ -30,6 +30,7 @@
 //! there). Widths past [`nn::MAX_DIM`] are rejected up front with a
 //! typed, named [`nn::DimCapError`].
 
+
 use super::Model;
 use crate::runtime::{nn, DType, Executable, StepSpec, TensorSpec, VariantManifest};
 use anyhow::{bail, Result};

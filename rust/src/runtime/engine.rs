@@ -7,6 +7,8 @@
 //! synthetic model variants so training-path properties are testable
 //! without artifacts.
 
+// lint: allow-file(index, "XLA result tuples have a fixed arity checked by the caller")
+
 use super::reference::RefExec;
 use super::{DType, StepSpec, Tensor};
 // Offline builds compile against the in-tree PJRT stub; swap this alias for

@@ -64,6 +64,8 @@
 //! a pure, deterministic function of the inputs — bitwise identical
 //! across execution modes.
 
+// lint: allow-file(index, "dense kernels index row-major buffers sized by layer dims at construction; loop ranges are the bounds")
+
 #![allow(clippy::needless_range_loop)] // index-heavy kernels: ranges are clearer
 
 use super::manifest::StepSpec;
@@ -886,6 +888,7 @@ pub(crate) fn run_tgnn_step(
                 let mut nz = false;
                 for k in 0..dh {
                     let dval = dh_tgt[root_row * dh + k];
+                    // lint: allow(float-eq, "exact-zero gradient skip; any nonzero must propagate")
                     if dval != 0.0 {
                         nz = true;
                     }
@@ -960,6 +963,7 @@ pub(crate) fn run_tgnn_step(
             let mut nz = false;
             for k in 0..dh {
                 let dval = dx_buf[xo + k];
+                // lint: allow(float-eq, "exact-zero gradient skip; any nonzero must propagate")
                 if dval != 0.0 {
                     nz = true;
                 }
@@ -981,6 +985,7 @@ pub(crate) fn run_tgnn_step(
                 continue;
             }
             let mk = mail_mask[i];
+            // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel written by the sampler")
             if mk == 0.0 {
                 continue;
             }
@@ -1202,6 +1207,7 @@ pub(crate) fn run_clf_step(
 
     // Backward + Adam (skipped for inference calls).
     let (mut np, mut nm, mut nv) = (pool.take(pc), pool.take(pc), pool.take(pc));
+    // lint: allow(float-eq, "lr == 0.0 is the exact inference-mode sentinel")
     if lr != 0.0 {
         let mut g = pool.take(pc);
         let mut dlg = pool.take(classes);

@@ -31,6 +31,8 @@
 //! the unit tests sweep sizes around the lane boundary (0..=2·LANES, and
 //! the widths 8/100/108 the TGNN actually uses) and randomized inputs.
 
+// lint: allow-file(index, "SIMD kernels address lanes inside caller-checked row bounds")
+
 /// Lane count of [`F32x8`]; kernels process `LANES` elements per step.
 pub const LANES: usize = 8;
 
@@ -104,6 +106,7 @@ impl F32x8 {
 
 /// Lane dot product: 8 partial accumulators + scalar tail.
 #[inline]
+// lint: deny(alloc)
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = F32x8::splat(0.0);
@@ -132,6 +135,7 @@ pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
 
 /// `out[r] = W[r,:]·x` for row-major `W[rows=out.len(), cols=x.len()]`.
 #[inline]
+// lint: deny(alloc)
 pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
     let cols = x.len();
     for (r, o) in out.iter_mut().enumerate() {
@@ -150,6 +154,7 @@ pub fn matvec_scalar(w: &[f32], x: &[f32], out: &mut [f32]) {
 
 /// `out[r] += W[r,:]·x` (accumulating matvec; same reduction as [`dot`]).
 #[inline]
+// lint: deny(alloc)
 pub fn matvec_acc(w: &[f32], x: &[f32], out: &mut [f32]) {
     let cols = x.len();
     for (r, o) in out.iter_mut().enumerate() {
@@ -164,6 +169,7 @@ pub fn matvec_acc(w: &[f32], x: &[f32], out: &mut [f32]) {
 /// `y[i] += a·x[i]`. Per-element op order matches the scalar loop exactly,
 /// so the lanes form is bitwise identical to [`axpy_scalar`].
 #[inline]
+// lint: deny(alloc)
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
     let av = F32x8::splat(a);
@@ -188,6 +194,7 @@ pub fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
 
 /// `y[i] += x[i]` (bitwise identical to the scalar loop).
 #[inline]
+// lint: deny(alloc)
 pub fn vadd(y: &mut [f32], x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
     let mut cy = y.chunks_exact_mut(LANES);
@@ -204,9 +211,11 @@ pub fn vadd(y: &mut [f32], x: &[f32]) {
 /// [`axpy`] sweep: bitwise identical to [`matvec_t_acc_scalar`]. Rows with
 /// `d[r] == 0` are skipped (sparse upstream gradients are common).
 #[inline]
+// lint: deny(alloc)
 pub fn matvec_t_acc(w: &[f32], d: &[f32], out: &mut [f32]) {
     let cols = out.len();
     for (r, &dr) in d.iter().enumerate() {
+        // lint: allow(float-eq, "exact-zero gradient row skip; any nonzero must propagate")
         if dr == 0.0 {
             continue;
         }
@@ -219,6 +228,7 @@ pub fn matvec_t_acc(w: &[f32], d: &[f32], out: &mut [f32]) {
 pub fn matvec_t_acc_scalar(w: &[f32], d: &[f32], out: &mut [f32]) {
     let cols = out.len();
     for (r, &dr) in d.iter().enumerate() {
+        // lint: allow(float-eq, "exact-zero gradient row skip; any nonzero must propagate")
         if dr == 0.0 {
             continue;
         }
@@ -232,9 +242,11 @@ pub fn matvec_t_acc_scalar(w: &[f32], d: &[f32], out: &mut [f32]) {
 /// `dW[r,c] += d[r]·x[c]` (outer-product accumulate): row-wise [`axpy`],
 /// bitwise identical to [`outer_acc_scalar`]; zero `d[r]` rows skipped.
 #[inline]
+// lint: deny(alloc)
 pub fn outer_acc(dw: &mut [f32], d: &[f32], x: &[f32]) {
     let cols = x.len();
     for (r, &dr) in d.iter().enumerate() {
+        // lint: allow(float-eq, "exact-zero gradient row skip; any nonzero must propagate")
         if dr == 0.0 {
             continue;
         }
@@ -247,6 +259,7 @@ pub fn outer_acc(dw: &mut [f32], d: &[f32], x: &[f32]) {
 pub fn outer_acc_scalar(dw: &mut [f32], d: &[f32], x: &[f32]) {
     let cols = x.len();
     for (r, &dr) in d.iter().enumerate() {
+        // lint: allow(float-eq, "exact-zero gradient row skip; any nonzero must propagate")
         if dr == 0.0 {
             continue;
         }

@@ -13,6 +13,8 @@
 //! (rank ≤ [`MAX_RANK`]) so constructing a tensor never allocates for the
 //! shape either.
 
+// lint: allow-file(index, "strides come from the shape, whose numel is validated against the data length")
+
 use crate::util::tensor_pool::{PoolBuf, PoolBufI32};
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -250,6 +252,7 @@ impl Tensor {
 
     /// All-zero `f32` tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
+        // lint: allow(panic, "callers pass literal shapes within MAX_RANK")
         let s = Shape::new(shape).expect("shape rank");
         let n = s.numel();
         Self { shape: s, data: Data::F32(vec![0.0; n]) }
@@ -257,6 +260,7 @@ impl Tensor {
 
     /// A scalar (rank-0) `f32` tensor.
     pub fn scalar(v: f32) -> Self {
+        // lint: allow(panic, "the rank-0 shape is always valid")
         Self { shape: Shape::new(&[]).unwrap(), data: Data::F32(vec![v]) }
     }
 

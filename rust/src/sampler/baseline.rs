@@ -15,6 +15,8 @@
 //! three-factor speedup; factor (3), "C++ over Python", cannot be
 //! reproduced in a compiled-only repo and is documented in EXPERIMENTS.md.
 
+// lint: allow-file(index, "reference sampler builds its adjacency arrays index-aligned in the constructor")
+
 use super::{Mfg, MfgBlock, SamplerConfig, Strategy};
 use crate::graph::TemporalGraph;
 use crate::util::rng::Rng;
@@ -29,10 +31,15 @@ pub struct BaselineSampler {
 }
 
 impl BaselineSampler {
-    pub fn new(g: &TemporalGraph, add_reverse: bool, cfg: SamplerConfig) -> Self {
-        if let Err(e) = cfg.validate() {
-            panic!("invalid SamplerConfig: {e}");
-        }
+    /// Build the reference sampler; a config the fixed-size kernels cannot
+    /// hold (see [`SamplerConfig::validate`]) is a named error.
+    pub fn new(
+        g: &TemporalGraph,
+        add_reverse: bool,
+        cfg: SamplerConfig,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("invalid SamplerConfig: {e}"))?;
         let mut adj_nbr = vec![Vec::new(); g.num_nodes];
         let mut adj_ts = vec![Vec::new(); g.num_nodes];
         let mut adj_eid = vec![Vec::new(); g.num_nodes];
@@ -47,7 +54,7 @@ impl BaselineSampler {
                 adj_eid[v].push(e as u32);
             }
         }
-        BaselineSampler { adj_nbr, adj_ts, adj_eid, cfg }
+        Ok(BaselineSampler { adj_nbr, adj_ts, adj_eid, cfg })
     }
 
     /// Sample a batch — same MFG contract as the parallel sampler, computed
@@ -79,6 +86,7 @@ impl BaselineSampler {
                 }
                 let block = &mut hop_blocks[l];
                 for i in 0..block.num_roots() {
+                    // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
                     if block.root_mask[i] == 0.0 {
                         continue;
                     }
@@ -99,6 +107,7 @@ impl BaselineSampler {
                         t - (s + 1) as f64 * self.cfg.snapshot_len
                     };
                     let whi = ts_copy.partition_point(|&x| x < hi_b);
+                    // lint: allow(float-eq, "NEG_INFINITY is the exact unbounded-window sentinel")
                     let wlo = if lo_b == f64::NEG_INFINITY {
                         0
                     } else {
@@ -166,8 +175,8 @@ mod tests {
         let csr = TCsr::build(&g, true);
         for (hops, strat) in [(2, Strategy::Uniform), (1, Strategy::MostRecent)] {
             let cfg = SamplerConfig::uniform_hops(hops, 7, strat, 4);
-            let fast = TemporalSampler::new(&csr, cfg.clone());
-            let slow = BaselineSampler::new(&g, true, cfg);
+            let fast = TemporalSampler::new(&csr, cfg.clone()).unwrap();
+            let slow = BaselineSampler::new(&g, true, cfg).unwrap();
             let roots: Vec<u32> = (0..40).map(|i| (i * 7 % 50) as u32).collect();
             let ts: Vec<f64> = (0..40).map(|i| 5000.0 + 100.0 * i as f64).collect();
             let a = fast.sample(&roots, &ts, 42);
@@ -188,8 +197,8 @@ mod tests {
         let g = random_graph(30, 1500, 9);
         let csr = TCsr::build(&g, true);
         let cfg = SamplerConfig::snapshots(2, 5, 3, 1000.0, 4);
-        let fast = TemporalSampler::new(&csr, cfg.clone());
-        let slow = BaselineSampler::new(&g, true, cfg);
+        let fast = TemporalSampler::new(&csr, cfg.clone()).unwrap();
+        let slow = BaselineSampler::new(&g, true, cfg).unwrap();
         let roots = vec![1u32, 2, 3, 4, 5];
         let ts = vec![9000.0, 9100.0, 9200.0, 9300.0, 9400.0];
         let a = fast.sample(&roots, &ts, 7);

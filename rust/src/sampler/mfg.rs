@@ -12,6 +12,8 @@
 //! ([`MfgBlock::new_empty`], [`Mfg::all_nodes`]) remain as thin wrappers
 //! for one-shot callers.
 
+// lint: allow-file(index, "MFG blocks are fixed-capacity arenas; accessors stay within num_slots")
+
 /// One hop of sampled neighbors for a list of roots.
 ///
 /// All per-neighbor arrays have length `roots.len() * fanout`, padded and
@@ -126,6 +128,7 @@ impl MfgBlock {
 
     /// Count of valid (unmasked) sampled neighbors.
     pub fn valid_count(&self) -> usize {
+        // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
         self.mask.iter().filter(|&&m| m == 1.0).count()
     }
 
@@ -188,12 +191,14 @@ impl Mfg {
         }
         let b0 = &self.snapshots[0][0];
         for i in 0..b0.roots.len() {
+            // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
             out.push((b0.roots[i], b0.root_ts[i], b0.root_mask[i] == 1.0));
         }
         for hops in &self.snapshots {
             for b in hops {
                 for i in 0..b.num_slots() {
                     let t = b.root_ts[i / b.fanout] - b.dt[i] as f64;
+                    // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
                     out.push((b.nbr[i], t, b.mask[i] == 1.0));
                 }
             }

@@ -20,6 +20,8 @@
 //! interleaving — the property the pipelined trainer relies on to prefetch
 //! batch i+1's MFG while batch i computes.
 
+// lint: allow-file(index, "MFG blocks are fixed-capacity arenas; slot arithmetic is bounded by fanout * num_roots")
+
 use super::{LayerCfg, Mfg, MfgBlock, PointerState, SamplerConfig, Strategy, MAX_SNAPSHOTS};
 use crate::graph::TCsr;
 use crate::util::pool::WorkerPool;
@@ -83,13 +85,11 @@ unsafe impl<T: Send> Send for OutPtr<T> {}
 unsafe impl<T: Send> Sync for OutPtr<T> {}
 
 impl<'g> TemporalSampler<'g> {
-    /// Build a sampler. Panics on a config the fixed-size kernels cannot
-    /// hold (see [`SamplerConfig::validate`]); use `validate()` first to
-    /// surface the error as a `Result`.
-    pub fn new(csr: &'g TCsr, cfg: SamplerConfig) -> Self {
-        if let Err(e) = cfg.validate() {
-            panic!("invalid SamplerConfig: {e}");
-        }
+    /// Build a sampler. A config the fixed-size kernels cannot hold
+    /// (see [`SamplerConfig::validate`]) is a named error, not a panic.
+    pub fn new(csr: &'g TCsr, cfg: SamplerConfig) -> anyhow::Result<Self> {
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("invalid SamplerConfig: {e}"))?;
         let ptrs = PointerState::new(
             csr.num_nodes,
             cfg.num_snapshots,
@@ -97,7 +97,7 @@ impl<'g> TemporalSampler<'g> {
             cfg.pointer_mode,
         );
         let pool = WorkerPool::new(cfg.threads.max(1));
-        TemporalSampler { csr, cfg, ptrs, pool, stats: SampleStats::default() }
+        Ok(TemporalSampler { csr, cfg, ptrs, pool, stats: SampleStats::default() })
     }
 
     pub fn config(&self) -> &SamplerConfig {
@@ -137,10 +137,12 @@ impl<'g> TemporalSampler<'g> {
     /// capacities are warm, steady-state sampling performs **zero heap
     /// allocation** — verified by `tests/alloc.rs`. Draws are identical to
     /// [`Self::sample`] for the same `(roots, root_ts, batch_seed)`.
+    // lint: deny(alloc)
     pub fn sample_into(&self, mfg: &mut Mfg, roots: &[u32], root_ts: &[f64], batch_seed: u64) {
         assert_eq!(roots.len(), root_ts.len());
         let num_snapshots = self.cfg.num_snapshots;
         let hops = self.cfg.layers.len();
+        // lint: allow(alloc, "first-batch arena growth: resize_with is a no-op once warm")
         mfg.snapshots.resize_with(num_snapshots, Vec::new);
         for hop_blocks in &mut mfg.snapshots {
             hop_blocks.resize_with(hops, MfgBlock::new);
@@ -228,6 +230,7 @@ impl<'g> TemporalSampler<'g> {
         let mut windows = [0usize; MAX_SNAPSHOTS + 2];
         let mut ctr = RootCounters::default();
         for i in range {
+            // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
             if root_mask[i] == 0.0 {
                 continue; // padding root from the previous hop
             }
@@ -325,6 +328,7 @@ pub(crate) fn sample_root_into(
         let hi_b = upper_boundary(t, snapshot, cfg.snapshot_len);
         let lo_b = lower_boundary(t, snapshot, cfg.snapshot_len);
         let whi = csr.lower_bound_in(lo_s, hi_s, hi_b);
+        // lint: allow(float-eq, "NEG_INFINITY is the exact unbounded-window sentinel")
         let wlo = if lo_b == f64::NEG_INFINITY {
             lo_s
         } else {
@@ -472,7 +476,7 @@ mod tests {
         let g = chain(50);
         let csr = crate::graph::TCsr::build(&g, true);
         let cfg = SamplerConfig::uniform_hops(2, 5, Strategy::Uniform, 4);
-        let s = TemporalSampler::new(&csr, cfg);
+        let s = TemporalSampler::new(&csr, cfg).unwrap();
         let roots = vec![0u32, 25, 0];
         let ts = vec![10.0, 26.0, 30.5];
         let mfg = s.sample(&roots, &ts, 1);
@@ -492,7 +496,7 @@ mod tests {
         let g = chain(20);
         let csr = crate::graph::TCsr::build(&g, false);
         let cfg = SamplerConfig::uniform_hops(1, 3, Strategy::MostRecent, 2);
-        let s = TemporalSampler::new(&csr, cfg);
+        let s = TemporalSampler::new(&csr, cfg).unwrap();
         let mfg = s.sample(&[0], &[10.5], 0);
         let b = &mfg.snapshots[0][0];
         let mut got: Vec<u32> = (0..3).filter(|&k| b.mask[k] == 1.0).map(|k| b.nbr[k]).collect();
@@ -507,7 +511,7 @@ mod tests {
         let csr = crate::graph::TCsr::build(&g, true);
         let mk = |threads| {
             let cfg = SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, threads);
-            let s = TemporalSampler::new(&csr, cfg);
+            let s = TemporalSampler::new(&csr, cfg).unwrap();
             let roots: Vec<u32> = (0..32).map(|i| (i % 10) as u32).collect();
             let ts: Vec<f64> = (0..32).map(|i| 50.0 + i as f64).collect();
             let m = s.sample(&roots, &ts, 99);
@@ -521,7 +525,7 @@ mod tests {
         let g = chain(3);
         let csr = crate::graph::TCsr::build(&g, false);
         let cfg = SamplerConfig::uniform_hops(1, 10, Strategy::Uniform, 1);
-        let s = TemporalSampler::new(&csr, cfg);
+        let s = TemporalSampler::new(&csr, cfg).unwrap();
         let mfg = s.sample(&[0], &[2.5], 0);
         let b = &mfg.snapshots[0][0];
         assert_eq!(b.valid_count(), 2); // only t=1,2 exist before 2.5
@@ -533,7 +537,7 @@ mod tests {
         let g = chain(30);
         let csr = crate::graph::TCsr::build(&g, false);
         let cfg = SamplerConfig::snapshots(1, 30, 3, 5.0, 2);
-        let s = TemporalSampler::new(&csr, cfg);
+        let s = TemporalSampler::new(&csr, cfg).unwrap();
         let mfg = s.sample(&[0], &[20.5], 7);
         assert_eq!(mfg.snapshots.len(), 3);
         for (snap, hops) in mfg.snapshots.iter().enumerate() {
@@ -569,7 +573,7 @@ mod tests {
         let g = TemporalGraph::new(11, src, dst, time).unwrap();
         let csr = crate::graph::TCsr::build(&g, true);
         let cfg = SamplerConfig::uniform_hops(2, 10, Strategy::Uniform, 1);
-        let s = TemporalSampler::new(&csr, cfg);
+        let s = TemporalSampler::new(&csr, cfg).unwrap();
         let mfg = s.sample(&[0], &[11.0], 0);
         let hop2 = &mfg.snapshots[0][1];
         // Find the hop-2 slots rooted at node 1 (sampled in hop 1).
@@ -589,7 +593,7 @@ mod tests {
         let run = |mode| {
             let mut cfg = SamplerConfig::uniform_hops(2, 5, Strategy::Uniform, 4);
             cfg.pointer_mode = mode;
-            let s = TemporalSampler::new(&csr, cfg);
+            let s = TemporalSampler::new(&csr, cfg).unwrap();
             let roots: Vec<u32> = (0..20).map(|i| (i % 7) as u32).collect();
             let ts: Vec<f64> = (0..20).map(|i| 30.0 + 3.0 * i as f64).collect();
             let m = s.sample(&roots, &ts, 5);
@@ -610,7 +614,7 @@ mod tests {
         let g = chain(4);
         let csr = crate::graph::TCsr::build(&g, false);
         let cfg = SamplerConfig::snapshots(1, 2, crate::sampler::MAX_SNAPSHOTS + 1, 1.0, 1);
-        let _ = TemporalSampler::new(&csr, cfg);
+        let _ = TemporalSampler::new(&csr, cfg).unwrap();
     }
 
     #[test]
@@ -620,7 +624,7 @@ mod tests {
         let csr = crate::graph::TCsr::build(&g, false);
         let cfg =
             SamplerConfig::uniform_hops(1, crate::sampler::MAX_FANOUT + 1, Strategy::Uniform, 1);
-        let _ = TemporalSampler::new(&csr, cfg);
+        let _ = TemporalSampler::new(&csr, cfg).unwrap();
     }
 
     #[test]
@@ -628,7 +632,7 @@ mod tests {
         let g = chain(40);
         let csr = crate::graph::TCsr::build(&g, false);
         let cfg = SamplerConfig::snapshots(1, 3, crate::sampler::MAX_SNAPSHOTS, 2.0, 2);
-        let s = TemporalSampler::new(&csr, cfg);
+        let s = TemporalSampler::new(&csr, cfg).unwrap();
         let mfg = s.sample(&[0], &[35.0], 1);
         assert_eq!(mfg.snapshots.len(), crate::sampler::MAX_SNAPSHOTS);
     }
@@ -638,8 +642,8 @@ mod tests {
         let g = chain(300);
         let csr = crate::graph::TCsr::build(&g, true);
         let cfg = SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, 4);
-        let fresh = TemporalSampler::new(&csr, cfg.clone());
-        let arena_s = TemporalSampler::new(&csr, cfg);
+        let fresh = TemporalSampler::new(&csr, cfg.clone()).unwrap();
+        let arena_s = TemporalSampler::new(&csr, cfg).unwrap();
         let mut arena = Mfg::new();
         let mut slot_ptr = std::ptr::null();
         for bi in 0..4u64 {

@@ -24,6 +24,8 @@
 //!   boundary found by full binary search (the paper's `O(|E| log |E|)`
 //!   comparison baseline).
 
+// lint: allow-file(index, "pointer tables are sized num_nodes * width at construction")
+
 use crate::graph::TCsr;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
@@ -164,6 +166,7 @@ impl PointerState {
         if self.mode == PointerMode::BinarySearch {
             for k in 0..width {
                 let b = self.boundary(t, k);
+                // lint: allow(float-eq, "NEG_INFINITY is the exact unbounded-window sentinel")
                 out[k] = if b == f64::NEG_INFINITY {
                     lo
                 } else {
@@ -191,6 +194,7 @@ impl PointerState {
         };
         for k in 0..width {
             let b = self.boundary(t, k);
+            // lint: allow(float-eq, "NEG_INFINITY is the exact unbounded-window sentinel")
             if b == f64::NEG_INFINITY {
                 out[k] = lo;
                 continue;

@@ -32,6 +32,8 @@
 //! set), so steady-state sharded sampling performs zero heap allocation
 //! (`rust/tests/alloc_train.rs` runs its sharded phase on this path).
 
+// lint: allow-file(index, "per-shard pointer tables and scratch are sized to the shard node count at construction")
+
 use super::parallel::{sample_root_into, RootCounters};
 use super::{Mfg, MfgBlock, PointerState, SampleStats, SamplerConfig, MAX_SNAPSHOTS};
 use crate::graph::{CacheStats, ShardCache, ShardSpec, ShardedTCsr, TCsr};
@@ -109,18 +111,19 @@ pub struct ShardedSampler<'g> {
 }
 
 impl<'g> ShardedSampler<'g> {
-    /// Build a sharded sampler over an owned [`ShardedTCsr`]. Panics on a
-    /// config the fixed-size kernels cannot hold (see
-    /// [`SamplerConfig::validate`]), like [`TemporalSampler::new`].
+    /// Build a sharded sampler over an owned [`ShardedTCsr`]. A config
+    /// the fixed-size kernels cannot hold (see
+    /// [`SamplerConfig::validate`]) is a named error, like
+    /// [`TemporalSampler::new`].
     ///
     /// [`TemporalSampler::new`]: super::TemporalSampler::new
-    pub fn new(csr: ShardedTCsr, cfg: SamplerConfig) -> ShardedSampler<'g> {
+    pub fn new(csr: ShardedTCsr, cfg: SamplerConfig) -> anyhow::Result<ShardedSampler<'g>> {
         ShardedSampler::with_store(ShardStore::Owned(csr), cfg)
     }
 
     /// Sampler over a borrowed [`ShardedTCsr`] — the run's single index,
     /// shared instead of rebuilt.
-    pub fn over(csr: &'g ShardedTCsr, cfg: SamplerConfig) -> ShardedSampler<'g> {
+    pub fn over(csr: &'g ShardedTCsr, cfg: SamplerConfig) -> anyhow::Result<ShardedSampler<'g>> {
         ShardedSampler::with_store(ShardStore::Borrowed(csr), cfg)
     }
 
@@ -128,21 +131,26 @@ impl<'g> ShardedSampler<'g> {
     /// cache. A shard read failing mid-epoch (I/O error, corrupted
     /// section) panics the producer — the supervised-producer runtime
     /// catches and retries/abandons it like any other producer fault.
-    pub fn on_disk(cache: ShardCache, cfg: SamplerConfig) -> ShardedSampler<'g> {
+    pub fn on_disk(cache: ShardCache, cfg: SamplerConfig) -> anyhow::Result<ShardedSampler<'g>> {
         ShardedSampler::with_store(ShardStore::Disk(cache), cfg)
     }
 
     /// [`Self::on_disk`] over a cache owned elsewhere (the run's single
     /// [`crate::graph::GraphIndex::Disk`] index): the owner keeps reading
     /// the shared hit/miss/eviction counters.
-    pub fn on_disk_shared(cache: &'g ShardCache, cfg: SamplerConfig) -> ShardedSampler<'g> {
+    pub fn on_disk_shared(
+        cache: &'g ShardCache,
+        cfg: SamplerConfig,
+    ) -> anyhow::Result<ShardedSampler<'g>> {
         ShardedSampler::with_store(ShardStore::DiskShared(cache), cfg)
     }
 
-    pub fn with_store(store: ShardStore<'g>, cfg: SamplerConfig) -> ShardedSampler<'g> {
-        if let Err(e) = cfg.validate() {
-            panic!("invalid SamplerConfig: {e}");
-        }
+    pub fn with_store(
+        store: ShardStore<'g>,
+        cfg: SamplerConfig,
+    ) -> anyhow::Result<ShardedSampler<'g>> {
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("invalid SamplerConfig: {e}"))?;
         let spec = store.spec();
         let ptrs = (0..spec.shards())
             .map(|s| {
@@ -157,7 +165,7 @@ impl<'g> ShardedSampler<'g> {
         // One worker per shard at most: the shard is the unit of
         // parallelism here (intra-shard roots stay sequential).
         let pool = WorkerPool::new(cfg.threads.clamp(1, spec.shards().max(1)));
-        ShardedSampler {
+        Ok(ShardedSampler {
             store,
             spec,
             cfg,
@@ -165,7 +173,7 @@ impl<'g> ShardedSampler<'g> {
             pool,
             scratch: Mutex::new(Vec::new()),
             stats: SampleStats::default(),
-        }
+        })
     }
 
     pub fn config(&self) -> &SamplerConfig {
@@ -234,10 +242,12 @@ impl<'g> ShardedSampler<'g> {
     /// count.
     ///
     /// [`TemporalSampler::sample_into`]: super::TemporalSampler::sample_into
+    // lint: deny(alloc)
     pub fn sample_into(&self, mfg: &mut Mfg, roots: &[u32], root_ts: &[f64], batch_seed: u64) {
         assert_eq!(roots.len(), root_ts.len());
         let num_snapshots = self.cfg.num_snapshots;
         let hops = self.cfg.layers.len();
+        // lint: allow(alloc, "first-batch arena growth: resize_with is a no-op once warm")
         mfg.snapshots.resize_with(num_snapshots, Vec::new);
         for hop_blocks in &mut mfg.snapshots {
             hop_blocks.resize_with(hops, MfgBlock::new);
@@ -295,6 +305,7 @@ impl<'g> ShardedSampler<'g> {
             sc.sel.reserve(n);
         }
         for i in 0..n {
+            // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
             if block.root_mask[i] == 0.0 {
                 continue;
             }
@@ -374,12 +385,14 @@ impl<'g> ShardedSampler<'g> {
             ShardStore::Disk(cache) => {
                 held = cache
                     .get(s)
+                    // lint: allow(panic, "shard I/O faults panic the supervised producer, which retries")
                     .unwrap_or_else(|e| panic!("loading shard {s} from disk: {e:#}"));
                 &held
             }
             ShardStore::DiskShared(cache) => {
                 held = cache
                     .get(s)
+                    // lint: allow(panic, "shard I/O faults panic the supervised producer, which retries")
                     .unwrap_or_else(|e| panic!("loading shard {s} from disk: {e:#}"));
                 &held
             }
@@ -458,10 +471,10 @@ mod tests {
             ("recent1", SamplerConfig::uniform_hops(1, 3, Strategy::MostRecent, 4)),
             ("snapshots", SamplerConfig::snapshots(1, 5, 3, 40.0, 4)),
         ] {
-            let flat = TemporalSampler::new(&flat_csr, mk.clone());
+            let flat = TemporalSampler::new(&flat_csr, mk.clone()).unwrap();
             for shards in [1usize, 2, 4, 7] {
                 let sharded =
-                    ShardedSampler::new(ShardedTCsr::build(&g, true, shards), mk.clone());
+                    ShardedSampler::new(ShardedTCsr::build(&g, true, shards), mk.clone()).unwrap();
                 for bi in 0..3u64 {
                     let roots: Vec<u32> = (0..32).map(|i| (i * 13 % 201) as u32).collect();
                     let ts: Vec<f64> =
@@ -478,7 +491,7 @@ mod tests {
     fn sharded_arena_reuses_buffers_and_matches_fresh() {
         let g = chain(120);
         let cfg = SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, 2);
-        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 3), cfg);
+        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 3), cfg).unwrap();
         let mut arena = Mfg::new();
         let mut slot_ptr = std::ptr::null();
         for bi in 0..4u64 {
@@ -501,8 +514,8 @@ mod tests {
         let g = chain(60);
         let cfg = SamplerConfig::uniform_hops(1, 3, Strategy::MostRecent, 2);
         let flat_csr = TCsr::build(&g, true);
-        let flat = TemporalSampler::new(&flat_csr, cfg.clone());
-        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 4), cfg);
+        let flat = TemporalSampler::new(&flat_csr, cfg.clone()).unwrap();
+        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 4), cfg).unwrap();
         let roots = vec![0u32, 10, 30];
         let ts = vec![50.0, 51.0, 52.0];
         let first = s.sample(&roots, &ts, 1);
@@ -520,8 +533,8 @@ mod tests {
         let g = chain(150);
         let cfg = SamplerConfig::uniform_hops(2, 4, Strategy::Uniform, 4);
         let sharded = ShardedTCsr::build(&g, true, 3);
-        let owned = ShardedSampler::new(sharded.clone(), cfg.clone());
-        let borrowed = ShardedSampler::over(&sharded, cfg.clone());
+        let owned = ShardedSampler::new(sharded.clone(), cfg.clone()).unwrap();
+        let borrowed = ShardedSampler::over(&sharded, cfg.clone()).unwrap();
 
         let dir = std::env::temp_dir()
             .join(format!("tgl_sampler_disk_{}", std::process::id()));
@@ -537,7 +550,7 @@ mod tests {
         let disk = crate::graph::build_container(&edges, &dir.join("g.tcsr"), &bcfg).unwrap();
         // cap 1 < 3 shards: every block churns through the cache, so this
         // also exercises eviction + reload mid-epoch.
-        let on_disk = ShardedSampler::on_disk(ShardCache::new(disk, 1), cfg);
+        let on_disk = ShardedSampler::on_disk(ShardCache::new(disk, 1), cfg).unwrap();
 
         for bi in 0..3u64 {
             let roots: Vec<u32> = (0..24).map(|i| (i * 11 % 151) as u32).collect();
@@ -559,8 +572,8 @@ mod tests {
         let g = chain(3);
         let cfg = SamplerConfig::uniform_hops(1, 2, Strategy::MostRecent, 8);
         let flat_csr = TCsr::build(&g, true);
-        let flat = TemporalSampler::new(&flat_csr, cfg.clone());
-        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 16), cfg);
+        let flat = TemporalSampler::new(&flat_csr, cfg.clone()).unwrap();
+        let s = ShardedSampler::new(ShardedTCsr::build(&g, true, 16), cfg).unwrap();
         let a = flat.sample(&[0, 2], &[2.5, 3.5], 0);
         let b = s.sample(&[0, 2], &[2.5, 3.5], 0);
         assert_mfg_eq(&a, &b, "tiny graph, 16 shards");

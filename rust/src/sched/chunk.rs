@@ -14,6 +14,8 @@
 //! batch boundary in one epoch share a batch in another (inter-batch
 //! dependencies get their gradient turn).
 
+// lint: allow-file(index, "chunk boundaries are clamped to len before slicing")
+
 use crate::util::rng::Rng;
 
 /// Produces, per epoch, the chronological list of edge windows to train on.

@@ -8,6 +8,8 @@
 //! adjacent chunks land in different mini-batches across epochs, recovering
 //! inter-batch dependencies.
 
+// lint: allow-file(index, "epoch schedules index batch lists they sized in the same function")
+
 mod chunk;
 
 pub use chunk::{ChunkScheduler, EpochPlan};

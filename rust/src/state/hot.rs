@@ -16,6 +16,8 @@
 //! construction; eviction scans the `cap` stamps for the LRU victim —
 //! O(cap) per *miss*, which the skew keeps rare.
 
+// lint: allow-file(index, "hot-row cache slots are modulo-capacity indices into arrays sized at construction")
+
 use crate::graph::CacheStats;
 use std::collections::HashMap;
 

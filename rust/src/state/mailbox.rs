@@ -13,6 +13,8 @@
 //! timestamps, the write count), kept bitwise-equal to the backing arrays
 //! by write-through, so gathers served from it cannot change results.
 
+// lint: allow-file(index, "rows are dim-strided views of arrays sized at construction; slots are bounded by the ring capacity")
+
 use super::hot::HotCache;
 use std::sync::{Mutex, PoisonError};
 
@@ -70,8 +72,8 @@ impl Clone for Mailbox {
             mail: self.mail.clone(),
             mail_ts: self.mail_ts.clone(),
             count: self.count.clone(),
-            hot: self.hot.as_ref().map(|m| {
-                Mutex::new(m.lock().unwrap_or_else(PoisonError::into_inner).clone())
+            hot: self.hot.as_ref().map(|hot| {
+                Mutex::new(hot.lock().unwrap_or_else(PoisonError::into_inner).clone())
             }),
         }
     }
@@ -150,6 +152,7 @@ impl Mailbox {
 
     /// Append one mail for node `v` at time `t` (overwrites the oldest
     /// slot when full).
+    // lint: deny(alloc)
     pub fn write(&mut self, v: u32, t: f64, mail: &[f32]) {
         debug_assert_eq!(mail.len(), self.dim);
         let vi = v as usize;
@@ -192,6 +195,7 @@ impl Mailbox {
     /// pool-recycled) buffers in place — the allocation-free JIT gather of
     /// the pipelined trainer. Lengths must be `n·slots·dim` / `n·slots` /
     /// `n·slots`.
+    // lint: deny(alloc)
     pub fn gather_into(
         &self,
         nodes: &[(u32, f64, bool)],

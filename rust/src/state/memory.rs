@@ -7,6 +7,8 @@
 //! what the arrays would give, with hit/miss/eviction counters for the
 //! bench rows. Off by default; [`NodeMemory::enable_hot_cache`] opts in.
 
+// lint: allow-file(index, "rows are dim-strided views of arrays sized at construction; node ids checked at the gather boundary")
+
 use super::hot::HotCache;
 use std::sync::{Mutex, PoisonError};
 
@@ -28,8 +30,8 @@ impl Clone for NodeMemory {
             dim: self.dim,
             mem: self.mem.clone(),
             last_update: self.last_update.clone(),
-            hot: self.hot.as_ref().map(|m| {
-                Mutex::new(m.lock().unwrap_or_else(PoisonError::into_inner).clone())
+            hot: self.hot.as_ref().map(|hot| {
+                Mutex::new(hot.lock().unwrap_or_else(PoisonError::into_inner).clone())
             }),
         }
     }
@@ -124,6 +126,7 @@ impl NodeMemory {
     /// pool-recycled) buffers in place — the allocation-free JIT gather of
     /// the pipelined trainer. `out_mem` must hold `nodes.len() * dim`
     /// elements and `out_dt` `nodes.len()`.
+    // lint: deny(alloc)
     pub fn gather_into(&self, nodes: &[(u32, f64, bool)], out_mem: &mut [f32], out_dt: &mut [f32]) {
         debug_assert_eq!(out_mem.len(), nodes.len() * self.dim);
         debug_assert_eq!(out_dt.len(), nodes.len());
@@ -160,6 +163,7 @@ impl NodeMemory {
     /// is what lets per-shard workers gather concurrently without
     /// coordination (the FAST memory-I/O sharding point). Kept in sync
     /// with `gather_into` by the composition tests below.
+    // lint: deny(alloc)
     pub fn gather_shard_into(
         &self,
         nodes: &[(u32, f64, bool)],
@@ -203,6 +207,7 @@ impl NodeMemory {
     /// Scatter updated memory rows back (step ⑥). `rows` is `[n, dim]`
     /// flat; later entries win on duplicate nodes, so callers pass nodes
     /// in chronological order (the batch is chronological by construction).
+    // lint: deny(alloc)
     pub fn scatter(&mut self, nodes: &[u32], ts: &[f64], rows: &[f32]) {
         debug_assert_eq!(nodes.len(), ts.len());
         debug_assert_eq!(rows.len(), nodes.len() * self.dim);
@@ -243,6 +248,7 @@ impl NodeMemory {
     /// owning shard, so applying every shard (any order) reproduces
     /// [`Self::scatter`] exactly — per-node update order is preserved
     /// within the owner.
+    // lint: deny(alloc)
     pub fn scatter_shard(
         &mut self,
         shard: std::ops::Range<u32>,

@@ -47,6 +47,8 @@
 //! The sampler pointer tables are restored when shapes match and silently
 //! rebuilt (with a warning) when not: they affect speed, never values.
 
+// lint: allow-file(index, "section payloads are length-checked before fixed-stride decoding")
+
 use super::single::{Preparer, TrainState, Trainer};
 use crate::models::Model;
 use crate::sched::EpochPlan;
@@ -213,7 +215,7 @@ impl Trainer<'_> {
                 })?;
                 let mut s = [0u64; 4];
                 for (i, w) in s.iter_mut().enumerate() {
-                    *w = u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+                    *w = crate::util::binfmt::le_u64(&b, i * 8);
                 }
                 Some(s)
             }

@@ -36,6 +36,8 @@
 //! trainer, and a non-finite loss in the sync phase rolls back to the
 //! last checkpoint instead of averaging garbage into every replica.
 
+// lint: allow-file(index, "per-worker slices partition arrays sized in the same function")
+
 use super::checkpoint::{save_checkpoint_parts, CheckpointPolicy, RunCursor};
 use super::single::{
     apply_state_updates_impl, panic_message, spawn_producers, Diverged, EpochStats, PreparedBatch,

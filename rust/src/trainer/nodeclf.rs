@@ -23,6 +23,8 @@
 //! harvested embeddings (and everything downstream) are bitwise-identical
 //! (`rust/tests/pipeline_identity.rs`).
 
+// lint: allow-file(index, "label rows and logits are num_classes-strided buffers sized at construction")
+
 use super::single::{
     eval_windows, EvalIdx, exec_eval_batch, PreparedBatch, PrepArena, run_pipelined, StepIo,
     Trainer, TrainState,

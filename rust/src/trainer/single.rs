@@ -33,6 +33,8 @@
 //! step — including reference-backend execution — allocates nothing
 //! (`rust/tests/alloc_train.rs`).
 
+// lint: allow-file(index, "batch arenas are pre-sized per batch; slot offsets follow the sampler MFG layout")
+
 use crate::graph::{GraphIndex, ShardSpec, ShardedTCsr, TCsr, TemporalGraph};
 use crate::metrics::average_precision;
 use crate::models::Model;
@@ -267,6 +269,7 @@ impl<'g> Preparer<'g> {
 
     /// [`Self::prepare_static`] recycling a consumed batch's buffers: at
     /// steady state the whole preparation path allocates nothing.
+    // lint: deny(alloc)
     pub fn prepare_static_reuse(
         &self,
         range: std::ops::Range<usize>,
@@ -532,6 +535,7 @@ impl<'g> Preparer<'g> {
                     if let Some(ef) = &g.edge_feat {
                         let copy = de.min(ef.dim);
                         for i in 0..block.num_slots() {
+                            // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
                             if block.mask[i] == 1.0 {
                                 out[i * de..i * de + copy]
                                     .copy_from_slice(&ef.row(block.eid[i] as usize)[..copy]);
@@ -709,11 +713,13 @@ pub(crate) fn apply_state_updates_impl(
                 let block = &m.snapshots[0][0];
                 let k = block.fanout;
                 for slot in i * k..(i + 1) * k {
+                    // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
                     if block.mask[slot] == 1.0 {
                         mailbox.write(block.nbr[slot], t, m_src);
                     }
                 }
                 for slot in (bs + i) * k..(bs + i + 1) * k {
+                    // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
                     if block.mask[slot] == 1.0 {
                         mailbox.write(block.nbr[slot], t, m_dst);
                     }
@@ -1070,6 +1076,7 @@ where
                     let a = std::mem::take(&mut arena);
                     let guarded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         if prep.cfg.faults.take_producer_panic(p, seed) {
+                            // lint: allow(panic, "deliberate fault injection for the supervisor tests")
                             panic!("injected fault: producer {p} at batch seed {seed}");
                         }
                         prep.prepare_static_reuse(range.clone(), seed, train, a)
@@ -1210,9 +1217,9 @@ impl<'g> Trainer<'g> {
                 SamplerHandle::Sharded(Box::new(ShardedSampler::new(
                     ShardedTCsr::build(graph, true, cfg.shards),
                     sc,
-                )))
+                )?))
             } else {
-                SamplerHandle::Flat(TemporalSampler::new(csr, sc))
+                SamplerHandle::Flat(TemporalSampler::new(csr, sc)?)
             }),
             None => None,
         };
@@ -1234,12 +1241,12 @@ impl<'g> Trainer<'g> {
         cfg.shards = index.num_shards().max(1);
         let sampler = match sampler_config(model, &cfg)? {
             Some(sc) => Some(match index {
-                GraphIndex::Flat(csr) => SamplerHandle::Flat(TemporalSampler::new(csr, sc)),
+                GraphIndex::Flat(csr) => SamplerHandle::Flat(TemporalSampler::new(csr, sc)?),
                 GraphIndex::Sharded(st) => {
-                    SamplerHandle::Sharded(Box::new(ShardedSampler::over(st, sc)))
+                    SamplerHandle::Sharded(Box::new(ShardedSampler::over(st, sc)?))
                 }
                 GraphIndex::Disk(cache) => {
-                    SamplerHandle::Sharded(Box::new(ShardedSampler::on_disk_shared(cache, sc)))
+                    SamplerHandle::Sharded(Box::new(ShardedSampler::on_disk_shared(cache, sc)?))
                 }
             }),
             None => None,

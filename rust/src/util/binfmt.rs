@@ -59,6 +59,25 @@
 //! its `read_*` methods load single named sections on demand, re-verifying
 //! that section's CRC — which is how a shard producer maps just its own
 //! range of a multi-gigabyte graph.
+//!
+//! ## Static analysis
+//!
+//! This module is under the strictest `pallas-lint` rules
+//! (`tools/lint/pallas-lint`, run by `scripts/tier1.sh`):
+//!
+//! * **cast** — truncating `as usize`/`as u32` on offsets or counts read
+//!   from disk is forbidden; use [`usize_from`] (checked, named error) so
+//!   a 32-bit host rejects an oversized container instead of wrapping.
+//! * **crc** — every [`StreamWriter::begin_section`] must pair with an
+//!   [`StreamWriter::end_section`] (which emits the section CRC) in the
+//!   same function, and a function that creates a [`StreamWriter`] must
+//!   call [`StreamWriter::finish`] (the footer checksum) before returning.
+//! * **panic** — fixed-width field extraction goes through [`le_u32`] /
+//!   [`le_u64`] / [`le_f32`] / [`le_f64`], the single audited place where
+//!   a length-checked subslice meets `try_into`.
+//!
+//! In-source escapes are `allow(<rule>, "<reason>")` comment directives;
+//! the grammar and the lock-order table live in `tools/lint/lint.conf`.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -67,6 +86,41 @@ use std::path::Path;
 
 const MAGIC_V1: &[u8; 8] = b"TGLBIN01";
 const MAGIC_V2: &[u8; 8] = b"TGLBIN02";
+
+// ----------------------------------------- checked on-disk arithmetic
+
+/// Checked `u64 -> usize` for offsets, lengths, and counts read from
+/// disk. On 64-bit hosts this never fails; on 32-bit hosts it turns an
+/// oversized container into a named error instead of a silent wrap.
+pub fn usize_from(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} does not fit in usize"))
+}
+
+/// Little-endian `u32` at `off`. The only audited site where a
+/// length-checked subslice meets `try_into`; callers guarantee
+/// `b.len() >= off + 4` (cursor `take`, `chunks_exact`, checked header).
+// lint: allow(panic, "fixed-width LE field from a length-checked buffer")
+pub fn le_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+/// Little-endian `u64` at `off`; same contract as [`le_u32`].
+// lint: allow(panic, "fixed-width LE field from a length-checked buffer")
+pub fn le_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+/// Little-endian `f32` at `off`; same contract as [`le_u32`].
+// lint: allow(panic, "fixed-width LE field from a length-checked buffer")
+pub fn le_f32(b: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+/// Little-endian `f64` at `off`; same contract as [`le_u32`].
+// lint: allow(panic, "fixed-width LE field from a length-checked buffer")
+pub fn le_f64(b: &[u8], off: usize) -> f64 {
+    f64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
 
 // ----------------------------------------------------------------- CRC32
 
@@ -82,6 +136,7 @@ fn crc32_update(mut state: u32, bytes: &[u8]) -> u32 {
     let table = TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, e) in t.iter_mut().enumerate() {
+            // lint: allow(cast, "widening u8 table index to u32")
             let mut c = i as u32;
             for _ in 0..8 {
                 c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
@@ -91,6 +146,8 @@ fn crc32_update(mut state: u32, bytes: &[u8]) -> u32 {
         t
     });
     for &b in bytes {
+        // lint: allow(cast, "widening byte to u32; masked &0xFF index")
+        // lint: allow(index, "table index is masked to 0..=255")
         state = table[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
     }
     state
@@ -259,19 +316,18 @@ impl<'a> Cursor<'a> {
                 self.pos
             );
         }
+        // lint: allow(index, "n <= remaining checked on the lines above")
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
     fn u64(&mut self, what: &str) -> Result<u64> {
-        let b = self.take(8, what)?;
-        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+        Ok(le_u64(self.take(8, what)?, 0))
     }
 
     fn u32(&mut self, what: &str) -> Result<u32> {
-        let b = self.take(4, what)?;
-        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+        Ok(le_u32(self.take(4, what)?, 0))
     }
 }
 
@@ -294,7 +350,7 @@ impl Reader {
             m if m == MAGIC_V1 => false,
             _ => bail!("not a TGL binary container (bad magic)"),
         };
-        let n = c.u64("section count")? as usize;
+        let n = usize_from(c.u64("section count")?, "section count")?;
         // A u64 section count from a corrupt header must not drive huge
         // allocations: each section needs ≥ 24 header bytes.
         if n > buf.len() / 24 + 1 {
@@ -309,7 +365,7 @@ impl Reader {
         let mut footer = 0xFFFF_FFFFu32;
         footer = crc32_update(footer, &(n as u64).to_le_bytes());
         for i in 0..n {
-            let name_len = c.u64("section name length")? as usize;
+            let name_len = usize_from(c.u64("section name length")?, "section name length")?;
             if name_len > buf.len() - c.pos {
                 bail!("section {i}: implausible name length {name_len}");
             }
@@ -318,7 +374,7 @@ impl Reader {
                 .with_context(|| format!("section {i}: name is not UTF-8"))?
                 .to_string();
             let tag = c.u64("section tag")?;
-            let count = c.u64("element count")? as usize;
+            let count = usize_from(c.u64("element count")?, "element count")?;
             let width = match tag {
                 0 | 1 => 4,
                 2 => 8,
@@ -354,21 +410,21 @@ impl Reader {
                 0 => {
                     let v = payload
                         .chunks_exact(4)
-                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                        .map(|chunk| le_u32(chunk, 0))
                         .collect();
                     out.u32s.insert(name, v);
                 }
                 1 => {
                     let v = payload
                         .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .map(|chunk| le_f32(chunk, 0))
                         .collect();
                     out.f32s.insert(name, v);
                 }
                 2 => {
                     let v = payload
                         .chunks_exact(8)
-                        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                        .map(|chunk| le_f64(chunk, 0))
                         .collect();
                     out.f64s.insert(name, v);
                 }
@@ -485,7 +541,9 @@ impl StreamWriter {
         if !matches!(tag, 0..=3) {
             bail!("section `{name}`: unknown tag {tag}");
         }
-        let f = self.f.as_mut().expect("writer already finished");
+        let Some(f) = self.f.as_mut() else {
+            bail!("section `{name}`: writer already finished");
+        };
         f.write_all(&(name.len() as u64).to_le_bytes()).context("writing name length")?;
         f.write_all(name.as_bytes()).context("writing name")?;
         f.write_all(&tag.to_le_bytes()).context("writing tag")?;
@@ -519,7 +577,9 @@ impl StreamWriter {
                 cur.declared
             );
         }
-        let f = self.f.as_mut().expect("writer already finished");
+        let Some(f) = self.f.as_mut() else {
+            bail!("section `{}`: writer already finished", cur.name);
+        };
         f.write_all(bytes).with_context(|| format!("writing section `{}`", cur.name))?;
         cur.crc = crc32_update(cur.crc, bytes);
         cur.written += elems;
@@ -558,7 +618,9 @@ impl StreamWriter {
             );
         }
         let crc = cur.crc ^ 0xFFFF_FFFF;
-        let f = self.f.as_mut().expect("writer already finished");
+        let Some(f) = self.f.as_mut() else {
+            bail!("section `{}`: writer already finished", cur.name);
+        };
         f.write_all(&crc.to_le_bytes())
             .with_context(|| format!("writing section `{}` crc", cur.name))?;
         self.section_crcs.push(crc);
@@ -578,7 +640,9 @@ impl StreamWriter {
         for crc in &self.section_crcs {
             footer = crc32_update(footer, &crc.to_le_bytes());
         }
-        let mut f = self.f.take().expect("writer already finished");
+        let Some(mut f) = self.f.take() else {
+            bail!("writer already finished");
+        };
         f.write_all(&(footer ^ 0xFFFF_FFFF).to_le_bytes()).context("writing footer crc")?;
         f.flush().context("flushing stream writer")?;
         let f = f.into_inner().map_err(|e| anyhow::anyhow!("flushing stream writer: {e}"))?;
@@ -696,14 +760,14 @@ impl FileIndex {
         }
         let mut footer = 0xFFFF_FFFFu32;
         footer = crc32_update(footer, &n.to_le_bytes());
-        let mut sections = Vec::with_capacity(n as usize);
+        let mut sections = Vec::with_capacity(usize_from(n, "section count")?);
         for i in 0..n {
             take(&mut f, &mut pos, &mut b8, "section name length")?;
             let name_len = u64::from_le_bytes(b8);
             if name_len > file_len - pos {
                 bail!("section {i}: implausible name length {name_len}");
             }
-            let mut name_bytes = vec![0u8; name_len as usize];
+            let mut name_bytes = vec![0u8; usize_from(name_len, "section name length")?];
             take(&mut f, &mut pos, &mut name_bytes, "section name")?;
             let name = String::from_utf8(name_bytes)
                 .map_err(|_| anyhow::anyhow!("section {i}: name is not UTF-8"))?;
@@ -774,7 +838,7 @@ impl FileIndex {
             .with_context(|| format!("opening {}", self.path.display()))?;
         f.seek(SeekFrom::Start(e.payload_offset))
             .with_context(|| format!("seeking to section `{}`", e.name))?;
-        let len = e.payload_len() as usize;
+        let len = usize_from(e.payload_len(), "section payload length")?;
         let mut payload = vec![0u8; len];
         f.read_exact(&mut payload)
             .with_context(|| format!("reading section `{}` payload", e.name))?;
@@ -813,7 +877,7 @@ impl FileIndex {
         let payload = self.read_verified(e)?;
         Ok(payload
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .map(|chunk| le_u32(chunk, 0))
             .collect())
     }
 
@@ -825,7 +889,7 @@ impl FileIndex {
         let payload = self.read_verified(e)?;
         Ok(payload
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|chunk| le_f32(chunk, 0))
             .collect())
     }
 
@@ -837,7 +901,7 @@ impl FileIndex {
         let payload = self.read_verified(e)?;
         Ok(payload
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|chunk| le_f64(chunk, 0))
             .collect())
     }
 }

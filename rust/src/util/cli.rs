@@ -4,6 +4,8 @@
 //! and subcommands handled by the caller. Produces `--help` text from the
 //! declared options.
 
+// lint: allow-file(index, "argv indices follow explicit i < argv.len() loop bounds")
+
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 

@@ -5,6 +5,8 @@
 //! a full JSON parser (objects, arrays, strings with escapes, numbers,
 //! booleans, null) — small, allocation-friendly, and dependency-free.
 
+// lint: allow-file(index, "byte scanner: every index is guarded by a position bound in the surrounding loop")
+
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -65,6 +67,7 @@ impl Json {
 
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
+        // lint: allow(float-eq, "fract() == 0.0 is the exact integrality test")
         if f < 0.0 || f.fract() != 0.0 {
             bail!("expected non-negative integer, got {f}");
         }
@@ -117,6 +120,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
+                // lint: allow(float-eq, "fract() == 0.0 is the exact integrality test")
                 if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
@@ -313,6 +317,7 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // Consume one UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    // lint: allow(panic, "peek() returned Some, so rest is non-empty")
                     let c = rest.chars().next().unwrap();
                     s.push(c);
                     self.pos += c.len_utf8();

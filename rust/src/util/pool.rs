@@ -12,8 +12,26 @@
 //! Earlier revisions also shipped spawn-per-call helpers (`parallel_chunks`
 //! / `parallel_map`, ~10 µs of thread fork/join per call); all callers have
 //! migrated to the pool and the free functions are gone.
+//!
+//! ## Static analysis
+//!
+//! `pallas-lint` (`tools/lint/pallas-lint`, run by `scripts/tier1.sh`)
+//! pins this module's concurrency contract:
+//!
+//! * **spawn** — this is the only file allowed to call `thread::spawn`
+//!   (`[spawn] allow_files` in `tools/lint/lint.conf`); every other layer
+//!   takes parallelism through [`WorkerPool`] or a supervised producer,
+//!   so fork-join lifetimes and panic containment stay in one place.
+//! * **lock** — the dispatch lock (`state`) is the terminal rank in the
+//!   declared lock-order table: nothing may be acquired while it is held,
+//!   which is what keeps the fork-join deadlock-free.
+//! * **panic** — lock/condvar poison is recovered with
+//!   `PoisonError::into_inner` (a worker that panicked already recorded
+//!   its generation bit; the state itself is a counter set that stays
+//!   consistent), so the only deliberate panic left is the dispatcher
+//!   re-raising a worker panic.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 /// Number of available CPUs (fallback 1).
 pub fn num_cpus() -> usize {
@@ -95,6 +113,7 @@ impl WorkerPool {
     /// until every chunk completes; `f` may borrow locals (the completion
     /// barrier guarantees the borrows outlive every use). Runs inline on
     /// the caller when one chunk suffices.
+    // lint: deny(alloc)
     pub fn run_chunks<F>(&self, n: usize, min_chunk: usize, f: F)
     where
         F: Fn(usize, std::ops::Range<usize>) + Sync,
@@ -115,10 +134,10 @@ impl WorkerPool {
             std::mem::transmute::<&(dyn Fn(usize, std::ops::Range<usize>) + Sync), Job>(f_ref)
         };
 
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
         // Wait for our turn (another dispatcher's generation may be live).
         while st.generation != st.done_gen {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = self.shared.done_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         st.generation += 1;
         let my_gen = st.generation;
@@ -130,12 +149,13 @@ impl WorkerPool {
         st.active = self.handles.len();
         self.shared.work_cv.notify_all();
         while st.done_gen < my_gen {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = self.shared.done_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         let panicked = st.panicked_bits & my_bit != 0;
         st.panicked_bits &= !my_bit;
         drop(st);
         if panicked {
+            // lint: allow(panic, "deliberate re-raise of a caught worker panic")
             panic!("WorkerPool job panicked");
         }
     }
@@ -145,14 +165,15 @@ fn worker_loop(shared: &Shared, idx: usize) {
     let mut seen = 0u64;
     loop {
         let (job, n, chunk, gen) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
             while !st.shutdown && st.generation == seen {
-                st = shared.work_cv.wait(st).unwrap();
+                st = shared.work_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
             if st.shutdown {
                 return;
             }
             seen = st.generation;
+            // lint: allow(panic, "dispatch invariant: generation only bumps with a job set")
             (st.job.expect("generation published without a job"), st.n, st.chunk, seen)
         };
         let lo = (idx * chunk).min(n);
@@ -162,10 +183,14 @@ fn worker_loop(shared: &Shared, idx: usize) {
             // dispatcher re-raises instead of hanging.
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(idx, lo..hi)));
             if r.is_err() {
-                shared.state.lock().unwrap().panicked_bits |= 1u64 << (gen & 63);
+                shared
+                    .state
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .panicked_bits |= 1u64 << (gen & 63);
             }
         }
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
         st.active -= 1;
         if st.active == 0 {
             st.done_gen = gen;
@@ -178,7 +203,7 @@ fn worker_loop(shared: &Shared, idx: usize) {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
             st.shutdown = true;
             self.shared.work_cv.notify_all();
         }

@@ -5,6 +5,8 @@
 //! draws) takes an explicit `Rng` so runs are reproducible from a single
 //! seed — required for the 1-worker ≡ sequential equivalence tests.
 
+// lint: allow-file(index, "fixed-size generator state arrays with compile-time lengths")
+
 /// xoshiro256++ PRNG (public-domain algorithm by Blackman & Vigna).
 #[derive(Debug, Clone)]
 pub struct Rng {

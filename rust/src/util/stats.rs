@@ -2,6 +2,8 @@
 //! phase-labelled stopwatch used for the paper's runtime-breakdown figures
 //! (Figure 4b sampler phases, Figure 5 training steps ①–⑥).
 
+// lint: allow-file(index, "percentile ranks are clamped to the sorted buffer bounds")
+
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 

@@ -53,7 +53,7 @@
 //! buffers and never recycles — the `arena off` baseline for benches and
 //! the `--arena off` CLI knob.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// Shared free list. Buffers keep their capacity across cycles, so the
 /// pool converges on the per-batch working set after warm-up.
@@ -99,7 +99,9 @@ impl TensorPool {
 
     /// Number of buffers currently parked in the free list.
     pub fn free_len(&self) -> usize {
-        self.free.as_ref().map_or(0, |f| f.lock().unwrap().len())
+        self.free
+            .as_ref()
+            .map_or(0, |free| free.lock().unwrap_or_else(PoisonError::into_inner).len())
     }
 
     /// A zeroed buffer of exactly `n` elements. Enabled pools reuse the
@@ -115,7 +117,7 @@ impl TensorPool {
             return PoolBuf { data: vec![0.0; n], home: None };
         };
         let mut data = {
-            let mut list = free.lock().unwrap();
+            let mut list = free.lock().unwrap_or_else(PoisonError::into_inner);
             // Best fit: smallest capacity that already holds `n`.
             let mut best: Option<(usize, usize)> = None;
             for (i, b) in list.iter().enumerate() {
@@ -140,7 +142,11 @@ impl TensorPool {
 
     /// Number of `i32` buffers currently parked in the free list.
     pub fn free_len_i32(&self) -> usize {
-        self.free_i32.as_ref().map_or(0, |f| f.lock().unwrap().len())
+        self.free_i32
+            .as_ref()
+            .map_or(0, |free_i32| {
+                free_i32.lock().unwrap_or_else(PoisonError::into_inner).len()
+            })
     }
 
     /// [`Self::take`] for `i32` buffers (labels, index lists): a zeroed
@@ -153,7 +159,7 @@ impl TensorPool {
             return PoolBufI32 { data: vec![0; n], home: None };
         };
         let mut data = {
-            let mut list = free.lock().unwrap();
+            let mut list = free.lock().unwrap_or_else(PoisonError::into_inner);
             let mut best: Option<(usize, usize)> = None;
             for (i, b) in list.iter().enumerate() {
                 let cap = b.capacity();
@@ -220,7 +226,7 @@ impl Drop for PoolBuf {
         if let Some(home) = self.home.take() {
             let data = std::mem::take(&mut self.data);
             if data.capacity() > 0 {
-                home.lock().unwrap().push(data);
+                home.lock().unwrap_or_else(PoisonError::into_inner).push(data);
             }
         }
     }
@@ -271,7 +277,7 @@ impl Drop for PoolBufI32 {
         if let Some(home) = self.home.take() {
             let data = std::mem::take(&mut self.data);
             if data.capacity() > 0 {
-                home.lock().unwrap().push(data);
+                home.lock().unwrap_or_else(PoisonError::into_inner).push(data);
             }
         }
     }

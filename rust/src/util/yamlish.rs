@@ -24,6 +24,8 @@
 //! Anchors, multi-document streams, flow mappings and block scalars are out
 //! of scope (TGL's own configs don't use them).
 
+// lint: allow-file(index, "byte scanner: every index is guarded by a position bound in the surrounding loop")
+
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -91,6 +93,7 @@ impl Yaml {
 
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
+        // lint: allow(float-eq, "fract() == 0.0 is the exact integrality test")
         if f < 0.0 || f.fract() != 0.0 {
             bail!("expected non-negative integer, got {f}");
         }

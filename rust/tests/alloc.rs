@@ -33,7 +33,7 @@ fn steady_state_sampling_performs_zero_heap_allocation() {
     // 2-hop uniform with 4 worker threads: exercises the parallel dispatch
     // path (hop-1 block = 512 roots > MIN_CHUNK) and the rejection sampler.
     let cfg = SamplerConfig::uniform_hops(2, 5, Strategy::Uniform, 4);
-    let sampler = TemporalSampler::new(&csr, cfg);
+    let sampler = TemporalSampler::new(&csr, cfg).unwrap();
 
     let n_roots = 512;
     let roots: Vec<u32> = (0..n_roots).map(|i| (i % 200) as u32).collect();

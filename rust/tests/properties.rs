@@ -96,9 +96,10 @@ fn prop_sharded_sampler_equals_flat() {
         let fanout = 3 + (seed as usize % 4);
         let strategy = if seed % 2 == 0 { Strategy::Uniform } else { Strategy::MostRecent };
         let cfg = SamplerConfig::uniform_hops(hops, fanout, strategy, 3);
-        let flat = TemporalSampler::new(&flat_csr, cfg.clone());
+        let flat = TemporalSampler::new(&flat_csr, cfg.clone()).unwrap();
         for shards in [2usize, 4] {
-            let sharded = ShardedSampler::new(ShardedTCsr::build(&g, true, shards), cfg.clone());
+            let sharded =
+                ShardedSampler::new(ShardedTCsr::build(&g, true, shards), cfg.clone()).unwrap();
             for (bi, t0) in [60.0f64, 250.0, 480.0].iter().enumerate() {
                 let n = 8 + rng.below(16);
                 let roots: Vec<u32> = (0..n).map(|_| rng.below(g.num_nodes) as u32).collect();
@@ -129,7 +130,7 @@ fn prop_sampler_sound_samples() {
         let g = random_graph(&mut rng, 30, 600);
         let csr = TCsr::build(&g, true);
         let cfg = SamplerConfig::uniform_hops(2, 5, Strategy::Uniform, 2);
-        let s = TemporalSampler::new(&csr, cfg);
+        let s = TemporalSampler::new(&csr, cfg).unwrap();
         let b = 16;
         let roots: Vec<u32> = (0..b).map(|_| rng.below(g.num_nodes) as u32).collect();
         let mut ts: Vec<f64> = (0..b).map(|_| rng.below(700) as f64).collect();
@@ -168,7 +169,7 @@ fn prop_pointer_modes_equivalent() {
         let run = |mode| {
             let mut cfg = SamplerConfig::uniform_hops(1, 4, Strategy::MostRecent, 3);
             cfg.pointer_mode = mode;
-            let s = TemporalSampler::new(&csr, cfg);
+            let s = TemporalSampler::new(&csr, cfg).unwrap();
             let mut out = Vec::new();
             // Three chronological batches exercise pointer advancement.
             for (bi, t0) in [100.0, 300.0, 500.0].iter().enumerate() {
@@ -317,8 +318,8 @@ fn prop_sample_into_arena_equals_fresh() {
         let hops = 1 + (seed as usize % 2);
         let fanout = 3 + (seed as usize % 4);
         let cfg = SamplerConfig::uniform_hops(hops, fanout, Strategy::Uniform, 3);
-        let fresh = TemporalSampler::new(&csr, cfg.clone());
-        let reused = TemporalSampler::new(&csr, cfg);
+        let fresh = TemporalSampler::new(&csr, cfg.clone()).unwrap();
+        let reused = TemporalSampler::new(&csr, cfg).unwrap();
         let mut arena = Mfg::new();
         for (bi, t0) in [50.0f64, 200.0, 450.0].iter().enumerate() {
             let n = 8 + rng.below(16);
@@ -360,7 +361,7 @@ fn prop_sampling_is_batch_order_independent() {
             })
             .collect();
         let run = |order: &[usize]| {
-            let s = TemporalSampler::new(&csr, cfg.clone());
+            let s = TemporalSampler::new(&csr, cfg.clone()).unwrap();
             let mut out = vec![Vec::new(); batches.len()];
             for &bi in order {
                 let (roots, ts) = &batches[bi];

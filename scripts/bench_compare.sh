@@ -10,6 +10,9 @@
 #   --tolerance PCT   allowed relative regression, percent (default 10)
 #   --fresh PATH      fresh results file (default ./BENCH_pipeline.json,
 #                     produced by `cargo bench --bench training`)
+#   --check-only      no report, exit code only: 0 within tolerance (or
+#                     bootstrap), 1 regression, 2 usage error. For CI
+#                     wiring where the caller owns the output.
 #
 # Rows are matched on (workload, mode). Only the dimensionless `speedup`
 # field is compared — absolute seconds vary across machines, but the
@@ -26,15 +29,26 @@ FRESH="BENCH_pipeline.json"
 BASELINE="benches/baseline/BENCH_pipeline.json"
 TOLERANCE=10
 UPDATE=0
+CHECK_ONLY=0
 while [ $# -gt 0 ]; do
   case "$1" in
     --update) UPDATE=1 ;;
     --tolerance) shift; TOLERANCE="${1:?--tolerance needs a value}" ;;
     --fresh) shift; FRESH="${1:?--fresh needs a path}" ;;
+    --check-only) CHECK_ONLY=1 ;;
     *) echo "unknown flag: $1" >&2; exit 2 ;;
   esac
   shift
 done
+
+if [ "$CHECK_ONLY" = 1 ] && [ "$UPDATE" = 1 ]; then
+  echo "bench_compare: --check-only and --update are mutually exclusive" >&2
+  exit 2
+fi
+if [ "$CHECK_ONLY" = 1 ]; then
+  # exit code only: rerun without the flag when you want the report
+  exec >/dev/null
+fi
 
 if [ ! -f "$FRESH" ]; then
   echo "bench_compare: no fresh results at $FRESH — run \`cargo bench --bench training\` first" >&2

@@ -1,0 +1,117 @@
+#!/usr/bin/env bash
+# Dynamic-analysis sweep: ThreadSanitizer and Miri over the concurrency
+# and unsafe-code surface that pallas-lint can only check structurally.
+#
+# Usage: scripts/sanitize.sh [--tsan-only] [--miri-only]
+#
+# Both analyses need a nightly toolchain (`-Z sanitizer` / `cargo miri`),
+# which the minimal CI containers do not carry, so this script is
+# ADVISORY by default: a missing nightly (or missing component) skips
+# that analysis with a warning and does not fail the run. Actual TSan /
+# Miri findings DO fail (exit 1) — run it on a dev box or the nightly CI
+# lane to get the hard signal. Set TGL_SANITIZE_STRICT=1 to also fail
+# when the toolchain is missing (for the lane that is supposed to have it).
+#
+# Scope (matches the lint rules it complements):
+#   TSan : pipeline_identity + fault_tolerance + the pool unit tests —
+#          the fork-join pool, supervised producers, and shard workers
+#          are where a lock-order or raw-pointer mistake becomes a race.
+#   Miri : pool + simd unit tests — the two modules with `unsafe`
+#          (lifetime-erased job dispatch, disjoint-chunk slice splits).
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+RUN_TSAN=1
+RUN_MIRI=1
+for arg in "$@"; do
+  case "$arg" in
+    --tsan-only) RUN_MIRI=0 ;;
+    --miri-only) RUN_TSAN=0 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+STRICT="${TGL_SANITIZE_STRICT:-0}"
+FAILED=0
+SKIPPED=0
+
+skip() {
+  echo "sanitize: SKIP — $1" >&2
+  SKIPPED=1
+  if [ "$STRICT" = 1 ]; then
+    FAILED=1
+  fi
+}
+
+if ! command -v cargo >/dev/null 2>&1; then
+  skip "cargo not found on PATH"
+  [ "$FAILED" = 1 ] && exit 1
+  echo "sanitize: nothing run (advisory)"
+  exit 0
+fi
+
+# Nightly detection: an installed `+nightly` toolchain, or the default
+# toolchain already being nightly.
+NIGHTLY=""
+if cargo +nightly --version >/dev/null 2>&1; then
+  NIGHTLY="+nightly"
+elif cargo --version 2>/dev/null | grep -q nightly; then
+  NIGHTLY=""
+else
+  skip "no nightly toolchain (rustup toolchain install nightly)"
+  [ "$FAILED" = 1 ] && exit 1
+  echo "sanitize: nothing run (advisory)"
+  exit 0
+fi
+
+HOST_TARGET="$(rustc ${NIGHTLY:+$NIGHTLY} -vV 2>/dev/null | sed -n 's/^host: //p')"
+
+if [ "$RUN_TSAN" = 1 ]; then
+  if [ -z "$HOST_TARGET" ]; then
+    skip "could not determine host target for TSan"
+  else
+    echo "== sanitize: ThreadSanitizer (target $HOST_TARGET) =="
+    # TSan needs std rebuilt with the sanitizer (-Z build-std + rust-src).
+    TSAN_OK=1
+    for spec in "--test pipeline_identity sharded" "--test fault_tolerance" "--lib util::pool"; do
+      echo "-- tsan: cargo test $spec"
+      # shellcheck disable=SC2086  # spec is a word list on purpose
+      if ! RUSTFLAGS="-Z sanitizer=thread" cargo $NIGHTLY test -Z build-std \
+          --target "$HOST_TARGET" -q $spec; then
+        TSAN_OK=0
+      fi
+    done
+    if [ "$TSAN_OK" = 1 ]; then
+      echo "sanitize: TSan clean"
+    else
+      echo "sanitize: TSan FAILED (race or build failure above)" >&2
+      FAILED=1
+    fi
+  fi
+fi
+
+if [ "$RUN_MIRI" = 1 ]; then
+  if cargo $NIGHTLY miri --version >/dev/null 2>&1; then
+    echo "== sanitize: Miri (pool + simd unit tests) =="
+    # Miri is slow; keep it to the unsafe-bearing modules.
+    if MIRIFLAGS="-Zmiri-disable-isolation" \
+        cargo $NIGHTLY miri test -q --lib util::pool runtime::simd 2>&1 | tail -20; then
+      echo "sanitize: Miri clean"
+    else
+      echo "sanitize: Miri FAILED (undefined behaviour above)" >&2
+      FAILED=1
+    fi
+  else
+    skip "miri component not installed (rustup component add miri --toolchain nightly)"
+  fi
+fi
+
+if [ "$FAILED" = 1 ]; then
+  echo "sanitize: FAILED"
+  exit 1
+fi
+if [ "$SKIPPED" = 1 ]; then
+  echo "sanitize: OK (with skips — advisory mode)"
+else
+  echo "sanitize: OK"
+fi

@@ -17,6 +17,27 @@ for arg in "$@"; do
   esac
 done
 
+# Static-analysis gate first: pallas-lint needs no Rust toolchain (plain
+# python3), runs in well under two seconds, and catches panic-surface /
+# alloc-region / lock-order / cast / CRC violations before any compile.
+# Set TGL_LINT_ADVISORY=1 to downgrade to a warning (mirrors the fmt gate).
+if command -v python3 >/dev/null 2>&1; then
+  if [ "${TGL_LINT_ADVISORY:-0}" = 1 ]; then
+    echo "== tier1: pallas-lint (advisory via TGL_LINT_ADVISORY=1) =="
+    python3 tools/lint/pallas_lint.py || echo "tier1: WARNING — lint violations (advisory)" >&2
+    echo "== tier1: pallas-lint self-tests (advisory) =="
+    python3 tools/lint/tests/test_lint.py \
+      || echo "tier1: WARNING — lint self-tests failed (advisory)" >&2
+  else
+    echo "== tier1: pallas-lint =="
+    python3 tools/lint/pallas_lint.py
+    echo "== tier1: pallas-lint self-tests =="
+    python3 tools/lint/tests/test_lint.py
+  fi
+else
+  echo "tier1: python3 unavailable, skipping pallas-lint gate" >&2
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
   echo "tier1: cargo not found on PATH — install a Rust toolchain first" >&2
   exit 3

@@ -1,0 +1,1006 @@
+#!/usr/bin/env python3
+"""pallas-lint: in-tree static invariant checker for the TGL rust sources.
+
+The repo's hardest-won guarantees — zero steady-state allocation, panic-free
+library paths, single-owner shard state, CRC-covered containers — were
+previously enforced only by runtime tests that must *hit* the offending
+path. This tool makes them structural properties of the source: it lexes
+`rust/src` with its own small Rust lexer (raw strings, nested block
+comments, lifetimes vs char literals, attribute spans) and walks the token
+stream with a rule engine. No Rust toolchain and no third-party Python
+packages are required, so the gate runs even in containers where `cargo`
+is absent, in well under two seconds.
+
+Rules (rule ids in parentheses):
+
+  panic-surface (`panic`, `index`)
+      `.unwrap()` / `.expect(` / `panic!` / `unreachable!` / `todo!` /
+      `unimplemented!` (id `panic`) and slice indexing `expr[...]`
+      (id `index`) in non-`#[cfg(test)]` library code.
+  deny-alloc regions (`alloc`)
+      Allocating constructs (`Vec::new`, `vec![`, `to_vec`, `collect`,
+      `format!`, `Box::new`, `String::…`, `to_string`, `to_owned`,
+      `Arc::new`, …) inside functions annotated `// lint: deny(alloc)`.
+  concurrency hygiene (`spawn`, `lock`)
+      `thread::spawn` outside the files named in `[spawn] allow_files`;
+      `.lock()` receivers must appear in the `[locks]` rank table and,
+      within one function, must be acquired in non-decreasing rank order.
+  numeric safety (`float-eq`, `cast`)
+      `==` / `!=` with a float operand; truncating `as` casts to the
+      `[cast] targets` types inside the `[cast] files` list.
+  binfmt CRC coverage (`crc`)
+      In the `[crc] files` list, every `begin_section` must be balanced by
+      an `end_section` in the same function, and a function creating a
+      `StreamWriter` must also `finish()` it (or hand it off explicitly).
+
+Allowlist grammar (in-source, reasons mandatory):
+
+  // lint: allow(<rule>, "<reason>")      trailing → that line only;
+                                          standalone → next line, or the
+                                          whole next item when that item
+                                          is a fn/mod/impl
+  // lint: allow-file(<rule>, "<reason>") whole file
+  // lint: deny(alloc)                    next fn is a deny-alloc region
+
+`allow(panic, …)` also covers `index` violations (they are one rule
+class); `allow(index, …)` covers only indexing. An allow with a missing
+or empty reason is itself a violation; an allow that matches nothing is
+reported as a warning so stale entries get pruned.
+
+Exit codes: 0 clean, 1 violations, 2 usage/config errors.
+"""
+
+import os
+import re
+import sys
+import bisect
+
+# --------------------------------------------------------------- tokens
+
+WS = "ws"
+COMMENT = "comment"
+IDENT = "ident"
+LIFETIME = "lifetime"
+CHAR = "char"
+STR = "str"
+NUM = "num"
+FLOAT = "float"  # numeric literal that is a float (`.`/exponent/f32/f64)
+PUNCT = "punct"
+
+# Longest-match first.
+_PUNCTS = [
+    "<<=", ">>=", "...", "..=",
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>",
+    "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "..",
+    "+", "-", "*", "/", "%", "^", "!", "&", "|", "=", ">", "<", "@", "_",
+    ".", ",", ";", ":", "#", "$", "?", "(", ")", "[", "]", "{", "}",
+]
+
+_IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+_IDENT_CONT = _IDENT_START | set("0123456789")
+_HEX = set("0123456789abcdefABCDEF_")
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line", "col")
+
+    def __init__(self, kind, text, line, col):
+        self.kind = kind
+        self.text = text
+        self.line = line
+        self.col = col
+
+    def __repr__(self):
+        return f"Tok({self.kind}, {self.text!r}, {self.line}:{self.col})"
+
+
+class LexError(Exception):
+    pass
+
+
+# One alternation drives the scanner; the rare constructs that a regex
+# cannot express (nested block comments) fall out to a manual scan. Order
+# matters: raw strings before idents (`r"…"`), chars before lifetimes
+# (`'a'` vs `'a`), multi-char puncts before their prefixes.
+_MASTER = re.compile(
+    r"""
+      (?P<ws>\s+)
+    | (?P<lcom>//[^\n]*)
+    | (?P<bcom>/\*)
+    | (?P<raw>b?r(?P<hashes>\#*)"(?s:.*?)"(?P=hashes))
+    | (?P<str>b?"(?:\\[\s\S]|[^"\\])*")
+    | (?P<char>b?'(?:\\(?:u\{[^}']*\}|[^u])|[^'\\])')
+    | (?P<life>'[A-Za-z_][A-Za-z0-9_]*)
+    | (?P<num>
+          0[xob][0-9a-fA-F_]*[A-Za-z0-9_]*
+        | [0-9][0-9_]*
+          (?: \.[0-9][0-9_]* | \.(?![.A-Za-z_]) )?
+          (?: [eE][+-]?[0-9][0-9_]* )?
+          [A-Za-z0-9_]*
+      )
+    | (?P<id>(?:r\#)?[A-Za-z_][A-Za-z0-9_]*)
+    | (?P<punct><<=|>>=|\.\.\.|\.\.=|::|->|=>|==|!=|<=|>=|&&|\|\||<<|>>
+        |\+=|-=|\*=|/=|%=|\^=|&=|\|=|\.\.
+        |[-+*/%^!&|=><@_.,;:\#$?()\[\]{}])
+    """,
+    re.VERBOSE,
+)
+
+_FLOAT_TAIL = re.compile(r"[eE][+-]?[0-9]")
+
+
+def _num_is_float(text):
+    if text.startswith(("0x", "0o", "0b")):
+        return False
+    if text.endswith(("f32", "f64")):
+        return True
+    if "." in text:
+        return True
+    return bool(_FLOAT_TAIL.search(text))
+
+
+def lex(src, path="<str>"):
+    """Tokenize Rust source. Whitespace is dropped; comments are kept
+    (the allowlist directives live in them)."""
+    toks = []
+    append = toks.append
+    # newline offsets for O(log n) line/col lookup
+    nl = [m.start() for m in re.finditer("\n", src)]
+
+    def linecol(off):
+        li = bisect.bisect_right(nl, off - 1)
+        start = nl[li - 1] + 1 if li else 0
+        return li + 1, off - start + 1
+
+    i, n = 0, len(src)
+    while i < n:
+        m = _MASTER.match(src, i)
+        if m is None:
+            line, col = linecol(i)
+            raise LexError(f"{path}:{line}:{col}: unexpected byte {src[i]!r}")
+        kind = m.lastgroup
+        end = m.end()
+        if kind == "hashes":  # inner group of raw; lastgroup picks innermost
+            kind = "raw"
+        if kind == "ws":
+            i = end
+            continue
+        if kind == "bcom":
+            # nested block comment: manual scan
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            if depth:
+                line, _ = linecol(i)
+                raise LexError(f"{path}:{line}: unterminated block comment")
+            end = j
+            text = src[i:end]
+            line, col = linecol(i)
+            append(Tok(COMMENT, text, line, col))
+            i = end
+            continue
+        text = m.group(0)
+        line, col = linecol(i)
+        if kind == "lcom":
+            append(Tok(COMMENT, text, line, col))
+        elif kind == "raw" or kind == "str":
+            append(Tok(STR, text, line, col))
+        elif kind == "char":
+            append(Tok(CHAR, text, line, col))
+        elif kind == "life":
+            append(Tok(LIFETIME, text, line, col))
+        elif kind == "num":
+            append(Tok(FLOAT if _num_is_float(text) else NUM, text, line, col))
+        elif kind == "id":
+            append(Tok(IDENT, text, line, col))
+        else:
+            append(Tok(PUNCT, text, line, col))
+        i = end
+    return toks
+
+
+# ------------------------------------------------------------ structure
+
+_QUALS = {"pub", "const", "unsafe", "async", "extern", "crate", "in", "super", "self", "default"}
+_ITEM_KW = {"fn", "mod", "impl", "struct", "enum", "trait", "union"}
+
+# Reserved words that may legitimately precede `[` without being an
+# indexed value: `&mut [u8]` types, `for x in [..]`, `return [..]`,
+# `match x { .. => [..] }`, and friends.
+_RUST_KW = _ITEM_KW | {
+    "mut", "ref", "move", "dyn", "in", "as", "let", "const", "static",
+    "pub", "use", "where", "if", "else", "match", "while", "loop", "for",
+    "return", "break", "continue", "unsafe", "async", "await", "box",
+    "crate", "super", "self", "Self", "type", "extern", "yield",
+}
+
+
+class FnSpan:
+    __slots__ = ("name", "kw_idx", "start_line", "body_start", "body_end", "end_line", "deny_alloc")
+
+    def __init__(self, name, kw_idx, start_line, body_start, body_end, end_line):
+        self.name = name
+        self.kw_idx = kw_idx
+        self.start_line = start_line
+        self.body_start = body_start  # token index of `{`, or None
+        self.body_end = body_end      # token index of matching `}`, or None
+        self.end_line = end_line
+        self.deny_alloc = False
+
+
+class FileModel:
+    """Lexed file plus the derived structure every rule consumes."""
+
+    def __init__(self, path, rel, src):
+        self.path = path
+        self.rel = rel
+        self.toks = lex(src, path)
+        # significant tokens (no comments) for pattern matching
+        self.sig = [t for t in self.toks if t.kind != COMMENT]
+        self.attr_spans = []   # (sig_start, sig_end_exclusive, is_test)
+        self.fn_spans = []     # FnSpan, in source order (may nest)
+        self.test_lines = []   # merged sorted [start_line, end_line] pairs
+        self.directives = []   # Directive
+        self._scan_structure()
+        self._scan_directives()
+
+    # -- structure ---------------------------------------------------
+
+    def _match_close(self, idx, open_t, close_t):
+        """Index of the token closing the group opened at sig[idx]."""
+        depth = 0
+        sig = self.sig
+        for j in range(idx, len(sig)):
+            t = sig[j]
+            if t.kind == PUNCT:
+                if t.text == open_t:
+                    depth += 1
+                elif t.text == close_t:
+                    depth -= 1
+                    if depth == 0:
+                        return j
+        return len(sig) - 1
+
+    def _scan_structure(self):
+        sig = self.sig
+        i = 0
+        n = len(sig)
+        test_spans = []
+        pending_test_attr = False
+        attr_set = set()
+        while i < n:
+            t = sig[i]
+            # attributes: #[...] / #![...]
+            if t.kind == PUNCT and t.text == "#":
+                j = i + 1
+                inner = j < n and sig[j].kind == PUNCT and sig[j].text == "!"
+                if inner:
+                    j += 1
+                if j < n and sig[j].kind == PUNCT and sig[j].text == "[":
+                    close = self._match_close(j, "[", "]")
+                    is_test = any(
+                        sig[k].kind == IDENT and sig[k].text == "test"
+                        for k in range(j, close + 1)
+                    )
+                    self.attr_spans.append((i, close + 1, is_test))
+                    attr_set.update(range(i, close + 1))
+                    if is_test and not inner:
+                        pending_test_attr = True
+                    i = close + 1
+                    continue
+            if t.kind == IDENT and t.text == "fn" and i + 1 < n and sig[i + 1].kind == IDENT:
+                name = sig[i + 1].text
+                # find body start: first `{` at paren depth 0, or `;`
+                depth = 0
+                body_start = body_end = None
+                j = i + 2
+                while j < n:
+                    tt = sig[j]
+                    if tt.kind == PUNCT:
+                        if tt.text == "(":
+                            depth += 1
+                        elif tt.text == ")":
+                            depth -= 1
+                        elif tt.text == ";" and depth == 0:
+                            break
+                        elif tt.text == "{" and depth == 0:
+                            body_start = j
+                            body_end = self._match_close(j, "{", "}")
+                            break
+                    j += 1
+                end_line = sig[body_end].line if body_end is not None else sig[i].line
+                span = FnSpan(name, i, sig[i].line, body_start, body_end, end_line)
+                self.fn_spans.append(span)
+                if pending_test_attr:
+                    test_spans.append((sig[i].line, end_line))
+                pending_test_attr = False
+                i += 2
+                continue
+            if t.kind == IDENT and t.text == "mod" and i + 1 < n and sig[i + 1].kind == IDENT:
+                # find `{` or `;`
+                j = i + 2
+                if j < n and sig[j].kind == PUNCT and sig[j].text == "{":
+                    close = self._match_close(j, "{", "}")
+                    if pending_test_attr:
+                        test_spans.append((sig[i].line, sig[close].line))
+                    pending_test_attr = False
+                    i += 2  # descend into the mod (items inside still scanned)
+                    continue
+                pending_test_attr = False
+                i += 1
+                continue
+            if t.kind == IDENT and t.text in _ITEM_KW:
+                pending_test_attr = False
+            i += 1
+        # merge test spans into a sorted flat list for bisect lookups
+        test_spans.sort()
+        merged = []
+        for s, e in test_spans:
+            if merged and s <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+            else:
+                merged.append((s, e))
+        self.test_lines = merged
+        self._attr_tok = attr_set
+        self._fn_starts = [f.start_line for f in self.fn_spans]
+
+    def in_test(self, line):
+        i = bisect.bisect_right([s for s, _ in self.test_lines], line) - 1
+        return i >= 0 and self.test_lines[i][0] <= line <= self.test_lines[i][1]
+
+    def in_attr(self, sig_idx):
+        return sig_idx in self._attr_tok
+
+    def enclosing_fn(self, line):
+        """Innermost fn whose span covers `line` (None at module level)."""
+        best = None
+        i = bisect.bisect_right(self._fn_starts, line) - 1
+        # walk back: nested fns are rare, spans are ordered by start
+        while i >= 0:
+            f = self.fn_spans[i]
+            if f.start_line <= line <= f.end_line:
+                best = f
+                break
+            i -= 1
+        return best
+
+    # -- directives --------------------------------------------------
+
+    _DIRECTIVE_RE = re.compile(
+        r"//[/!]?\s*lint:\s*(allow-file|allow|deny)\(\s*([\w-]+)"
+        r'(?:\s*,\s*"([^"]*)")?\s*\)'
+    )
+
+    def _scan_directives(self):
+        # map: line -> first significant token index on that line
+        line_first_sig = {}
+        for idx, t in enumerate(self.sig):
+            line_first_sig.setdefault(t.line, idx)
+        for ci, tok in enumerate(self.toks):
+            if tok.kind != COMMENT:
+                continue
+            m = self._DIRECTIVE_RE.search(tok.text)
+            if not m:
+                if "lint:" in tok.text:
+                    self.directives.append(
+                        Directive("malformed", None, None, tok.line, None, self.rel)
+                    )
+                continue
+            kind, rule, reason = m.group(1), m.group(2), m.group(3)
+            # trailing if a significant token starts on the same line
+            # before the comment column
+            first = line_first_sig.get(tok.line)
+            trailing = first is not None and self.sig[first].col < tok.col
+            if self.in_test(tok.line):
+                continue  # test regions are not linted; skip their allows
+            if kind == "allow-file":
+                self.directives.append(
+                    Directive("allow", rule, reason, tok.line, ("file",), self.rel)
+                )
+                continue
+            if trailing:
+                scope = ("line", tok.line)
+                target_fn = None
+                for f in self.fn_spans:
+                    if f.start_line == tok.line:
+                        target_fn = f
+                        break
+            else:
+                # standalone: bind to the next item (fn span) or next line
+                nxt = None
+                for idx, t in enumerate(self.sig):
+                    if t.line > tok.line:
+                        nxt = (idx, t)
+                        break
+                target_fn = None
+                if nxt is not None:
+                    # skip attribute tokens between directive and item
+                    idx = nxt[0]
+                    while idx < len(self.sig) and self.in_attr(idx):
+                        idx += 1
+                    if idx < len(self.sig):
+                        probe = idx
+                        # skip qualifiers: pub (crate) const unsafe async…
+                        while probe < len(self.sig) and (
+                            (self.sig[probe].kind == IDENT and self.sig[probe].text in _QUALS)
+                            or (self.sig[probe].kind == PUNCT and self.sig[probe].text in "()")
+                        ):
+                            probe += 1
+                        if (
+                            probe < len(self.sig)
+                            and self.sig[probe].kind == IDENT
+                            and self.sig[probe].text == "fn"
+                        ):
+                            for f in self.fn_spans:
+                                if f.kw_idx >= probe:
+                                    target_fn = f
+                                    break
+                if target_fn is not None:
+                    scope = ("span", target_fn.start_line, target_fn.end_line)
+                elif nxt is not None:
+                    scope = ("line", nxt[1].line)
+                else:
+                    scope = ("line", tok.line + 1)
+            if kind == "deny":
+                if rule != "alloc" or target_fn is None:
+                    self.directives.append(
+                        Directive("malformed", rule, reason, tok.line, None, self.rel)
+                    )
+                else:
+                    target_fn.deny_alloc = True
+                continue
+            self.directives.append(
+                Directive("allow", rule, reason, tok.line, scope, self.rel)
+            )
+
+
+class Directive:
+    __slots__ = ("kind", "rule", "reason", "line", "scope", "rel", "used")
+
+    def __init__(self, kind, rule, reason, line, scope, rel):
+        self.kind = kind
+        self.rule = rule
+        self.reason = reason
+        self.line = line
+        self.scope = scope
+        self.rel = rel
+        self.used = False
+
+    def covers(self, rule, line):
+        if self.kind != "allow":
+            return False
+        # `panic` is the rule-class name: it also covers `index`.
+        if self.rule != rule and not (self.rule == "panic" and rule == "index"):
+            return False
+        if self.scope[0] == "file":
+            return True
+        if self.scope[0] == "line":
+            return line == self.scope[1]
+        return self.scope[1] <= line <= self.scope[2]
+
+
+# --------------------------------------------------------------- config
+
+RULE_IDS = {"panic", "index", "alloc", "spawn", "lock", "float-eq", "cast", "crc"}
+
+DEFAULT_CONFIG = {
+    "root": "rust/src",
+    "spawn_allow": ["util/pool.rs"],
+    "locks": {},           # receiver ident -> (rank, label)
+    "cast_files": [],
+    "cast_targets": ["usize", "u32", "u16", "u8"],
+    "crc_files": [],
+}
+
+
+class ConfigError(Exception):
+    pass
+
+
+def parse_config(path):
+    cfg = {
+        "root": DEFAULT_CONFIG["root"],
+        "spawn_allow": list(DEFAULT_CONFIG["spawn_allow"]),
+        "locks": {},
+        "cast_files": [],
+        "cast_targets": list(DEFAULT_CONFIG["cast_targets"]),
+        "crc_files": [],
+    }
+    section = None
+    with open(path, encoding="utf-8") as f:
+        for ln, raw in enumerate(f, 1):
+            body = raw.split("#", 1)[0].strip()
+            if not body:
+                continue
+            if body.startswith("[") and body.endswith("]"):
+                section = body[1:-1].strip()
+                if section not in ("paths", "spawn", "locks", "cast", "crc"):
+                    raise ConfigError(f"{path}:{ln}: unknown section [{section}]")
+                continue
+            if "=" not in body:
+                raise ConfigError(f"{path}:{ln}: expected key = value")
+            key, val = (s.strip() for s in body.split("=", 1))
+            if section == "paths" and key == "root":
+                cfg["root"] = val
+            elif section == "spawn" and key == "allow_files":
+                cfg["spawn_allow"] = [v.strip() for v in val.split(",") if v.strip()]
+            elif section == "locks":
+                # key = <rank> <label…>
+                parts = val.split(None, 1)
+                try:
+                    rank = int(parts[0])
+                except (ValueError, IndexError):
+                    raise ConfigError(f"{path}:{ln}: lock `{key}` needs an integer rank")
+                label = parts[1] if len(parts) > 1 else key
+                cfg["locks"][key] = (rank, label)
+            elif section == "cast" and key == "files":
+                cfg["cast_files"] = [v.strip() for v in val.split(",") if v.strip()]
+            elif section == "cast" and key == "targets":
+                cfg["cast_targets"] = [v.strip() for v in val.split(",") if v.strip()]
+            elif section == "crc" and key == "files":
+                cfg["crc_files"] = [v.strip() for v in val.split(",") if v.strip()]
+            else:
+                raise ConfigError(f"{path}:{ln}: unknown key `{key}` in [{section}]")
+    return cfg
+
+
+def _file_matches(rel, patterns):
+    rel = rel.replace(os.sep, "/")
+    return any(rel == p or rel.endswith("/" + p) for p in patterns)
+
+
+# ---------------------------------------------------------------- rules
+
+class Violation:
+    __slots__ = ("rule", "rel", "line", "col", "msg", "span")
+
+    def __init__(self, rule, rel, line, col, msg, span=""):
+        self.rule = rule
+        self.rel = rel
+        self.line = line
+        self.col = col
+        self.msg = msg
+        self.span = span
+
+    def render(self):
+        where = f"{self.rel}:{self.line}:{self.col}"
+        tail = f"  [{self.span}]" if self.span else ""
+        return f"{where}: {self.rule}: {self.msg}{tail}"
+
+
+_PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented"}
+_PANIC_METHODS = {"unwrap", "expect"}
+_ALLOC_MACROS = {"vec", "format"}
+_ALLOC_METHODS = {"to_vec", "to_string", "to_owned", "collect"}
+_ALLOC_PATHS = {
+    ("Vec", "new"), ("Vec", "with_capacity"), ("Vec", "from"),
+    ("VecDeque", "new"), ("VecDeque", "with_capacity"),
+    ("String", "new"), ("String", "with_capacity"), ("String", "from"),
+    ("Box", "new"), ("Arc", "new"), ("Rc", "new"),
+    ("BTreeMap", "new"), ("HashMap", "new"), ("HashSet", "new"), ("BTreeSet", "new"),
+}
+_FLOAT_CONSTS = {"NEG_INFINITY", "INFINITY", "NAN", "EPSILON"}
+_OPERAND_STOP = {",", ";", "{", "}", "&&", "||", "=>", "return"}
+
+
+def _prev_sig(sig, i):
+    return sig[i - 1] if i > 0 else None
+
+
+def _skip_group_back(sig, i, close_t, open_t):
+    """Given sig[i] is a closing bracket, return index before its opener."""
+    depth = 0
+    while i >= 0:
+        t = sig[i]
+        if t.kind == PUNCT:
+            if t.text == close_t:
+                depth += 1
+            elif t.text == open_t:
+                depth -= 1
+                if depth == 0:
+                    return i - 1
+        i -= 1
+    return -1
+
+
+def check_file(fm, cfg, violations):
+    sig = fm.sig
+    n = len(sig)
+    rel = fm.rel
+
+    cast_file = _file_matches(rel, cfg["cast_files"])
+    crc_file = _file_matches(rel, cfg["crc_files"])
+    spawn_ok = _file_matches(rel, cfg["spawn_allow"])
+    lock_seq = {}  # fn id -> (max_rank, name, line)
+
+    for i, t in enumerate(sig):
+        if fm.in_test(t.line):
+            continue
+
+        # ---- panic surface: .unwrap() / .expect( and panic-family macros
+        if t.kind == IDENT and t.text in _PANIC_METHODS:
+            p = _prev_sig(sig, i)
+            nx = sig[i + 1] if i + 1 < n else None
+            if (
+                p is not None and p.kind == PUNCT and p.text == "."
+                and nx is not None and nx.kind == PUNCT and nx.text == "("
+            ):
+                # `.expect(` is only Option/Result::expect when its argument
+                # is a message string; parser-style `self.expect(b'{')`
+                # methods take token arguments and are not panic sites.
+                arg = sig[i + 2] if i + 2 < n else None
+                if t.text == "expect" and not (
+                    arg is not None and arg.kind in (STR, "raw")
+                ):
+                    pass
+                else:
+                    violations.append(Violation(
+                        "panic", rel, t.line, t.col,
+                        f"`.{t.text}()` in library path (recoverable error or allowlist)",
+                        f".{t.text}(",
+                    ))
+        if t.kind == IDENT and t.text in _PANIC_MACROS:
+            nx = sig[i + 1] if i + 1 < n else None
+            if nx is not None and nx.kind == PUNCT and nx.text == "!":
+                violations.append(Violation(
+                    "panic", rel, t.line, t.col,
+                    f"`{t.text}!` in library path",
+                    f"{t.text}!",
+                ))
+
+        # ---- panic surface: slice indexing
+        if t.kind == PUNCT and t.text == "[" and not fm.in_attr(i):
+            p = _prev_sig(sig, i)
+            if p is not None and (
+                (p.kind == IDENT and p.text not in _RUST_KW)
+                or (p.kind == PUNCT and p.text in (")", "]"))
+            ):
+                # `name![` macros are excluded by the `!` between; attrs by `#`
+                violations.append(Violation(
+                    "index", rel, t.line, t.col,
+                    "slice indexing in library path (can panic; prefer get/"
+                    "iterators or allowlist with the bounds argument)",
+                    (p.text if p.kind == IDENT else "…") + "[",
+                ))
+
+        # ---- spawn
+        if (
+            t.kind == IDENT and t.text == "thread"
+            and i + 2 < n
+            and sig[i + 1].kind == PUNCT and sig[i + 1].text == "::"
+            and sig[i + 2].kind == IDENT and sig[i + 2].text == "spawn"
+            and not spawn_ok
+        ):
+            violations.append(Violation(
+                "spawn", rel, t.line, t.col,
+                "thread::spawn outside the worker-pool module "
+                "(route parallelism through util/pool.rs)",
+                "thread::spawn",
+            ))
+
+        # ---- locks
+        if (
+            t.kind == IDENT and t.text == "lock"
+            and i + 1 < n and sig[i + 1].kind == PUNCT and sig[i + 1].text == "("
+        ):
+            p = _prev_sig(sig, i)
+            if p is not None and p.kind == PUNCT and p.text == ".":
+                # receiver: walk back over one balanced group if needed
+                j = i - 2
+                if j >= 0 and sig[j].kind == PUNCT and sig[j].text in ("]", ")"):
+                    j = _skip_group_back(sig, j, sig[j].text, "[" if sig[j].text == "]" else "(")
+                name = sig[j].text if j >= 0 and sig[j].kind == IDENT else "?"
+                entry = cfg["locks"].get(name)
+                if entry is None:
+                    violations.append(Violation(
+                        "lock", rel, t.line, t.col,
+                        f"mutex receiver `{name}` is not in the declared "
+                        "lock-order table ([locks] in lint.conf)",
+                        f"{name}.lock()",
+                    ))
+                else:
+                    rank, label = entry
+                    f = fm.enclosing_fn(t.line)
+                    key = id(f) if f is not None else 0
+                    prior = lock_seq.get(key)
+                    if prior is not None and rank < prior[0]:
+                        violations.append(Violation(
+                            "lock", rel, t.line, t.col,
+                            f"lock-order violation: `{name}` (rank {rank}, "
+                            f"{label}) acquired after `{prior[1]}` (rank "
+                            f"{prior[0]}) in fn {f.name if f else '<module>'}",
+                            f"{name}.lock()",
+                        ))
+                    if prior is None or rank > prior[0]:
+                        lock_seq[key] = (rank, name, t.line)
+
+        # ---- float comparisons
+        if t.kind == PUNCT and t.text in ("==", "!="):
+            if _operand_is_float(sig, i - 1, -1) or _operand_is_float(sig, i + 1, +1):
+                violations.append(Violation(
+                    "float-eq", rel, t.line, t.col,
+                    f"float `{t.text}` comparison (use total_cmp / an epsilon, "
+                    "or allowlist exact-sentinel comparisons)",
+                    t.text,
+                ))
+
+        # ---- casts
+        if cast_file and t.kind == IDENT and t.text == "as" and i + 1 < n:
+            nx = sig[i + 1]
+            if nx.kind == IDENT and nx.text in cfg["cast_targets"]:
+                # skip `use … as name;` renames
+                p = _prev_sig(sig, i)
+                if not (p is not None and p.kind == PUNCT and p.text == "::"):
+                    violations.append(Violation(
+                        "cast", rel, t.line, t.col,
+                        f"truncating `as {nx.text}` cast in an offset path "
+                        "(use binfmt::usize_from / try_into with a named error)",
+                        f"as {nx.text}",
+                    ))
+
+    # ---- CRC pairing: per-fn begin/end balance + create/finish
+    if crc_file:
+        for f in fm.fn_spans:
+            if f.body_start is None or fm.in_test(f.start_line):
+                continue
+            begins = ends = creates = finishes = 0
+            for j in range(f.body_start, (f.body_end or f.body_start) + 1):
+                t = sig[j]
+                inner = fm.enclosing_fn(t.line)
+                if inner is not f:
+                    continue
+                if t.kind == IDENT and j > 0 and sig[j - 1].kind == PUNCT and sig[j - 1].text == ".":
+                    if t.text == "begin_section":
+                        begins += 1
+                    elif t.text == "end_section":
+                        ends += 1
+                    elif t.text == "finish":
+                        finishes += 1
+                if (
+                    t.kind == IDENT and t.text == "StreamWriter"
+                    and j + 2 < n
+                    and sig[j + 1].kind == PUNCT and sig[j + 1].text == "::"
+                    and sig[j + 2].kind == IDENT and sig[j + 2].text == "create"
+                ):
+                    creates += 1
+            if begins != ends:
+                violations.append(Violation(
+                    "crc", rel, f.start_line, 1,
+                    f"fn {f.name}: {begins} begin_section vs {ends} end_section "
+                    "— every section write must be closed (and CRC'd) before "
+                    "the footer",
+                    f.name,
+                ))
+            if creates > 0 and finishes == 0:
+                violations.append(Violation(
+                    "crc", rel, f.start_line, 1,
+                    f"fn {f.name}: StreamWriter created but never finish()ed — "
+                    "the footer checksum is only written by finish()",
+                    f.name,
+                ))
+
+    # ---- deny-alloc regions
+    for f in fm.fn_spans:
+        if not f.deny_alloc or f.body_start is None:
+            continue
+        for j in range(f.body_start, (f.body_end or f.body_start) + 1):
+            t = sig[j]
+            if fm.in_test(t.line):
+                continue
+            hit = None
+            if t.kind == IDENT and t.text in _ALLOC_MACROS:
+                nx = sig[j + 1] if j + 1 < n else None
+                if nx is not None and nx.kind == PUNCT and nx.text == "!":
+                    hit = f"{t.text}!"
+            elif t.kind == IDENT and t.text in _ALLOC_METHODS:
+                p = _prev_sig(sig, j)
+                nx = sig[j + 1] if j + 1 < n else None
+                if (
+                    p is not None and p.kind == PUNCT and p.text == "."
+                    and nx is not None and nx.kind == PUNCT and nx.text in ("(", "::")
+                ):
+                    hit = f".{t.text}"
+            elif t.kind == IDENT and j + 2 < n:
+                nx, nx2 = sig[j + 1], sig[j + 2]
+                if (
+                    nx.kind == PUNCT and nx.text == "::"
+                    and nx2.kind == IDENT
+                    and (t.text, nx2.text) in _ALLOC_PATHS
+                ):
+                    hit = f"{t.text}::{nx2.text}"
+            if hit:
+                violations.append(Violation(
+                    "alloc", rel, t.line, t.col,
+                    f"allocating construct `{hit}` inside deny(alloc) fn "
+                    f"{f.name} (hot path must stay zero-allocation)",
+                    hit,
+                ))
+
+
+def _operand_is_float(sig, i, step):
+    """Scan a few tokens from a comparison operator looking for a float
+    literal / f32|f64 path / float const, stopping at expression edges."""
+    depth = 0
+    seen = 0
+    while 0 <= i < len(sig) and seen < 6:
+        t = sig[i]
+        if t.kind == PUNCT:
+            if t.text in _OPERAND_STOP:
+                return False
+            if t.text in ("(", "["):
+                depth += step
+            elif t.text in (")", "]"):
+                depth -= step
+            if depth < 0:
+                return False
+        if t.kind == FLOAT:
+            return True
+        if t.kind == IDENT and t.text in ("f32", "f64"):
+            return True
+        if t.kind == IDENT and t.text in _FLOAT_CONSTS:
+            return True
+        if t.kind == IDENT and t.text in ("as",):
+            # `x as f32 == y` — the cast target decides
+            pass
+        i += step
+        seen += 1
+    return False
+
+
+# --------------------------------------------------------------- driver
+
+def collect_files(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for name in sorted(filenames):
+            if name.endswith(".rs"):
+                out.append(os.path.join(dirpath, name))
+    return out
+
+
+def run(paths, cfg, list_allows=False, out=sys.stdout):
+    violations = []
+    warnings = []
+    models = []
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(collect_files(p))
+        else:
+            files.append(p)
+    base = os.path.commonpath([os.path.abspath(p) for p in paths]) if paths else "."
+    if os.path.isfile(base):
+        base = os.path.dirname(base)
+    for path in files:
+        rel = os.path.relpath(os.path.abspath(path), base).replace(os.sep, "/")
+        try:
+            with open(path, encoding="utf-8") as f:
+                src = f.read()
+            fm = FileModel(path, rel, src)
+        except (LexError, UnicodeDecodeError) as e:
+            violations.append(Violation("lex", rel, 1, 1, str(e)))
+            continue
+        models.append(fm)
+        check_file(fm, cfg, violations)
+
+    # apply allows; validate directives
+    allows = [d for fm in models for d in fm.directives]
+    for d in allows:
+        if d.kind == "malformed":
+            violations.append(Violation(
+                "directive", d.rel, d.line, 1,
+                "malformed lint directive (grammar: "
+                '`// lint: allow(<rule>, "<reason>")`, '
+                '`// lint: allow-file(<rule>, "<reason>")`, '
+                "`// lint: deny(alloc)` before a fn)",
+            ))
+        elif d.rule not in RULE_IDS:
+            violations.append(Violation(
+                "directive", d.rel, d.line, 1,
+                f"allow names unknown rule `{d.rule}` "
+                f"(rules: {', '.join(sorted(RULE_IDS))})",
+            ))
+        elif not d.reason or not d.reason.strip():
+            violations.append(Violation(
+                "directive", d.rel, d.line, 1,
+                f"allow({d.rule}) without a reason — every allowlist entry "
+                "must explain why the site is safe",
+            ))
+
+    kept = []
+    for v in violations:
+        if v.rule in ("directive", "lex"):
+            kept.append(v)
+            continue
+        suppressed = False
+        for d in allows:
+            if d.rel == v.rel and d.covers(v.rule, v.line):
+                d.used = True
+                suppressed = True
+                break
+        if not suppressed:
+            kept.append(v)
+    for d in allows:
+        if d.kind == "allow" and d.rule in RULE_IDS and d.reason and not d.used:
+            warnings.append(
+                f"{d.rel}:{d.line}: warning: unused allow({d.rule}) — prune it"
+            )
+
+    if list_allows:
+        for d in sorted(allows, key=lambda d: (d.rel, d.line)):
+            if d.kind == "allow":
+                scope = d.scope[0] if d.scope else "?"
+                print(
+                    f"{d.rel}:{d.line}: allow({d.rule}) [{scope}] — {d.reason}",
+                    file=out,
+                )
+        return 0
+
+    kept.sort(key=lambda v: (v.rel, v.line, v.col))
+    for v in kept:
+        print(v.render(), file=out)
+    for w in warnings:
+        print(w, file=out)
+    n_allows = sum(1 for d in allows if d.kind == "allow")
+    print(
+        f"pallas-lint: {len(kept)} violation(s), {len(files)} file(s), "
+        f"{n_allows} allowlist entr{'y' if n_allows == 1 else 'ies'}",
+        file=out,
+    )
+    return 1 if kept else 0
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    config_path = None
+    list_allows = False
+    paths = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--config":
+            i += 1
+            if i >= len(argv):
+                print("pallas-lint: --config needs a path", file=sys.stderr)
+                return 2
+            config_path = argv[i]
+        elif a == "--list-allows":
+            list_allows = True
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        elif a.startswith("-"):
+            print(f"pallas-lint: unknown flag {a}", file=sys.stderr)
+            return 2
+        else:
+            paths.append(a)
+        i += 1
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    if config_path is None:
+        config_path = os.path.join(here, "lint.conf")
+    try:
+        cfg = parse_config(config_path)
+    except (ConfigError, OSError) as e:
+        print(f"pallas-lint: config error: {e}", file=sys.stderr)
+        return 2
+    if not paths:
+        # default root is relative to the repo (two levels above tools/lint)
+        repo = os.path.dirname(os.path.dirname(here))
+        paths = [os.path.join(repo, cfg["root"])]
+        if not os.path.isdir(paths[0]):
+            print(f"pallas-lint: source root {paths[0]} not found", file=sys.stderr)
+            return 2
+    return run(paths, cfg, list_allows=list_allows)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

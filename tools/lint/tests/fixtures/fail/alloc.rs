@@ -1,0 +1,12 @@
+//! Seeded deny-alloc violations: the annotated fn both grows a Vec and
+//! expands `vec![…]`.
+
+// lint: deny(alloc)
+pub fn hot_path(n: usize) -> Vec<u32> {
+    let scratch = vec![0u8; n];
+    let mut out = Vec::with_capacity(scratch.len());
+    for i in 0..n {
+        out.push(i as u32);
+    }
+    out
+}

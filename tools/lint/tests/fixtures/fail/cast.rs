@@ -1,0 +1,5 @@
+//! Seeded truncating-cast violation (this file is in `[cast] files`).
+
+pub fn offset(v: u64) -> usize {
+    v as usize
+}

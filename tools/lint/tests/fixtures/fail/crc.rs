@@ -1,0 +1,13 @@
+//! Seeded CRC-coverage violations: an unbalanced `begin_section` and a
+//! `StreamWriter` that is created but never `finish()`ed.
+
+pub fn unbalanced(w: &mut W) {
+    w.begin_section("edges");
+    w.write_u64(4);
+}
+
+pub fn unfinished(path: &str) {
+    let mut w = StreamWriter::create(path);
+    w.begin_section("nodes");
+    w.end_section();
+}

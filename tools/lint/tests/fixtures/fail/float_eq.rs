@@ -1,0 +1,5 @@
+//! Seeded numeric-safety violation: exact float equality.
+
+pub fn is_zero(x: f32) -> bool {
+    x == 0.0
+}

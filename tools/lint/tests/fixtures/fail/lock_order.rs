@@ -1,0 +1,23 @@
+//! Seeded lock violations: an acquisition against the declared rank
+//! order, and a receiver missing from the `[locks]` table.
+
+use std::sync::Mutex;
+
+pub struct S {
+    hot: Mutex<u32>,
+    state: Mutex<u32>,
+    rogue: Mutex<u32>,
+}
+
+impl S {
+    pub fn inverted(&self) {
+        let a = self.state.lock();
+        let b = self.hot.lock();
+        drop((a, b));
+    }
+
+    pub fn undeclared(&self) {
+        let g = self.rogue.lock();
+        drop(g);
+    }
+}

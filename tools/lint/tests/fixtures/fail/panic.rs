@@ -1,0 +1,16 @@
+//! Seeded panic-surface violations: `.unwrap()`, `.expect("…")`,
+//! `panic!`, and slice indexing — one of each, all in library code.
+
+pub fn first(v: &[u32]) -> u32 {
+    let head = v.get(0).unwrap();
+    let tail = v[1];
+    head + tail
+}
+
+pub fn must(v: Option<u32>) -> u32 {
+    v.expect("fixture: must be set")
+}
+
+pub fn boom() {
+    panic!("fixture");
+}

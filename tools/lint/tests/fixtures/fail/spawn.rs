@@ -1,0 +1,7 @@
+//! Seeded concurrency violation: raw `thread::spawn` outside the one
+//! file named in `[spawn] allow_files`.
+
+pub fn run() {
+    let h = std::thread::spawn(|| 1 + 1);
+    drop(h);
+}

@@ -1,0 +1,49 @@
+//! Clean fixture: the allowed / recoverable counterpart of every seeded
+//! violation class. Must produce zero violations under the fixture
+//! config — this is the golden "pass" half of the gate tests.
+
+use std::sync::Mutex;
+
+pub struct S {
+    hot: Mutex<u32>,
+    state: Mutex<u32>,
+}
+
+impl S {
+    pub fn ordered(&self) {
+        let a = self.hot.lock();
+        let b = self.state.lock();
+        drop((a, b));
+    }
+}
+
+pub fn first(v: &[u32]) -> Option<u32> {
+    v.first().copied()
+}
+
+// lint: allow(panic, "fixture: fn-scope allow with a reason covers indexing too")
+pub fn head(v: &[u32]) -> u32 {
+    v[0]
+}
+
+pub fn masked(x: f32) -> bool {
+    // lint: allow(float-eq, "fixture: exact 0.0/1.0 mask sentinel")
+    x == 0.0
+}
+
+pub fn offset(v: u64) -> Result<usize, &'static str> {
+    usize::try_from(v).map_err(|_| "offset overflows usize")
+}
+
+pub fn balanced(w: &mut W) {
+    w.begin_section("edges");
+    w.write_u64(4);
+    w.end_section();
+}
+
+// lint: deny(alloc)
+pub fn fill(out: &mut [f32]) {
+    for x in out.iter_mut() {
+        *x = 0.5;
+    }
+}

@@ -1,0 +1,356 @@
+#!/usr/bin/env python3
+"""Tests for pallas-lint: lexer tricky-token corpus, directive parsing,
+rule engine on golden fixtures, and the CLI gate's exit codes.
+
+Run from anywhere:  python3 tools/lint/tests/test_lint.py
+Stdlib only — this suite must run in the same toolchain-free containers
+the linter itself targets.
+"""
+
+import io
+import os
+import subprocess
+import sys
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+LINT_DIR = os.path.dirname(HERE)
+sys.path.insert(0, LINT_DIR)
+
+import pallas_lint as pl  # noqa: E402
+
+FIXTURES = os.path.join(HERE, "fixtures")
+FIXTURE_CONF = os.path.join(FIXTURES, "lint.conf")
+
+
+def kinds(src):
+    return [(t.kind, t.text) for t in pl.lex(src)]
+
+
+def sig_kinds(src):
+    return [(t.kind, t.text) for t in pl.lex(src) if t.kind not in (pl.WS, pl.COMMENT)]
+
+
+class TestLexer(unittest.TestCase):
+    # -- the tricky-token corpus ------------------------------------
+
+    def test_raw_string_with_hashes(self):
+        toks = sig_kinds(r'let s = r#"a "quoted" b"#;')
+        texts = [t for k, t in toks if k in (pl.STR, "raw")]
+        self.assertEqual(texts, [r'r#"a "quoted" b"#'])
+
+    def test_byte_raw_string_double_hash(self):
+        toks = sig_kinds('let s = br##"x "# y"##;')
+        texts = [t for k, t in toks if k in (pl.STR, "raw")]
+        self.assertEqual(texts, ['br##"x "# y"##'])
+
+    def test_raw_string_swallows_fake_directive(self):
+        # a raw string containing comment-looking text must stay one token
+        src = 'let s = r#"// lint: allow(panic, "nope")"#;'
+        fm = pl.FileModel("<t>", "t.rs", src)
+        self.assertEqual(fm.directives, [])
+
+    def test_nested_block_comment(self):
+        toks = sig_kinds("/* a /* b */ c */ d")
+        self.assertEqual(toks, [(pl.IDENT, "d")])
+
+    def test_unterminated_block_comment_raises(self):
+        with self.assertRaises(pl.LexError):
+            pl.lex("/* a /* b */ still open")
+
+    def test_lifetime_vs_char_literal(self):
+        toks = sig_kinds("fn f<'a>(x: &'a u32) { let c = 'a'; }")
+        self.assertIn((pl.LIFETIME, "'a"), toks)
+        self.assertIn((pl.CHAR, "'a'"), toks)
+
+    def test_char_escapes(self):
+        toks = sig_kinds(r"let c = '\n'; let u = '\u{1F600}'; let b = b'\'';")
+        texts = [t for _, t in toks]
+        self.assertIn(r"'\n'", texts)
+        self.assertIn(r"'\u{1F600}'", texts)
+        self.assertIn(r"b'\''", texts)
+
+    def test_string_with_escapes_and_continuation(self):
+        src = '"a \\" b \\\n   c"'
+        toks = sig_kinds(src)
+        self.assertEqual(len(toks), 1)
+        self.assertEqual(toks[0][0], pl.STR)
+
+    def test_numeric_literal_kinds(self):
+        toks = sig_kinds("1 1.0 1e3 0x1F 2.5f32 3usize 1_000 0b1010")
+        got = {text: kind for kind, text in toks}
+        self.assertEqual(got["1"], pl.NUM)
+        self.assertEqual(got["1.0"], pl.FLOAT)
+        self.assertEqual(got["1e3"], pl.FLOAT)
+        self.assertEqual(got["0x1F"], pl.NUM)
+        self.assertEqual(got["2.5f32"], pl.FLOAT)
+        self.assertEqual(got["3usize"], pl.NUM)
+        self.assertEqual(got["1_000"], pl.NUM)
+        self.assertEqual(got["0b1010"], pl.NUM)
+
+    def test_range_is_not_a_float(self):
+        toks = sig_kinds("for i in 0..n {}")
+        self.assertIn((pl.PUNCT, ".."), toks)
+        self.assertIn((pl.NUM, "0"), toks)
+
+    def test_punct_maximal_munch(self):
+        toks = sig_kinds("a ..= b :: c -> d == e <<= f")
+        puncts = [t for k, t in toks if k == pl.PUNCT]
+        self.assertEqual(puncts, ["..=", "::", "->", "==", "<<="])
+
+    def test_line_and_col_positions(self):
+        toks = [t for t in pl.lex("let x = 1;\n    y += 2;") if t.kind == pl.IDENT]
+        y = [t for t in toks if t.text == "y"][0]
+        self.assertEqual((y.line, y.col), (2, 5))
+
+    def test_attr_span_detection(self):
+        fm = pl.FileModel("<t>", "t.rs", "#[derive(Clone)]\npub struct S;\n")
+        idx = [i for i, t in enumerate(fm.sig) if t.text == "derive"][0]
+        self.assertTrue(fm.in_attr(idx))
+
+    def test_cfg_test_region_detected(self):
+        src = (
+            "pub fn lib() {}\n"
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    #[test]\n"
+            "    fn t() { assert!(true); }\n"
+            "}\n"
+        )
+        fm = pl.FileModel("<t>", "t.rs", src)
+        self.assertFalse(fm.in_test(1))
+        self.assertTrue(fm.in_test(5))
+
+
+class TestDirectives(unittest.TestCase):
+    def _fm(self, src):
+        return pl.FileModel("<t>", "t.rs", src)
+
+    def test_trailing_allow_covers_that_line_only(self):
+        fm = self._fm('let x = v[0]; // lint: allow(index, "bounds checked above")\nlet y = v[1];\n')
+        d = fm.directives[0]
+        self.assertEqual(d.kind, "allow")
+        self.assertTrue(d.covers("index", 1))
+        self.assertFalse(d.covers("index", 2))
+
+    def test_standalone_allow_covers_next_fn_span(self):
+        src = (
+            '// lint: allow(panic, "infallible by construction")\n'
+            "pub fn f(v: &[u32]) -> u32 {\n"
+            "    v[0]\n"
+            "}\n"
+            "pub fn g() {}\n"
+        )
+        fm = self._fm(src)
+        d = fm.directives[0]
+        self.assertEqual(d.scope[0], "span")
+        self.assertTrue(d.covers("panic", 3))
+        self.assertTrue(d.covers("index", 3))  # panic is the rule class
+        self.assertFalse(d.covers("panic", 5))
+
+    def test_allow_file_covers_everything(self):
+        fm = self._fm('// lint: allow-file(index, "scanner with guarded offsets")\nfn f() {}\n')
+        d = fm.directives[0]
+        self.assertEqual(d.scope, ("file",))
+        self.assertTrue(d.covers("index", 999))
+        self.assertFalse(d.covers("panic", 999))
+
+    def test_deny_alloc_marks_next_fn(self):
+        fm = self._fm("// lint: deny(alloc)\npub fn hot() {}\n")
+        self.assertTrue(fm.fn_spans[0].deny_alloc)
+        self.assertEqual(fm.directives, [])  # deny is not an allow entry
+
+    def test_deny_without_fn_is_malformed(self):
+        fm = self._fm("// lint: deny(alloc)\nstruct S;\n")
+        self.assertEqual(fm.directives[0].kind, "malformed")
+
+    def test_malformed_directive_flagged(self):
+        fm = self._fm("// lint: alow(panic)\nfn f() {}\n")
+        self.assertEqual(fm.directives[0].kind, "malformed")
+
+    def test_allow_in_test_region_is_skipped(self):
+        src = (
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            '    // lint: allow(panic, "tests may unwrap")\n'
+            "    #[test]\n"
+            "    fn t() {}\n"
+            "}\n"
+        )
+        fm = self._fm(src)
+        self.assertEqual(fm.directives, [])
+
+
+class TestRuleEngine(unittest.TestCase):
+    """Golden fixtures: each fail/*.rs seeds exactly one rule class."""
+
+    @classmethod
+    def setUpClass(cls):
+        cls.cfg = pl.parse_config(FIXTURE_CONF)
+
+    def _run(self, *names):
+        paths = [os.path.join(FIXTURES, n) for n in names]
+        out = io.StringIO()
+        code = pl.run(paths, self.cfg, out=out)
+        return code, out.getvalue()
+
+    def _assert_fails_with(self, fixture, rule, count):
+        code, out = self._run(fixture)
+        self.assertEqual(code, 1, out)
+        self.assertEqual(out.count(f" {rule}: "), count, out)
+
+    def test_panic_fixture(self):
+        code, out = self._run("fail/panic.rs")
+        self.assertEqual(code, 1, out)
+        self.assertEqual(out.count(" panic: "), 3, out)
+        self.assertEqual(out.count(" index: "), 1, out)
+
+    def test_alloc_fixture(self):
+        self._assert_fails_with("fail/alloc.rs", "alloc", 2)
+
+    def test_spawn_fixture(self):
+        self._assert_fails_with("fail/spawn.rs", "spawn", 1)
+
+    def test_lock_order_fixture(self):
+        code, out = self._run("fail/lock_order.rs")
+        self.assertEqual(code, 1, out)
+        self.assertEqual(out.count(" lock: "), 2, out)
+        self.assertIn("lock-order violation", out)
+        self.assertIn("not in the declared lock-order table", out)
+
+    def test_float_eq_fixture(self):
+        self._assert_fails_with("fail/float_eq.rs", "float-eq", 1)
+
+    def test_cast_fixture(self):
+        self._assert_fails_with("fail/cast.rs", "cast", 1)
+
+    def test_crc_fixture(self):
+        code, out = self._run("fail/crc.rs")
+        self.assertEqual(code, 1, out)
+        self.assertEqual(out.count(" crc: "), 2, out)
+        self.assertIn("begin_section vs 0 end_section", out)
+        self.assertIn("never finish()ed", out)
+
+    def test_clean_fixture_passes(self):
+        code, out = self._run("pass/clean.rs")
+        self.assertEqual(code, 0, out)
+        self.assertNotIn("warning: unused allow", out)
+
+    def test_fail_dir_as_a_whole(self):
+        code, out = self._run("fail")
+        self.assertEqual(code, 1, out)
+        for rule in ("panic", "index", "alloc", "spawn", "lock", "float-eq", "cast", "crc"):
+            self.assertIn(f" {rule}: ", out)
+
+    def test_unused_allow_warns(self):
+        out = io.StringIO()
+        src = '// lint: allow(panic, "stale entry")\npub fn f() {}\n'
+        path = os.path.join(FIXTURES, "tmp_unused.rs")
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(src)
+        try:
+            code = pl.run([path], self.cfg, out=out)
+        finally:
+            os.remove(path)
+        self.assertEqual(code, 0)
+        self.assertIn("warning: unused allow(panic)", out.getvalue())
+
+    def test_allow_without_reason_is_violation(self):
+        out = io.StringIO()
+        src = "// lint: allow(panic)\npub fn f(v: &[u32]) -> u32 { v[0] }\n"
+        path = os.path.join(FIXTURES, "tmp_noreason.rs")
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(src)
+        try:
+            code = pl.run([path], self.cfg, out=out)
+        finally:
+            os.remove(path)
+        self.assertEqual(code, 1)
+        self.assertIn("without a reason", out.getvalue())
+
+    def test_unknown_rule_in_allow_is_violation(self):
+        out = io.StringIO()
+        src = '// lint: allow(bogus, "reason")\npub fn f() {}\n'
+        path = os.path.join(FIXTURES, "tmp_badrule.rs")
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(src)
+        try:
+            code = pl.run([path], self.cfg, out=out)
+        finally:
+            os.remove(path)
+        self.assertEqual(code, 1)
+        self.assertIn("unknown rule `bogus`", out.getvalue())
+
+    def test_expect_with_token_argument_not_flagged(self):
+        out = io.StringIO()
+        src = "pub fn p(s: &mut Scanner) -> R { s.expect(b'{') }\n"
+        path = os.path.join(FIXTURES, "tmp_expect.rs")
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(src)
+        try:
+            code = pl.run([path], self.cfg, out=out)
+        finally:
+            os.remove(path)
+        self.assertEqual(code, 0, out.getvalue())
+
+    def test_violations_in_cfg_test_are_ignored(self):
+        out = io.StringIO()
+        src = (
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    #[test]\n"
+            '    fn t() { let v = vec![1]; assert_eq!(v[0], 1); panic!("x"); }\n'
+            "}\n"
+        )
+        path = os.path.join(FIXTURES, "tmp_test_region.rs")
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(src)
+        try:
+            code = pl.run([path], self.cfg, out=out)
+        finally:
+            os.remove(path)
+        self.assertEqual(code, 0, out.getvalue())
+
+
+class TestCli(unittest.TestCase):
+    """The gate contract scripts/tier1.sh relies on: exit codes 0/1/2."""
+
+    def _cli(self, *args):
+        return subprocess.run(
+            [sys.executable, os.path.join(LINT_DIR, "pallas_lint.py"), *args],
+            capture_output=True,
+            text=True,
+            cwd=FIXTURES,
+        )
+
+    def test_exit_zero_on_clean(self):
+        r = self._cli("--config", FIXTURE_CONF, os.path.join(FIXTURES, "pass", "clean.rs"))
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+
+    def test_exit_one_on_violations(self):
+        r = self._cli("--config", FIXTURE_CONF, os.path.join(FIXTURES, "fail", "panic.rs"))
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+
+    def test_exit_two_on_bad_config(self):
+        r = self._cli("--config", os.path.join(FIXTURES, "no_such.conf"))
+        self.assertEqual(r.returncode, 2)
+
+    def test_exit_two_on_unknown_flag(self):
+        r = self._cli("--bogus")
+        self.assertEqual(r.returncode, 2)
+
+    def test_repo_tree_is_clean(self):
+        # The real gate: the shipped rust/src must lint clean with the
+        # shipped config. Failing here means a violation crept in.
+        repo = os.path.dirname(os.path.dirname(LINT_DIR))
+        r = subprocess.run(
+            [sys.executable, os.path.join(LINT_DIR, "pallas_lint.py")],
+            capture_output=True,
+            text=True,
+            cwd=repo,
+        )
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()  # pass -v for per-test lines
