@@ -438,6 +438,39 @@ fn main() -> anyhow::Result<()> {
             ("prefetch_on_s", Json::Num(w_on)),
             ("speedup", Json::Num(w_off / w_on.max(1e-12))),
         ]));
+
+        // ---- Batch-blocked GEMM execution: the same width-100 epoch
+        // with tiled forward/backward on the executor's worker pool
+        // (exec tiles 4) vs the serial path (tiles 1, bitwise the
+        // pre-tiling executor). Also records that a fixed tile count is
+        // run-to-run deterministic: two tiles=4 epochs from identical
+        // initial state must produce bitwise-equal loss sequences.
+        let blocked = |tiles: usize| -> anyhow::Result<(f64, Vec<f64>)> {
+            model.set_exec_tiles(tiles);
+            let cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 8);
+            let mut t = Trainer::new(&model, &graph, &csr, cfg)?;
+            t.train_epoch(&ep)?; // warm-up epoch (pools + per-tile buffers)
+            let stats = t.train_epoch(&ep)?;
+            Ok((stats.seconds, stats.losses))
+        };
+        let (t1_s, _) = blocked(1)?;
+        let (t4_s, t4_losses) = blocked(4)?;
+        let (_, t4_again) = blocked(4)?;
+        model.set_exec_tiles(1);
+        let deterministic = t4_losses == t4_again;
+        println!(
+            "syn_tgn_w100 blocked exec: tiles 1 {t1_s:.4}s vs tiles 4 {t4_s:.4}s ({:.2}x), \
+             tiles-4 deterministic {deterministic}",
+            t1_s / t4_s.max(1e-12)
+        );
+        pipeline_rows.push(obj(vec![
+            ("workload", Json::Str("syn_tgn_w100-train-epoch-blocked".into())),
+            ("mode", Json::Str("exec-tiles".into())),
+            ("tiles1_s", Json::Num(t1_s)),
+            ("tiles4_s", Json::Num(t4_s)),
+            ("speedup", Json::Num(t1_s / t4_s.max(1e-12))),
+            ("tiles4_deterministic", Json::Bool(deterministic)),
+        ]));
     }
 
     // ---- Per-kernel SIMD rows: the hot reference-backend kernels,
@@ -506,6 +539,94 @@ fn main() -> anyhow::Result<()> {
                 ("scalar_s", Json::Num(oa_scalar)),
                 ("lanes_s", Json::Num(oa_lanes)),
                 ("speedup", Json::Num(oa_scalar / oa_lanes.max(1e-12))),
+            ]));
+
+            // Batch-tiled GEMM: per-root matvec loop vs the blocked
+            // kernel over a 32-root tile, then the blocked kernel over a
+            // 256-root batch split across 1 vs 4 threads on disjoint
+            // root blocks (the shape of the executor's tile dispatch;
+            // the pooled version is measured end-to-end by the
+            // `syn_tgn_w100-train-epoch-blocked` row). Per-call work is
+            // `t_rows` matvecs, so reps shrink accordingly.
+            let t_rows = 32usize;
+            let xs: Vec<f32> = (0..t_rows * cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let mut tile_out = vec![0.0f32; t_rows * rows];
+            let mut loop_out = vec![0.0f32; t_rows * rows];
+            for ti in 0..t_rows {
+                let (x_t, o_t) = (&xs[ti * cols..(ti + 1) * cols], ti * rows..(ti + 1) * rows);
+                simd::matvec(&w, x_t, &mut loop_out[o_t]);
+            }
+            let tile_reps = (reps / t_rows).max(100);
+            let time_t = |f: &mut dyn FnMut()| {
+                f(); // warm-up
+                let sw = Stopwatch::start();
+                for _ in 0..tile_reps {
+                    f();
+                }
+                sw.secs()
+            };
+            let gm_loop = time_t(&mut || {
+                for ti in 0..t_rows {
+                    let x_t = std::hint::black_box(&xs[ti * cols..(ti + 1) * cols]);
+                    simd::matvec(&w, x_t, &mut tile_out[ti * rows..(ti + 1) * rows]);
+                }
+                std::hint::black_box(&mut tile_out);
+            });
+            let gm_tiled = time_t(&mut || {
+                simd::gemm(&w, std::hint::black_box(&xs), t_rows, rows, cols, &mut tile_out);
+                std::hint::black_box(&mut tile_out);
+            });
+            let identical = tile_out == loop_out;
+
+            let big_t = 256usize;
+            let xb: Vec<f32> = (0..big_t * cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let mut out_b = vec![0.0f32; big_t * rows];
+            let big_reps = (reps / big_t).max(50);
+            let time_b = |f: &mut dyn FnMut()| {
+                f(); // warm-up
+                let sw = Stopwatch::start();
+                for _ in 0..big_reps {
+                    f();
+                }
+                sw.secs()
+            };
+            let gm_w1 = time_b(&mut || {
+                simd::gemm(&w, std::hint::black_box(&xb), big_t, rows, cols, &mut out_b);
+                std::hint::black_box(&mut out_b);
+            });
+            let workers = 4usize;
+            let chunk = big_t.div_ceil(workers);
+            let gm_w4 = time_b(&mut || {
+                std::thread::scope(|s| {
+                    let ocs = out_b.chunks_mut(chunk * rows);
+                    for (xc, oc) in xb.chunks(chunk * cols).zip(ocs) {
+                        let w = &w;
+                        s.spawn(move || {
+                            simd::gemm(w, xc, oc.len() / rows, rows, cols, oc);
+                        });
+                    }
+                });
+                std::hint::black_box(&mut out_b);
+            });
+            println!(
+                "kernel-gemm {mode} ({rows}x{cols}, T={t_rows}, {tile_reps} reps): matvec-loop \
+                 {gm_loop:.4}s vs gemm {gm_tiled:.4}s ({:.2}x, identical {identical}); \
+                 T={big_t}: 1 worker {gm_w1:.4}s vs {workers} workers {gm_w4:.4}s ({:.2}x)",
+                gm_loop / gm_tiled.max(1e-12),
+                gm_w1 / gm_w4.max(1e-12)
+            );
+            pipeline_rows.push(obj(vec![
+                ("workload", Json::Str("kernel-gemm".into())),
+                ("mode", Json::Str(mode.into())),
+                ("t_rows", Json::Num(t_rows as f64)),
+                ("reps", Json::Num(tile_reps as f64)),
+                ("matvec_loop_s", Json::Num(gm_loop)),
+                ("gemm_s", Json::Num(gm_tiled)),
+                ("speedup", Json::Num(gm_loop / gm_tiled.max(1e-12))),
+                ("identical", Json::Bool(identical)),
+                ("workers1_s", Json::Num(gm_w1)),
+                ("workers4_s", Json::Num(gm_w4)),
+                ("workers_speedup", Json::Num(gm_w1 / gm_w4.max(1e-12))),
             ]));
         }
     }

@@ -70,6 +70,13 @@ pub struct RunPlan {
     /// Hot-row cache capacity for node memory + mailbox (`--hot-rows`;
     /// 0 = off). Deterministic either way.
     pub hot_rows: usize,
+    /// Batch tiles for the blocked forward/backward in the reference
+    /// executor (`--exec-tiles`). 1 = serial, bitwise-identical to the
+    /// pre-tiling path; >1 runs tiles on a worker pool with per-tile
+    /// gradient buffers reduced in fixed order (run-to-run deterministic
+    /// for a fixed count, ULP-bounded vs serial). Applied to the model
+    /// by [`Self::trainer`]; no-op on PJRT executables.
+    pub exec_tiles: usize,
     /// The on-disk edge stream this plan was loaded from
     /// ([`Self::from_edge_file`]); anchors the container path.
     pub graph_file: Option<PathBuf>,
@@ -195,6 +202,7 @@ impl RunPlan {
             out_of_core: false,
             cache_shards: 2,
             hot_rows: 0,
+            exec_tiles: 1,
             graph_file,
         }
     }
@@ -239,6 +247,7 @@ impl RunPlan {
     }
 
     pub fn trainer(&self) -> Result<Trainer<'_>> {
+        self.model.set_exec_tiles(self.exec_tiles.max(1));
         let mut cfg =
             TrainerCfg::for_model(&self.model, &self.graph, self.options.lr, self.threads);
         cfg.strategy = self.options.strategy;
@@ -429,6 +438,7 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
         .flag("out-of-core", "keep the T-CSR on disk (<graph-file>.tcsr container + shard cache)")
         .opt("cache-shards", "2", "resident-shard budget of the out-of-core cache")
         .opt("hot-rows", "0", "hot-row cache capacity for node memory/mailbox (0 = off)")
+        .opt("exec-tiles", "1", "batch tiles for blocked forward/backward (1 = serial exec)")
         .opt("seed", "42", "RNG seed")
         .opt("checkpoint", "", "checkpoint path (atomic, checksummed); empty = off")
         .opt("checkpoint-every", "0", "save a run checkpoint every N batches (0 = epoch end only)")
@@ -464,6 +474,7 @@ pub(super) fn cli_train(args: &[String]) -> Result<()> {
     plan.out_of_core = a.get_flag("out-of-core");
     plan.cache_shards = a.get_usize_min("cache-shards", 1)?;
     plan.hot_rows = a.get_usize("hot-rows")?;
+    plan.exec_tiles = a.get_usize_min("exec-tiles", 1)?;
     anyhow::ensure!(
         !plan.out_of_core || !graph_file.is_empty(),
         "--out-of-core needs --graph-file (the container is built next to it)"

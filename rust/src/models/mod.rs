@@ -103,6 +103,15 @@ impl Model {
     pub fn uses_memory(&self) -> bool {
         self.mf.dims.get("use_memory").copied() == Some(1)
     }
+
+    /// Set the batch-tile count for blocked forward/backward on the
+    /// train and eval executables (the `clf` step stays serial; its MLP
+    /// is a rounding error next to the TGNN step). 1 = the serial path,
+    /// bitwise-identical to the pre-tiling executor; no-op on PJRT.
+    pub fn set_exec_tiles(&self, tiles: usize) {
+        self.train_exe.set_exec_tiles(tiles);
+        self.eval_exe.set_exec_tiles(tiles);
+    }
 }
 
 #[cfg(test)]

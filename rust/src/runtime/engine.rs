@@ -85,6 +85,15 @@ impl Executable {
         &self.spec
     }
 
+    /// Set the batch-tile count for blocked TGNN execution on the
+    /// reference backend (see [`RefExec::set_tiles`]); no-op for PJRT
+    /// executables, whose compiled artifacts own their own scheduling.
+    pub fn set_exec_tiles(&self, tiles: usize) {
+        if let Backend::Reference(r) = &self.backend {
+            r.set_tiles(tiles);
+        }
+    }
+
     /// Execute with host tensors; returns host tensors in the manifest's
     /// output order. Inputs must match the spec in count, shape and dtype.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {

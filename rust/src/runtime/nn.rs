@@ -37,23 +37,41 @@
 //! it is a typed, named [`DimCapError`] at spec-parse time — never a
 //! panic inside a producer thread.
 //!
-//! # Kernels and scratch
+//! # Kernels, batch tiles, and scratch
 //!
-//! The hot kernels (`matvec`, `matvec_t_acc`, `outer_acc`, `axpy`,
-//! `vadd`) come from [`super::simd`]: portable 8-lane loops with scalar
-//! tails, bitwise-identical to the scalar reference for all accumulate
-//! kernels and ULP-bounded for the reassociated reductions (see that
-//! module's determinism contract). The GRU gates, projection, attention
-//! score/combine, softmax-weighted sum, and the whole backward pass are
-//! phrased as those kernels, so production widths get packed lanes.
+//! The hot kernels come from [`super::simd`]: portable 8-lane loops with
+//! scalar tails, bitwise-identical to the scalar reference for all
+//! accumulate kernels and ULP-bounded for the reassociated reductions
+//! (see that module's determinism contract). Since the batch-blocked
+//! GEMM backend, forward and backward are phrased over **batch tiles**
+//! rather than one root row at a time: an [`ExecCtx`] splits the node
+//! rows (and each hop level's attention targets) into up to
+//! [`MAX_TILES`] contiguous tiles, each walked in `TILE_ROWS`-row blocks
+//! by the `gemm` / `gemm_acc` / `gemm_t_acc` / `outer_acc_block`
+//! kernels, so every weight matrix streams from cache once per block
+//! instead of once per row. Tiles run on the caller's
+//! [`WorkerPool`](crate::util::pool::WorkerPool) ([`super::RefExec`]
+//! owns it); chunk boundaries are a pure function of the row count and
+//! tile count, never of scheduling.
 //!
-//! All per-row scratch that used to live in `[f32; 64]` stack arrays now
-//! lives in a pooled scratch arena: one [`TensorPool`] buffer per logical
-//! vector, taken **once per step** and reused across every row/slot loop
-//! iteration. That removes the old 64-float ceiling (width 100 has
-//! `ki = dh + dte + de = 108`) while keeping the steady-state guarantee:
-//! once the pool is warm a train step performs **zero heap allocations**
-//! at any width (`rust/tests/alloc_train.rs` proves widths 8 and 100).
+//! **Determinism across tile counts.** Tile count 1 executes inline and
+//! is *bitwise identical* to the pre-tiling serial executor: the GEMM
+//! kernels perform element-for-element the same operation sequence as
+//! the per-row matvec loops they replace, and the serial path
+//! accumulates gradients straight into the single gradient vector in
+//! the original row order. Multi-tile runs accumulate into per-tile
+//! gradient buffers reduced in **fixed tile order** (and reduce the
+//! loss from per-tile `f64` partials the same way), so a fixed tile
+//! count is run-to-run deterministic, and ULP-bounded against serial —
+//! both pinned by `rust/tests/pipeline_identity.rs`.
+//!
+//! All per-row/per-block scratch lives in a pooled scratch arena: tile
+//! workers take block-sized buffers from the shared [`TensorPool`]
+//! (recycled across steps, no 64-float stack ceiling), which keeps the
+//! steady-state guarantee: once the pool is warm a train step performs
+//! **zero heap allocations** at any width and any tile count
+//! (`rust/tests/alloc_train.rs` proves widths 8 and 100, serial and
+//! tiled).
 //!
 //! Training steps backpropagate through all of the above with
 //! hand-derived gradients (verified against finite differences in the
@@ -69,10 +87,14 @@
 #![allow(clippy::needless_range_loop)] // index-heavy kernels: ranges are clearer
 
 use super::manifest::StepSpec;
-use super::simd::{axpy, dot, matvec, matvec_acc, matvec_t_acc, outer_acc, vadd};
+use super::simd::{
+    axpy, dot, gemm, gemm_acc, gemm_t_acc, matvec, matvec_t_acc, outer_acc, outer_acc_block, vadd,
+};
 use super::tensor::Tensor;
+use crate::util::pool::WorkerPool;
 use crate::util::tensor_pool::{PoolBuf, TensorPool};
 use anyhow::{bail, ensure, Result};
+use std::ops::Range;
 
 /// Adam hyper-parameters (the standard defaults).
 const BETA1: f32 = 0.9;
@@ -599,6 +621,90 @@ impl Net {
 }
 
 // ---------------------------------------------------------------------
+// Blocked execution context
+// ---------------------------------------------------------------------
+
+/// Upper bound on the batch-tile count (and thus on the fixed-size
+/// per-tile bookkeeping — loss partials, gradient-buffer slots).
+pub const MAX_TILES: usize = 64;
+
+/// Rows per GEMM block inside a tile: bounds every per-tile scratch
+/// buffer at `TILE_ROWS × width` floats while keeping each weight
+/// matrix resident in cache across the block.
+const TILE_ROWS: usize = 32;
+
+/// How a TGNN step executes: the batch-tile count plus the worker pool
+/// the tiles run on. `tiles == 1` / `workers == None` is the serial
+/// path (inline, bitwise-identical to the pre-tiling executor).
+pub(crate) struct ExecCtx<'a> {
+    pub tiles: usize,
+    pub workers: Option<&'a WorkerPool>,
+}
+
+impl ExecCtx<'_> {
+    /// Dispatch `f(tile_idx, item_range)` over `0..n`: inline as a single
+    /// tile on the serial path, otherwise as up to `tiles` contiguous
+    /// chunks on the worker pool. Chunk boundaries are a pure function of
+    /// `n` and the tile count (see [`WorkerPool::run_chunks`]), so a
+    /// fixed tile count always produces the same tile→rows assignment.
+    /// The dispatch joins before returning — later phases see every
+    /// tile's writes.
+    fn for_tiles(&self, n: usize, f: impl Fn(usize, Range<usize>) + Sync) {
+        match self.workers {
+            Some(pool) if self.tiles > 1 => {
+                pool.run_chunks(n, n.div_ceil(self.tiles).max(1), f);
+            }
+            _ => {
+                if n > 0 {
+                    f(0, 0..n);
+                }
+            }
+        }
+    }
+}
+
+/// Raw base pointer of a shared row-major `f32` buffer, `Send + Sync` so
+/// tile closures can carve out views of their own disjoint row ranges.
+///
+/// SAFETY: every `for_tiles` dispatch hands each tile a disjoint row
+/// range and each buffer row has exactly one owning tile per phase, so
+/// no two live mutable views overlap; the dispatch joins before any
+/// later phase reads the buffer through a plain borrow.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    fn of(buf: &mut [f32]) -> SendPtr {
+        SendPtr(buf.as_mut_ptr())
+    }
+
+    /// Mutable view of rows `range` (`stride` floats per row).
+    ///
+    /// SAFETY: caller guarantees the range is in bounds of the original
+    /// buffer and disjoint from every other live view of it.
+    unsafe fn rows_mut<'a>(self, stride: usize, range: Range<usize>) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(range.start * stride), range.len() * stride)
+    }
+
+    /// Shared view of rows `range`. SAFETY: as [`Self::rows_mut`], plus
+    /// no concurrently live mutable view may overlap the range.
+    unsafe fn rows<'a>(self, stride: usize, range: Range<usize>) -> &'a [f32] {
+        std::slice::from_raw_parts(self.0.add(range.start * stride), range.len() * stride)
+    }
+}
+
+/// [`SendPtr`] for the per-tile `f64` loss partials (one slot per tile
+/// index, so tile writes never alias).
+#[derive(Clone, Copy)]
+struct SendPtr64(*mut f64);
+
+unsafe impl Send for SendPtr64 {}
+unsafe impl Sync for SendPtr64 {}
+
+// ---------------------------------------------------------------------
 // TGNN train/eval step
 // ---------------------------------------------------------------------
 
@@ -610,6 +716,7 @@ pub(crate) fn run_tgnn_step(
     inputs: &[Tensor],
     out: &mut Vec<Tensor>,
     pool: &TensorPool,
+    exec: &ExecCtx<'_>,
 ) -> Result<()> {
     let net = Net::from_spec(spec)?;
     let lo = layout(&net.d, net.use_memory, net.dv, net.de, net.dm, net.maild);
@@ -629,21 +736,12 @@ pub(crate) fn run_tgnn_step(
     let batch_efeat = inputs[net.i_batch_efeat].as_f32()?;
     let train = spec.outputs.iter().any(|o| o.name == "new_params");
 
-    // Pooled scratch arena: one buffer per logical per-row vector, taken
-    // once per step and reused across every loop iteration (no 64-float
-    // stack ceiling, zero steady-state allocations once the pool is warm).
-    let mut gin = pool.take(gi);
-    let mut pre = pool.take(dm);
-    let mut rh = pool.take(dm);
-    let mut u = pool.take(ui);
-    let mut hpre = pool.take(dh);
-    let mut qr = pool.take(dh);
-    let mut kin = pool.take(ki);
-    let mut e = pool.take(fanout);
-    let mut din = pool.take(2 * dh);
-
-    // ---- Memory update: m̃ = mail_mask·GRU([mail, φ(Δt)], mem) +
-    // (1-mail_mask)·mem, with gates saved for the backward pass.
+    // ---- Memory update + input projection, batch-tiled. Each tile owns
+    // a disjoint node-row range; inside a tile, rows go through in
+    // TILE_ROWS blocks so each weight matrix streams from cache once per
+    // block instead of once per row. The blocked kernels are bitwise
+    // identical to the per-row matvec loops they replace (`super::simd`),
+    // so any tile count produces the same m̃/x bits.
     let (mem, mem_dt, mail, mail_dt, mail_mask);
     let (mut mt, mut g_r, mut g_z, mut g_c);
     if net.use_memory {
@@ -659,34 +757,6 @@ pub(crate) fn run_tgnn_step(
         g_r = pool.take(n * dm);
         g_z = pool.take(n * dm);
         g_c = pool.take(n * dm);
-        for i in 0..n {
-            let mem_i = &mem[i * dm..(i + 1) * dm];
-            gin[..maild].copy_from_slice(&mail[i * maild..(i + 1) * maild]);
-            time_enc(mail_dt[i], dt_scale, &mut gin[maild..gi]);
-            let o = i * dm;
-            matvec(&p[lo.w_r..lo.w_r + dm * gi], &gin[..gi], &mut pre[..dm]);
-            matvec_acc(&p[lo.u_r..lo.u_r + dm * dm], mem_i, &mut pre[..dm]);
-            for k in 0..dm {
-                g_r[o + k] = sigmoid(pre[k] + p[lo.b_r + k]);
-            }
-            matvec(&p[lo.w_z..lo.w_z + dm * gi], &gin[..gi], &mut pre[..dm]);
-            matvec_acc(&p[lo.u_z..lo.u_z + dm * dm], mem_i, &mut pre[..dm]);
-            for k in 0..dm {
-                g_z[o + k] = sigmoid(pre[k] + p[lo.b_z + k]);
-            }
-            for k in 0..dm {
-                rh[k] = g_r[o + k] * mem_i[k];
-            }
-            matvec(&p[lo.w_n..lo.w_n + dm * gi], &gin[..gi], &mut pre[..dm]);
-            matvec_acc(&p[lo.u_n..lo.u_n + dm * dm], &rh[..dm], &mut pre[..dm]);
-            let mk = mail_mask[i];
-            for k in 0..dm {
-                let c = (pre[k] + p[lo.b_n + k]).tanh();
-                g_c[o + k] = c;
-                let gru = (1.0 - g_z[o + k]) * c + g_z[o + k] * mem_i[k];
-                mt[o + k] = mk * gru + (1.0 - mk) * mem_i[k];
-            }
-        }
     } else {
         mem = &[];
         mem_dt = &[];
@@ -698,26 +768,108 @@ pub(crate) fn run_tgnn_step(
         g_z = pool.take(0);
         g_c = pool.take(0);
     }
-
-    // ---- Input projection x = tanh(W_in u + b_in), u = [m̃, feat, φ].
     let mut x = pool.take(n * dh);
-    for i in 0..n {
-        if net.use_memory {
-            u[..dm].copy_from_slice(&mt[i * dm..(i + 1) * dm]);
-            u[dm..dm + dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
-            time_enc(mem_dt[i], dt_scale, &mut u[dm + dv..ui]);
-        } else {
-            u[..dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
-        }
-        matvec(&p[lo.w_in..lo.w_in + dh * ui], &u[..ui], &mut hpre[..dh]);
-        for k in 0..dh {
-            x[i * dh + k] = (hpre[k] + p[lo.b_in + k]).tanh();
-        }
+    {
+        let mt_p = SendPtr::of(&mut mt);
+        let g_r_p = SendPtr::of(&mut g_r);
+        let g_z_p = SendPtr::of(&mut g_z);
+        let g_c_p = SendPtr::of(&mut g_c);
+        let x_p = SendPtr::of(&mut x);
+        exec.for_tiles(n, |_ti, rows| {
+            // Per-tile block scratch from the shared pool: recycled
+            // buffers, so the steady state stays allocation-free.
+            let mut gin_t = pool.take(TILE_ROWS * gi);
+            let mut pre_t = pool.take(TILE_ROWS * dm.max(dh));
+            let mut rh_t = pool.take(TILE_ROWS * dm);
+            let mut u_t = pool.take(TILE_ROWS * ui);
+            let mut b0 = rows.start;
+            while b0 < rows.end {
+                let b1 = (b0 + TILE_ROWS).min(rows.end);
+                let t = b1 - b0;
+                if net.use_memory {
+                    // m̃ = mail_mask·GRU([mail, φ(Δt)], mem) +
+                    // (1-mail_mask)·mem, gates saved for the backward.
+                    // SAFETY: rows [b0, b1) belong to this tile alone.
+                    let (mt_r, g_r_r, g_z_r, g_c_r) = unsafe {
+                        (
+                            mt_p.rows_mut(dm, b0..b1),
+                            g_r_p.rows_mut(dm, b0..b1),
+                            g_z_p.rows_mut(dm, b0..b1),
+                            g_c_p.rows_mut(dm, b0..b1),
+                        )
+                    };
+                    let mem_b = &mem[b0 * dm..b1 * dm];
+                    for (i, row) in (b0..b1).enumerate() {
+                        gin_t[i * gi..i * gi + maild]
+                            .copy_from_slice(&mail[row * maild..(row + 1) * maild]);
+                        time_enc(mail_dt[row], dt_scale, &mut gin_t[i * gi + maild..(i + 1) * gi]);
+                    }
+                    gemm(&p[lo.w_r..lo.w_r + dm * gi], &gin_t, t, dm, gi, &mut pre_t);
+                    gemm_acc(&p[lo.u_r..lo.u_r + dm * dm], mem_b, t, dm, dm, &mut pre_t);
+                    for i in 0..t {
+                        for k in 0..dm {
+                            g_r_r[i * dm + k] = sigmoid(pre_t[i * dm + k] + p[lo.b_r + k]);
+                        }
+                    }
+                    gemm(&p[lo.w_z..lo.w_z + dm * gi], &gin_t, t, dm, gi, &mut pre_t);
+                    gemm_acc(&p[lo.u_z..lo.u_z + dm * dm], mem_b, t, dm, dm, &mut pre_t);
+                    for i in 0..t {
+                        for k in 0..dm {
+                            g_z_r[i * dm + k] = sigmoid(pre_t[i * dm + k] + p[lo.b_z + k]);
+                        }
+                    }
+                    for i in 0..t * dm {
+                        rh_t[i] = g_r_r[i] * mem_b[i];
+                    }
+                    gemm(&p[lo.w_n..lo.w_n + dm * gi], &gin_t, t, dm, gi, &mut pre_t);
+                    gemm_acc(&p[lo.u_n..lo.u_n + dm * dm], &rh_t, t, dm, dm, &mut pre_t);
+                    for (i, row) in (b0..b1).enumerate() {
+                        let mk = mail_mask[row];
+                        for k in 0..dm {
+                            let c = (pre_t[i * dm + k] + p[lo.b_n + k]).tanh();
+                            g_c_r[i * dm + k] = c;
+                            let gru = (1.0 - g_z_r[i * dm + k]) * c
+                                + g_z_r[i * dm + k] * mem_b[i * dm + k];
+                            mt_r[i * dm + k] = mk * gru + (1.0 - mk) * mem_b[i * dm + k];
+                        }
+                    }
+                }
+                // Projection x = tanh(W_in u + b_in), u = [m̃, feat, φ].
+                // SAFETY: same disjoint row range; the GRU views above
+                // are out of scope, so reading this tile's m̃ rows back
+                // does not overlap a live mutable view.
+                let x_r = unsafe { x_p.rows_mut(dh, b0..b1) };
+                for (i, row) in (b0..b1).enumerate() {
+                    let uo = i * ui;
+                    if net.use_memory {
+                        let mt_row = unsafe { mt_p.rows(dm, row..row + 1) };
+                        u_t[uo..uo + dm].copy_from_slice(mt_row);
+                        u_t[uo + dm..uo + dm + dv]
+                            .copy_from_slice(&node_feat[row * dv..(row + 1) * dv]);
+                        time_enc(mem_dt[row], dt_scale, &mut u_t[uo + dm + dv..uo + ui]);
+                    } else {
+                        u_t[uo..uo + dv].copy_from_slice(&node_feat[row * dv..(row + 1) * dv]);
+                    }
+                }
+                gemm(&p[lo.w_in..lo.w_in + dh * ui], &u_t, t, dh, ui, &mut pre_t);
+                for i in 0..t {
+                    for k in 0..dh {
+                        x_r[i * dh + k] = (pre_t[i * dh + k] + p[lo.b_in + k]).tanh();
+                    }
+                }
+                b0 = b1;
+            }
+        });
     }
 
     // ---- Temporal attention, deepest hop first. Leaf nodes pass their
     // projection through unchanged; interior/root nodes attend over their
-    // sampled neighbors' h.
+    // sampled neighbors' h. Each level's targets are batch-tiled; the
+    // `for_tiles` join between levels is the barrier that makes
+    // children's h visible to their parents. Key/value inputs are built
+    // densely for every slot of a block (masked slots produce finite
+    // values that are never read), so W_k/W_v apply as one blocked GEMM
+    // per block straight into the global k/v rows.
     let slots_total = n - roots;
     let inner = net.lvl_off[hops]; // rows that act as attention targets
     let mut h = pool.take(n * dh);
@@ -727,303 +879,545 @@ pub(crate) fn run_tgnn_step(
     let mut asum = pool.take(inner * dh);
     h[inner * dh..n * dh].copy_from_slice(&x[inner * dh..n * dh]);
     let scale_inv = 1.0 / (dh as f32).sqrt();
-    for lev in (0..hops).rev() {
-        let dt_in = inputs[net.i_hop_dt[lev]].as_f32()?;
-        let mask_in = inputs[net.i_hop_mask[lev]].as_f32()?;
-        let ef_in = inputs[net.i_hop_efeat[lev]].as_f32()?;
-        let child_base = net.lvl_off[lev + 1];
-        let gbase = child_base - roots;
-        let (h_tgt, h_child) = h.split_at_mut(child_base * dh);
-        for r0 in 0..net.lvl_size[lev] {
-            let root_row = net.lvl_off[lev] + r0;
-            let xr = &x[root_row * dh..(root_row + 1) * dh];
-            matvec(&p[lo.w_q..lo.w_q + dh * dh], xr, &mut qr[..dh]);
-            let mut any = false;
-            let mut emax = f32::MIN;
-            for j in 0..fanout {
-                let slot = r0 * fanout + j;
-                if mask_in[slot] <= 0.5 {
-                    continue;
-                }
-                kin[..dh].copy_from_slice(&h_child[slot * dh..(slot + 1) * dh]);
-                time_enc(dt_in[slot], dt_scale, &mut kin[dh..dh + dte]);
-                kin[dh + dte..ki].copy_from_slice(&ef_in[slot * de..(slot + 1) * de]);
-                let ko = (gbase + slot) * dh;
-                matvec(&p[lo.w_k..lo.w_k + dh * ki], &kin[..ki], &mut att_k[ko..ko + dh]);
-                matvec(&p[lo.w_v..lo.w_v + dh * ki], &kin[..ki], &mut att_v[ko..ko + dh]);
-                e[j] = dot(&qr[..dh], &att_k[ko..ko + dh]) * scale_inv;
-                emax = emax.max(e[j]);
-                any = true;
-            }
-            let ao = root_row * dh;
-            if any {
-                let mut esum = 0.0f32;
-                for j in 0..fanout {
-                    let slot = r0 * fanout + j;
-                    if mask_in[slot] <= 0.5 {
-                        continue;
-                    }
-                    let a = (e[j] - emax).exp();
-                    att_a[gbase + slot] = a;
-                    esum += a;
-                }
-                for j in 0..fanout {
-                    let slot = r0 * fanout + j;
-                    if mask_in[slot] <= 0.5 {
-                        continue;
-                    }
-                    let a = att_a[gbase + slot] / esum;
-                    att_a[gbase + slot] = a;
-                    axpy(
-                        &mut asum[ao..ao + dh],
-                        a,
-                        &att_v[(gbase + slot) * dh..(gbase + slot + 1) * dh],
-                    );
-                }
-            }
-            matvec(&p[lo.w_s..lo.w_s + dh * dh], xr, &mut hpre[..dh]);
-            matvec_acc(&p[lo.w_a..lo.w_a + dh * dh], &asum[ao..ao + dh], &mut hpre[..dh]);
-            for k in 0..dh {
-                h_tgt[root_row * dh + k] = (hpre[k] + p[lo.b_o + k]).tanh();
-            }
-        }
-    }
-
-    // ---- Link decoder: s = w2·relu(W1 [z_a, z_b] + b1) + b2, BCE with
-    // logits over (src, dst) positives and (src, neg) corruptions.
-    let mut s_p = pool.take(bs);
-    let mut s_n = pool.take(bs);
-    let mut hid_p = pool.take(bs * dd);
-    let mut hid_n = pool.take(bs * dd);
-    let wnorm = edge_mask.iter().sum::<f32>().max(1e-6);
-    let mut loss_acc = 0.0f64;
-    for i in 0..bs {
-        for pass in 0..2 {
-            let b_row = if pass == 0 { bs + i } else { 2 * bs + i };
-            din[..dh].copy_from_slice(&h[i * dh..(i + 1) * dh]);
-            din[dh..2 * dh].copy_from_slice(&h[b_row * dh..(b_row + 1) * dh]);
-            let hid = if pass == 0 {
-                &mut hid_p[i * dd..(i + 1) * dd]
-            } else {
-                &mut hid_n[i * dd..(i + 1) * dd]
-            };
-            matvec(&p[lo.w1..lo.w1 + dd * 2 * dh], &din[..2 * dh], hid);
-            for k in 0..dd {
-                hid[k] = (hid[k] + p[lo.b1 + k]).max(0.0);
-            }
-            let s = p[lo.b2] + dot(&p[lo.w2..lo.w2 + dd], hid);
-            if pass == 0 {
-                s_p[i] = s;
-            } else {
-                s_n[i] = s;
-            }
-        }
-        loss_acc +=
-            (edge_mask[i] * (softplus(-s_p[i]) + softplus(s_n[i]))) as f64 / wnorm as f64;
-    }
-    let loss = loss_acc as f32;
-
-    // ---- Backward + Adam (train steps only).
-    let (mut new_p, mut new_m, mut new_v) = (None, None, None);
-    if train {
-        let mut g = pool.take(net.pc);
-        let mut dh_buf = pool.take(n * dh);
-        let mut dx_buf = pool.take(n * dh);
-        let mut dhid = pool.take(dd);
-        let mut ddin = pool.take(2 * dh);
-        let mut ds = pool.take(dh);
-        let mut da = pool.take(dh);
-        let mut dqr = pool.take(dh);
-        let mut dk = pool.take(dh);
-        let mut dv_ = pool.take(dh);
-        let mut dalpha = pool.take(fanout);
-        let mut dkin = pool.take(ki);
-        let mut dupre = pool.take(dh);
-        let mut dufull = pool.take(ui);
-        let mut dcpre = pool.take(dm);
-        let mut dzpre = pool.take(dm);
-        let mut drh = pool.take(dm);
-        let mut drpre = pool.take(dm);
-
-        // Decoder backward → dW1/b1/w2/b2 and dz into dh_buf.
-        for i in 0..bs {
-            let wi = edge_mask[i];
-            if wi <= 0.0 {
-                continue;
-            }
-            for pass in 0..2 {
-                let (sg, hid, b_row) = if pass == 0 {
-                    (-sigmoid(-s_p[i]) * wi / wnorm, &hid_p[i * dd..(i + 1) * dd], bs + i)
-                } else {
-                    (sigmoid(s_n[i]) * wi / wnorm, &hid_n[i * dd..(i + 1) * dd], 2 * bs + i)
-                };
-                g[lo.b2] += sg;
-                for k in 0..dd {
-                    g[lo.w2 + k] += sg * hid[k];
-                    dhid[k] = if hid[k] > 0.0 { sg * p[lo.w2 + k] } else { 0.0 };
-                }
-                din[..dh].copy_from_slice(&h[i * dh..(i + 1) * dh]);
-                din[dh..2 * dh].copy_from_slice(&h[b_row * dh..(b_row + 1) * dh]);
-                vadd(&mut g[lo.b1..lo.b1 + dd], &dhid[..dd]);
-                outer_acc(&mut g[lo.w1..lo.w1 + dd * 2 * dh], &dhid[..dd], &din[..2 * dh]);
-                ddin[..2 * dh].fill(0.0);
-                matvec_t_acc(&p[lo.w1..lo.w1 + dd * 2 * dh], &dhid[..dd], &mut ddin[..2 * dh]);
-                vadd(&mut dh_buf[i * dh..(i + 1) * dh], &ddin[..dh]);
-                vadd(&mut dh_buf[b_row * dh..(b_row + 1) * dh], &ddin[dh..2 * dh]);
-            }
-        }
-
-        // Attention backward, shallowest hop first (children receive their
-        // dh before their own block is processed).
-        for lev in 0..hops {
+    {
+        let xs: &[f32] = &x;
+        let h_p = SendPtr::of(&mut h);
+        let att_a_p = SendPtr::of(&mut att_a);
+        let att_k_p = SendPtr::of(&mut att_k);
+        let att_v_p = SendPtr::of(&mut att_v);
+        let asum_p = SendPtr::of(&mut asum);
+        for lev in (0..hops).rev() {
             let dt_in = inputs[net.i_hop_dt[lev]].as_f32()?;
             let mask_in = inputs[net.i_hop_mask[lev]].as_f32()?;
             let ef_in = inputs[net.i_hop_efeat[lev]].as_f32()?;
             let child_base = net.lvl_off[lev + 1];
             let gbase = child_base - roots;
-            let (dh_tgt, dh_child) = dh_buf.split_at_mut(child_base * dh);
-            for r0 in 0..net.lvl_size[lev] {
-                let root_row = net.lvl_off[lev] + r0;
-                let hr = &h[root_row * dh..(root_row + 1) * dh];
-                let mut nz = false;
-                for k in 0..dh {
-                    let dval = dh_tgt[root_row * dh + k];
-                    // lint: allow(float-eq, "exact-zero gradient skip; any nonzero must propagate")
-                    if dval != 0.0 {
-                        nz = true;
+            let lbase = net.lvl_off[lev];
+            exec.for_tiles(net.lvl_size[lev], |_ti, targets| {
+                let mut qr_t = pool.take(TILE_ROWS * dh);
+                let mut kin_t = pool.take(TILE_ROWS * fanout * ki);
+                let mut hpre_t = pool.take(TILE_ROWS * dh);
+                let mut e = pool.take(fanout);
+                let mut b0 = targets.start;
+                while b0 < targets.end {
+                    let b1 = (b0 + TILE_ROWS).min(targets.end);
+                    let t = b1 - b0;
+                    // SAFETY: target rows [lbase+b0, lbase+b1) and slot
+                    // rows [b0·fanout, b1·fanout) of this level belong to
+                    // this tile alone; the h rows read (children) start at
+                    // child_base, past every target row written at this
+                    // level, and were finalized by the previous level's
+                    // dispatch (or the serial leaf copy).
+                    let (s0, s1) = (gbase + b0 * fanout, gbase + b1 * fanout);
+                    let (c0, c1) = (child_base + b0 * fanout, child_base + b1 * fanout);
+                    let h_tgt = unsafe { h_p.rows_mut(dh, lbase + b0..lbase + b1) };
+                    let h_child = unsafe { h_p.rows(dh, c0..c1) };
+                    let att_k_r = unsafe { att_k_p.rows_mut(dh, s0..s1) };
+                    let att_v_r = unsafe { att_v_p.rows_mut(dh, s0..s1) };
+                    let att_a_r = unsafe { att_a_p.rows_mut(1, s0..s1) };
+                    let asum_r = unsafe { asum_p.rows_mut(dh, lbase + b0..lbase + b1) };
+                    let x_tile = &xs[(lbase + b0) * dh..(lbase + b1) * dh];
+                    gemm(&p[lo.w_q..lo.w_q + dh * dh], x_tile, t, dh, dh, &mut qr_t);
+                    for s in 0..t * fanout {
+                        let slot = b0 * fanout + s;
+                        let so = s * ki;
+                        kin_t[so..so + dh].copy_from_slice(&h_child[s * dh..(s + 1) * dh]);
+                        time_enc(dt_in[slot], dt_scale, &mut kin_t[so + dh..so + dh + dte]);
+                        kin_t[so + dh + dte..so + ki]
+                            .copy_from_slice(&ef_in[slot * de..(slot + 1) * de]);
                     }
-                    ds[k] = dval * (1.0 - hr[k] * hr[k]);
+                    gemm(&p[lo.w_k..lo.w_k + dh * ki], &kin_t, t * fanout, dh, ki, att_k_r);
+                    gemm(&p[lo.w_v..lo.w_v + dh * ki], &kin_t, t * fanout, dh, ki, att_v_r);
+                    for i in 0..t {
+                        let r0 = b0 + i;
+                        let qr = &qr_t[i * dh..(i + 1) * dh];
+                        let mut any = false;
+                        let mut emax = f32::MIN;
+                        for j in 0..fanout {
+                            let slot = r0 * fanout + j;
+                            if mask_in[slot] <= 0.5 {
+                                continue;
+                            }
+                            let ko = (i * fanout + j) * dh;
+                            e[j] = dot(qr, &att_k_r[ko..ko + dh]) * scale_inv;
+                            emax = emax.max(e[j]);
+                            any = true;
+                        }
+                        if any {
+                            let mut esum = 0.0f32;
+                            for j in 0..fanout {
+                                let slot = r0 * fanout + j;
+                                if mask_in[slot] <= 0.5 {
+                                    continue;
+                                }
+                                let a = (e[j] - emax).exp();
+                                att_a_r[i * fanout + j] = a;
+                                esum += a;
+                            }
+                            for j in 0..fanout {
+                                let slot = r0 * fanout + j;
+                                if mask_in[slot] <= 0.5 {
+                                    continue;
+                                }
+                                let a = att_a_r[i * fanout + j] / esum;
+                                att_a_r[i * fanout + j] = a;
+                                let vo = (i * fanout + j) * dh;
+                                axpy(&mut asum_r[i * dh..(i + 1) * dh], a, &att_v_r[vo..vo + dh]);
+                            }
+                        }
+                    }
+                    gemm(&p[lo.w_s..lo.w_s + dh * dh], x_tile, t, dh, dh, &mut hpre_t);
+                    gemm_acc(&p[lo.w_a..lo.w_a + dh * dh], asum_r, t, dh, dh, &mut hpre_t);
+                    for i in 0..t {
+                        for k in 0..dh {
+                            h_tgt[i * dh + k] = (hpre_t[i * dh + k] + p[lo.b_o + k]).tanh();
+                        }
+                    }
+                    b0 = b1;
                 }
-                if !nz {
-                    continue;
+            });
+        }
+    }
+
+    // ---- Link decoder: s = w2·relu(W1 [z_a, z_b] + b1) + b2, BCE with
+    // logits over (src, dst) positives and (src, neg) corruptions.
+    // Batch-tiled; each tile sums its loss terms into its own f64 slot
+    // in ascending row order, and the slots reduce in fixed tile order —
+    // with one tile, slot 0 is exactly the serial accumulator.
+    let mut s_p = pool.take(bs);
+    let mut s_n = pool.take(bs);
+    let mut hid_p = pool.take(bs * dd);
+    let mut hid_n = pool.take(bs * dd);
+    let wnorm = edge_mask.iter().sum::<f32>().max(1e-6);
+    let mut loss_parts = [0.0f64; MAX_TILES];
+    {
+        let hs: &[f32] = &h;
+        let s_p_p = SendPtr::of(&mut s_p);
+        let s_n_p = SendPtr::of(&mut s_n);
+        let hid_p_p = SendPtr::of(&mut hid_p);
+        let hid_n_p = SendPtr::of(&mut hid_n);
+        let lp_p = SendPtr64(loss_parts.as_mut_ptr());
+        exec.for_tiles(bs, |ti, irange| {
+            // SAFETY: one f64 slot per tile index (ti < tiles ≤ MAX_TILES).
+            let part = unsafe { &mut *lp_p.0.add(ti) };
+            let mut din_t = pool.take(TILE_ROWS * 2 * dh);
+            let mut b0 = irange.start;
+            while b0 < irange.end {
+                let b1 = (b0 + TILE_ROWS).min(irange.end);
+                let t = b1 - b0;
+                for pass in 0..2 {
+                    let boff = if pass == 0 { bs } else { 2 * bs };
+                    for (i, row) in (b0..b1).enumerate() {
+                        let io = i * 2 * dh;
+                        din_t[io..io + dh].copy_from_slice(&hs[row * dh..(row + 1) * dh]);
+                        din_t[io + dh..io + 2 * dh]
+                            .copy_from_slice(&hs[(boff + row) * dh..(boff + row + 1) * dh]);
+                    }
+                    // SAFETY: score/hidden rows [b0, b1) belong to this
+                    // tile alone.
+                    let hid_r = unsafe {
+                        if pass == 0 {
+                            hid_p_p.rows_mut(dd, b0..b1)
+                        } else {
+                            hid_n_p.rows_mut(dd, b0..b1)
+                        }
+                    };
+                    let s_r = unsafe {
+                        if pass == 0 {
+                            s_p_p.rows_mut(1, b0..b1)
+                        } else {
+                            s_n_p.rows_mut(1, b0..b1)
+                        }
+                    };
+                    gemm(&p[lo.w1..lo.w1 + dd * 2 * dh], &din_t, t, dd, 2 * dh, hid_r);
+                    for i in 0..t {
+                        let hid = &mut hid_r[i * dd..(i + 1) * dd];
+                        for k in 0..dd {
+                            hid[k] = (hid[k] + p[lo.b1 + k]).max(0.0);
+                        }
+                        s_r[i] = p[lo.b2] + dot(&p[lo.w2..lo.w2 + dd], hid);
+                    }
                 }
-                let xr = &x[root_row * dh..(root_row + 1) * dh];
-                let ao = root_row * dh;
-                vadd(&mut g[lo.b_o..lo.b_o + dh], &ds[..dh]);
-                outer_acc(&mut g[lo.w_s..lo.w_s + dh * dh], &ds[..dh], xr);
-                matvec_t_acc(
-                    &p[lo.w_s..lo.w_s + dh * dh],
-                    &ds[..dh],
-                    &mut dx_buf[root_row * dh..(root_row + 1) * dh],
-                );
-                outer_acc(&mut g[lo.w_a..lo.w_a + dh * dh], &ds[..dh], &asum[ao..ao + dh]);
-                da[..dh].fill(0.0);
-                matvec_t_acc(&p[lo.w_a..lo.w_a + dh * dh], &ds[..dh], &mut da[..dh]);
-                // Softmax backward over the valid slots.
-                let mut adot = 0.0f32;
-                for j in 0..fanout {
-                    let slot = r0 * fanout + j;
-                    if mask_in[slot] <= 0.5 {
+                // SAFETY: shared read-back of this tile's own score rows;
+                // the mutable views above are out of scope.
+                let (sp_r, sn_r) = unsafe { (s_p_p.rows(1, b0..b1), s_n_p.rows(1, b0..b1)) };
+                for (i, row) in (b0..b1).enumerate() {
+                    *part += (edge_mask[row] * (softplus(-sp_r[i]) + softplus(sn_r[i]))) as f64
+                        / wnorm as f64;
+                }
+                b0 = b1;
+            }
+        });
+    }
+    let loss = loss_parts.iter().sum::<f64>() as f32;
+
+    // ---- Backward + Adam (train steps only).
+    let (mut new_p, mut new_m, mut new_v) = (None, None, None);
+    if train {
+        // Gradient accumulation: on the serial path every phase
+        // accumulates straight into `g` in the original row order
+        // (bitwise-identical to the pre-tiling executor — no per-tile
+        // buffer detour, which would flip `-0.0` contributions to
+        // `+0.0`). With worker tiles, each tile owns a `pc`-sized slice
+        // of `gbufs`, reduced into `g` in fixed tile order afterwards.
+        let par = exec.workers.is_some() && exec.tiles > 1;
+        let mut g = pool.take(net.pc);
+        let mut gbufs = pool.take(if par { exec.tiles * net.pc } else { 0 });
+        let mut dh_buf = pool.take(n * dh);
+        let mut dx_buf = pool.take(n * dh);
+        let g_p = SendPtr::of(&mut g);
+        let gb_p = SendPtr::of(&mut gbufs);
+        let pc = net.pc;
+        // SAFETY: tile `ti` alone writes its gradient slice within a
+        // dispatch; the serial path runs exactly one inline tile, and
+        // consecutive dispatches are joined, so no two returned views
+        // are ever written concurrently.
+        let grad_of = move |ti: usize| -> &'static mut [f32] {
+            unsafe {
+                if par {
+                    gb_p.rows_mut(pc, ti..ti + 1)
+                } else {
+                    g_p.rows_mut(pc, 0..1)
+                }
+            }
+        };
+
+        // Decoder backward → dW1/b1/w2/b2 and dz into dh_buf. Rows i,
+        // bs+i and 2bs+i all derive from this tile's i, so the dh_buf
+        // row sets of different tiles stay disjoint.
+        {
+            let hs: &[f32] = &h;
+            let hp_v: &[f32] = &hid_p;
+            let hn_v: &[f32] = &hid_n;
+            let sp_v: &[f32] = &s_p;
+            let sn_v: &[f32] = &s_n;
+            let dh_p = SendPtr::of(&mut dh_buf);
+            exec.for_tiles(bs, |ti, irange| {
+                let gt = grad_of(ti);
+                let mut dhid = pool.take(dd);
+                let mut din = pool.take(2 * dh);
+                let mut ddin = pool.take(2 * dh);
+                for i in irange {
+                    let wi = edge_mask[i];
+                    if wi <= 0.0 {
                         continue;
                     }
-                    dalpha[j] =
-                        dot(&da[..dh], &att_v[(gbase + slot) * dh..(gbase + slot + 1) * dh]);
-                    adot += att_a[gbase + slot] * dalpha[j];
-                }
-                matvec(&p[lo.w_q..lo.w_q + dh * dh], xr, &mut qr[..dh]);
-                dqr[..dh].fill(0.0);
-                for j in 0..fanout {
-                    let slot = r0 * fanout + j;
-                    if mask_in[slot] <= 0.5 {
-                        continue;
+                    for pass in 0..2 {
+                        let (sg, hid, b_row) = if pass == 0 {
+                            (-sigmoid(-sp_v[i]) * wi / wnorm, &hp_v[i * dd..(i + 1) * dd], bs + i)
+                        } else {
+                            (sigmoid(sn_v[i]) * wi / wnorm, &hn_v[i * dd..(i + 1) * dd], 2 * bs + i)
+                        };
+                        gt[lo.b2] += sg;
+                        for k in 0..dd {
+                            gt[lo.w2 + k] += sg * hid[k];
+                            dhid[k] = if hid[k] > 0.0 { sg * p[lo.w2 + k] } else { 0.0 };
+                        }
+                        din[..dh].copy_from_slice(&hs[i * dh..(i + 1) * dh]);
+                        din[dh..2 * dh].copy_from_slice(&hs[b_row * dh..(b_row + 1) * dh]);
+                        vadd(&mut gt[lo.b1..lo.b1 + dd], &dhid[..dd]);
+                        outer_acc(
+                            &mut gt[lo.w1..lo.w1 + dd * 2 * dh],
+                            &dhid[..dd],
+                            &din[..2 * dh],
+                        );
+                        ddin[..2 * dh].fill(0.0);
+                        matvec_t_acc(
+                            &p[lo.w1..lo.w1 + dd * 2 * dh],
+                            &dhid[..dd],
+                            &mut ddin[..2 * dh],
+                        );
+                        // SAFETY: rows i / b_row belong to this tile.
+                        let d_i = unsafe { dh_p.rows_mut(dh, i..i + 1) };
+                        vadd(d_i, &ddin[..dh]);
+                        let d_b = unsafe { dh_p.rows_mut(dh, b_row..b_row + 1) };
+                        vadd(d_b, &ddin[dh..2 * dh]);
                     }
-                    let gs = gbase + slot;
-                    let a = att_a[gs];
-                    let de_j = a * (dalpha[j] - adot);
-                    axpy(&mut dqr[..dh], de_j * scale_inv, &att_k[gs * dh..(gs + 1) * dh]);
-                    for k in 0..dh {
-                        dk[k] = de_j * qr[k] * scale_inv;
-                        dv_[k] = a * da[k];
-                    }
-                    let crow = (child_base + slot) * dh;
-                    kin[..dh].copy_from_slice(&h[crow..crow + dh]);
-                    time_enc(dt_in[slot], dt_scale, &mut kin[dh..dh + dte]);
-                    kin[dh + dte..ki].copy_from_slice(&ef_in[slot * de..(slot + 1) * de]);
-                    outer_acc(&mut g[lo.w_k..lo.w_k + dh * ki], &dk[..dh], &kin[..ki]);
-                    outer_acc(&mut g[lo.w_v..lo.w_v + dh * ki], &dv_[..dh], &kin[..ki]);
-                    dkin[..ki].fill(0.0);
-                    matvec_t_acc(&p[lo.w_k..lo.w_k + dh * ki], &dk[..dh], &mut dkin[..ki]);
-                    matvec_t_acc(&p[lo.w_v..lo.w_v + dh * ki], &dv_[..dh], &mut dkin[..ki]);
-                    vadd(&mut dh_child[slot * dh..(slot + 1) * dh], &dkin[..dh]);
                 }
-                outer_acc(&mut g[lo.w_q..lo.w_q + dh * dh], &dqr[..dh], xr);
-                matvec_t_acc(
-                    &p[lo.w_q..lo.w_q + dh * dh],
-                    &dqr[..dh],
-                    &mut dx_buf[root_row * dh..(root_row + 1) * dh],
-                );
-            }
-        }
-        // Leaf nodes: h = x, so their dh flows straight into dx.
-        vadd(&mut dx_buf[inner * dh..n * dh], &dh_buf[inner * dh..n * dh]);
-
-        // Projection backward (and through it, the GRU).
-        for i in 0..n {
-            let xo = i * dh;
-            let mut nz = false;
-            for k in 0..dh {
-                let dval = dx_buf[xo + k];
-                // lint: allow(float-eq, "exact-zero gradient skip; any nonzero must propagate")
-                if dval != 0.0 {
-                    nz = true;
-                }
-                dupre[k] = dval * (1.0 - x[xo + k] * x[xo + k]);
-            }
-            if !nz {
-                continue;
-            }
-            if net.use_memory {
-                u[..dm].copy_from_slice(&mt[i * dm..(i + 1) * dm]);
-                u[dm..dm + dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
-                time_enc(mem_dt[i], dt_scale, &mut u[dm + dv..ui]);
-            } else {
-                u[..dv].copy_from_slice(&node_feat[i * dv..(i + 1) * dv]);
-            }
-            vadd(&mut g[lo.b_in..lo.b_in + dh], &dupre[..dh]);
-            outer_acc(&mut g[lo.w_in..lo.w_in + dh * ui], &dupre[..dh], &u[..ui]);
-            if !net.use_memory {
-                continue;
-            }
-            let mk = mail_mask[i];
-            // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel written by the sampler")
-            if mk == 0.0 {
-                continue;
-            }
-            dufull[..ui].fill(0.0);
-            matvec_t_acc(&p[lo.w_in..lo.w_in + dh * ui], &dupre[..dh], &mut dufull[..ui]);
-            // GRU backward with dgru = mk · dm̃ (dm̃ = dufull[..dm]).
-            let o = i * dm;
-            let mem_i = &mem[o..o + dm];
-            gin[..maild].copy_from_slice(&mail[i * maild..(i + 1) * maild]);
-            time_enc(mail_dt[i], dt_scale, &mut gin[maild..gi]);
-            for k in 0..dm {
-                let dg = mk * dufull[k];
-                let (r, z, c) = (g_r[o + k], g_z[o + k], g_c[o + k]);
-                dcpre[k] = dg * (1.0 - z) * (1.0 - c * c);
-                dzpre[k] = dg * (mem_i[k] - c) * z * (1.0 - z);
-                rh[k] = r * mem_i[k];
-            }
-            vadd(&mut g[lo.b_n..lo.b_n + dm], &dcpre[..dm]);
-            vadd(&mut g[lo.b_z..lo.b_z + dm], &dzpre[..dm]);
-            outer_acc(&mut g[lo.w_n..lo.w_n + dm * gi], &dcpre[..dm], &gin[..gi]);
-            outer_acc(&mut g[lo.u_n..lo.u_n + dm * dm], &dcpre[..dm], &rh[..dm]);
-            outer_acc(&mut g[lo.w_z..lo.w_z + dm * gi], &dzpre[..dm], &gin[..gi]);
-            outer_acc(&mut g[lo.u_z..lo.u_z + dm * dm], &dzpre[..dm], mem_i);
-            drh[..dm].fill(0.0);
-            matvec_t_acc(&p[lo.u_n..lo.u_n + dm * dm], &dcpre[..dm], &mut drh[..dm]);
-            for k in 0..dm {
-                let r = g_r[o + k];
-                drpre[k] = drh[k] * mem_i[k] * r * (1.0 - r);
-            }
-            vadd(&mut g[lo.b_r..lo.b_r + dm], &drpre[..dm]);
-            outer_acc(&mut g[lo.w_r..lo.w_r + dm * gi], &drpre[..dm], &gin[..gi]);
-            outer_acc(&mut g[lo.u_r..lo.u_r + dm * dm], &drpre[..dm], mem_i);
+            });
         }
 
+        // Attention backward, shallowest hop first (children receive
+        // their dh before their own level is processed — the `for_tiles`
+        // join between levels is the ordering barrier). Within a level,
+        // tiles own disjoint target rows and therefore disjoint child
+        // slot rows; per-target math is the serial code verbatim on the
+        // tile's own gradient slice.
+        {
+            let hs: &[f32] = &h;
+            let xs: &[f32] = &x;
+            let asums: &[f32] = &asum;
+            let att_as: &[f32] = &att_a;
+            let att_ks: &[f32] = &att_k;
+            let att_vs: &[f32] = &att_v;
+            let dh_p = SendPtr::of(&mut dh_buf);
+            let dx_p = SendPtr::of(&mut dx_buf);
+            for lev in 0..hops {
+                let dt_in = inputs[net.i_hop_dt[lev]].as_f32()?;
+                let mask_in = inputs[net.i_hop_mask[lev]].as_f32()?;
+                let ef_in = inputs[net.i_hop_efeat[lev]].as_f32()?;
+                let child_base = net.lvl_off[lev + 1];
+                let gbase = child_base - roots;
+                let lbase = net.lvl_off[lev];
+                exec.for_tiles(net.lvl_size[lev], |ti, targets| {
+                    let gt = grad_of(ti);
+                    let mut ds = pool.take(dh);
+                    let mut da = pool.take(dh);
+                    let mut dqr = pool.take(dh);
+                    let mut dk = pool.take(dh);
+                    let mut dv_ = pool.take(dh);
+                    let mut dalpha = pool.take(fanout);
+                    let mut dkin = pool.take(ki);
+                    let mut kin = pool.take(ki);
+                    let mut qr = pool.take(dh);
+                    for r0 in targets {
+                        let root_row = lbase + r0;
+                        let hr = &hs[root_row * dh..(root_row + 1) * dh];
+                        // SAFETY: this tile owns target row `root_row` of
+                        // dh_buf/dx_buf and its child slot rows; target
+                        // reads never overlap another tile's child writes
+                        // (child_base lies past every target row of this
+                        // level).
+                        let d_tgt = unsafe { dh_p.rows(dh, root_row..root_row + 1) };
+                        let mut nz = false;
+                        for k in 0..dh {
+                            let dval = d_tgt[k];
+                            // lint: allow(float-eq, "exact-zero gradient skip; any nonzero must propagate")
+                            if dval != 0.0 {
+                                nz = true;
+                            }
+                            ds[k] = dval * (1.0 - hr[k] * hr[k]);
+                        }
+                        if !nz {
+                            continue;
+                        }
+                        let xr = &xs[root_row * dh..(root_row + 1) * dh];
+                        let ao = root_row * dh;
+                        let dx_r = unsafe { dx_p.rows_mut(dh, root_row..root_row + 1) };
+                        vadd(&mut gt[lo.b_o..lo.b_o + dh], &ds[..dh]);
+                        outer_acc(&mut gt[lo.w_s..lo.w_s + dh * dh], &ds[..dh], xr);
+                        matvec_t_acc(&p[lo.w_s..lo.w_s + dh * dh], &ds[..dh], &mut dx_r[..dh]);
+                        outer_acc(
+                            &mut gt[lo.w_a..lo.w_a + dh * dh],
+                            &ds[..dh],
+                            &asums[ao..ao + dh],
+                        );
+                        da[..dh].fill(0.0);
+                        matvec_t_acc(&p[lo.w_a..lo.w_a + dh * dh], &ds[..dh], &mut da[..dh]);
+                        // Softmax backward over the valid slots.
+                        let mut adot = 0.0f32;
+                        for j in 0..fanout {
+                            let slot = r0 * fanout + j;
+                            if mask_in[slot] <= 0.5 {
+                                continue;
+                            }
+                            dalpha[j] = dot(
+                                &da[..dh],
+                                &att_vs[(gbase + slot) * dh..(gbase + slot + 1) * dh],
+                            );
+                            adot += att_as[gbase + slot] * dalpha[j];
+                        }
+                        matvec(&p[lo.w_q..lo.w_q + dh * dh], xr, &mut qr[..dh]);
+                        dqr[..dh].fill(0.0);
+                        for j in 0..fanout {
+                            let slot = r0 * fanout + j;
+                            if mask_in[slot] <= 0.5 {
+                                continue;
+                            }
+                            let gs = gbase + slot;
+                            let a = att_as[gs];
+                            let de_j = a * (dalpha[j] - adot);
+                            axpy(&mut dqr[..dh], de_j * scale_inv, &att_ks[gs * dh..(gs + 1) * dh]);
+                            for k in 0..dh {
+                                dk[k] = de_j * qr[k] * scale_inv;
+                                dv_[k] = a * da[k];
+                            }
+                            let cr = child_base + slot;
+                            let crow = cr * dh;
+                            kin[..dh].copy_from_slice(&hs[crow..crow + dh]);
+                            time_enc(dt_in[slot], dt_scale, &mut kin[dh..dh + dte]);
+                            kin[dh + dte..ki].copy_from_slice(&ef_in[slot * de..(slot + 1) * de]);
+                            outer_acc(&mut gt[lo.w_k..lo.w_k + dh * ki], &dk[..dh], &kin[..ki]);
+                            outer_acc(&mut gt[lo.w_v..lo.w_v + dh * ki], &dv_[..dh], &kin[..ki]);
+                            dkin[..ki].fill(0.0);
+                            matvec_t_acc(&p[lo.w_k..lo.w_k + dh * ki], &dk[..dh], &mut dkin[..ki]);
+                            matvec_t_acc(&p[lo.w_v..lo.w_v + dh * ki], &dv_[..dh], &mut dkin[..ki]);
+                            // SAFETY: child slot rows derive from this
+                            // tile's target rows alone.
+                            let d_child = unsafe { dh_p.rows_mut(dh, cr..cr + 1) };
+                            vadd(d_child, &dkin[..dh]);
+                        }
+                        outer_acc(&mut gt[lo.w_q..lo.w_q + dh * dh], &dqr[..dh], xr);
+                        matvec_t_acc(&p[lo.w_q..lo.w_q + dh * dh], &dqr[..dh], &mut dx_r[..dh]);
+                    }
+                });
+            }
+        }
+        // Leaf nodes: h = x, so their dh flows straight into dx
+        // (element-wise, so any tile split is bitwise-identical).
+        {
+            let dhs: &[f32] = &dh_buf;
+            let dx_p = SendPtr::of(&mut dx_buf);
+            exec.for_tiles(n - inner, |_ti, rrange| {
+                let (lo_row, hi_row) = (inner + rrange.start, inner + rrange.end);
+                // SAFETY: leaf rows [lo_row, hi_row) belong to this tile.
+                let dst = unsafe { dx_p.rows_mut(dh, lo_row..hi_row) };
+                vadd(dst, &dhs[lo_row * dh..hi_row * dh]);
+            });
+        }
+
+        // Projection backward (and through it, the GRU), batch-tiled in
+        // TILE_ROWS blocks. The W_in gradient and the dm̃ transpose pass
+        // go through the blocked kernels (whose ascending-tile-row,
+        // zero-skipping order is the exact per-row sequence — rows with
+        // an all-zero upstream gradient contribute only exact-zero
+        // elements, which both kernels skip); b_in and the GRU chain keep
+        // the per-row skip gates via `nzrow`, computed from the upstream
+        // dx values exactly as the serial code's `nz` flag was.
+        {
+            let dxs: &[f32] = &dx_buf;
+            let xs: &[f32] = &x;
+            let mts: &[f32] = &mt;
+            let g_rs: &[f32] = &g_r;
+            let g_zs: &[f32] = &g_z;
+            let g_cs: &[f32] = &g_c;
+            exec.for_tiles(n, |ti, rows| {
+                let gt = grad_of(ti);
+                let mut dupre_t = pool.take(TILE_ROWS * dh);
+                let mut u_t = pool.take(TILE_ROWS * ui);
+                let mut dufull_t = pool.take(TILE_ROWS * ui);
+                let mut gin = pool.take(gi);
+                let mut rh = pool.take(dm);
+                let mut dcpre = pool.take(dm);
+                let mut dzpre = pool.take(dm);
+                let mut drh = pool.take(dm);
+                let mut drpre = pool.take(dm);
+                let mut b0 = rows.start;
+                while b0 < rows.end {
+                    let b1 = (b0 + TILE_ROWS).min(rows.end);
+                    let t = b1 - b0;
+                    let mut nzrow = [false; TILE_ROWS];
+                    for (i, row) in (b0..b1).enumerate() {
+                        let xo = row * dh;
+                        let mut nz = false;
+                        for k in 0..dh {
+                            let dval = dxs[xo + k];
+                            // lint: allow(float-eq, "exact-zero gradient skip; any nonzero must propagate")
+                            if dval != 0.0 {
+                                nz = true;
+                            }
+                            dupre_t[i * dh + k] = dval * (1.0 - xs[xo + k] * xs[xo + k]);
+                        }
+                        nzrow[i] = nz;
+                        let uo = i * ui;
+                        if net.use_memory {
+                            u_t[uo..uo + dm].copy_from_slice(&mts[row * dm..(row + 1) * dm]);
+                            u_t[uo + dm..uo + dm + dv]
+                                .copy_from_slice(&node_feat[row * dv..(row + 1) * dv]);
+                            time_enc(mem_dt[row], dt_scale, &mut u_t[uo + dm + dv..uo + ui]);
+                        } else {
+                            u_t[uo..uo + dv].copy_from_slice(&node_feat[row * dv..(row + 1) * dv]);
+                        }
+                    }
+                    for i in 0..t {
+                        if nzrow[i] {
+                            vadd(&mut gt[lo.b_in..lo.b_in + dh], &dupre_t[i * dh..(i + 1) * dh]);
+                        }
+                    }
+                    outer_acc_block(&mut gt[lo.w_in..lo.w_in + dh * ui], &dupre_t, &u_t, t, dh, ui);
+                    if net.use_memory {
+                        // dm̃ for the whole block in one transpose pass
+                        // (the buffer is recycled across blocks — clear
+                        // the accumulator region first).
+                        dufull_t[..t * ui].fill(0.0);
+                        let w_in = &p[lo.w_in..lo.w_in + dh * ui];
+                        gemm_t_acc(w_in, &dupre_t, t, dh, ui, &mut dufull_t);
+                        for (i, row) in (b0..b1).enumerate() {
+                            if !nzrow[i] {
+                                continue;
+                            }
+                            let mk = mail_mask[row];
+                            // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel written by the sampler")
+                            if mk == 0.0 {
+                                continue;
+                            }
+                            // GRU backward with dgru = mk · dm̃.
+                            let dufull = &dufull_t[i * ui..i * ui + ui];
+                            let o = row * dm;
+                            let mem_i = &mem[o..o + dm];
+                            gin[..maild].copy_from_slice(&mail[row * maild..(row + 1) * maild]);
+                            time_enc(mail_dt[row], dt_scale, &mut gin[maild..gi]);
+                            for k in 0..dm {
+                                let dg = mk * dufull[k];
+                                let (r, z, c) = (g_rs[o + k], g_zs[o + k], g_cs[o + k]);
+                                dcpre[k] = dg * (1.0 - z) * (1.0 - c * c);
+                                dzpre[k] = dg * (mem_i[k] - c) * z * (1.0 - z);
+                                rh[k] = r * mem_i[k];
+                            }
+                            vadd(&mut gt[lo.b_n..lo.b_n + dm], &dcpre[..dm]);
+                            vadd(&mut gt[lo.b_z..lo.b_z + dm], &dzpre[..dm]);
+                            outer_acc(&mut gt[lo.w_n..lo.w_n + dm * gi], &dcpre[..dm], &gin[..gi]);
+                            outer_acc(&mut gt[lo.u_n..lo.u_n + dm * dm], &dcpre[..dm], &rh[..dm]);
+                            outer_acc(&mut gt[lo.w_z..lo.w_z + dm * gi], &dzpre[..dm], &gin[..gi]);
+                            outer_acc(&mut gt[lo.u_z..lo.u_z + dm * dm], &dzpre[..dm], mem_i);
+                            drh[..dm].fill(0.0);
+                            let u_n = &p[lo.u_n..lo.u_n + dm * dm];
+                            matvec_t_acc(u_n, &dcpre[..dm], &mut drh[..dm]);
+                            for k in 0..dm {
+                                let r = g_rs[o + k];
+                                drpre[k] = drh[k] * mem_i[k] * r * (1.0 - r);
+                            }
+                            vadd(&mut gt[lo.b_r..lo.b_r + dm], &drpre[..dm]);
+                            outer_acc(&mut gt[lo.w_r..lo.w_r + dm * gi], &drpre[..dm], &gin[..gi]);
+                            outer_acc(&mut gt[lo.u_r..lo.u_r + dm * dm], &drpre[..dm], mem_i);
+                        }
+                    }
+                    b0 = b1;
+                }
+            });
+        }
+
+        // Reduce per-tile gradients into `g` in fixed tile order: a given
+        // tile count is run-to-run deterministic (the serial path wrote
+        // `g` directly and skips this entirely).
+        if par {
+            for ti in 0..exec.tiles {
+                vadd(&mut g, &gbufs[ti * pc..(ti + 1) * pc]);
+            }
+        }
+
+        // Adam is element-wise, so splitting the parameter vector across
+        // tiles is bitwise-identical to the serial sweep.
         let mut np = pool.take(net.pc);
         let mut nm = pool.take(net.pc);
         let mut nv = pool.take(net.pc);
-        adam(p, adam_m, adam_v, &g, lr, step, &mut np, &mut nm, &mut nv);
+        {
+            let gs: &[f32] = &g;
+            let np_p = SendPtr::of(&mut np);
+            let nm_p = SendPtr::of(&mut nm);
+            let nv_p = SendPtr::of(&mut nv);
+            exec.for_tiles(net.pc, |_ti, krange| {
+                // SAFETY: parameter range `krange` belongs to this tile.
+                let (np_r, nm_r, nv_r) = unsafe {
+                    (
+                        np_p.rows_mut(1, krange.clone()),
+                        nm_p.rows_mut(1, krange.clone()),
+                        nv_p.rows_mut(1, krange.clone()),
+                    )
+                };
+                adam(
+                    &p[krange.clone()],
+                    &adam_m[krange.clone()],
+                    &adam_v[krange.clone()],
+                    &gs[krange],
+                    lr,
+                    step,
+                    np_r,
+                    nm_r,
+                    nv_r,
+                );
+            });
+        }
         new_p = Some(np);
         new_m = Some(nm);
         new_v = Some(nv);

@@ -40,19 +40,55 @@
 use super::manifest::StepSpec;
 use super::nn;
 use super::tensor::Tensor;
+use crate::util::pool::WorkerPool;
 use crate::util::tensor_pool::TensorPool;
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Reference step executor (see module docs). One instance per
-/// [`super::Executable`]; owns the scratch/output buffer pool.
-#[derive(Debug)]
+/// [`super::Executable`]; owns the scratch/output buffer pool plus the
+/// batch-tile execution state (`set_tiles`).
 pub struct RefExec {
     pool: TensorPool,
+    /// Batch tiles for the blocked TGNN forward/backward (1 = serial).
+    tiles: AtomicUsize,
+    /// Lazily-created fork-join pool for tiled execution; sized to the
+    /// tile count active at first use (warm-up, not steady state).
+    workers: OnceLock<WorkerPool>,
+}
+
+impl std::fmt::Debug for RefExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RefExec").field("tiles", &self.tiles.load(Ordering::Relaxed)).finish()
+    }
 }
 
 impl RefExec {
     pub fn new() -> RefExec {
-        RefExec { pool: TensorPool::new() }
+        RefExec { pool: TensorPool::new(), tiles: AtomicUsize::new(1), workers: OnceLock::new() }
+    }
+
+    /// Set the batch-tile count for TGNN steps (clamped to `1..=`
+    /// [`nn::MAX_TILES`]). Tile count 1 runs the serial path inline —
+    /// bitwise-identical to the pre-tiling executor; higher counts run
+    /// forward/backward tiles on a worker pool with per-tile gradient
+    /// buffers reduced in fixed tile order (run-to-run deterministic for
+    /// a fixed count, ULP-bounded vs serial). The pool is created with
+    /// the tile count active the first time a tiled step runs; a later,
+    /// larger setting is capped by that pool's thread count.
+    pub fn set_tiles(&self, tiles: usize) {
+        self.tiles.store(tiles.clamp(1, nn::MAX_TILES), Ordering::Relaxed);
+    }
+
+    fn exec_ctx(&self) -> nn::ExecCtx<'_> {
+        let tiles = self.tiles.load(Ordering::Relaxed).clamp(1, nn::MAX_TILES);
+        let workers = if tiles > 1 {
+            Some(self.workers.get_or_init(|| WorkerPool::new(tiles)))
+        } else {
+            None
+        };
+        nn::ExecCtx { tiles, workers }
     }
 
     /// Execute `spec` on `inputs` (already validated against the spec by
@@ -72,7 +108,7 @@ impl RefExec {
         if path.ends_with("/clf") {
             nn::run_clf_step(spec, inputs, out, &self.pool)
         } else {
-            nn::run_tgnn_step(spec, inputs, out, &self.pool)
+            nn::run_tgnn_step(spec, inputs, out, &self.pool, &self.exec_ctx())
         }
     }
 }

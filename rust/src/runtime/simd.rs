@@ -1,14 +1,19 @@
-//! Portable fixed-lane SIMD kernels for the reference TGNN backend.
+//! Portable fixed-lane SIMD kernels for the reference TGNN backend —
+//! per-row primitives plus the batch-tiled GEMM family the blocked
+//! executor in `runtime/nn.rs` is built on.
 //!
-//! The hot kernels of `runtime/nn.rs` (`matvec`, `matvec_t_acc`,
-//! `outer_acc` and the GRU/softmax inner loops built on them) run over
-//! widths up to the paper's production dim 100, so the per-element scalar
-//! loops of the original backend leave most of the machine idle. This
-//! module provides a `wide`-style 8-lane f32 vector ([`F32x8`]) written in
-//! plain Rust — no new dependencies, no `unsafe` — with the kernel bodies
-//! structured as unrolled fixed-lane loops plus a scalar tail, exactly the
-//! shape LLVM's autovectorizer turns into packed SSE/AVX/NEON, and exactly
-//! the shape a future `std::simd` swap can take over lane by lane.
+//! The hot path of `runtime/nn.rs` applies the same small weight matrix
+//! to every root in a batch. Done as `bs` separate [`matvec`] calls the
+//! weight matrix re-streams from cache once *per root*; the GEMM-family
+//! kernels ([`gemm`], [`gemm_acc`], [`gemm_t_acc`], [`outer_acc_block`])
+//! instead take a **tile of T input rows** and loop with the weight row
+//! outermost, so each weight row is read once per tile and stays hot in
+//! L1/L2 while it sweeps the tile. All kernels use a `wide`-style 8-lane
+//! f32 vector ([`F32x8`]) written in plain Rust — no new dependencies,
+//! no `unsafe` — with bodies structured as unrolled fixed-lane loops
+//! plus a scalar tail, exactly the shape LLVM's autovectorizer turns
+//! into packed SSE/AVX/NEON, and exactly the shape a future `std::simd`
+//! swap can take over lane by lane.
 //!
 //! Determinism contract (relied on by the pipeline-identity gates, which
 //! compare *the same code* across execution modes, and pinned by the unit
@@ -23,13 +28,23 @@
 //!   on it) reassociate the sum into 8 partial accumulators plus a scalar
 //!   tail; they agree with the scalar reference to a small ULP bound
 //!   (tested), not bitwise.
+//! - **GEMM kernels are bitwise identical to their per-row loop**: each
+//!   output element of [`gemm`]/[`gemm_acc`] is the same [`dot`]
+//!   reduction a [`matvec`]/[`matvec_acc`] loop over the tile would
+//!   compute; [`gemm_t_acc`] and [`outer_acc_block`] order their
+//!   per-element accumulations exactly as the per-row
+//!   [`matvec_t_acc`]/[`outer_acc`] sequence does (weight-row index
+//!   ascending / tile-row index ascending respectively), so swapping the
+//!   per-root loops of `runtime/nn.rs` for tiled passes changes cache
+//!   behaviour, not bits.
 //! - No `mul_add`/FMA anywhere: fused contraction is target-dependent, and
 //!   Rust guarantees it is never introduced implicitly, so plain mul+add
 //!   keeps every kernel bit-reproducible across x86/ARM.
 //!
-//! Each lanes kernel has a `_scalar` twin kept as the semantic reference;
-//! the unit tests sweep sizes around the lane boundary (0..=2·LANES, and
-//! the widths 8/100/108 the TGNN actually uses) and randomized inputs.
+//! Each lanes kernel has a `_scalar` twin (or, for the GEMM family, its
+//! per-row-loop reference) kept as the semantic anchor; the unit tests
+//! sweep sizes around the lane boundary (0..=2·LANES, and the widths
+//! 8/100/108 the TGNN actually uses), tile counts, and randomized inputs.
 
 // lint: allow-file(index, "SIMD kernels address lanes inside caller-checked row bounds")
 
@@ -270,6 +285,119 @@ pub fn outer_acc_scalar(dw: &mut [f32], d: &[f32], x: &[f32]) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Batch-tiled GEMM kernels (bitwise identical to their per-row loops)
+// ---------------------------------------------------------------------
+
+/// `out[t·rows + r] = W[r,:] · xs[t·cols..]` for a tile of `t_rows`
+/// input rows: the blocked form of a [`matvec`] loop over the tile.
+///
+/// Loop order is weight-row outermost, tile-row innermost, so each
+/// weight row streams from cache once per tile instead of once per
+/// root. Every output element is an independent [`dot`] reduction —
+/// identical to what the per-row loop computes — so the result is
+/// **bitwise identical** for any tile size, including `t_rows == 1`.
+#[inline]
+// lint: deny(alloc)
+pub fn gemm(w: &[f32], xs: &[f32], t_rows: usize, rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(w.len() >= rows * cols);
+    debug_assert!(xs.len() >= t_rows * cols);
+    debug_assert!(out.len() >= t_rows * rows);
+    for r in 0..rows {
+        let wr = &w[r * cols..(r + 1) * cols];
+        for t in 0..t_rows {
+            out[t * rows + r] = dot(wr, &xs[t * cols..t * cols + cols]);
+        }
+    }
+}
+
+/// `out[t·rows + r] += W[r,:] · xs[t·cols..]`: the blocked form of a
+/// [`matvec_acc`] loop over the tile (bitwise identical to it — each
+/// element is one independent [`dot`] added onto prior state).
+#[inline]
+// lint: deny(alloc)
+pub fn gemm_acc(w: &[f32], xs: &[f32], t_rows: usize, rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert!(w.len() >= rows * cols);
+    debug_assert!(xs.len() >= t_rows * cols);
+    debug_assert!(out.len() >= t_rows * rows);
+    for r in 0..rows {
+        let wr = &w[r * cols..(r + 1) * cols];
+        for t in 0..t_rows {
+            out[t * rows + r] += dot(wr, &xs[t * cols..t * cols + cols]);
+        }
+    }
+}
+
+/// `outs[t·cols + c] += Σ_r W[r,c] · ds[t·rows + r]` for a tile of
+/// `t_rows` upstream-gradient rows: the blocked form of a
+/// [`matvec_t_acc`] loop over the tile.
+///
+/// The weight row is outermost (one cache pass per tile) and the tile
+/// row innermost; each output row `outs[t·cols..]` still sees its
+/// accumulations in ascending weight-row order — the exact per-element
+/// sequence of the per-row loop — so the result is **bitwise
+/// identical**. Zero `ds[t·rows + r]` entries are skipped like the
+/// per-row kernel skips them.
+#[inline]
+// lint: deny(alloc)
+pub fn gemm_t_acc(
+    w: &[f32],
+    ds: &[f32],
+    t_rows: usize,
+    rows: usize,
+    cols: usize,
+    outs: &mut [f32],
+) {
+    debug_assert!(w.len() >= rows * cols);
+    debug_assert!(ds.len() >= t_rows * rows);
+    debug_assert!(outs.len() >= t_rows * cols);
+    for r in 0..rows {
+        let wr = &w[r * cols..(r + 1) * cols];
+        for t in 0..t_rows {
+            let dr = ds[t * rows + r];
+            // lint: allow(float-eq, "exact-zero gradient row skip; any nonzero must propagate")
+            if dr == 0.0 {
+                continue;
+            }
+            axpy(&mut outs[t * cols..(t + 1) * cols], dr, wr);
+        }
+    }
+}
+
+/// `dW[r,c] += Σ_t ds[t·rows + r] · xs[t·cols + c]` over a tile of
+/// `t_rows` (gradient row, input row) pairs: the blocked form of an
+/// [`outer_acc`] sweep over the tile.
+///
+/// Each `dW` row accumulates its tile contributions in ascending
+/// tile-row order — the exact order a serial per-root [`outer_acc`]
+/// sequence applies them — so the result is **bitwise identical** to
+/// that sequence. The `dW` row is held hot while the tile streams past.
+#[inline]
+// lint: deny(alloc)
+pub fn outer_acc_block(
+    dw: &mut [f32],
+    ds: &[f32],
+    xs: &[f32],
+    t_rows: usize,
+    rows: usize,
+    cols: usize,
+) {
+    debug_assert!(dw.len() >= rows * cols);
+    debug_assert!(ds.len() >= t_rows * rows);
+    debug_assert!(xs.len() >= t_rows * cols);
+    for r in 0..rows {
+        let dwr = &mut dw[r * cols..(r + 1) * cols];
+        for t in 0..t_rows {
+            let dr = ds[t * rows + r];
+            // lint: allow(float-eq, "exact-zero gradient row skip; any nonzero must propagate")
+            if dr == 0.0 {
+                continue;
+            }
+            axpy(dwr, dr, &xs[t * cols..(t + 1) * cols]);
+        }
+    }
+}
+
 /// Distance in representable f32 values between `a` and `b` (0 iff
 /// bitwise-equal up to signed zero), for pinning reduction-kernel
 /// agreement without demanding bitwise identity.
@@ -407,6 +535,105 @@ mod tests {
                     "matvec_acc {rows}x{cols} row {r}: {} vs {want}",
                     acc[r]
                 );
+            }
+        }
+    }
+
+    /// The GEMM family must be bitwise identical to its per-row loop:
+    /// `gemm`/`gemm_acc` per element are the same `dot` reduction the
+    /// `matvec`/`matvec_acc` loop computes, and `gemm_t_acc` /
+    /// `outer_acc_block` replay the per-row accumulation order exactly.
+    #[test]
+    fn gemm_kernels_are_bitwise_identical_to_per_row_loops() {
+        let mut rng = Rng::new(0x6E44);
+        let tiles = [1usize, 2, 3, 7, 16];
+        let shapes = [(8usize, 16usize), (100, 108), (7, 9), (1, 1), (13, 100)];
+        for &t_rows in &tiles {
+            for &(rows, cols) in &shapes {
+                let w = rand_vec(&mut rng, rows * cols, false);
+                let xs = rand_vec(&mut rng, t_rows * cols, false);
+
+                let mut blocked = vec![0.0f32; t_rows * rows];
+                gemm(&w, &xs, t_rows, rows, cols, &mut blocked);
+                let mut looped = vec![0.0f32; t_rows * rows];
+                for t in 0..t_rows {
+                    let x_t = &xs[t * cols..(t + 1) * cols];
+                    matvec(&w, x_t, &mut looped[t * rows..(t + 1) * rows]);
+                }
+                assert_eq!(blocked, looped, "gemm T={t_rows} {rows}x{cols} must be bitwise");
+
+                let seed = rand_vec(&mut rng, t_rows * rows, false);
+                let (mut blocked, mut looped) = (seed.clone(), seed);
+                gemm_acc(&w, &xs, t_rows, rows, cols, &mut blocked);
+                for t in 0..t_rows {
+                    matvec_acc(
+                        &w,
+                        &xs[t * cols..(t + 1) * cols],
+                        &mut looped[t * rows..(t + 1) * rows],
+                    );
+                }
+                assert_eq!(blocked, looped, "gemm_acc T={t_rows} {rows}x{cols} must be bitwise");
+
+                let ds = rand_vec(&mut rng, t_rows * rows, true);
+                let seed = rand_vec(&mut rng, t_rows * cols, false);
+                let (mut blocked, mut looped) = (seed.clone(), seed);
+                gemm_t_acc(&w, &ds, t_rows, rows, cols, &mut blocked);
+                for t in 0..t_rows {
+                    matvec_t_acc(
+                        &w,
+                        &ds[t * rows..(t + 1) * rows],
+                        &mut looped[t * cols..(t + 1) * cols],
+                    );
+                }
+                assert_eq!(blocked, looped, "gemm_t_acc T={t_rows} {rows}x{cols} must be bitwise");
+
+                let seed = rand_vec(&mut rng, rows * cols, false);
+                let (mut blocked, mut looped) = (seed.clone(), seed);
+                outer_acc_block(&mut blocked, &ds, &xs, t_rows, rows, cols);
+                for t in 0..t_rows {
+                    outer_acc(
+                        &mut looped,
+                        &ds[t * rows..(t + 1) * rows],
+                        &xs[t * cols..(t + 1) * cols],
+                    );
+                }
+                assert_eq!(
+                    blocked, looped,
+                    "outer_acc_block T={t_rows} {rows}x{cols} must be bitwise"
+                );
+            }
+        }
+    }
+
+    /// And against the *scalar* per-row loop the reduction-family bound
+    /// applies: gemm outputs are `dot` reductions, so they sit within
+    /// the same magnitude-sum error bound as `matvec` vs its scalar twin.
+    #[test]
+    fn gemm_agrees_with_scalar_loop_within_ulp_bound() {
+        let mut rng = Rng::new(0x6E45);
+        for &(t_rows, rows, cols) in &[(3usize, 8usize, 16usize), (4, 100, 108)] {
+            let w = rand_vec(&mut rng, rows * cols, false);
+            let xs = rand_vec(&mut rng, t_rows * cols, false);
+            let mut blocked = vec![0.0f32; t_rows * rows];
+            gemm(&w, &xs, t_rows, rows, cols, &mut blocked);
+            for t in 0..t_rows {
+                let x = &xs[t * cols..(t + 1) * cols];
+                let mut scalar = vec![0.0f32; rows];
+                matvec_scalar(&w, x, &mut scalar);
+                for r in 0..rows {
+                    let mag: f32 = w[r * cols..(r + 1) * cols]
+                        .iter()
+                        .zip(x)
+                        .map(|(a, b)| (a * b).abs())
+                        .sum();
+                    assert!(
+                        (blocked[t * rows + r] - scalar[r]).abs()
+                            <= 8.0 * f32::EPSILON * mag + 1e-30,
+                        "gemm T={t_rows} {rows}x{cols} t={t} r={r}: {} vs {}",
+                        blocked[t * rows + r],
+                        scalar[r]
+                    );
+                }
             }
         }
     }

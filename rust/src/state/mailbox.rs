@@ -16,7 +16,61 @@
 // lint: allow-file(index, "rows are dim-strided views of arrays sized at construction; slots are bounded by the ring capacity")
 
 use super::hot::HotCache;
+use super::SendRaw;
+use crate::graph::ShardSpec;
+use crate::util::pool::WorkerPool;
 use std::sync::{Mutex, PoisonError};
+
+/// Owner-restricted mail writer for one shard of the node-id space,
+/// created by [`Mailbox::par_shard_write`]. Ring state (slot contents,
+/// timestamps, write count) mutates exactly as [`Mailbox::write`] for
+/// owned nodes; writes outside the shard are dropped, which is what makes
+/// concurrent per-shard writers safe.
+pub struct MailShardWriter<'m> {
+    shard: std::ops::Range<u32>,
+    slots: usize,
+    dim: usize,
+    mail: *mut f32,
+    mail_ts: *mut f64,
+    count: *mut u64,
+    hot: Option<&'m Mutex<HotCache>>,
+}
+
+impl MailShardWriter<'_> {
+    /// Append one mail if this shard owns `v`; returns whether it was
+    /// written. For owned nodes this matches [`Mailbox::write`]: ring
+    /// append plus write-through refresh of any cached ring.
+    // lint: deny(alloc)
+    pub fn write(&mut self, v: u32, t: f64, mail: &[f32]) -> bool {
+        if !self.shard.contains(&v) {
+            return false;
+        }
+        debug_assert_eq!(mail.len(), self.dim);
+        let vi = v as usize;
+        // SAFETY: `v` lies in this writer's shard, and `par_shard_write`
+        // hands disjoint shard ranges to the workers, so node `v`'s ring
+        // (mail rows, timestamps, count) has a single writer for the
+        // whole dispatch.
+        let (pos, count) = unsafe {
+            let cnt = &mut *self.count.add(vi);
+            let pos = (*cnt as usize) % self.slots;
+            let base = (vi * self.slots + pos) * self.dim;
+            std::slice::from_raw_parts_mut(self.mail.add(base), self.dim).copy_from_slice(mail);
+            *self.mail_ts.add(vi * self.slots + pos) = t;
+            *cnt += 1;
+            (pos, *cnt)
+        };
+        if let Some(hot) = self.hot {
+            let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(slot) = hot.peek(v) {
+                hot.f32_row_mut(slot)[pos * self.dim..(pos + 1) * self.dim].copy_from_slice(mail);
+                hot.f64_row_mut(slot)[pos] = t;
+                hot.u64_row_mut(slot)[0] = count;
+            }
+        }
+        true
+    }
+}
 
 /// Expand one node's ring (wherever it is stored — backing arrays or a
 /// cached row) into the newest-first gather layout. This is the one copy
@@ -374,6 +428,42 @@ impl Mailbox {
         }
     }
 
+    /// Sharded-parallel mail delivery: run `replay` once per shard of
+    /// `spec` (shards distributed over `pool` workers), each call seeing
+    /// a [`MailShardWriter`] restricted to that shard's node range. Every
+    /// shard must be handed the **same** write sequence — re-walk the
+    /// batch — and the writer filters by ownership, so exactly one shard
+    /// applies each write and a node's ring sees its writes in sequence
+    /// order. The final mailbox is therefore bitwise what the same
+    /// sequence of [`Self::write`] calls produces serially (pinned by
+    /// `par_shard_write_matches_serial` below).
+    pub fn par_shard_write(
+        &mut self,
+        spec: &ShardSpec,
+        pool: &WorkerPool,
+        replay: impl Fn(&mut MailShardWriter<'_>) + Sync,
+    ) {
+        let (slots, dim) = (self.slots, self.dim);
+        let mail = SendRaw(self.mail.as_mut_ptr());
+        let mail_ts = SendRaw(self.mail_ts.as_mut_ptr());
+        let count = SendRaw(self.count.as_mut_ptr());
+        let hot = self.hot.as_ref();
+        pool.run_chunks(spec.shards(), 1, |_w, srange| {
+            for s in srange {
+                let mut w = MailShardWriter {
+                    shard: spec.range(s),
+                    slots,
+                    dim,
+                    mail: mail.0,
+                    mail_ts: mail_ts.0,
+                    count: count.0,
+                    hot,
+                };
+                replay(&mut w);
+            }
+        });
+    }
+
     /// Approximate resident bytes (capacity planning; the paper's MAG/APAN
     /// OOM discussion).
     pub fn bytes(&self) -> usize {
@@ -505,6 +595,63 @@ mod tests {
         assert_eq!(sharded.raw_parts().0, full.raw_parts().0);
         assert_eq!(sharded.raw_parts().1, full.raw_parts().1);
         assert_eq!(sharded.raw_parts().2, full.raw_parts().2);
+    }
+
+    #[test]
+    fn par_shard_write_matches_serial() {
+        // The parallel per-shard replay must leave the mailbox bitwise
+        // equal to the serial write sequence — across ring widths, with
+        // and without the hot cache.
+        let pool = WorkerPool::new(3);
+        let spec = ShardSpec::new(9, 3);
+        let mut state = 13u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        let writes: Vec<(u32, f64, [f32; 2])> = (0..60)
+            .map(|k| {
+                let v = next() % 9;
+                (v, k as f64, [next() as f32 / 1e6, next() as f32 / 1e6])
+            })
+            .collect();
+        for slots in [1usize, 3] {
+            for hot_rows in [0usize, 2] {
+                let mut serial = Mailbox::new(9, slots, 2);
+                let mut par = Mailbox::new(9, slots, 2);
+                serial.enable_hot_cache(hot_rows);
+                par.enable_hot_cache(hot_rows);
+                // Admit a few rings so write-through has cached copies.
+                let q: Vec<(u32, f64, bool)> = (0..9).map(|v| (v as u32, 0.0, true)).collect();
+                let n = q.len();
+                let (mut m, mut d, mut k) =
+                    (vec![0.0; n * slots * 2], vec![0.0; n * slots], vec![0.0; n * slots]);
+                serial.gather_into(&q, &mut m, &mut d, &mut k);
+                par.gather_into(&q, &mut m, &mut d, &mut k);
+                for &(v, t, mail) in &writes {
+                    serial.write(v, t, &mail);
+                }
+                par.par_shard_write(&spec, &pool, |w| {
+                    for &(v, t, mail) in &writes {
+                        w.write(v, t, &mail);
+                    }
+                });
+                assert_eq!(par.raw_parts().0, serial.raw_parts().0, "slots={slots}");
+                assert_eq!(par.raw_parts().1, serial.raw_parts().1, "slots={slots}");
+                assert_eq!(par.raw_parts().2, serial.raw_parts().2, "slots={slots}");
+                // Post-write gathers (served through cached rings) match.
+                let q2: Vec<(u32, f64, bool)> = (0..9).map(|v| (v as u32, 99.0, true)).collect();
+                let (mut sm, mut sd, mut sk) =
+                    (vec![0.0; n * slots * 2], vec![0.0; n * slots], vec![0.0; n * slots]);
+                serial.gather_into(&q2, &mut sm, &mut sd, &mut sk);
+                let (mut pm, mut pd, mut pk) =
+                    (vec![0.0; n * slots * 2], vec![0.0; n * slots], vec![0.0; n * slots]);
+                par.gather_into(&q2, &mut pm, &mut pd, &mut pk);
+                assert_eq!(pm, sm, "slots={slots} hot_rows={hot_rows}");
+                assert_eq!(pd, sd, "slots={slots} hot_rows={hot_rows}");
+                assert_eq!(pk, sk, "slots={slots} hot_rows={hot_rows}");
+            }
+        }
     }
 
     #[test]

@@ -10,7 +10,52 @@
 // lint: allow-file(index, "rows are dim-strided views of arrays sized at construction; node ids checked at the gather boundary")
 
 use super::hot::HotCache;
+use super::SendRaw;
+use crate::graph::ShardSpec;
+use crate::util::pool::WorkerPool;
 use std::sync::{Mutex, PoisonError};
+
+/// Owner-restricted scatter handle for one shard of the node-id space,
+/// created by [`NodeMemory::par_shard_scatter`]. Writes land directly in
+/// the backing arrays (plus hot-cache write-through, exactly as
+/// [`NodeMemory::scatter`]); rows outside the shard are dropped, which is
+/// what makes concurrent per-shard writers safe.
+pub struct MemShardWriter<'m> {
+    shard: std::ops::Range<u32>,
+    dim: usize,
+    mem: *mut f32,
+    last_update: *mut f64,
+    hot: Option<&'m Mutex<HotCache>>,
+}
+
+impl MemShardWriter<'_> {
+    /// Scatter one row if this shard owns `v`; returns whether it was
+    /// applied. For owned rows this matches [`NodeMemory::scatter`],
+    /// including the write-through refresh of any cached copy.
+    // lint: deny(alloc)
+    pub fn scatter_row(&mut self, v: u32, t: f64, row: &[f32]) -> bool {
+        if !self.shard.contains(&v) {
+            return false;
+        }
+        debug_assert_eq!(row.len(), self.dim);
+        // SAFETY: `v` lies in this writer's shard, and `par_shard_scatter`
+        // hands disjoint shard ranges to the workers, so node `v`'s memory
+        // row and timestamp have a single writer for the whole dispatch.
+        unsafe {
+            let dst = self.mem.add(v as usize * self.dim);
+            std::slice::from_raw_parts_mut(dst, self.dim).copy_from_slice(row);
+            *self.last_update.add(v as usize) = t;
+        }
+        if let Some(hot) = self.hot {
+            let mut hot = hot.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(slot) = hot.peek(v) {
+                hot.f32_row_mut(slot).copy_from_slice(row);
+                hot.f64_row_mut(slot)[0] = t;
+            }
+        }
+        true
+    }
+}
 
 /// Dense node-memory table.
 #[derive(Debug)]
@@ -270,6 +315,40 @@ impl NodeMemory {
         self.write_through(nodes, ts, rows, Some(&shard));
     }
 
+    /// Sharded-parallel scatter: run `replay` once per shard of `spec`
+    /// (shards distributed over `pool` workers), each call seeing a
+    /// [`MemShardWriter`] restricted to that shard's node range. Every
+    /// shard must be handed the **same** write sequence — re-walk the
+    /// batch — and the writer filters by ownership, so exactly one shard
+    /// applies each write and a node's writes keep their sequence order
+    /// within its owner. The final table is therefore bitwise what the
+    /// same sequence of [`Self::scatter`] calls produces serially (the
+    /// single-owner argument behind the sharded step-⑥ consumer; pinned
+    /// by `par_shard_scatter_matches_serial` below).
+    pub fn par_shard_scatter(
+        &mut self,
+        spec: &ShardSpec,
+        pool: &WorkerPool,
+        replay: impl Fn(&mut MemShardWriter<'_>) + Sync,
+    ) {
+        let dim = self.dim;
+        let mem = SendRaw(self.mem.as_mut_ptr());
+        let last_update = SendRaw(self.last_update.as_mut_ptr());
+        let hot = self.hot.as_ref();
+        pool.run_chunks(spec.shards(), 1, |_w, srange| {
+            for s in srange {
+                let mut w = MemShardWriter {
+                    shard: spec.range(s),
+                    dim,
+                    mem: mem.0,
+                    last_update: last_update.0,
+                    hot,
+                };
+                replay(&mut w);
+            }
+        });
+    }
+
     /// Mean absolute staleness (age of memory entries at time `t`) over
     /// the given nodes — the obsolescence metric behind the random-chunk
     /// discussion (§3.2).
@@ -388,6 +467,56 @@ mod tests {
         }
         // Duplicate node 2: later entry (t=3, row 30) must win in both.
         assert_eq!(sharded.row(2), &[30.0]);
+    }
+
+    #[test]
+    fn par_shard_scatter_matches_serial() {
+        // The parallel per-shard replay must leave the table bitwise
+        // equal to the serial scatter sequence — with and without the
+        // hot cache (write-through refresh under concurrent shards).
+        let pool = WorkerPool::new(3);
+        let spec = ShardSpec::new(10, 3);
+        let mut state = 5u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        let writes: Vec<(u32, f64, [f32; 2])> = (0..50)
+            .map(|k| {
+                let v = next() % 10;
+                (v, k as f64, [next() as f32 / 1e6, next() as f32 / 1e6])
+            })
+            .collect();
+        for hot_rows in [0usize, 2] {
+            let mut serial = NodeMemory::new(10, 2);
+            let mut par = NodeMemory::new(10, 2);
+            serial.enable_hot_cache(hot_rows);
+            par.enable_hot_cache(hot_rows);
+            // Admit a few rows so write-through has cached copies to hit.
+            let q: Vec<(u32, f64, bool)> = (0..10).map(|v| (v as u32, 0.0, true)).collect();
+            let (mut m, mut d) = (vec![0.0; 20], vec![0.0; 10]);
+            serial.gather_into(&q, &mut m, &mut d);
+            par.gather_into(&q, &mut m, &mut d);
+            for &(v, t, row) in &writes {
+                serial.scatter(&[v], &[t], &row);
+            }
+            par.par_shard_scatter(&spec, &pool, |w| {
+                for &(v, t, row) in &writes {
+                    w.scatter_row(v, t, &row);
+                }
+            });
+            assert_eq!(par.raw(), serial.raw(), "hot_rows={hot_rows}");
+            for v in 0..10u32 {
+                assert_eq!(par.last_update(v), serial.last_update(v), "node {v}");
+            }
+            // Post-scatter gathers (served through any cached rows) match.
+            let (mut sm, mut sd) = (vec![0.0; 20], vec![0.0; 10]);
+            let (mut pm, mut pd) = (vec![0.0; 20], vec![0.0; 10]);
+            serial.gather_into(&q, &mut sm, &mut sd);
+            par.gather_into(&q, &mut pm, &mut pd);
+            assert_eq!(pm, sm, "hot_rows={hot_rows}");
+            assert_eq!(pd, sd, "hot_rows={hot_rows}");
+        }
     }
 
     #[test]

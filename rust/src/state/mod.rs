@@ -9,5 +9,14 @@ mod mailbox;
 mod memory;
 
 pub use hot::HotCache;
-pub use mailbox::Mailbox;
-pub use memory::NodeMemory;
+pub use mailbox::{MailShardWriter, Mailbox};
+pub use memory::{MemShardWriter, NodeMemory};
+
+/// Raw base pointer made `Send + Sync` so per-shard scatter workers can
+/// share it across a fork-join dispatch. The safety argument lives with
+/// each dispatch: workers cover disjoint node-id ranges, so every element
+/// behind the pointer has a single writer.
+#[derive(Clone, Copy)]
+pub(crate) struct SendRaw<T>(pub(crate) *mut T);
+unsafe impl<T> Send for SendRaw<T> {}
+unsafe impl<T> Sync for SendRaw<T> {}

@@ -131,7 +131,6 @@ impl MultiTrainer {
         let model = trainer.model;
         let graph = trainer.graph;
         let idx = TrainIdx::new(model)?;
-        let deliver = trainer.prep.cfg.deliver_to_neighbors;
         let prep = &trainer.prep;
         let state = &mut trainer.state;
         let mut losses = prior_losses;
@@ -198,7 +197,7 @@ impl MultiTrainer {
                     for r in results {
                         group.push(r?);
                     }
-                    sync_group(model, deliver, &idx, state, &group, &mut losses)?;
+                    sync_group(model, prep, &idx, state, &group, &mut losses)?;
                     after_group!(group.len());
                     for (pb, _) in group {
                         merged.recycle(pb.into_arena());
@@ -241,7 +240,7 @@ impl MultiTrainer {
                     for r in results {
                         group.push(r?);
                     }
-                    sync_group(model, deliver, &idx, state, &group, &mut losses)?;
+                    sync_group(model, prep, &idx, state, &group, &mut losses)?;
                     after_group!(group.len());
                 }
                 Ok(())
@@ -322,7 +321,7 @@ fn execute_group(
 /// updates chronologically.
 fn sync_group(
     model: &Model,
-    deliver: bool,
+    prep: &Preparer<'_>,
     idx: &TrainIdx,
     state: &mut TrainState,
     group: &[(PreparedBatch, Vec<Tensor>)],
@@ -365,7 +364,9 @@ fn sync_group(
         for (pb, outputs) in group {
             apply_state_updates_impl(
                 model,
-                deliver,
+                prep.cfg.deliver_to_neighbors,
+                prep.cfg.shards,
+                prep.state_pool(),
                 state,
                 &pb.batch,
                 pb.mfg.as_ref(),

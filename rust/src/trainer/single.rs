@@ -43,6 +43,7 @@ use crate::sampler::{Mfg, SamplerConfig, SamplerHandle, ShardedSampler, Strategy
 use crate::sched::{make_batch_into, Batch, EpochPlan};
 use crate::state::{Mailbox, NodeMemory};
 use crate::util::fault::FaultPlan;
+use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
 use crate::util::stats::PhaseTimer;
 use crate::util::tensor_pool::{PoolBuf, TensorPool};
@@ -179,6 +180,11 @@ pub struct Preparer<'g> {
     pub graph: &'g TemporalGraph,
     sampler: Option<SamplerHandle<'g>>,
     pool: TensorPool,
+    /// Fork-join pool for the sharded-parallel state scatter (step ⑥);
+    /// `Some` iff `cfg.shards > 1`. Lives here (not with the consumer's
+    /// mutable state) so both epoch modes and the multi-trainer sync
+    /// phase reach it through their shared `&Preparer`.
+    state_pool: Option<WorkerPool>,
     pub cfg: TrainerCfg,
 }
 
@@ -251,6 +257,12 @@ impl<'g> Preparer<'g> {
     /// disabled when `cfg.tensor_arenas` is off).
     pub fn pool(&self) -> &TensorPool {
         &self.pool
+    }
+
+    /// Worker pool for the sharded-parallel state scatter (step ⑥);
+    /// `None` when `cfg.shards <= 1` (the serial consumer scatter).
+    pub fn state_pool(&self) -> Option<&WorkerPool> {
+        self.state_pool.as_ref()
     }
 
     /// Prefetchable stage over an edge window: negative draw, padding,
@@ -668,9 +680,21 @@ fn pad_batch_into(src: &Batch, bs: usize, out: &mut Batch) {
 
 /// Step ⑥ as a free function over split borrows, so the pipelined epoch can
 /// run it while the [`Preparer`] is lent to the producer thread.
+///
+/// With `shards > 1` and a pool, the consumer scatter runs **sharded in
+/// parallel**: each shard's owner replays the batch through an
+/// owner-filtered writer ([`crate::state::MemShardWriter`] /
+/// [`crate::state::MailShardWriter`]). One owner per node means per-node
+/// write order is the serial order, so the final state is bitwise
+/// identical to the serial path for any shard count (the composition
+/// tests in `state::memory` / `state::mailbox`, plus the end-to-end
+/// `rust/tests/pipeline_identity.rs` sharded sweep).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_state_updates_impl(
     model: &Model,
     deliver_to_neighbors: bool,
+    shards: usize,
+    pool: Option<&WorkerPool>,
     state: &mut TrainState,
     batch: &Batch,
     mfg: Option<&Mfg>,
@@ -689,6 +713,43 @@ pub(crate) fn apply_state_updates_impl(
     let mailbox = state.mailbox.as_mut().ok_or_else(|| {
         anyhow!("model `{}` emits mail updates but no mailbox is allocated", model.name)
     })?;
+
+    if let Some(pool) = pool.filter(|_| shards > 1) {
+        let spec = ShardSpec::new(memory.num_nodes(), shards);
+        memory.par_shard_scatter(&spec, pool, |w| {
+            for i in 0..n_valid {
+                let t = batch.ts[i];
+                w.scatter_row(batch.src[i], t, &mem_rows[i * dm..(i + 1) * dm]);
+                w.scatter_row(batch.dst[i], t, &mem_rows[(bs + i) * dm..(bs + i + 1) * dm]);
+            }
+        });
+        let spec = ShardSpec::new(mailbox.num_nodes(), shards);
+        mailbox.par_shard_write(&spec, pool, |w| {
+            for i in 0..n_valid {
+                let t = batch.ts[i];
+                let m_src = &mail_rows[i * maild..(i + 1) * maild];
+                let m_dst = &mail_rows[(bs + i) * maild..(bs + i + 1) * maild];
+                w.write(batch.src[i], t, m_src);
+                w.write(batch.dst[i], t, m_dst);
+                let Some(m) = mfg.filter(|_| deliver_to_neighbors) else { continue };
+                let block = &m.snapshots[0][0];
+                let k = block.fanout;
+                for slot in i * k..(i + 1) * k {
+                    // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
+                    if block.mask[slot] == 1.0 {
+                        w.write(block.nbr[slot], t, m_src);
+                    }
+                }
+                for slot in (bs + i) * k..(bs + i + 1) * k {
+                    // lint: allow(float-eq, "mask is an exact 0.0/1.0 sentinel")
+                    if block.mask[slot] == 1.0 {
+                        w.write(block.nbr[slot], t, m_dst);
+                    }
+                }
+            }
+        });
+        return Ok(());
+    }
 
     // Memory rows: [roots] segment of new_mem holds the refreshed
     // memory in MFG order; persist src (rows 0..bs) and dst (bs..2bs).
@@ -838,6 +899,8 @@ pub(crate) fn exec_train_step(
         apply_state_updates_impl(
             model,
             prep.cfg.deliver_to_neighbors,
+            prep.cfg.shards,
+            prep.state_pool(),
             state,
             &pb.batch,
             pb.mfg.as_ref(),
@@ -875,6 +938,8 @@ pub(crate) fn exec_eval_batch(
         apply_state_updates_impl(
             model,
             prep.cfg.deliver_to_neighbors,
+            prep.cfg.shards,
+            prep.state_pool(),
             state,
             &pb.batch,
             pb.mfg.as_ref(),
@@ -1287,7 +1352,8 @@ impl<'g> Trainer<'g> {
             },
         };
         let pool = if cfg.tensor_arenas { TensorPool::new() } else { TensorPool::disabled() };
-        let prep = Preparer { model, graph, sampler, pool, cfg };
+        let state_pool = (cfg.shards > 1).then(|| WorkerPool::new(cfg.shards));
+        let prep = Preparer { model, graph, sampler, pool, state_pool, cfg };
         Ok(Trainer { model, graph, prep, state, timers: PhaseTimer::new(), io: StepIo::default() })
     }
 

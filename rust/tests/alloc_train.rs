@@ -12,8 +12,13 @@
 //! with its per-shard scratch pool, plus the single-owner memory/mailbox
 //! gathers), and finally at production width (`syn_tgn_w100`: the pooled
 //! scratch arena replacing the old fixed stack buffers must stay
-//! recycled at dims the stack path could never hold). It contains a
-//! single test so no concurrent test thread can pollute the counter.
+//! recycled at dims the stack path could never hold), and lastly with
+//! the batch-blocked executor (`exec tiles = 2`: worker-pool tile
+//! dispatch with per-tile pooled gradient buffers — the parallel path
+//! must stay allocation-free once its pool and buffers are warm,
+//! counting the worker threads too, since the counting allocator is
+//! process-global). It contains a single test so no concurrent test
+//! thread can pollute the counter.
 
 use tgl::graph::TCsr;
 use tgl::models::synthetic;
@@ -135,4 +140,42 @@ fn steady_state_train_step_performs_zero_heap_allocation() {
     );
     assert!(last.is_finite());
     assert!(t.state.step >= 10.0);
+
+    // ---- Phase 4: batch-blocked parallel execution. With exec tiles
+    // = 2 the forward/backward dispatches on the executor's worker
+    // pool with per-tile pooled gradient buffers; warm-up creates the
+    // pool (OnceLock) and grows the tile working set, after which the
+    // dispatch (Mutex/Condvar hand-off) and every per-tile scratch
+    // take/put must recycle without touching the heap — on the worker
+    // threads as well, since the counting allocator is process-global.
+    let model = synthetic("tgn").expect("synthetic tgn");
+    model.set_exec_tiles(2);
+    let mut cfg = TrainerCfg::for_model(&model, &graph, 1e-3, 2);
+    cfg.prefetch = false;
+    let mut t = Trainer::new(&model, &graph, &csr, cfg).expect("blocked trainer");
+    let mut arena = PrepArena::default();
+    for bi in 0..6u64 {
+        let i = bi as usize;
+        let (loss, a) =
+            t.train_batch_reuse(i * bs..(i + 1) * bs, bi, arena).expect("blocked warmup");
+        assert!(loss.is_finite());
+        arena = a;
+    }
+    let before = CountingAlloc::allocations();
+    let mut last = 0.0f64;
+    for bi in 6..26u64 {
+        let i = bi as usize;
+        let (loss, a) =
+            t.train_batch_reuse(i * bs..(i + 1) * bs, bi, arena).expect("blocked steady");
+        last = loss;
+        arena = a;
+    }
+    let allocs = CountingAlloc::allocations() - before;
+    assert_eq!(
+        allocs, 0,
+        "batch-blocked steady-state train step must not allocate (saw {allocs} allocations \
+         over 20 batches with exec tiles = 2 on the worker pool)"
+    );
+    assert!(last.is_finite());
+    assert!(t.state.step >= 26.0);
 }

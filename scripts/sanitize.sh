@@ -13,9 +13,11 @@
 # when the toolchain is missing (for the lane that is supposed to have it).
 #
 # Scope (matches the lint rules it complements):
-#   TSan : pipeline_identity + fault_tolerance + the pool unit tests —
-#          the fork-join pool, supervised producers, and shard workers
-#          are where a lock-order or raw-pointer mistake becomes a race.
+#   TSan : pipeline_identity (sharded + the batch-tiled exec sweep) +
+#          fault_tolerance + the pool unit tests — the fork-join pool,
+#          supervised producers, shard workers, and the tile-parallel
+#          forward/backward (disjoint-slice raw pointers) are where a
+#          lock-order or raw-pointer mistake becomes a race.
 #   Miri : pool + simd unit tests — the two modules with `unsafe`
 #          (lifetime-erased job dispatch, disjoint-chunk slice splits).
 set -uo pipefail
@@ -73,7 +75,8 @@ if [ "$RUN_TSAN" = 1 ]; then
     echo "== sanitize: ThreadSanitizer (target $HOST_TARGET) =="
     # TSan needs std rebuilt with the sanitizer (-Z build-std + rust-src).
     TSAN_OK=1
-    for spec in "--test pipeline_identity sharded" "--test fault_tolerance" "--lib util::pool"; do
+    for spec in "--test pipeline_identity sharded" "--test pipeline_identity exec_tiles" \
+        "--test fault_tolerance" "--lib util::pool"; do
       echo "-- tsan: cargo test $spec"
       # shellcheck disable=SC2086  # spec is a word list on purpose
       if ! RUSTFLAGS="-Z sanitizer=thread" cargo $NIGHTLY test -Z build-std \

@@ -58,6 +58,18 @@ cargo test -q --test convergence
 echo "== tier1: cargo test -q --test pipeline_identity sharded =="
 cargo test -q --test pipeline_identity sharded
 
+# Batch-blocked executor identity by name: exec tiles = 1 bitwise the
+# serial path, multi-tile run-to-run deterministic and prefetch-
+# invisible, within a numeric envelope of serial.
+echo "== tier1: cargo test -q --test pipeline_identity exec_tiles =="
+cargo test -q --test pipeline_identity exec_tiles
+
+# Parallel state-scatter identity by name: the per-shard consumer
+# scatter (memory rows + mailbox ring) must be bitwise-equal to the
+# serial replay, hot cache off and on.
+echo "== tier1: parallel shard-scatter identity =="
+cargo test -q --lib par_shard
+
 # Fault-tolerance acceptance by name: kill-and-resume bitwise identity,
 # supervised producers, checkpoint integrity under injected faults, and
 # the divergence rollback guard.
